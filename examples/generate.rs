@@ -1,0 +1,148 @@
+//! End-to-end autoregressive generation — the full system composed.
+//!
+//! A 2-block GPT (the `tiny` preset, same topology as GPT-J) runs entirely
+//! in Rust on the request path:
+//!
+//!   prompt tokens -> embedding lookup (Rust)
+//!     -> NAR prefill through the `gpt_block_nar_tiny` PJRT executable,
+//!        filling the per-block KV caches (paper Sec. II-B)
+//!     -> AR decode loop through `gpt_block_ar_tiny` (one token per step,
+//!        fixed-capacity cache updated in place)
+//!     -> `gpt_head_tiny` logits -> greedy argmax -> next token
+//!
+//! and reports both the *measured* tokens/s of the numeric path (CPU PJRT)
+//! and the *simulated* tokens/s of the same workload on the 16-cluster
+//! RISC-V platform. Python never runs.
+//!
+//! Run: `cargo run --release --example generate` (after `make artifacts`).
+
+use anyhow::Result;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{InferenceEngine, KvCache};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::runtime::{detgen, Arg, GenSpec, Runtime};
+
+const BLOCKS: usize = 2;
+const VOCAB: usize = 256;
+const E: usize = 64;
+const HEADS: usize = 4;
+const P: usize = 16;
+const SMAX: usize = 64;
+const PROMPT_LEN: usize = 32; // = the NAR artifact's S
+const GEN_TOKENS: usize = 24;
+
+/// Per-block weights: the artifact takes weights as runtime arguments, so
+/// each block gets its own deterministic tensors (same shapes/scales as
+/// the manifest specs, block-specific seeds).
+fn block_weights(rt: &Runtime, artifact: &str, skip: usize, block: usize) -> Result<Vec<Arg>> {
+    let entry = rt.manifest.get(artifact)?;
+    let mut out = Vec::new();
+    for spec in entry.args.iter().skip(skip) {
+        match &spec.gen {
+            GenSpec::Det { seed, scale, offset } => {
+                let seed = seed.wrapping_add(block as u32 * 0x0051_F0C1);
+                let data =
+                    detgen::det_f32(spec.element_count(), seed, *scale as f32, *offset as f32);
+                let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                out.push(Arg::F32(data, shape));
+            }
+            GenSpec::I32 { value } => out.push(Arg::I32(*value)),
+        }
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let mut rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform_name());
+
+    // Deterministic embedding table + per-block weights.
+    let embed = detgen::det_f32(VOCAB * E, 0xE11B_ED01, 1.0, 0.0);
+    let nar_weights: Vec<Vec<Arg>> = (0..BLOCKS)
+        .map(|b| block_weights(&rt, "gpt_block_nar_tiny", 1, b))
+        .collect::<Result<_>>()?;
+    // AR artifact: args are [x, k_cache, v_cache, kv_len, weights...].
+    let ar_weights: Vec<Vec<Arg>> = (0..BLOCKS)
+        .map(|b| block_weights(&rt, "gpt_block_ar_tiny", 4, b))
+        .collect::<Result<_>>()?;
+    let head_args = block_weights(&rt, "gpt_head_tiny", 1, 0)?;
+
+    // Prompt: deterministic pseudo-tokens.
+    let prompt: Vec<usize> =
+        (0..PROMPT_LEN).map(|i| detgen::hash32(i as u32) as usize % VOCAB).collect();
+    let lookup = |tok: usize| -> Vec<f32> { embed[tok * E..(tok + 1) * E].to_vec() };
+
+    // --- prefill (NAR) ----------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let mut caches: Vec<KvCache> = (0..BLOCKS).map(|_| KvCache::new(HEADS, SMAX, P)).collect();
+    let mut x: Vec<f32> = prompt.iter().flat_map(|&t| lookup(t)).collect();
+    for (b, cache) in caches.iter_mut().enumerate() {
+        let mut args = vec![Arg::f32(&x, &[PROMPT_LEN, E])];
+        args.extend(nar_weights[b].iter().cloned());
+        let outs = rt.load("gpt_block_nar_tiny")?.run(&args)?;
+        x = outs[0].clone();
+        cache.load_prefill(&outs[1], &outs[2], PROMPT_LEN);
+    }
+    let prefill_s = t0.elapsed().as_secs_f64();
+    println!(
+        "prefill: {PROMPT_LEN} tokens through {BLOCKS} blocks in {:.1} ms",
+        prefill_s * 1e3
+    );
+
+    // --- decode (AR) -------------------------------------------------------
+    let t0 = std::time::Instant::now();
+    let mut last = *prompt.last().unwrap();
+    let mut generated = Vec::with_capacity(GEN_TOKENS);
+    for _step in 0..GEN_TOKENS {
+        let mut h = lookup(last);
+        for (b, cache) in caches.iter_mut().enumerate() {
+            let kv_len = cache.len() as i32;
+            let mut args = vec![
+                Arg::f32(&h, &[1, E]),
+                Arg::f32(cache.k_flat(), &[HEADS, SMAX, P]),
+                Arg::f32(cache.v_flat(), &[HEADS, SMAX, P]),
+                Arg::I32(kv_len),
+            ];
+            args.extend(ar_weights[b].iter().cloned());
+            let mut outs = rt.load("gpt_block_ar_tiny")?.run(&args)?;
+            let v_new = outs.pop().unwrap();
+            let k_new = outs.pop().unwrap();
+            h = outs.pop().unwrap();
+            cache.store_step(k_new, v_new);
+        }
+        // LM head -> greedy next token.
+        let mut args = vec![Arg::f32(&h, &[1, E])];
+        args.extend(head_args.iter().cloned());
+        let logits = &rt.load("gpt_head_tiny")?.run(&args)?[0];
+        last = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        generated.push(last);
+    }
+    let decode_s = t0.elapsed().as_secs_f64();
+    println!("decoded {GEN_TOKENS} tokens: {generated:?}");
+    println!(
+        "numeric path (CPU PJRT): {:.1} tokens/s",
+        GEN_TOKENS as f64 / decode_s
+    );
+    assert_eq!(caches[0].len(), PROMPT_LEN + GEN_TOKENS);
+
+    // --- the same workload priced on the simulated platform ---------------
+    let engine = InferenceEngine::new(PlatformConfig::occamy());
+    let tiny = ModelConfig::tiny();
+    for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+        let r = engine.run_generate(&tiny, PROMPT_LEN as u64, GEN_TOKENS as u64, fmt);
+        println!(
+            "simulated 16-cluster platform ({}): {:.1} tokens/s, util {:.1}%",
+            fmt.name(),
+            r.throughput,
+            r.fpu_utilization * 100.0
+        );
+    }
+    println!("generate OK");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT-compiled ViT encoder-block artifacts (Pallas+JAX, lowered
+//!    at build time) through the PJRT CPU runtime and verify their numerics
+//!    against the golden fingerprints — no Python anywhere.
+//! 2. Price a full ViT-B inference on the simulated 16-cluster RISC-V
+//!    platform and print the paper's metrics (images/s, FPU utilization,
+//!    power, GFLOPS/W).
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::ModelConfig;
+use snitch_fm::report;
+use snitch_fm::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // --- numerics through PJRT ------------------------------------------
+    let mut rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform_name());
+    for name in ["vit_block_tiny", "vit_block_vitb"] {
+        let t0 = std::time::Instant::now();
+        let outs = rt.run_golden(name, 1e-3)?;
+        println!(
+            "  {name}: numerics OK ({} outputs, {} elements, {:.1} ms)",
+            outs.len(),
+            outs[0].len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    // --- platform timing ---------------------------------------------------
+    let engine = InferenceEngine::new(PlatformConfig::occamy());
+    let vit_b = ModelConfig::vit_b();
+    let mut rows = Vec::new();
+    for fmt in FpFormat::LADDER {
+        rows.push(engine.run_nar(&vit_b, vit_b.seq, fmt));
+    }
+    println!();
+    println!("ViT-B on the simulated 16-cluster platform:");
+    print!("{}", report::runs_table(&rows));
+    println!(
+        "paper reference: 26 images/s at FP8 (Fig. 8), >79% FPU util (abstract)"
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Scalability studies (paper Fig. 9).
+//!
+//! Left pane: GPT3-XL / GPT-J throughput vs sequence length in both NAR
+//! and AR modes. Right pane: ViT images/s vs cluster count (1/4/8/16) —
+//! the close-to-linear scaling claim of Sec. VII-B.
+//!
+//! Run: `cargo run --release --example scaling`.
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::ModelConfig;
+
+fn main() {
+    let fmt = FpFormat::Fp8;
+    let engine = InferenceEngine::new(PlatformConfig::occamy());
+
+    println!("GPT throughput vs sequence length ({}):", fmt.name());
+    println!("{:<10} {:>6} {:>14} {:>14}", "model", "S", "NAR tok/s", "AR tok/s");
+    for cfg in [ModelConfig::gpt3_xl(), ModelConfig::gpt_j()] {
+        for s in [128u64, 256, 512, 1024, 2048] {
+            let nar = engine.run_nar(&cfg, s, fmt);
+            let ar = engine.run_ar_step(&cfg, s, fmt);
+            println!(
+                "{:<10} {:>6} {:>14.1} {:>14.2}",
+                cfg.name, s, nar.throughput, ar.throughput
+            );
+        }
+    }
+    println!("paper (Fig. 9): GPT3-XL 429->136 tok/s, GPT-J 174->74 tok/s NAR;");
+    println!("               7.9->5.8 and 3.8->1 tok/s AR over S=128..2048\n");
+
+    println!("ViT images/s vs clusters ({}):", fmt.name());
+    println!("{:<8} {:>4} {:>12} {:>9}", "model", "C", "images/s", "speedup");
+    for cfg in [ModelConfig::vit_b(), ModelConfig::vit_l(), ModelConfig::vit_h()] {
+        let mut base = 0.0;
+        for clusters in [1u32, 4, 8, 16] {
+            let engine = InferenceEngine::new(PlatformConfig::with_clusters(clusters));
+            let r = engine.run_nar(&cfg, cfg.seq, fmt);
+            if clusters == 1 {
+                base = r.throughput;
+            }
+            println!(
+                "{:<8} {:>4} {:>12.2} {:>8.1}x",
+                cfg.name,
+                clusters,
+                r.throughput,
+                r.throughput / base
+            );
+        }
+    }
+    println!("paper (Fig. 9 right): 4/6/12x (B), 4/6/11.9x (L), 4/7.9/15.8x (H)");
+}

@@ -1,0 +1,58 @@
+//! Batched ViT classification pipeline (the paper's encoder workload).
+//!
+//! The coordinator prices a stream of classification requests across the
+//! precision ladder and the three ViT variants, reporting the images/s,
+//! utilization and energy-per-image the platform would deliver — the
+//! numbers behind Fig. 8 and the H100 comparison of Sec. VII-E. The tiny
+//! encoder artifact additionally runs through PJRT to prove the numeric
+//! path composes with the same block topology.
+//!
+//! Run: `cargo run --release --example vit_pipeline` (after `make artifacts`).
+
+use anyhow::Result;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::ModelConfig;
+use snitch_fm::report;
+use snitch_fm::runtime::Runtime;
+
+const BATCH: usize = 64;
+
+fn main() -> Result<()> {
+    // Numeric sanity of the encoder block path.
+    let mut rt = Runtime::new()?;
+    rt.run_golden("vit_block_tiny", 1e-3)?;
+    println!("encoder block numerics OK (vit_block_tiny via PJRT)\n");
+
+    let engine = InferenceEngine::new(PlatformConfig::occamy());
+    let models = [ModelConfig::vit_b(), ModelConfig::vit_l(), ModelConfig::vit_h()];
+
+    let mut rows = Vec::new();
+    for m in &models {
+        for fmt in FpFormat::LADDER {
+            rows.push(engine.run_nar(m, m.seq, fmt));
+        }
+    }
+    println!("per-image metrics (one classification per model pass):");
+    print!("{}", report::runs_table(&rows));
+
+    // Batched pipeline: images are independent so the coordinator streams
+    // them back-to-back; throughput is per-image latency amortized.
+    println!("\nbatch of {BATCH} images, FP8:");
+    for m in &models {
+        let r = engine.run_nar(m, m.seq, FpFormat::Fp8);
+        let batch_seconds = r.seconds * BATCH as f64;
+        let energy_j = r.power_w * batch_seconds;
+        println!(
+            "  {:<6} {:>8.1} images/s  {:>7.2} s/batch  {:>7.2} J/batch  {:>6.1} mJ/image",
+            m.name,
+            r.throughput,
+            batch_seconds,
+            energy_j,
+            energy_j / BATCH as f64 * 1e3,
+        );
+    }
+    println!("\npaper reference (Fig. 8, FP8): 26 / 12 / 8 images/s for B/L/H");
+    Ok(())
+}

@@ -1,0 +1,231 @@
+"""AOT lowering: JAX/Pallas model blocks -> HLO text artifacts for Rust.
+
+Emits one `artifacts/<name>.hlo.txt` per model-block variant plus
+`artifacts/manifest.json` describing, for each artifact:
+  * the ordered argument list (name, shape, dtype, deterministic generator
+    spec) so the Rust coordinator can recreate the exact inputs,
+  * the output arity/shapes,
+  * golden output fingerprints (L2 norm + first elements) computed by
+    executing the jitted function here, so Rust integration tests can
+    verify the PJRT round-trip numerically without Python at runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo/gen_hlo.py.
+
+Inputs use a cross-language deterministic generator (`det_f32`): a 32-bit
+integer hash both Python and Rust evaluate bit-identically, so no binary
+tensor files need to ship with the artifacts.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Per-argument seed stride; any odd constant works, it only needs to match
+# rust/src/runtime/detgen.rs.
+SEED_STRIDE = 0x9E3779B1
+
+
+def hash32(x: np.ndarray) -> np.ndarray:
+    """lowbias32 integer hash (u32 -> u32); identical in detgen.rs."""
+    x = x.astype(np.uint32)
+    x ^= x >> 16
+    x *= np.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= np.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def det_f32(n: int, seed: int, scale: float, offset: float) -> np.ndarray:
+    """Deterministic f32 vector in [offset - scale/2, offset + scale/2).
+
+    Every op here (u32 hash, exact u32->f64, /2^32, -0.5, f64->f32 round,
+    f32 mul/add) is bit-exact across numpy and Rust.
+    """
+    i = np.arange(n, dtype=np.uint64) + np.uint64(seed & 0xFFFFFFFF)
+    h = hash32(i.astype(np.uint32))
+    base = (h.astype(np.float64) / 2.0**32 - 0.5).astype(np.float32)
+    return base * np.float32(scale) + np.float32(offset)
+
+
+def gen_arg(shape, spec):
+    """Materialize one argument from its generator spec."""
+    if spec["kind"] == "det":
+        n = int(np.prod(shape)) if shape else 1
+        v = det_f32(n, spec["seed"], spec["scale"], spec["offset"])
+        return v.reshape(shape) if shape else v[0]
+    if spec["kind"] == "i32":
+        return np.int32(spec["value"])
+    raise ValueError(f"unknown generator kind {spec['kind']}")
+
+
+def weight_specs(dims: M.ModelDims, seed0: int):
+    """Generator specs for the block weight schema, fan-in scaled."""
+    shapes = M.weight_shapes(dims)
+    specs = []
+    for idx, (name, _) in enumerate(M.BLOCK_WEIGHT_SCHEMA):
+        shape = shapes[name]
+        seed = (seed0 + (idx + 1) * SEED_STRIDE) & 0xFFFFFFFF
+        if name in ("ln1_g", "ln2_g"):
+            scale, offset = 0.2, 1.0      # gamma ~ 1
+        elif len(shape) == 1:
+            scale, offset = 0.2, 0.0      # biases / beta, small
+        else:
+            # ~ +-1/sqrt(fan_in): keeps activations O(1) through deep stacks
+            scale, offset = 2.0 / float(shape[0]) ** 0.5, 0.0
+        specs.append({
+            "name": name, "shape": list(shape), "dtype": "f32",
+            "gen": {"kind": "det", "seed": int(seed), "scale": scale,
+                    "offset": offset},
+        })
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def fingerprint(arr) -> dict:
+    a = np.asarray(arr, dtype=np.float32).ravel()
+    return {
+        "shape": list(np.asarray(arr).shape),
+        "l2": float(np.linalg.norm(a.astype(np.float64))),
+        "first": [float(x) for x in a[:4]],
+    }
+
+
+def build_artifact(name, fn, arg_specs, out_dir, run_golden=True):
+    """Lower `fn` at the spec'd shapes, dump HLO text, return manifest entry."""
+    args = [gen_arg(s["shape"], s["gen"]) for s in arg_specs]
+    abstract = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]),
+                             jnp.int32 if s["dtype"] == "i32" else jnp.float32)
+        for s in arg_specs
+    ]
+    lowered = jax.jit(fn).lower(*abstract)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "args": arg_specs,
+        "outputs": [],
+    }
+    if run_golden:
+        outs = jax.jit(fn)(*args)
+        entry["outputs"] = [fingerprint(o) for o in outs]
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO"
+          + ("" if run_golden else " (no golden run)"))
+    return entry
+
+
+def act_spec(name, shape, seed, scale=1.0, offset=0.0):
+    return {"name": name, "shape": list(shape), "dtype": "f32",
+            "gen": {"kind": "det", "seed": int(seed & 0xFFFFFFFF),
+                    "scale": scale, "offset": offset}}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-golden", action="store_true",
+                    help="lower only, skip golden execution (faster)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"artifacts": [], "seed_stride": SEED_STRIDE}
+
+    tiny = M.TINY
+    vitb = M.VIT_B
+    print("lowering artifacts:")
+
+    # --- tiny ViT encoder block (integration tests, quickstart) ----------
+    specs = [act_spec("x", (tiny.seq, tiny.e), 1)] + weight_specs(tiny, 1000)
+    manifest["artifacts"].append(build_artifact(
+        "vit_block_tiny",
+        functools.partial(M.vit_block, dims=tiny),
+        specs, args.out_dir))
+
+    # --- real-shape ViT-B encoder block (quickstart numerics) ------------
+    specs = [act_spec("x", (vitb.seq, vitb.e), 2)] + weight_specs(vitb, 2000)
+    manifest["artifacts"].append(build_artifact(
+        "vit_block_vitb",
+        functools.partial(M.vit_block, dims=vitb),
+        specs, args.out_dir))
+
+    # --- tiny GPT decoder block, NAR/prefill ------------------------------
+    specs = [act_spec("x", (tiny.seq, tiny.e), 3)] + weight_specs(tiny, 3000)
+    manifest["artifacts"].append(build_artifact(
+        "gpt_block_nar_tiny",
+        functools.partial(M.gpt_block_nar, dims=tiny),
+        specs, args.out_dir))
+
+    # --- tiny GPT decoder block, AR/decode (fixed-capacity cache) ---------
+    smax = 64
+    kv_len = 17  # golden run: 17 valid cache entries before this step
+    specs = (
+        [act_spec("x", (1, tiny.e), 4),
+         act_spec("k_cache", (tiny.heads, smax, tiny.p), 5, scale=0.5),
+         act_spec("v_cache", (tiny.heads, smax, tiny.p), 6, scale=0.5),
+         {"name": "kv_len", "shape": [], "dtype": "i32",
+          "gen": {"kind": "i32", "value": kv_len}}]
+        + weight_specs(tiny, 3000)  # same weights as the NAR block
+    )
+    manifest["artifacts"].append(build_artifact(
+        "gpt_block_ar_tiny",
+        functools.partial(M.gpt_block_ar, dims=tiny),
+        specs, args.out_dir))
+
+    # --- tiny LM head ------------------------------------------------------
+    vocab = 256
+    specs = [
+        act_spec("x", (1, tiny.e), 7),
+        act_spec("ln_g", (tiny.e,), 8, scale=0.2, offset=1.0),
+        act_spec("ln_b", (tiny.e,), 9, scale=0.2),
+        act_spec("w_head", (tiny.e, vocab), 10, scale=2.0 / tiny.e**0.5),
+    ]
+    manifest["artifacts"].append(build_artifact(
+        "gpt_head_tiny", M.gpt_head, specs, args.out_dir))
+
+    # --- standalone kernel artifacts (runtime microbenches) ---------------
+    from .kernels import gemm as gemm_k
+    from .kernels import flash_attention as fa
+
+    specs = [act_spec("a", (256, 256), 11), act_spec("b", (256, 256), 12)]
+    manifest["artifacts"].append(build_artifact(
+        "kernel_gemm_256",
+        lambda a, b: (gemm_k.gemm(a, b),),
+        specs, args.out_dir))
+
+    specs = [act_spec("q", (4, 256, 64), 13), act_spec("k", (4, 256, 64), 14),
+             act_spec("v", (4, 256, 64), 15)]
+    manifest["artifacts"].append(build_artifact(
+        "kernel_fa_h4_s256",
+        lambda q, k, v: (fa.flash_attention(q, k, v, causal=True),),
+        specs, args.out_dir))
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+          f"to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""FlashAttention-2 forward pass as a Pallas kernel (paper Sec. V-A2).
+
+The paper maps one attention head to one Snitch cluster; within the cluster
+the FA-2 KV-tile loop runs time-iteratively with the running row statistics
+(m, l) and the output accumulator resident in the 128 kB SPM. The BlockSpec
+grid below expresses exactly that schedule:
+
+  grid = (heads, Sq/bq, Skv/bkv)   -- kv axis innermost / sequential
+
+with per-(head, q-tile) scratch carrying (acc, m, l) across kv steps — the
+SPM-resident state of the paper's dataflow. Softmax statistics are computed
+in fp32 regardless of the i/o dtype, matching the paper's FP32 softmax
+island inside FP16/FP8 attention (conversions at the QK^T output and before
+the A@V GEMM).
+
+interpret=True: CPU PJRT cannot execute Mosaic custom calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps FP16 masks finite
+
+
+def _fa2_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale, kv_tiles, bq, bkv, causal, skv_total, sq_total):
+    """One (head, q-tile) FA-2 state machine stepped over kv tiles."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)   # [bq, P]
+    k = k_ref[0].astype(jnp.float32)   # [bkv, P]
+    v = v_ref[0].astype(jnp.float32)   # [bkv, P]
+
+    # S tile = scaled Q K^T, in fp32 (paper: conversion after QK^T GEMM).
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bkv]
+
+    if causal:
+        # Global positions: query row r -> qi*bq + r (+ offset when the
+        # query block is a suffix of the kv sequence, i.e. AR decode).
+        offset = skv_total - sq_total
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + offset
+        k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    # Online softmax update (FlashAttention-2, Alg. 1).
+    m_prev = m_ref[...]                        # [bq]
+    m_cur = jnp.max(s, axis=-1)                # [bq]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])            # [bq, bkv]
+    alpha = jnp.exp(m_prev - m_new)            # rescale of previous state
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    # Paper: convert P back to the low-precision io dtype before the A@V
+    # GEMM so it runs on the SIMD lanes; accumulate fp32.
+    p_lp = p.astype(o_ref.dtype).astype(jnp.float32)
+    acc_ref[...] = alpha[:, None] * acc_ref[...] + jnp.dot(
+        p_lp, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_tiles - 1)
+    def _finalize():
+        # Rows that attended to nothing (fully masked) get 0, not NaN.
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bkv"))
+def flash_attention(q, k, v, causal=False, bq=64, bkv=64):
+    """Multi-head FA-2 forward. q: [H, Sq, P], k/v: [H, Skv, P] -> [H, Sq, P].
+
+    The H grid axis is the paper's head->cluster spatial mapping; bq/bkv are
+    the SPM-resident temporal tiles.
+    """
+    h, sq, p = q.shape
+    h2, skv, p2 = k.shape
+    assert (h, p) == (h2, p2), "q/k head or projection mismatch"
+    assert v.shape == k.shape, "k/v shape mismatch"
+    bq = pick_block(sq, bq)
+    bkv = pick_block(skv, bkv)
+    kv_tiles = skv // bkv
+    scale = 1.0 / float(p) ** 0.5
+    grid = (h, sq // bq, kv_tiles)
+    return pl.pallas_call(
+        functools.partial(
+            _fa2_kernel,
+            scale=scale,
+            kv_tiles=kv_tiles,
+            bq=bq,
+            bkv=bkv,
+            causal=causal,
+            skv_total=skv,
+            sq_total=sq,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, p), lambda hh, qi, ki: (hh, qi, 0)),
+            pl.BlockSpec((1, bkv, p), lambda hh, qi, ki: (hh, ki, 0)),
+            pl.BlockSpec((1, bkv, p), lambda hh, qi, ki: (hh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, p), lambda hh, qi, ki: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, p), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, p), jnp.float32),  # output accumulator
+            pltpu.VMEM((bq,), jnp.float32),    # running max m
+            pltpu.VMEM((bq,), jnp.float32),    # running sum l
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def spm_footprint_bytes(bq, bkv, p, itemsize):
+    """SPM bytes for one cluster's double-buffered FA-2 tile set."""
+    q_t = bq * p * itemsize
+    kv_t = 2 * bkv * p * itemsize
+    acc = bq * p * 4
+    stats = 2 * bq * 4
+    out = bq * p * itemsize
+    return q_t + 2 * kv_t + acc + stats + out

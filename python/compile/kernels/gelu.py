@@ -1,0 +1,43 @@
+"""i-GELU Pallas kernel (paper Sec. V-A4).
+
+The paper approximates GELU with the i-GELU polynomial of Kim et al.
+(I-BERT) to avoid divisions and tanh on the Snitch FPU. The polynomial is
+evaluated in fp32 (the paper executes activations in FP32 even in the FP8
+variants, with conversions before/after).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+
+from . import ref
+
+
+def _igelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    inv_sqrt2 = 0.7071067811865475
+    z = x * inv_sqrt2
+    sign = jnp.sign(z)
+    az = jnp.minimum(jnp.abs(z), -ref.IGELU_B)
+    erf = sign * (ref.IGELU_A * jnp.square(az + ref.IGELU_B) + ref.IGELU_C)
+    o_ref[...] = (x * 0.5 * (1.0 + erf)).astype(o_ref.dtype)
+
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def i_gelu(x, br=64):
+    """Elementwise i-GELU over x: [S, F], row-block tiled."""
+    s, f = x.shape
+    br = pick_block(s, br)
+    return pl.pallas_call(
+        _igelu_kernel,
+        grid=(s // br,),
+        in_specs=[pl.BlockSpec((br, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, f), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,45 @@
+"""LayerNorm Pallas kernel (paper Sec. V-A3).
+
+The paper tiles LayerNorm spatially on the row dimension across clusters and
+normalizes the rows of each block in parallel on the 8 compute cores, with
+the width-wise accumulations running on SSR+FREP. The Pallas grid mirrors
+the row-block tiling; statistics are computed in fp32 (SIMD lanes only help
+the elementwise scale/shift, as in the paper's low-precision variants).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...].astype(jnp.float32)
+                  + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br"))
+def layernorm(x, gamma, beta, eps=1e-5, br=64):
+    """Row-normalize x: [S, E] with per-feature gamma/beta: [E]."""
+    s, e = x.shape
+    br = pick_block(s, br)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(s // br,),
+        in_specs=[
+            pl.BlockSpec((br, e), lambda i: (i, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, e), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

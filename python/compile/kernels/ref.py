@@ -1,0 +1,114 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+These are the ground truth the pytest suite compares the Pallas kernels
+against (L1 correctness signal). They intentionally use the most direct
+jnp formulation — no tiling, no online softmax — so a bug in the tiled
+kernels cannot be replicated here.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# i-GELU polynomial coefficients (Kim et al., I-BERT). erf(x) is
+# approximated on |x| <= -b by sign(x) * (a*(|x|+b)^2 + c) with:
+IGELU_A = -0.2888
+IGELU_B = -1.769
+IGELU_C = 1.0
+
+
+def gemm(a, b, alpha=1.0):
+    """C = alpha * A @ B, accumulating in fp32."""
+    acc = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return (alpha * acc).astype(a.dtype)
+
+
+def softmax(x, axis=-1):
+    """Numerically-stable softmax in fp32 (the paper keeps softmax at FP32)."""
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=axis, keepdims=True)
+    e = jnp.exp(x32 - m)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Row-wise layer normalization; statistics in fp32."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def i_erf(x):
+    """I-BERT polynomial approximation of erf, evaluated in fp32."""
+    x = x.astype(jnp.float32)
+    sign = jnp.sign(x)
+    ax = jnp.minimum(jnp.abs(x), -IGELU_B)
+    l = IGELU_A * (ax + IGELU_B) ** 2 + IGELU_C
+    return sign * l
+
+
+def i_gelu(x):
+    """i-GELU: x * 0.5 * (1 + i_erf(x / sqrt(2))) — the paper's GELU.
+
+    Polynomial-only (no tanh, no division) as in Kim et al. [46].
+    """
+    x32 = x.astype(jnp.float32)
+    return (x32 * 0.5 * (1.0 + i_erf(x32 / jnp.sqrt(2.0).astype(jnp.float32)))).astype(
+        x.dtype
+    )
+
+
+def attention(q, k, v, causal=False, scale=None):
+    """Plain O(S^2) scaled-dot-product attention, one head.
+
+    q: [Sq, P], k: [Skv, P], v: [Skv, P]. Softmax in fp32.
+    """
+    p = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(p))
+    s = jnp.matmul(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    if causal:
+        sq, skv = s.shape
+        # Query i (global position i + Skv - Sq) attends to keys 0..pos.
+        offset = skv - sq
+        mask = jnp.tril(jnp.ones((sq, skv), dtype=bool), k=offset)
+        s = jnp.where(mask, s, -jnp.inf)
+    a = softmax(s, axis=-1)
+    return jnp.matmul(a.astype(jnp.float32), v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha(x1, x2, wq, wk, wv, wo, n_heads, causal=False):
+    """Full multi-head attention: projections, per-head attention, concat, out proj.
+
+    x1: [S1, E], x2: [S2, E]; wq/wk/wv: [E, H*P]; wo: [H*P, E].
+    """
+    s1, e = x1.shape
+    hp = wq.shape[1]
+    p = hp // n_heads
+    q = gemm(x1, wq).reshape(s1, n_heads, p)
+    k = gemm(x2, wk).reshape(x2.shape[0], n_heads, p)
+    v = gemm(x2, wv).reshape(x2.shape[0], n_heads, p)
+    heads = []
+    for h in range(n_heads):
+        heads.append(attention(q[:, h], k[:, h], v[:, h], causal=causal))
+    cat = jnp.concatenate(heads, axis=-1)
+    return gemm(cat, wo)
+
+
+def mlp(x, w1, b1, w2, b2):
+    """Transformer MLP: Linear -> i-GELU -> Linear."""
+    h = gemm(x, w1) + b1.astype(x.dtype)
+    h = i_gelu(h)
+    return gemm(h, w2) + b2.astype(x.dtype)
+
+
+def transformer_block(x, params, n_heads, causal=False):
+    """Pre-LN transformer block as used by both ViT and GPT model families."""
+    h = layernorm(x, params["ln1_g"], params["ln1_b"])
+    h = mha(h, h, params["wq"], params["wk"], params["wv"], params["wo"], n_heads,
+            causal=causal)
+    x = x + h
+    h = layernorm(x, params["ln2_g"], params["ln2_b"])
+    h = mlp(h, params["w1"], params["b1"], params["w2"], params["b2"])
+    return x + h

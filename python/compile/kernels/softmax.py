@@ -1,0 +1,37 @@
+"""Row-softmax Pallas kernel.
+
+Standalone (non-fused) softmax used by the *baseline* attention path — the
+unfused implementation Fig. 7/8 compare FlashAttention-2 against. Always
+computed in fp32 internally (the paper never lowers softmax precision).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .util import pick_block
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax(x, br=64):
+    """Softmax over the last axis of x: [S, N], row-block tiled."""
+    s, n = x.shape
+    br = pick_block(s, br)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(s // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, n), x.dtype),
+        interpret=True,
+    )(x)

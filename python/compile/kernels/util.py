@@ -1,0 +1,25 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+Pallas BlockSpecs require the grid to cover the array exactly, so block
+sizes must divide the dimension. ViT sequence lengths (S=197, prime) have
+no useful divisors; in that case we fall back to a single full-dimension
+tile, which is exactly what the paper does when a tensor fits the cluster
+SPM outright (temporal tiling degenerates to one time step).
+"""
+
+# A tile this small under-utilizes the (simulated) SIMD lanes and explodes
+# the interpret-mode grid; prefer one full tile instead when affordable.
+_MIN_USEFUL_BLOCK = 16
+# Largest dimension we are willing to hold as a single tile.
+_FULL_TILE_CAP = 4096
+
+
+def pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` <= `want`, falling back to `dim` itself
+    when only degenerate divisors exist (e.g. prime dims like S=197)."""
+    b = max(1, min(dim, want))
+    while dim % b != 0:
+        b -= 1
+    if b < _MIN_USEFUL_BLOCK and dim <= _FULL_TILE_CAP:
+        return dim
+    return b

@@ -1,0 +1,169 @@
+"""L2: JAX transformer blocks assembled from the L1 Pallas kernels.
+
+Covers both families the paper benchmarks (Table II):
+  * encoder-only ViT blocks (non-causal MHSA)        -> `vit_block`
+  * decoder-only GPT blocks, NAR mode (causal MHSA,
+    returns K/V for the cache)                       -> `gpt_block_nar`
+  * decoder-only GPT blocks, AR mode (single query
+    against a fixed-capacity KV cache + write-back)  -> `gpt_block_ar`
+  * final LayerNorm + LM head                        -> `gpt_head`
+
+Everything here is build-time only: `aot.py` lowers these functions to HLO
+text once; the Rust coordinator owns weights/caches at runtime and feeds
+them in as parameters. Python never sits on the request path.
+
+All blocks are pre-LN (GPT-2/ViT style). The MLP fuses Linear+i-GELU in a
+single lowered module, mirroring the paper's layer-fusion (Sec. V-B): no
+intermediate leaves the artifact boundary (= no HBM round trip).
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention as fa
+from .kernels import gelu as gelu_k
+from .kernels import gemm as gemm_k
+from .kernels import layernorm as ln_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    """Hyperparameters of one Table-II model (or a tiny test stand-in)."""
+
+    name: str
+    blocks: int
+    e: int      # embedding dim E
+    p: int      # per-head projection dim P
+    heads: int  # H
+    ff: int     # MLP hidden dim FF
+    seq: int    # default sequence length S
+
+    @property
+    def hp(self) -> int:
+        return self.heads * self.p
+
+
+# Table II presets (S for GPT is the paper's sweep default of 1024).
+VIT_B = ModelDims("vit-b", 12, 768, 64, 12, 3072, 197)
+VIT_L = ModelDims("vit-l", 24, 1024, 64, 16, 4096, 197)
+VIT_H = ModelDims("vit-h", 32, 1280, 80, 16, 5120, 197)
+GPT3_XL = ModelDims("gpt3-xl", 40, 2048, 128, 16, 8192, 1024)
+GPT_J = ModelDims("gpt-j", 28, 4096, 256, 16, 16384, 1024)
+# Tiny stand-in: same topology, CPU-executable in integration tests.
+TINY = ModelDims("tiny", 2, 64, 16, 4, 128, 32)
+
+PRESETS = {m.name: m for m in (VIT_B, VIT_L, VIT_H, GPT3_XL, GPT_J, TINY)}
+
+# Ordered weight-argument schema for one transformer block. The Rust side
+# re-creates the exact argument order from the manifest.
+BLOCK_WEIGHT_SCHEMA: List[Tuple[str, str]] = [
+    ("ln1_g", "e"), ("ln1_b", "e"),
+    ("wq", "e.hp"), ("wk", "e.hp"), ("wv", "e.hp"), ("wo", "hp.e"),
+    ("ln2_g", "e"), ("ln2_b", "e"),
+    ("w1", "e.ff"), ("b1", "ff"), ("w2", "ff.e"), ("b2", "e"),
+]
+
+
+def weight_shapes(dims: ModelDims) -> Dict[str, Tuple[int, ...]]:
+    """Concrete shapes for the block weight schema."""
+    table = {"e": (dims.e,), "ff": (dims.ff,),
+             "e.hp": (dims.e, dims.hp), "hp.e": (dims.hp, dims.e),
+             "e.ff": (dims.e, dims.ff), "ff.e": (dims.ff, dims.e)}
+    return {name: table[kind] for name, kind in BLOCK_WEIGHT_SCHEMA}
+
+
+def _split_heads(x, heads, p):
+    """[S, H*P] -> [H, S, P] (paper: heads map to clusters)."""
+    s = x.shape[0]
+    return x.reshape(s, heads, p).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    """[H, S, P] -> [S, H*P] (the Concat the paper fuses into the out-proj)."""
+    h, s, p = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * p)
+
+
+def _mha(x, w, dims: ModelDims, causal: bool):
+    """Pre-LN MHA with the FA-2 Pallas kernel, fused concat+out-proj."""
+    h = ln_k.layernorm(x, w["ln1_g"], w["ln1_b"])
+    q = _split_heads(gemm_k.gemm(h, w["wq"]), dims.heads, dims.p)
+    k = _split_heads(gemm_k.gemm(h, w["wk"]), dims.heads, dims.p)
+    v = _split_heads(gemm_k.gemm(h, w["wv"]), dims.heads, dims.p)
+    o = fa.flash_attention(q, k, v, causal=causal)
+    att = gemm_k.gemm(_merge_heads(o), w["wo"])
+    return x + att, k, v
+
+
+def _mlp(x, w):
+    """Pre-LN MLP with fused Linear+i-GELU (paper Sec. V-B)."""
+    h = ln_k.layernorm(x, w["ln2_g"], w["ln2_b"])
+    h = gelu_k.i_gelu(gemm_k.gemm(h, w["w1"]) + w["b1"].astype(h.dtype))
+    return x + gemm_k.gemm(h, w["w2"]) + w["b2"].astype(x.dtype)
+
+
+def vit_block(x, *weights, dims: ModelDims):
+    """Encoder block: x [S, E] -> (out [S, E],) (non-causal MHSA)."""
+    w = dict(zip([n for n, _ in BLOCK_WEIGHT_SCHEMA], weights))
+    y, _, _ = _mha(x, w, dims, causal=False)
+    return (_mlp(y, w),)
+
+
+def gpt_block_nar(x, *weights, dims: ModelDims):
+    """Decoder block in NAR/prefill mode.
+
+    x [S, E] -> (out [S, E], k [H, S, P], v [H, S, P]); the caller stores
+    k/v in the KV cache for subsequent AR steps.
+    """
+    w = dict(zip([n for n, _ in BLOCK_WEIGHT_SCHEMA], weights))
+    y, k, v = _mha(x, w, dims, causal=True)
+    return _mlp(y, w), k, v
+
+
+def gpt_block_ar(x, k_cache, v_cache, kv_len, *weights, dims: ModelDims):
+    """Decoder block in AR/decode mode for a single new token.
+
+    x:        [1, E]           the new token's activations
+    k_cache:  [H, Smax, P]     fixed-capacity cache (garbage beyond kv_len)
+    v_cache:  [H, Smax, P]
+    kv_len:   i32 scalar       number of valid cache entries (tokens so far)
+
+    Returns (out [1, E], k_cache', v_cache') with the new K/V written at
+    position kv_len. The attention is the paper's AR matrix-vector path:
+    one query row against kv_len+1 keys; invalid cache slots are masked.
+    A single fixed-Smax artifact serves every decode step, so the Rust
+    coordinator keeps one executable and two flat buffers per block.
+    """
+    w = dict(zip([n for n, _ in BLOCK_WEIGHT_SCHEMA], weights))
+    h = ln_k.layernorm(x, w["ln1_g"], w["ln1_b"])
+    q = _split_heads(gemm_k.gemm(h, w["wq"]), dims.heads, dims.p)   # [H,1,P]
+    k_new = _split_heads(gemm_k.gemm(h, w["wk"]), dims.heads, dims.p)
+    v_new = _split_heads(gemm_k.gemm(h, w["wv"]), dims.heads, dims.p)
+    # KV-cache append at kv_len (paper Sec. II-B: K/V of previous tokens are
+    # stored to avoid recomputation).
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, kv_len, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, kv_len, 0))
+    smax = k_cache.shape[1]
+    # One query against kv_len+1 keys, masked fp32 softmax (paper keeps
+    # softmax in FP32 in every precision variant).
+    scale = 1.0 / float(dims.p) ** 0.5
+    s = jnp.einsum("hqp,hkp->hqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale       # [H,1,Smax]
+    valid = jnp.arange(smax) <= kv_len                        # current token included
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p_ = jnp.exp(s - m)
+    a = p_ / jnp.sum(p_, axis=-1, keepdims=True)
+    o = jnp.einsum("hqk,hkp->hqp", a, v_cache.astype(jnp.float32)).astype(x.dtype)
+    att = gemm_k.gemm(_merge_heads(o), w["wo"])
+    y = x + att
+    return _mlp(y, w), k_cache, v_cache
+
+
+def gpt_head(x, ln_g, ln_b, w_head):
+    """Final LayerNorm + LM head: x [1, E] -> (logits [1, V],)."""
+    h = ln_k.layernorm(x, ln_g, ln_b)
+    return (gemm_k.gemm(h, w_head),)

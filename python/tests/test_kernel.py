@@ -1,0 +1,227 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer: if these pass,
+the HLO artifacts the Rust coordinator executes are numerically equivalent
+to the textbook math, across tilings and dtypes (FP32/BF16/FP16/FP8 — the
+paper's precision ladder, minus FP64 which jax CPU covers via float64).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import gelu as gelu_k
+from compile.kernels import gemm as gemm_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import ref
+from compile.kernels import softmax as sm_k
+from compile.kernels.util import pick_block
+
+RNG = np.random.default_rng(1234)
+
+# dtype -> (rtol, atol): tolerance widens with shorter mantissas.
+TOLS = {
+    jnp.float32: (1e-5, 1e-5),
+    jnp.bfloat16: (3e-2, 3e-2),
+    jnp.float16: (5e-3, 5e-3),
+    jnp.float8_e4m3fn: (2.5e-1, 2.5e-1),  # paper's FP8ALT (E4M3)
+    jnp.float8_e5m2: (5e-1, 5e-1),        # paper's FP8 (E5M2)
+}
+DTYPES = list(TOLS)
+
+
+def rand(shape, dtype=jnp.float32, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+def check(got, want, dtype):
+    rtol, atol = TOLS[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32),
+        np.asarray(want, dtype=np.float32),
+        rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- pick_block
+@pytest.mark.parametrize("dim,want,expect", [
+    (64, 64, 64), (64, 48, 32), (197, 64, 197), (1, 64, 1),
+    (48, 64, 48), (2048, 64, 64), (100, 64, 50), (30, 8, 30),
+])
+def test_pick_block(dim, want, expect):
+    b = pick_block(dim, want)
+    assert b == expect
+    assert dim % b == 0
+
+
+# --------------------------------------------------------------------- GEMM
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gemm_dtypes(dtype):
+    a, b = rand((32, 48), dtype), rand((48, 24), dtype)
+    check(gemm_k.gemm(a, b, bm=16, bn=8, bk=16), ref.gemm(a, b), dtype)
+
+
+@pytest.mark.parametrize("m,n,k", [(8, 8, 8), (64, 32, 128), (197, 64, 768),
+                                   (1, 64, 64), (33, 17, 9)])
+def test_gemm_shapes(m, n, k):
+    a, b = rand((m, k)), rand((k, n))
+    # Tolerance scales with the accumulation length: tiled K-order differs
+    # from jnp's single-pass matmul by O(sqrt(K)) ulps.
+    atol = 1e-5 * max(1.0, k**0.5)
+    np.testing.assert_allclose(
+        np.asarray(gemm_k.gemm(a, b)), np.asarray(ref.gemm(a, b)),
+        rtol=1e-4, atol=atol)
+
+
+def test_gemm_alpha():
+    a, b = rand((16, 16)), rand((16, 16))
+    # alpha is the paper's 1/sqrt(P) attention scaling folded into the GEMM
+    check(gemm_k.gemm(a, b, alpha=0.125), ref.gemm(a, b, alpha=0.125),
+          jnp.float32)
+
+
+def test_gemm_identity():
+    a = rand((24, 24))
+    check(gemm_k.gemm(a, np.eye(24, dtype=np.float32)), a, jnp.float32)
+
+
+def test_gemm_tile_invariance():
+    """Different SPM tilings must agree bit-for-bit in structure (allclose)."""
+    a, b = rand((64, 64)), rand((64, 64))
+    base = gemm_k.gemm(a, b, bm=64, bn=64, bk=64)
+    for bm, bn, bk in [(8, 8, 8), (16, 32, 64), (64, 8, 16), (32, 32, 32)]:
+        check(gemm_k.gemm(a, b, bm=bm, bn=bn, bk=bk), base, jnp.float32)
+
+
+# --------------------------------------------------------- FlashAttention-2
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("causal", [False, True])
+def test_fa_dtypes(dtype, causal):
+    q, k, v = (rand((4, 32, 16), dtype, 0.5) for _ in range(3))
+    got = fa.flash_attention(q, k, v, causal=causal, bq=8, bkv=8)
+    want = np.stack([ref.attention(q[h], k[h], v[h], causal=causal)
+                     for h in range(4)])
+    check(got, want, dtype)
+
+
+def test_fa_fp8():
+    dtype = jnp.float8_e4m3fn
+    q, k, v = (rand((2, 16, 8), dtype, 0.5) for _ in range(3))
+    got = fa.flash_attention(q, k, v, bq=8, bkv=8)
+    want = np.stack([ref.attention(q[h], k[h], v[h]) for h in range(2)])
+    check(got, want, dtype)
+
+
+@pytest.mark.parametrize("sq,skv", [(32, 32), (1, 32), (8, 64), (197, 197),
+                                    (16, 16)])
+def test_fa_shapes(sq, skv):
+    q = rand((2, sq, 32))
+    k, v = rand((2, skv, 32)), rand((2, skv, 32))
+    got = fa.flash_attention(q, k, v, causal=True, bq=8, bkv=8)
+    want = np.stack([ref.attention(q[h], k[h], v[h], causal=True)
+                     for h in range(2)])
+    check(got, want, jnp.float32)
+
+
+def test_fa_tile_invariance():
+    q, k, v = (rand((2, 64, 16)) for _ in range(3))
+    base = fa.flash_attention(q, k, v, causal=True, bq=64, bkv=64)
+    for bq, bkv in [(8, 8), (16, 64), (64, 8), (32, 16)]:
+        check(fa.flash_attention(q, k, v, causal=True, bq=bq, bkv=bkv),
+              base, jnp.float32)
+
+
+def test_fa_matches_unfused_softmax_path():
+    """FA-2 must equal the baseline (unfused GEMM+softmax+GEMM) pipeline."""
+    q, k, v = (rand((1, 32, 16)) for _ in range(3))
+    s = gemm_k.gemm(q[0], np.asarray(k[0]).T, alpha=1.0 / 4.0)
+    a = sm_k.softmax(s)
+    want = gemm_k.gemm(a, v[0])
+    got = fa.flash_attention(q, k, v)[0]
+    check(got, want, jnp.float32)
+
+
+def test_fa_single_query_decode():
+    """AR decode shape: one query vs a long KV history (paper's GEMV path)."""
+    q = rand((4, 1, 16))
+    k, v = rand((4, 128, 16)), rand((4, 128, 16))
+    got = fa.flash_attention(q, k, v, causal=True, bq=1, bkv=16)
+    want = np.stack([ref.attention(q[h], k[h], v[h], causal=True)
+                     for h in range(4)])
+    check(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------- LayerNorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_layernorm_dtypes(dtype):
+    x = rand((32, 48), dtype)
+    g, b = rand(48, jnp.float32, 0.2) + 1.0, rand(48, jnp.float32, 0.2)
+    check(ln_k.layernorm(x, g.astype(dtype), b.astype(dtype), br=8),
+          ref.layernorm(x, g, b), dtype)
+
+
+def test_layernorm_rows_independent():
+    """Permuting rows must permute outputs (no cross-row leakage)."""
+    x = rand((16, 32))
+    g, b = np.ones(32, np.float32), np.zeros(32, np.float32)
+    perm = RNG.permutation(16)
+    got = np.asarray(ln_k.layernorm(x[perm], g, b, br=4))
+    want = np.asarray(ln_k.layernorm(x, g, b, br=4))[perm]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_layernorm_statistics():
+    """Unit gamma/zero beta output has ~zero mean, ~unit variance per row."""
+    x = rand((8, 256), scale=3.0)
+    y = np.asarray(ln_k.layernorm(x, np.ones(256, np.float32),
+                                  np.zeros(256, np.float32)))
+    np.testing.assert_allclose(y.mean(axis=1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.var(axis=1), 1.0, atol=1e-3)
+
+
+# -------------------------------------------------------------------- GELU
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_gelu_dtypes(dtype):
+    x = rand((32, 16), dtype)
+    check(gelu_k.i_gelu(x, br=8), ref.i_gelu(x), dtype)
+
+
+def test_gelu_vs_exact_gelu():
+    """i-GELU is an approximation: must stay close to exact GELU."""
+    x = np.linspace(-4, 4, 101, dtype=np.float32).reshape(1, -1)
+    got = np.asarray(gelu_k.i_gelu(x)).ravel()
+    exact = np.asarray(jax.nn.gelu(x, approximate=False)).ravel()
+    # Kim et al. report max error ~1e-2 over the useful range.
+    assert np.max(np.abs(got - exact)) < 2e-2
+
+
+def test_gelu_limits():
+    """GELU(x) -> x for large x, -> 0 for very negative x."""
+    x = np.array([[10.0, -10.0, 0.0]], dtype=np.float32)
+    y = np.asarray(gelu_k.i_gelu(x)).ravel()
+    np.testing.assert_allclose(y[0], 10.0, atol=1e-3)
+    np.testing.assert_allclose(y[1], 0.0, atol=1e-3)
+    np.testing.assert_allclose(y[2], 0.0, atol=1e-6)
+
+
+# ------------------------------------------------------------------ Softmax
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_softmax_dtypes(dtype):
+    x = rand((32, 48), dtype)
+    check(sm_k.softmax(x, br=8), ref.softmax(x), dtype)
+
+
+def test_softmax_rows_sum_to_one():
+    x = rand((16, 64), scale=5.0)
+    y = np.asarray(sm_k.softmax(x))
+    np.testing.assert_allclose(y.sum(axis=-1), 1.0, rtol=1e-5)
+    assert (y >= 0).all()
+
+
+def test_softmax_stability_large_logits():
+    """The fp32 max-subtraction must survive huge logits without NaN/Inf."""
+    x = np.array([[1e4, 1e4 - 1.0, 0.0]], dtype=np.float32)
+    y = np.asarray(sm_k.softmax(x))
+    assert np.isfinite(y).all()
+    np.testing.assert_allclose(y.sum(), 1.0, rtol=1e-5)

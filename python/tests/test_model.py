@@ -1,0 +1,158 @@
+"""L2 correctness: model blocks vs the pure-jnp reference transformer.
+
+Key invariant (paper Sec. II-B): AR decode must produce exactly the same
+activations as the corresponding NAR/prefill row — the KV cache is a pure
+latency optimization, never a numerical one.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+DIMS = M.TINY
+
+
+def make_weights(dims, seed=0):
+    rng = np.random.default_rng(seed)
+    shapes = M.weight_shapes(dims)
+    w = {}
+    for name, _ in M.BLOCK_WEIGHT_SCHEMA:
+        shape = shapes[name]
+        if name in ("ln1_g", "ln2_g"):
+            w[name] = (1.0 + 0.1 * rng.standard_normal(shape)).astype(np.float32)
+        elif len(shape) == 1:
+            w[name] = (0.1 * rng.standard_normal(shape)).astype(np.float32)
+        else:
+            w[name] = (rng.standard_normal(shape) / np.sqrt(shape[0])).astype(
+                np.float32)
+    return w
+
+
+def wlist(w):
+    return [w[name] for name, _ in M.BLOCK_WEIGHT_SCHEMA]
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return make_weights(DIMS)
+
+
+@pytest.fixture(scope="module")
+def x():
+    rng = np.random.default_rng(42)
+    return (0.5 * rng.standard_normal((DIMS.seq, DIMS.e))).astype(np.float32)
+
+
+def test_vit_block_vs_ref(x, weights):
+    (got,) = M.vit_block(x, *wlist(weights), dims=DIMS)
+    want = ref.transformer_block(x, weights, DIMS.heads, causal=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gpt_nar_block_vs_ref(x, weights):
+    got, k, v = M.gpt_block_nar(x, *wlist(weights), dims=DIMS)
+    want = ref.transformer_block(x, weights, DIMS.heads, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert k.shape == (DIMS.heads, DIMS.seq, DIMS.p)
+    assert v.shape == (DIMS.heads, DIMS.seq, DIMS.p)
+
+
+def test_gpt_nar_kv_matches_projections(x, weights):
+    """Returned K/V must equal the plain projections of the LN'd input."""
+    _, k, v = M.gpt_block_nar(x, *wlist(weights), dims=DIMS)
+    h = ref.layernorm(x, weights["ln1_g"], weights["ln1_b"])
+    want_k = ref.gemm(h, weights["wk"]).reshape(DIMS.seq, DIMS.heads, DIMS.p)
+    want_v = ref.gemm(h, weights["wv"]).reshape(DIMS.seq, DIMS.heads, DIMS.p)
+    np.testing.assert_allclose(k, want_k.transpose(1, 0, 2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(v, want_v.transpose(1, 0, 2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ar_decode_matches_nar(x, weights):
+    """Prefill S-1 tokens, decode token S-1 autoregressively: the decoded
+    activations must match the NAR row (the paper's KV-cache equivalence)."""
+    smax = DIMS.seq + 8
+    full, _, _ = M.gpt_block_nar(x, *wlist(weights), dims=DIMS)
+
+    # Prefill on the first S-1 rows.
+    prefix = x[:-1]
+    _, k_pre, v_pre = M.gpt_block_nar(prefix, *wlist(weights), dims=DIMS)
+    k_cache = np.zeros((DIMS.heads, smax, DIMS.p), np.float32)
+    v_cache = np.zeros((DIMS.heads, smax, DIMS.p), np.float32)
+    k_cache[:, : DIMS.seq - 1] = np.asarray(k_pre)
+    v_cache[:, : DIMS.seq - 1] = np.asarray(v_pre)
+
+    out, k2, v2 = M.gpt_block_ar(
+        x[-1:], k_cache, v_cache, np.int32(DIMS.seq - 1),
+        *wlist(weights), dims=DIMS)
+    np.testing.assert_allclose(out[0], full[-1], rtol=1e-3, atol=1e-3)
+    # Cache write-back lands at position S-1.
+    h = ref.layernorm(x[-1:], weights["ln1_g"], weights["ln1_b"])
+    want_k = ref.gemm(h, weights["wk"]).reshape(1, DIMS.heads, DIMS.p)
+    np.testing.assert_allclose(np.asarray(k2)[:, DIMS.seq - 1],
+                               want_k[0], rtol=1e-4, atol=1e-4)
+
+
+def test_ar_ignores_garbage_beyond_kv_len(weights):
+    """Cache slots >= kv_len+1 must not influence the output (masking)."""
+    rng = np.random.default_rng(7)
+    xt = (0.5 * rng.standard_normal((1, DIMS.e))).astype(np.float32)
+    smax = 32
+    kv_len = 10
+    k_cache = (0.5 * rng.standard_normal(
+        (DIMS.heads, smax, DIMS.p))).astype(np.float32)
+    v_cache = (0.5 * rng.standard_normal(
+        (DIMS.heads, smax, DIMS.p))).astype(np.float32)
+    out1, _, _ = M.gpt_block_ar(xt, k_cache, v_cache, np.int32(kv_len),
+                                *wlist(weights), dims=DIMS)
+    k_cache2, v_cache2 = k_cache.copy(), v_cache.copy()
+    k_cache2[:, kv_len + 1:] = 1e3   # poison the invalid tail
+    v_cache2[:, kv_len + 1:] = -1e3
+    out2, _, _ = M.gpt_block_ar(xt, k_cache2, v_cache2, np.int32(kv_len),
+                                *wlist(weights), dims=DIMS)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_gpt_head(weights):
+    rng = np.random.default_rng(3)
+    xt = (0.5 * rng.standard_normal((1, DIMS.e))).astype(np.float32)
+    ln_g = np.ones(DIMS.e, np.float32)
+    ln_b = np.zeros(DIMS.e, np.float32)
+    w_head = (rng.standard_normal((DIMS.e, 64)) /
+              np.sqrt(DIMS.e)).astype(np.float32)
+    (logits,) = M.gpt_head(xt, ln_g, ln_b, w_head)
+    want = ref.gemm(ref.layernorm(xt, ln_g, ln_b), w_head)
+    np.testing.assert_allclose(logits, want, rtol=1e-4, atol=1e-4)
+    assert logits.shape == (1, 64)
+
+
+def test_block_stack_stable(x, weights):
+    """A deep stack of blocks must not blow up numerically (pre-LN)."""
+    h = x
+    for _ in range(6):
+        (h,) = M.vit_block(h, *wlist(weights), dims=DIMS)
+    assert np.isfinite(np.asarray(h)).all()
+
+
+@pytest.mark.parametrize("preset,e,heads", [
+    ("vit-b", 768, 12), ("vit-l", 1024, 16), ("vit-h", 1280, 16),
+    ("gpt3-xl", 2048, 16), ("gpt-j", 4096, 16),
+])
+def test_table2_presets(preset, e, heads):
+    dims = M.PRESETS[preset]
+    assert dims.e == e and dims.heads == heads
+    assert dims.hp == dims.heads * dims.p
+
+
+def test_weight_shapes_cover_schema():
+    shapes = M.weight_shapes(DIMS)
+    assert set(shapes) == {n for n, _ in M.BLOCK_WEIGHT_SCHEMA}
+    assert shapes["wq"] == (DIMS.e, DIMS.hp)
+    assert shapes["w1"] == (DIMS.e, DIMS.ff)

@@ -1,0 +1,94 @@
+"""Hypothesis property sweeps over the Pallas kernels' shape/dtype space.
+
+The session contract: hypothesis sweeps the kernels' shapes/dtypes and
+asserts allclose against ref.py. Shapes are drawn small enough that the
+interpret-mode grid stays fast, but cover odd/prime/degenerate dims.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import gelu as gelu_k
+from compile.kernels import gemm as gemm_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import ref
+from compile.kernels import softmax as sm_k
+from compile.kernels.util import pick_block
+
+DIMS = st.integers(min_value=1, max_value=48)
+BLOCKS = st.integers(min_value=1, max_value=64)
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+TOL = {jnp.float32: 1e-4, jnp.bfloat16: 5e-2}
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * 0.5).astype(dtype)
+
+
+def _close(got, want, dtype):
+    t = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=t, atol=t)
+
+
+@given(m=DIMS, n=DIMS, k=DIMS, bm=BLOCKS, bn=BLOCKS, bk=BLOCKS,
+       dtype=DTYPES, seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_gemm_property(m, n, k, bm, bn, bk, dtype, seed):
+    a, b = _rand((m, k), dtype, seed), _rand((k, n), dtype, seed + 1)
+    _close(gemm_k.gemm(a, b, bm=bm, bn=bn, bk=bk), ref.gemm(a, b), dtype)
+
+
+@given(h=st.integers(1, 4), sq=st.integers(1, 32), skv=st.integers(1, 32),
+       p=st.sampled_from([4, 8, 16]), bq=BLOCKS, bkv=BLOCKS,
+       causal=st.booleans(), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_fa_property(h, sq, skv, p, bq, bkv, causal, seed):
+    if causal and sq > skv:
+        sq = skv  # causal requires the query block to be a suffix of kv
+    q = _rand((h, sq, p), jnp.float32, seed)
+    k = _rand((h, skv, p), jnp.float32, seed + 1)
+    v = _rand((h, skv, p), jnp.float32, seed + 2)
+    got = fa.flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    want = np.stack([ref.attention(q[i], k[i], v[i], causal=causal)
+                     for i in range(h)])
+    _close(got, want, jnp.float32)
+
+
+@given(s=DIMS, e=st.integers(2, 48), br=BLOCKS, dtype=DTYPES,
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_layernorm_property(s, e, br, dtype, seed):
+    x = _rand((s, e), dtype, seed)
+    g = (1.0 + _rand((e,), np.float32, seed + 1) * 0.2).astype(dtype)
+    b = (_rand((e,), np.float32, seed + 2) * 0.2).astype(dtype)
+    _close(ln_k.layernorm(x, g, b, br=br),
+           ref.layernorm(x, g, b), dtype)
+
+
+@given(s=DIMS, f=DIMS, br=BLOCKS, dtype=DTYPES, seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_gelu_property(s, f, br, dtype, seed):
+    x = _rand((s, f), dtype, seed)
+    _close(gelu_k.i_gelu(x, br=br), ref.i_gelu(x), dtype)
+
+
+@given(s=DIMS, n=DIMS, br=BLOCKS, seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_softmax_property(s, n, br, seed):
+    x = _rand((s, n), jnp.float32, seed)
+    _close(sm_k.softmax(x, br=br), ref.softmax(x), jnp.float32)
+
+
+@given(dim=st.integers(1, 4096), want=st.integers(1, 256))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_property(dim, want):
+    b = pick_block(dim, want)
+    assert 1 <= b <= dim
+    assert dim % b == 0

@@ -1,0 +1,44 @@
+//! Ablation study: each platform feature knocked out individually on the
+//! GPT-J NAR FP32 workload (S=1024) — quantifies what every ingredient of
+//! the paper's 4.6-5.0x "optimized" jump contributes (Sec. VII-A discusses
+//! them only jointly).
+
+mod common;
+
+use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::ModelConfig;
+
+fn throughput(features: Features, fmt: FpFormat) -> f64 {
+    let mut p = PlatformConfig::occamy();
+    p.features = features;
+    InferenceEngine::new(p).run_nar(&ModelConfig::gpt_j(), 1024, fmt).throughput
+}
+
+fn main() {
+    common::header("ablations", "single-feature knockouts, GPT-J NAR S=1024");
+    let fmt = FpFormat::Fp32;
+    let (t, full) = common::time_median(3, || throughput(Features::all(), fmt));
+    println!("{:<28} {:>10} {:>9}", "configuration", "tok/s", "vs full");
+    println!("{:<28} {:>10.2} {:>8.2}x", "full (all features)", full, 1.0);
+    let knockouts: [(&str, Features); 6] = [
+        ("no Xssr", Features { xssr: false, ..Features::all() }),
+        ("no Xfrep", Features { xfrep: false, ..Features::all() }),
+        ("no SIMD", Features { simd: false, ..Features::all() }),
+        ("no cluster-to-cluster", Features { cluster_to_cluster: false, ..Features::all() }),
+        ("no double buffering", Features { double_buffering: false, ..Features::all() }),
+        ("baseline (paper)", Features::baseline()),
+    ];
+    for (name, f) in knockouts {
+        let tp = throughput(f, fmt);
+        println!("{name:<28} {tp:>10.2} {:>8.2}x", tp / full);
+    }
+    // Precision effect of SIMD alone: FP8 with SIMD off collapses to ~FP64.
+    let fp8_simd = throughput(Features::all(), FpFormat::Fp8);
+    let fp8_nosimd = throughput(Features { simd: false, ..Features::all() }, FpFormat::Fp8);
+    println!(
+        "\nFP8 with/without SIMD lanes: {fp8_simd:.1} / {fp8_nosimd:.1} tok/s ({:.2}x from packed SIMD)",
+        fp8_simd / fp8_nosimd
+    );
+    common::report_timing("ablation-point", t);
+}

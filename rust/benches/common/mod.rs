@@ -1,0 +1,32 @@
+//! Shared mini-harness for the paper-reproduction benches.
+//!
+//! criterion is unavailable in the offline registry, so each bench is a
+//! plain `fn main` that (a) regenerates one paper table/figure from the
+//! simulator and prints it side-by-side with the paper's numbers, and
+//! (b) wall-clock-times the simulator hot path driving it (median of N
+//! runs) so `cargo bench` still tracks performance regressions.
+
+use std::time::Instant;
+
+/// Median wall-clock seconds of `f` over `n` runs (after one warmup).
+pub fn time_median<T>(n: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut out = f(); // warmup
+    let mut samples: Vec<f64> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        out = f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[samples.len() / 2], out)
+}
+
+/// Print a bench timing line in a stable grep-able format.
+pub fn report_timing(name: &str, seconds: f64) {
+    println!("bench-timing {name}: {:.3} ms/iter", seconds * 1e3);
+}
+
+/// Print the paper-vs-measured header for a figure/table.
+pub fn header(id: &str, what: &str) {
+    println!("==== {id}: {what} ====");
+}

@@ -1,0 +1,45 @@
+//! Fig. 10 — kernel latency breakdown, GPT-J / GPT3-XL at FP32 and FP8 in
+//! NAR and AR. Paper (GPT-J): GEMM 66% (FP32) / 36% (FP8) of NAR latency,
+//! 97% / 89% of AR; the FlashAttention-2 bucket grows at FP8 because its
+//! softmax island stays FP32. The paper instruments at MHA-macro-block
+//! granularity (see Breakdown::fig10_buckets).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::schedule::model_cost;
+use snitch_fm::coordinator::Breakdown;
+use snitch_fm::model::{Mode, ModelConfig};
+
+fn main() {
+    common::header("Fig. 10", "kernel latency breakdown (MHA-block granularity)");
+    let p = PlatformConfig::occamy();
+    let paper_gptj = [
+        (Mode::Nar, FpFormat::Fp32, 66.0),
+        (Mode::Nar, FpFormat::Fp8, 36.0),
+        (Mode::Ar, FpFormat::Fp32, 97.0),
+        (Mode::Ar, FpFormat::Fp8, 89.0),
+    ];
+    for cfg in [ModelConfig::gpt_j(), ModelConfig::gpt3_xl()] {
+        for (mode, fmt, paper_gemm) in paper_gptj {
+            let label = format!(
+                "{} {} {}",
+                cfg.name,
+                if mode == Mode::Nar { "nar" } else { "ar" },
+                fmt.name()
+            );
+            let (t, mc) = common::time_median(3, || model_cost(&cfg, mode, 1024, fmt, &p));
+            let buckets = Breakdown::fig10_buckets(&mc);
+            print!("{label}: ");
+            for b in &buckets {
+                print!("{}={:.1}%  ", b.kind, b.fraction * 100.0);
+            }
+            if cfg.name == "gpt-j" {
+                print!("| paper GEMM(mlp) {paper_gemm}%");
+            }
+            println!();
+            common::report_timing(&label.replace(' ', "-"), t);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig. 7 — impact of SW optimizations on GPT-3XL / GPT-J throughput at
+//! S=1024 in NAR and AR modes: baseline FP64 vs the optimized precision
+//! ladder. Paper headlines: 16.1x NAR / 35.6x AR total speedup; 260/142
+//! tokens/s NAR FP8 and 6.5/2.6 tokens/s AR FP8 for GPT3-XL / GPT-J.
+
+mod common;
+
+use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::report;
+
+fn ladder(cfg: &ModelConfig, mode: Mode, seq: u64) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    let mut base = PlatformConfig::occamy();
+    base.features = Features::baseline();
+    let run = |p: PlatformConfig, fmt| {
+        let e = InferenceEngine::new(p);
+        match mode {
+            Mode::Nar => e.run_nar(cfg, seq, fmt),
+            Mode::Ar => e.run_ar_step(cfg, seq, fmt),
+        }
+        .throughput
+    };
+    rows.push(("baseline fp64".to_string(), run(base, FpFormat::Fp64)));
+    for fmt in FpFormat::LADDER {
+        rows.push((
+            format!("optimized {}", fmt.name()),
+            run(PlatformConfig::occamy(), fmt),
+        ));
+    }
+    rows
+}
+
+fn main() {
+    common::header("Fig. 7", "GPT SW-optimization ladder, S=1024");
+    let paper: [(&str, Mode, f64, f64); 4] = [
+        // (model, mode, paper total speedup, paper FP8 throughput tok/s)
+        ("gpt3-xl", Mode::Nar, 16.1, 260.0),
+        ("gpt-j", Mode::Nar, 16.1, 142.0),
+        ("gpt3-xl", Mode::Ar, 35.6, 6.5),
+        ("gpt-j", Mode::Ar, 35.6, 2.6),
+    ];
+    for (name, mode, paper_total, paper_fp8) in paper {
+        let cfg = ModelConfig::preset(name).unwrap();
+        let label = format!("{name}-{}", if mode == Mode::Nar { "nar" } else { "ar" });
+        let (t, rows) = common::time_median(5, || ladder(&cfg, mode, 1024));
+        print!(
+            "{}",
+            report::speedup_ladder(&format!("{label} (ours)"), "tok/s", &rows)
+        );
+        let total = rows.last().unwrap().1 / rows[0].1;
+        println!(
+            "  paper: total {paper_total}x, FP8 {paper_fp8} tok/s | ours: total {total:.1}x, FP8 {:.1} tok/s\n",
+            rows.last().unwrap().1
+        );
+        common::report_timing(&label, t);
+    }
+}

@@ -1,0 +1,44 @@
+//! Fig. 8 — impact of SW optimizations on the ViT model class.
+//! Paper headlines: up to 17.9x total speedup (4.1x from extensions,
+//! 1.6x FP32, 1.5x FP16, rest FP8); 26 / 12 / 8 images/s at FP8.
+
+mod common;
+
+use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::ModelConfig;
+use snitch_fm::report;
+
+fn ladder(cfg: &ModelConfig) -> Vec<(String, f64)> {
+    let mut rows = Vec::new();
+    let mut base = PlatformConfig::occamy();
+    base.features = Features::baseline();
+    rows.push((
+        "baseline fp64".to_string(),
+        InferenceEngine::new(base).run_nar(cfg, cfg.seq, FpFormat::Fp64).throughput,
+    ));
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    for fmt in FpFormat::LADDER {
+        rows.push((
+            format!("optimized {}", fmt.name()),
+            e.run_nar(cfg, cfg.seq, fmt).throughput,
+        ));
+    }
+    rows
+}
+
+fn main() {
+    common::header("Fig. 8", "ViT SW-optimization ladder");
+    let paper_fp8 = [("vit-b", 26.0), ("vit-l", 12.0), ("vit-h", 8.0)];
+    for (name, paper) in paper_fp8 {
+        let cfg = ModelConfig::preset(name).unwrap();
+        let (t, rows) = common::time_median(5, || ladder(&cfg));
+        print!("{}", report::speedup_ladder(&format!("{name} (ours)"), "img/s", &rows));
+        let total = rows.last().unwrap().1 / rows[0].1;
+        println!(
+            "  paper: FP8 {paper} images/s (17.9x max total) | ours: FP8 {:.1} images/s ({total:.1}x total)\n",
+            rows.last().unwrap().1
+        );
+        common::report_timing(name, t);
+    }
+}

@@ -1,0 +1,60 @@
+//! Fig. 9 — scalability. Left panes: GPT throughput vs sequence length
+//! (paper: GPT3-XL 429->136 tok/s NAR, 7.9->5.8 AR; GPT-J 174->74 NAR,
+//! 3.8->1 AR over S=128..2048). Right pane: ViT images/s vs clusters
+//! (paper: 4x/8x/16x clusters give up to 4/7.9/15.8x on ViT-H).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::ModelConfig;
+
+fn seq_sweep(fmt: FpFormat) -> Vec<(String, u64, f64, f64)> {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let mut out = Vec::new();
+    for cfg in [ModelConfig::gpt3_xl(), ModelConfig::gpt_j()] {
+        for s in [128u64, 256, 512, 1024, 2048] {
+            let nar = e.run_nar(&cfg, s, fmt).throughput;
+            let ar = e.run_ar_step(&cfg, s, fmt).throughput;
+            out.push((cfg.name.clone(), s, nar, ar));
+        }
+    }
+    out
+}
+
+fn cluster_sweep(fmt: FpFormat) -> Vec<(String, u32, f64)> {
+    let mut out = Vec::new();
+    for cfg in [ModelConfig::vit_b(), ModelConfig::vit_l(), ModelConfig::vit_h()] {
+        for clusters in [1u32, 4, 8, 16] {
+            let e = InferenceEngine::new(PlatformConfig::with_clusters(clusters));
+            out.push((cfg.name.clone(), clusters, e.run_nar(&cfg, cfg.seq, fmt).throughput));
+        }
+    }
+    out
+}
+
+fn main() {
+    let fmt = FpFormat::Fp8;
+    common::header("Fig. 9 (left)", "GPT throughput vs sequence length, FP8");
+    let (t1, rows) = common::time_median(3, || seq_sweep(fmt));
+    println!("{:<10} {:>6} {:>12} {:>10}", "model", "S", "NAR tok/s", "AR tok/s");
+    for (m, s, nar, ar) in &rows {
+        println!("{m:<10} {s:>6} {nar:>12.1} {ar:>10.2}");
+    }
+    println!("paper: gpt3-xl 429->136 NAR / 7.9->5.8 AR; gpt-j 174->74 NAR / 3.8->1 AR");
+    println!("(our per-token cost is flop-accurate, so the NAR slope is shallower; see EXPERIMENTS.md)\n");
+    common::report_timing("fig9-seq-sweep", t1);
+
+    common::header("Fig. 9 (right)", "ViT images/s vs clusters, FP8");
+    let (t2, rows) = common::time_median(3, || cluster_sweep(fmt));
+    println!("{:<8} {:>4} {:>12} {:>9}", "model", "C", "images/s", "speedup");
+    let mut base = 1.0;
+    for (m, c, tp) in &rows {
+        if *c == 1 {
+            base = *tp;
+        }
+        println!("{m:<8} {c:>4} {tp:>12.2} {:>8.1}x", tp / base);
+    }
+    println!("paper: (4,6,12)x B, (4,6,11.9)x L, (4,7.9,15.8)x H for 4/8/16 clusters");
+    common::report_timing("fig9-cluster-sweep", t2);
+}

@@ -1,0 +1,71 @@
+//! Hot-path microbenches (§Perf): the simulator and coordinator routines
+//! that every experiment sweep drives, plus the PJRT execute path when
+//! artifacts are present. Used for the before/after log in
+//! EXPERIMENTS.md §Perf.
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::schedule::{block_cost, model_cost};
+use snitch_fm::kernels::gemm::OperandHome;
+use snitch_fm::kernels::{flash_attention_cost, gemm_cost};
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::runtime::Runtime;
+use snitch_fm::tiling::plan_gemm;
+
+fn main() {
+    common::header("hotpath", "simulator/coordinator/runtime microbenches");
+    let p = PlatformConfig::occamy();
+
+    let (t, _) = common::time_median(50, || plan_gemm(2048, 16384, 4096, FpFormat::Fp8, &p));
+    common::report_timing("tiling::plan_gemm", t);
+
+    let (t, _) = common::time_median(50, || {
+        gemm_cost(1024, 4096, 16384, FpFormat::Fp32, &p, OperandHome::default())
+    });
+    common::report_timing("kernels::gemm_cost(gpt-j mlp)", t);
+
+    let (t, _) = common::time_median(50, || {
+        flash_attention_cost(16, 1024, 1024, 256, FpFormat::Fp32, true, &p)
+    });
+    common::report_timing("kernels::flash_attention_cost", t);
+
+    let cfg = ModelConfig::gpt_j();
+    let (t, _) = common::time_median(20, || block_cost(&cfg, Mode::Nar, 1024, 0, FpFormat::Fp32, &p));
+    common::report_timing("coordinator::block_cost(gpt-j nar)", t);
+
+    let (t, _) = common::time_median(10, || model_cost(&cfg, Mode::Nar, 2048, FpFormat::Fp8, &p));
+    common::report_timing("coordinator::model_cost(gpt-j s2048)", t);
+
+    // Full Fig. 7-style sweep: the workload every bench drives.
+    let (t, _) = common::time_median(5, || {
+        let e = snitch_fm::coordinator::InferenceEngine::new(p.clone());
+        let mut acc = 0.0;
+        for fmt in FpFormat::LADDER {
+            acc += e.run_nar(&cfg, 1024, fmt).throughput;
+            acc += e.run_ar_step(&cfg, 1024, fmt).throughput;
+        }
+        acc
+    });
+    common::report_timing("engine::full-ladder(gpt-j)", t);
+
+    // PJRT execute path (skipped gracefully when artifacts are absent).
+    match Runtime::new() {
+        Ok(mut rt) => {
+            let args = rt.manifest_args("kernel_gemm_256").unwrap();
+            rt.load("kernel_gemm_256").unwrap();
+            let (t, _) = common::time_median(20, || {
+                rt.load("kernel_gemm_256").unwrap().run(&args).unwrap()
+            });
+            common::report_timing("runtime::execute(kernel_gemm_256)", t);
+
+            let args = rt.manifest_args("gpt_block_ar_tiny").unwrap();
+            rt.load("gpt_block_ar_tiny").unwrap();
+            let (t, _) = common::time_median(20, || {
+                rt.load("gpt_block_ar_tiny").unwrap().run(&args).unwrap()
+            });
+            common::report_timing("runtime::execute(ar_decode_step)", t);
+        }
+        Err(e) => println!("(runtime benches skipped: {e})"),
+    }
+}

@@ -1,0 +1,52 @@
+//! Table III — power, GFLOPS/W and FPU utilization on GPT-J S=1024 for
+//! NAR and AR across the precision ladder. Paper: NAR 5.0/5.2/4.8/4.5 W,
+//! 38.8/78.8/151/294 GFLOPS/W, 76.3/79.7/70.6/65.2% util; AR ~2.1 W,
+//! 10/20.1/38.3/65.6 GFLOPS/W, 6.4-8.5% util.
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::{Mode, ModelConfig};
+
+const PAPER: [(&str, FpFormat, f64, f64, f64); 8] = [
+    ("NAR", FpFormat::Fp64, 5.0, 38.8, 76.3),
+    ("NAR", FpFormat::Fp32, 5.2, 78.8, 79.7),
+    ("NAR", FpFormat::Fp16, 4.8, 151.0, 70.6),
+    ("NAR", FpFormat::Fp8, 4.5, 294.0, 65.2),
+    ("AR", FpFormat::Fp64, 2.1, 10.0, 8.32),
+    ("AR", FpFormat::Fp32, 2.2, 20.1, 8.46),
+    ("AR", FpFormat::Fp16, 2.1, 38.3, 7.89),
+    ("AR", FpFormat::Fp8, 2.0, 65.6, 6.39),
+];
+
+fn main() {
+    common::header("Table III", "power & efficiency, GPT-J S=1024");
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let cfg = ModelConfig::gpt_j();
+    println!(
+        "{:<5} {:<6} {:>8} {:>8} | {:>10} {:>10} | {:>8} {:>8}",
+        "mode", "fmt", "P[W]", "paper", "GFLOPS/W", "paper", "util%", "paper"
+    );
+    let (t, _) = common::time_median(3, || {
+        for (mode_name, fmt, p_w, p_eff, p_util) in PAPER {
+            let mode = if mode_name == "NAR" { Mode::Nar } else { Mode::Ar };
+            let r = match mode {
+                Mode::Nar => e.run_nar(&cfg, 1024, fmt),
+                Mode::Ar => e.run_ar_step(&cfg, 1024, fmt),
+            };
+            println!(
+                "{:<5} {:<6} {:>8.2} {:>8.1} | {:>10.1} {:>10.1} | {:>8.2} {:>8.2}",
+                mode_name,
+                fmt.name(),
+                r.power_w,
+                p_w,
+                r.gflops_per_w,
+                p_eff,
+                r.fpu_utilization * 100.0,
+                p_util
+            );
+        }
+    });
+    common::report_timing("table3", t / 8.0);
+}

@@ -1,0 +1,142 @@
+//! Floating-point formats supported by the Snitch SIMD FPU (paper Sec. IV-A1).
+//!
+//! The 64-bit-wide FPU packs 1/2/4/8 lanes for 64/32/16/8-bit formats, and
+//! offers *expanding* (widening) SIMD dot products that take FP8/FP16 inputs
+//! and accumulate at FP16/FP32 — the reason low-precision GEMMs keep the
+//! speedup of narrow inputs without losing long-accumulation accuracy.
+
+use std::fmt;
+
+/// One of the six FP formats of the Snitch FPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpFormat {
+    /// IEEE-754 binary64.
+    Fp64,
+    /// IEEE-754 binary32.
+    Fp32,
+    /// IEEE-754 binary16.
+    Fp16,
+    /// BrainFloat16 (8-bit exponent, 7-bit mantissa).
+    Bf16,
+    /// FP8 E5M2 (paper's "FP8").
+    Fp8,
+    /// FP8 E4M3 (paper's "FP8ALT").
+    Fp8Alt,
+}
+
+impl FpFormat {
+    /// All formats, widest first.
+    pub const ALL: [FpFormat; 6] = [
+        FpFormat::Fp64,
+        FpFormat::Fp32,
+        FpFormat::Fp16,
+        FpFormat::Bf16,
+        FpFormat::Fp8,
+        FpFormat::Fp8Alt,
+    ];
+
+    /// The four formats the paper's precision ladder sweeps (Fig. 7/8).
+    pub const LADDER: [FpFormat; 4] =
+        [FpFormat::Fp64, FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8];
+
+    /// Size of one element in bytes.
+    pub const fn bytes(self) -> u64 {
+        match self {
+            FpFormat::Fp64 => 8,
+            FpFormat::Fp32 => 4,
+            FpFormat::Fp16 | FpFormat::Bf16 => 2,
+            FpFormat::Fp8 | FpFormat::Fp8Alt => 1,
+        }
+    }
+
+    /// SIMD lanes in the 64-bit FPU datapath (1 FMA per lane per cycle).
+    pub const fn simd_lanes(self) -> u64 {
+        8 / self.bytes()
+    }
+
+    /// Format elements are *accumulated* in by the widening dot-product
+    /// extension (paper Sec. IV-A1): FP8 -> FP16, FP16 -> FP32; wider
+    /// formats accumulate natively.
+    pub const fn accumulation_format(self) -> FpFormat {
+        match self {
+            FpFormat::Fp8 | FpFormat::Fp8Alt => FpFormat::Fp16,
+            FpFormat::Fp16 | FpFormat::Bf16 => FpFormat::Fp32,
+            other => other,
+        }
+    }
+
+    /// True for the sub-32-bit formats that need pack/unpack conversions
+    /// around the FP32 softmax/activation islands (paper Sec. VII-C).
+    pub const fn needs_fp32_conversion(self) -> bool {
+        matches!(
+            self,
+            FpFormat::Fp16 | FpFormat::Bf16 | FpFormat::Fp8 | FpFormat::Fp8Alt
+        )
+    }
+
+    /// Short lowercase name used in CLI args / configs / reports.
+    pub const fn name(self) -> &'static str {
+        match self {
+            FpFormat::Fp64 => "fp64",
+            FpFormat::Fp32 => "fp32",
+            FpFormat::Fp16 => "fp16",
+            FpFormat::Bf16 => "bf16",
+            FpFormat::Fp8 => "fp8",
+            FpFormat::Fp8Alt => "fp8alt",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<FpFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp64" | "f64" => Some(FpFormat::Fp64),
+            "fp32" | "f32" => Some(FpFormat::Fp32),
+            "fp16" | "f16" => Some(FpFormat::Fp16),
+            "bf16" => Some(FpFormat::Bf16),
+            "fp8" | "f8" | "e5m2" => Some(FpFormat::Fp8),
+            "fp8alt" | "e4m3" => Some(FpFormat::Fp8Alt),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for FpFormat {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        FpFormat::parse(s).ok_or_else(|| format!("unknown FP format: {s}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widening_accumulation() {
+        assert_eq!(FpFormat::Fp8.accumulation_format(), FpFormat::Fp16);
+        assert_eq!(FpFormat::Fp16.accumulation_format(), FpFormat::Fp32);
+        assert_eq!(FpFormat::Fp64.accumulation_format(), FpFormat::Fp64);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in FpFormat::ALL {
+            assert_eq!(FpFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(FpFormat::parse("nope"), None);
+    }
+
+    #[test]
+    fn conversion_islands() {
+        assert!(!FpFormat::Fp64.needs_fp32_conversion());
+        assert!(!FpFormat::Fp32.needs_fp32_conversion());
+        assert!(FpFormat::Fp8.needs_fp32_conversion());
+        assert!(FpFormat::Bf16.needs_fp32_conversion());
+    }
+}

@@ -1,0 +1,88 @@
+//! Platform description of the many-tiny-core RISC-V target (paper Sec. IV).
+//!
+//! Everything the timing simulator, tile planner and energy model need to
+//! know about the hardware lives here: floating-point formats and their
+//! SIMD widths, the Snitch compute-cluster microarchitecture, the
+//! hierarchical multi-cluster interconnect, and which ISA extensions /
+//! platform features are enabled (the knobs Fig. 7/8 ablate).
+
+mod format;
+mod platform;
+
+pub use format::FpFormat;
+pub use platform::{
+    ClusterConfig, Features, InterconnectConfig, MemLevel, PlatformConfig,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_match_paper() {
+        // Paper Sec. IV-A1: 16 / 32 / 64 / 128 FLOP/cycle per cluster for
+        // FP64 / FP32 / FP16 / FP8 over 8 compute cores.
+        let c = ClusterConfig::default();
+        assert_eq!(c.peak_flop_per_cycle(FpFormat::Fp64), 16);
+        assert_eq!(c.peak_flop_per_cycle(FpFormat::Fp32), 32);
+        assert_eq!(c.peak_flop_per_cycle(FpFormat::Fp16), 64);
+        assert_eq!(c.peak_flop_per_cycle(FpFormat::Bf16), 64);
+        assert_eq!(c.peak_flop_per_cycle(FpFormat::Fp8), 128);
+        assert_eq!(c.peak_flop_per_cycle(FpFormat::Fp8Alt), 128);
+    }
+
+    #[test]
+    fn simd_lanes() {
+        assert_eq!(FpFormat::Fp64.simd_lanes(), 1);
+        assert_eq!(FpFormat::Fp32.simd_lanes(), 2);
+        assert_eq!(FpFormat::Fp16.simd_lanes(), 4);
+        assert_eq!(FpFormat::Fp8.simd_lanes(), 8);
+    }
+
+    #[test]
+    fn format_bytes() {
+        assert_eq!(FpFormat::Fp64.bytes(), 8);
+        assert_eq!(FpFormat::Fp32.bytes(), 4);
+        assert_eq!(FpFormat::Fp16.bytes(), 2);
+        assert_eq!(FpFormat::Fp8.bytes(), 1);
+    }
+
+    #[test]
+    fn occamy_preset_matches_paper() {
+        // Table I "Ours": 16 clusters, 9 cores/cluster, 128 kB SPM, HBM.
+        let p = PlatformConfig::occamy();
+        assert_eq!(p.total_clusters(), 16);
+        assert_eq!(p.cluster.compute_cores, 8);
+        assert_eq!(p.cluster.spm_bytes, 128 * 1024);
+        assert_eq!(p.interconnect.hbm_bw_gbps, 410.0);
+        // Peak platform FP32: 16 clusters * 32 FLOP/cycle * 1 GHz.
+        assert_eq!(p.peak_gflops(FpFormat::Fp32), 512.0);
+    }
+
+    #[test]
+    fn baseline_preset_disables_extensions() {
+        let p = PlatformConfig::occamy_baseline();
+        assert!(!p.features.xssr);
+        assert!(!p.features.xfrep);
+        assert!(!p.features.cluster_to_cluster);
+        assert!(!p.features.simd);
+    }
+
+    #[test]
+    fn static_dma_overhead_is_115ns() {
+        // Paper Sec. VI-B: 27 ns setup + 88 ns HBM round trip = 115 ns.
+        let p = PlatformConfig::occamy();
+        assert_eq!(p.interconnect.dma_static_overhead_ns(), 115.0);
+        // At 1 GHz that is 115 cycles.
+        assert_eq!(p.ns_to_cycles(p.interconnect.dma_static_overhead_ns()), 115);
+    }
+
+    #[test]
+    fn scaled_presets() {
+        for (n, want_groups) in [(1u32, 1u32), (4, 1), (8, 2), (16, 4)] {
+            let p = PlatformConfig::with_clusters(n);
+            assert_eq!(p.total_clusters(), n);
+            assert_eq!(p.groups, want_groups);
+        }
+    }
+}

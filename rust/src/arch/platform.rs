@@ -1,0 +1,314 @@
+//! Cluster / group / platform configuration (paper Sec. IV, Fig. 3-4).
+
+use super::FpFormat;
+
+/// ISA extensions and platform features the paper ablates (Fig. 7/8).
+///
+/// The "baseline" bars of the software-optimization figures disable all of
+/// these; the "optimized" bars enable all of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// Stream Semantic Registers: operands stream to the FPU with hardware
+    /// address generation, removing explicit loads from the inner loop.
+    pub xssr: bool,
+    /// FREP instruction-repetition buffer: zero-overhead inner loops.
+    pub xfrep: bool,
+    /// Packed-SIMD FPU lanes (and the widening dot-product extension).
+    pub simd: bool,
+    /// Direct cluster-to-cluster DMA over the hierarchical interconnect
+    /// (when off, inter-cluster traffic bounces through HBM).
+    pub cluster_to_cluster: bool,
+    /// DMA double buffering (overlap transfers with compute).
+    pub double_buffering: bool,
+}
+
+impl Features {
+    /// Everything on — the paper's optimized configuration.
+    pub const fn all() -> Features {
+        Features {
+            xssr: true,
+            xfrep: true,
+            simd: true,
+            cluster_to_cluster: true,
+            double_buffering: true,
+        }
+    }
+
+    /// The paper's baseline configuration (Sec. VII-A): no Xssr, no Xfrep,
+    /// no SIMD exploitation, no cluster-to-cluster transfers. The DMA
+    /// double buffering is part of the base platform and stays on.
+    pub const fn baseline() -> Features {
+        Features {
+            xssr: false,
+            xfrep: false,
+            simd: false,
+            cluster_to_cluster: false,
+            double_buffering: true,
+        }
+    }
+
+    /// Everything off (double buffering included) — ablation floor.
+    pub const fn none() -> Features {
+        Features {
+            xssr: false,
+            xfrep: false,
+            simd: false,
+            cluster_to_cluster: false,
+            double_buffering: false,
+        }
+    }
+}
+
+impl Default for Features {
+    fn default() -> Self {
+        Features::all()
+    }
+}
+
+/// One Snitch compute cluster (paper Sec. IV-A, Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterConfig {
+    /// Parallel compute cores (the 9th core is the DMA/coordination core).
+    pub compute_cores: u64,
+    /// Tightly-coupled L1 scratchpad size in bytes (128 kB, 32 banks).
+    pub spm_bytes: u64,
+    /// SPM banks (64-bit wide, single-cycle interconnect).
+    pub spm_banks: u64,
+    /// FPU pipeline latency in cycles (RAW distance an unrolled inner loop
+    /// must cover; the paper unrolls by 8).
+    pub fpu_latency: u64,
+    /// Inner-loop unroll factor used by the kernel library.
+    pub unroll: u64,
+    /// Fixed cycles to configure an SSR stream / FREP loop before the
+    /// first FMA issues.
+    pub ssr_setup_cycles: u64,
+    /// Per-iteration integer overhead (index update + compare + branch) of
+    /// a software loop on the single-issue Snitch core when FREP is off.
+    pub loop_overhead_cycles: u64,
+    /// Cycles per element for explicit loads when SSR is off. Two operand
+    /// loads per FMA on a single-issue core.
+    pub load_cycles_per_op: u64,
+    /// Sustained fraction of the ideal issue rate the optimized GEMM inner
+    /// loop achieves (TCDM bank conflicts, SSR rewinds at row boundaries,
+    /// loop-nest bookkeeping outside FREP). Zaruba et al. report the
+    /// Snitch cluster reaching "the 90% region" on streamed FP kernels;
+    /// 0.87 lands the end-to-end NAR utilization in Table III's band.
+    pub compute_efficiency: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            compute_cores: 8,
+            spm_bytes: 128 * 1024,
+            spm_banks: 32,
+            fpu_latency: 3,
+            unroll: 8,
+            ssr_setup_cycles: 10,
+            loop_overhead_cycles: 1,
+            load_cycles_per_op: 2,
+            compute_efficiency: 0.87,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Peak FLOP/cycle of the whole cluster for `fmt` (2 FLOP per FMA per
+    /// SIMD lane per core). Matches paper Sec. IV-A1: 16/32/64/128.
+    pub fn peak_flop_per_cycle(&self, fmt: FpFormat) -> u64 {
+        2 * fmt.simd_lanes() * self.compute_cores
+    }
+}
+
+/// Bandwidths / latencies of the hierarchical interconnect (Fig. 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterconnectConfig {
+    /// Cluster-to-SPM peak bandwidth, GB/s (level 0).
+    pub spm_bw_gbps: f64,
+    /// Per-link cluster-to-cluster bandwidth inside a group, GB/s.
+    pub intra_group_link_gbps: f64,
+    /// Per-link group-to-group bandwidth, GB/s.
+    pub inter_group_link_gbps: f64,
+    /// Aggregate HBM bandwidth over all channels, GB/s.
+    pub hbm_bw_gbps: f64,
+    /// HBM channels.
+    pub hbm_channels: u64,
+    /// Sustained per-cluster HBM bandwidth in bytes/cycle (paper: 56
+    /// B/cycle measured with 4 clusters/group, reads and writes alike).
+    pub per_cluster_hbm_bytes_per_cycle: f64,
+    /// HBM round-trip latency, ns (paper: 88 ns per channel).
+    pub hbm_latency_ns: f64,
+    /// DMA transfer setup time, ns (paper: 27 ns measured from RTL).
+    pub dma_setup_ns: f64,
+    /// Fraction of HBM bandwidth the AR-mode GEMV access pattern sustains
+    /// (short strided weight rows, no reuse, one token in flight).
+    /// Calibrated to Table III's <10% AR FPU utilization and the Fig. 9 AR
+    /// throughput range; NAR's blocked GEMMs are unaffected.
+    pub gemv_hbm_efficiency: f64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        InterconnectConfig {
+            spm_bw_gbps: 256.0,
+            intra_group_link_gbps: 64.0,
+            inter_group_link_gbps: 64.0,
+            hbm_bw_gbps: 410.0,
+            hbm_channels: 8,
+            per_cluster_hbm_bytes_per_cycle: 56.0,
+            hbm_latency_ns: 88.0,
+            dma_setup_ns: 27.0,
+            gemv_hbm_efficiency: 0.15,
+        }
+    }
+}
+
+impl InterconnectConfig {
+    /// Static cost of one DMA transfer touching main memory:
+    /// setup + HBM round trip (paper Sec. VI-B: 115 ns total).
+    pub fn dma_static_overhead_ns(&self) -> f64 {
+        self.dma_setup_ns + self.hbm_latency_ns
+    }
+}
+
+/// Memory hierarchy level a transfer source/destination lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemLevel {
+    /// Cluster-local L1 scratchpad.
+    Spm,
+    /// Another cluster's SPM in the same group.
+    PeerClusterSameGroup,
+    /// Another cluster's SPM in a different group.
+    PeerClusterOtherGroup,
+    /// Main HBM memory.
+    Hbm,
+}
+
+/// The full scalable platform: G groups x C clusters (paper Sec. IV-B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformConfig {
+    /// Groups (G).
+    pub groups: u32,
+    /// Clusters per group (C).
+    pub clusters_per_group: u32,
+    /// Core clock in GHz (paper: 1 GHz, 12 nm).
+    pub freq_ghz: f64,
+    pub cluster: ClusterConfig,
+    pub interconnect: InterconnectConfig,
+    pub features: Features,
+}
+
+impl PlatformConfig {
+    /// The paper's measured configuration: 16 clusters (4 groups x 4),
+    /// silicon-proven in Occamy, all extensions enabled.
+    pub fn occamy() -> PlatformConfig {
+        PlatformConfig {
+            groups: 4,
+            clusters_per_group: 4,
+            freq_ghz: 1.0,
+            cluster: ClusterConfig::default(),
+            interconnect: InterconnectConfig::default(),
+            features: Features::all(),
+        }
+    }
+
+    /// Baseline ablation: same silicon, extensions and c2c disabled
+    /// (the leftmost bars of Fig. 7/8).
+    pub fn occamy_baseline() -> PlatformConfig {
+        PlatformConfig {
+            features: Features::baseline(),
+            ..PlatformConfig::occamy()
+        }
+    }
+
+    /// A platform with `n` total clusters, grouped 4-per-group like the
+    /// silicon (used by the Fig. 9 cluster-scaling sweep).
+    pub fn with_clusters(n: u32) -> PlatformConfig {
+        assert!(n > 0, "need at least one cluster");
+        let (groups, cpg) = if n <= 4 { (1, n) } else { ((n + 3) / 4, 4) };
+        assert_eq!(groups * cpg, n, "cluster count must be 1-4 or a multiple of 4");
+        PlatformConfig {
+            groups,
+            clusters_per_group: cpg,
+            ..PlatformConfig::occamy()
+        }
+    }
+
+    /// Total clusters C*G.
+    pub fn total_clusters(&self) -> u32 {
+        self.groups * self.clusters_per_group
+    }
+
+    /// Total compute cores.
+    pub fn total_cores(&self) -> u64 {
+        self.total_clusters() as u64 * self.cluster.compute_cores
+    }
+
+    /// Platform peak GFLOPS for `fmt` (SIMD assumed on; the *baseline*
+    /// ablation caps lanes at 1 inside the core model instead).
+    pub fn peak_gflops(&self, fmt: FpFormat) -> f64 {
+        self.total_clusters() as f64
+            * self.cluster.peak_flop_per_cycle(fmt) as f64
+            * self.freq_ghz
+    }
+
+    /// Convert wall-clock ns to core cycles (rounded up).
+    pub fn ns_to_cycles(&self, ns: f64) -> u64 {
+        (ns * self.freq_ghz).ceil() as u64
+    }
+
+    /// Convert cycles to seconds.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_ghz * 1e9)
+    }
+
+    /// Bytes/cycle available on a link of `level` for one cluster.
+    pub fn link_bytes_per_cycle(&self, level: MemLevel) -> f64 {
+        let gbps = match level {
+            MemLevel::Spm => self.interconnect.spm_bw_gbps,
+            MemLevel::PeerClusterSameGroup => self.interconnect.intra_group_link_gbps,
+            MemLevel::PeerClusterOtherGroup => self.interconnect.inter_group_link_gbps,
+            MemLevel::Hbm => {
+                return self.interconnect.per_cluster_hbm_bytes_per_cycle;
+            }
+        };
+        gbps / self.freq_ghz
+    }
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig::occamy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_bandwidths() {
+        let p = PlatformConfig::occamy();
+        assert_eq!(p.link_bytes_per_cycle(MemLevel::Spm), 256.0);
+        assert_eq!(p.link_bytes_per_cycle(MemLevel::PeerClusterSameGroup), 64.0);
+        assert_eq!(p.link_bytes_per_cycle(MemLevel::Hbm), 56.0);
+    }
+
+    #[test]
+    fn cycles_conversions() {
+        let p = PlatformConfig::occamy();
+        assert_eq!(p.ns_to_cycles(88.0), 88);
+        assert!((p.cycles_to_seconds(1_000_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_cluster_count_panics() {
+        PlatformConfig::with_clusters(6);
+    }
+
+    #[test]
+    fn total_cores_occamy() {
+        assert_eq!(PlatformConfig::occamy().total_cores(), 128);
+    }
+}

@@ -1,0 +1,239 @@
+//! Run configuration: platform + model + run parameters from a
+//! TOML-subset file (see `util::minitoml`), merged with CLI overrides.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::arch::{Features, FpFormat, PlatformConfig};
+use crate::model::{Mode, ModelConfig};
+use crate::util::minitoml::{self, Doc};
+
+/// A complete run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub platform: PlatformSection,
+    pub model: ModelSection,
+    pub run: RunSection,
+}
+
+#[derive(Debug, Clone)]
+pub struct PlatformSection {
+    /// Total clusters (1-4 or a multiple of 4).
+    pub clusters: u32,
+    pub xssr: bool,
+    pub xfrep: bool,
+    pub simd: bool,
+    pub cluster_to_cluster: bool,
+    pub double_buffering: bool,
+    pub freq_ghz: f64,
+}
+
+impl Default for PlatformSection {
+    fn default() -> Self {
+        PlatformSection {
+            clusters: 16,
+            xssr: true,
+            xfrep: true,
+            simd: true,
+            cluster_to_cluster: true,
+            double_buffering: true,
+            freq_ghz: 1.0,
+        }
+    }
+}
+
+impl PlatformSection {
+    fn from_doc(doc: &Doc) -> PlatformSection {
+        let d = PlatformSection::default();
+        PlatformSection {
+            clusters: minitoml::get_u64(doc, "platform", "clusters")
+                .map(|v| v as u32)
+                .unwrap_or(d.clusters),
+            xssr: minitoml::get_bool(doc, "platform", "xssr").unwrap_or(d.xssr),
+            xfrep: minitoml::get_bool(doc, "platform", "xfrep").unwrap_or(d.xfrep),
+            simd: minitoml::get_bool(doc, "platform", "simd").unwrap_or(d.simd),
+            cluster_to_cluster: minitoml::get_bool(doc, "platform", "cluster_to_cluster")
+                .unwrap_or(d.cluster_to_cluster),
+            double_buffering: minitoml::get_bool(doc, "platform", "double_buffering")
+                .unwrap_or(d.double_buffering),
+            freq_ghz: minitoml::get_f64(doc, "platform", "freq_ghz").unwrap_or(d.freq_ghz),
+        }
+    }
+
+    pub fn to_platform(&self) -> PlatformConfig {
+        let mut p = PlatformConfig::with_clusters(self.clusters);
+        p.freq_ghz = self.freq_ghz;
+        p.features = Features {
+            xssr: self.xssr,
+            xfrep: self.xfrep,
+            simd: self.simd,
+            cluster_to_cluster: self.cluster_to_cluster,
+            double_buffering: self.double_buffering,
+        };
+        p
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ModelSection {
+    pub preset: Option<String>,
+    pub blocks: Option<u64>,
+    pub e: Option<u64>,
+    pub p: Option<u64>,
+    pub heads: Option<u64>,
+    pub ff: Option<u64>,
+}
+
+impl ModelSection {
+    fn from_doc(doc: &Doc) -> ModelSection {
+        ModelSection {
+            preset: minitoml::get_str(doc, "model", "preset").map(String::from),
+            blocks: minitoml::get_u64(doc, "model", "blocks"),
+            e: minitoml::get_u64(doc, "model", "e"),
+            p: minitoml::get_u64(doc, "model", "p"),
+            heads: minitoml::get_u64(doc, "model", "heads"),
+            ff: minitoml::get_u64(doc, "model", "ff"),
+        }
+    }
+
+    pub fn to_model(&self) -> Result<ModelConfig> {
+        let mut cfg = match &self.preset {
+            Some(name) => ModelConfig::preset(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model preset: {name}"))?,
+            None => ModelConfig::tiny(),
+        };
+        if let Some(b) = self.blocks {
+            cfg.blocks = b;
+        }
+        if let Some(e) = self.e {
+            cfg.e = e;
+        }
+        if let Some(p) = self.p {
+            cfg.p = p;
+        }
+        if let Some(h) = self.heads {
+            cfg.heads = h;
+        }
+        if let Some(ff) = self.ff {
+            cfg.ff = ff;
+        }
+        Ok(cfg)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunSection {
+    pub mode: String,
+    pub format: String,
+    pub seq: u64,
+}
+
+impl Default for RunSection {
+    fn default() -> Self {
+        RunSection { mode: "nar".into(), format: "fp32".into(), seq: 0 }
+    }
+}
+
+impl RunSection {
+    fn from_doc(doc: &Doc) -> RunSection {
+        let d = RunSection::default();
+        RunSection {
+            mode: minitoml::get_str(doc, "run", "mode").map(String::from).unwrap_or(d.mode),
+            format: minitoml::get_str(doc, "run", "format")
+                .map(String::from)
+                .unwrap_or(d.format),
+            seq: minitoml::get_u64(doc, "run", "seq").unwrap_or(d.seq),
+        }
+    }
+
+    pub fn mode(&self) -> Result<Mode> {
+        parse_mode(&self.mode)
+    }
+
+    pub fn format(&self) -> Result<FpFormat> {
+        FpFormat::parse(&self.format)
+            .ok_or_else(|| anyhow::anyhow!("unknown format: {}", self.format))
+    }
+}
+
+/// Parse "nar" | "ar".
+pub fn parse_mode(s: &str) -> Result<Mode> {
+    match s {
+        "nar" => Ok(Mode::Nar),
+        "ar" => Ok(Mode::Ar),
+        other => anyhow::bail!("unknown mode: {other} (want nar|ar)"),
+    }
+}
+
+/// Parse a config from TOML text.
+pub fn parse(text: &str) -> Result<RunConfig> {
+    let doc = minitoml::parse(text)?;
+    Ok(RunConfig {
+        platform: PlatformSection::from_doc(&doc),
+        model: ModelSection::from_doc(&doc),
+        run: RunSection::from_doc(&doc),
+    })
+}
+
+/// Load a TOML run config from disk.
+pub fn load(path: &Path) -> Result<RunConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing config {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = parse(
+            r#"
+            [platform]
+            clusters = 8
+            xssr = false
+            [model]
+            preset = "gpt-j"
+            [run]
+            mode = "ar"
+            format = "fp8"
+            seq = 2048
+            "#,
+        )
+        .unwrap();
+        let p = cfg.platform.to_platform();
+        assert_eq!(p.total_clusters(), 8);
+        assert!(!p.features.xssr);
+        assert!(p.features.xfrep); // default preserved
+        let m = cfg.model.to_model().unwrap();
+        assert_eq!(m.name, "gpt-j");
+        assert_eq!(cfg.run.mode().unwrap(), Mode::Ar);
+        assert_eq!(cfg.run.format().unwrap(), FpFormat::Fp8);
+        assert_eq!(cfg.run.seq, 2048);
+    }
+
+    #[test]
+    fn minimal_config_defaults() {
+        let cfg = parse("[model]\npreset = \"vit-b\"\n").unwrap();
+        assert_eq!(cfg.platform.clusters, 16);
+        assert_eq!(cfg.run.mode().unwrap(), Mode::Nar);
+        assert_eq!(cfg.run.format().unwrap(), FpFormat::Fp32);
+    }
+
+    #[test]
+    fn model_overrides() {
+        let cfg = parse("[model]\npreset = \"tiny\"\nblocks = 7\nff = 99\n").unwrap();
+        let m = cfg.model.to_model().unwrap();
+        assert_eq!(m.blocks, 7);
+        assert_eq!(m.ff, 99);
+        assert_eq!(m.e, 64); // from preset
+    }
+
+    #[test]
+    fn bad_preset_errors() {
+        let cfg = parse("[model]\npreset = \"nope\"\n").unwrap();
+        assert!(cfg.model.to_model().is_err());
+    }
+}

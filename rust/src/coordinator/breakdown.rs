@@ -1,0 +1,129 @@
+//! Kernel latency breakdown (paper Fig. 10).
+
+use crate::model::LayerKind;
+
+use super::schedule::ModelCost;
+
+/// One kernel class' share of the total latency.
+#[derive(Debug, Clone)]
+pub struct KernelClassShare {
+    pub kind: &'static str,
+    pub cycles: u64,
+    pub fraction: f64,
+}
+
+/// Latency breakdown of a model pass by kernel class.
+#[derive(Debug, Clone)]
+pub struct Breakdown {
+    pub shares: Vec<KernelClassShare>,
+    pub total_cycles: u64,
+}
+
+impl Breakdown {
+    /// Build from a priced model cost, ordered by descending share.
+    pub fn from_cost(mc: &ModelCost) -> Breakdown {
+        let mut shares: Vec<KernelClassShare> = mc
+            .by_kind
+            .iter()
+            .map(|(kind, cost)| KernelClassShare {
+                kind: kind.name(),
+                cycles: cost.cycles,
+                fraction: if mc.total.cycles > 0 {
+                    cost.cycles as f64 / mc.total.cycles as f64
+                } else {
+                    0.0
+                },
+            })
+            .collect();
+        shares.sort_by(|a, b| b.cycles.cmp(&a.cycles));
+        Breakdown { shares, total_cycles: mc.total.cycles }
+    }
+
+    /// Fraction for a class name ("gemm", "flashattention", ...), 0 if absent.
+    pub fn fraction(&self, kind: LayerKind) -> f64 {
+        self.shares
+            .iter()
+            .find(|s| s.kind == kind.name())
+            .map(|s| s.fraction)
+            .unwrap_or(0.0)
+    }
+
+    /// Combined share of the GEMM-like classes (plain + fused concat
+    /// linear), the paper's "GEMM" bucket in Fig. 10.
+    pub fn gemm_fraction(&self) -> f64 {
+        self.fraction(LayerKind::Gemm) + self.fraction(LayerKind::FusedConcatLinear)
+    }
+
+    /// Activation bucket (LayerNorm + GELU).
+    pub fn activation_fraction(&self) -> f64 {
+        self.fraction(LayerKind::Layernorm) + self.fraction(LayerKind::Gelu)
+    }
+
+    /// Fig. 10's exact buckets, built from per-label costs: the paper
+    /// instruments at MHA-macro-block granularity, so its
+    /// "FlashAttention-2" bar covers QKV projections + attention + fused
+    /// out-projection, while "GEMM" is the MLP linears. (The GPT-J FP32
+    /// NAR split of 66% GEMM then follows directly from the flop ratio
+    /// MLP : MHA = 275G : 154G per block.)
+    pub fn fig10_buckets(mc: &ModelCost) -> Vec<KernelClassShare> {
+        let total = mc.total.cycles.max(1);
+        let sum = |labels: &[&str]| -> u64 {
+            labels
+                .iter()
+                .filter_map(|l| mc.by_label.get(l).map(|c| c.cycles))
+                .sum()
+        };
+        let buckets = [
+            ("gemm (mlp)", sum(&["mlp-up", "mlp-down"])),
+            ("flashattention-2 (mha)", sum(&["q-proj", "k-proj", "v-proj", "attention", "out-proj"])),
+            ("layernorm", sum(&["ln1", "ln2"])),
+            ("gelu", sum(&["gelu"])),
+        ];
+        buckets
+            .iter()
+            .map(|&(kind, cycles)| KernelClassShare {
+                kind: match kind {
+                    "gemm (mlp)" => "gemm (mlp)",
+                    "flashattention-2 (mha)" => "flashattention-2 (mha)",
+                    "layernorm" => "layernorm",
+                    _ => "gelu",
+                },
+                cycles,
+                fraction: cycles as f64 / total as f64,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{FpFormat, PlatformConfig};
+    use crate::coordinator::schedule::model_cost;
+    use crate::model::{Mode, ModelConfig};
+
+    #[test]
+    fn shares_sum_to_one() {
+        let mc = model_cost(
+            &ModelConfig::gpt_j(),
+            Mode::Nar,
+            1024,
+            FpFormat::Fp32,
+            &PlatformConfig::occamy(),
+        );
+        let b = Breakdown::from_cost(&mc);
+        let sum: f64 = b.shares.iter().map(|s| s.fraction).sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+        assert!(b.shares.windows(2).all(|w| w[0].cycles >= w[1].cycles));
+    }
+
+    #[test]
+    fn buckets_match_fig10_shape() {
+        let p = PlatformConfig::occamy();
+        let mc = model_cost(&ModelConfig::gpt_j(), Mode::Ar, 1024, FpFormat::Fp32, &p);
+        let b = Breakdown::from_cost(&mc);
+        // Fig. 10 AR FP32: GEMM ~97%.
+        assert!(b.gemm_fraction() > 0.80, "gemm {}", b.gemm_fraction());
+        assert!(b.activation_fraction() < 0.10);
+    }
+}

@@ -1,0 +1,204 @@
+//! End-to-end inference pricing: full NAR passes, AR generation loops,
+//! and the run reports the CLI/benches print.
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::breakdown::Breakdown;
+use crate::coordinator::schedule::{block_cost, model_cost};
+use crate::energy;
+use crate::metrics;
+use crate::model::{Family, Mode, ModelConfig};
+use crate::sim::KernelCost;
+
+/// Everything the paper reports about one run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub model: String,
+    pub mode: &'static str,
+    pub format: &'static str,
+    pub seq: u64,
+    pub cycles: u64,
+    pub seconds: f64,
+    /// tokens/s (GPT) or images/s (ViT).
+    pub throughput: f64,
+    pub throughput_unit: &'static str,
+    pub gflops: f64,
+    pub fpu_utilization: f64,
+    pub power_w: f64,
+    pub gflops_per_w: f64,
+    pub hbm_gb: f64,
+    pub c2c_gb: f64,
+}
+
+/// Prices full model passes on the simulated platform.
+#[derive(Debug, Clone)]
+pub struct InferenceEngine {
+    pub platform: PlatformConfig,
+}
+
+impl InferenceEngine {
+    pub fn new(platform: PlatformConfig) -> InferenceEngine {
+        InferenceEngine { platform }
+    }
+
+    fn report(
+        &self,
+        cfg: &ModelConfig,
+        mode: Mode,
+        fmt: FpFormat,
+        seq: u64,
+        cost: KernelCost,
+        throughput: f64,
+        unit: &'static str,
+    ) -> RunReport {
+        let power = energy::power_report(&cost, fmt, &self.platform);
+        RunReport {
+            model: cfg.name.clone(),
+            mode: match mode {
+                Mode::Nar => "nar",
+                Mode::Ar => "ar",
+            },
+            format: fmt.name(),
+            seq,
+            cycles: cost.cycles,
+            seconds: self.platform.cycles_to_seconds(cost.cycles),
+            throughput,
+            throughput_unit: unit,
+            gflops: metrics::achieved_gflops(&cost, &self.platform),
+            fpu_utilization: power.fpu_utilization,
+            power_w: power.power_w,
+            gflops_per_w: power.gflops_per_w,
+            hbm_gb: cost.hbm_bytes() as f64 / 1e9,
+            c2c_gb: cost.c2c_bytes as f64 / 1e9,
+        }
+    }
+
+    /// One NAR pass (prompt encoding / ViT classification / training fwd):
+    /// produces `seq` tokens (GPT) or one classification (ViT).
+    pub fn run_nar(&self, cfg: &ModelConfig, seq: u64, fmt: FpFormat) -> RunReport {
+        let mc = model_cost(cfg, Mode::Nar, seq, fmt, &self.platform);
+        let (tp, unit) = match cfg.family {
+            Family::Gpt => (
+                metrics::tokens_per_second_nar(seq, mc.cycles, &self.platform),
+                "tokens/s",
+            ),
+            Family::Vit => {
+                (metrics::images_per_second(mc.cycles, &self.platform), "images/s")
+            }
+        };
+        self.report(cfg, Mode::Nar, fmt, seq, mc.total, tp, unit)
+    }
+
+    /// Steady-state AR decode at KV length `seq`: cycles for ONE token.
+    pub fn run_ar_step(&self, cfg: &ModelConfig, seq: u64, fmt: FpFormat) -> RunReport {
+        let mc = model_cost(cfg, Mode::Ar, seq, fmt, &self.platform);
+        let tp = metrics::tokens_per_second_ar(mc.cycles, &self.platform);
+        self.report(cfg, Mode::Ar, fmt, seq, mc.total, tp, "tokens/s")
+    }
+
+    /// Full generation: prefill `prompt_len` tokens (NAR) then decode
+    /// `gen_tokens` autoregressively, KV growing each step.
+    pub fn run_generate(
+        &self,
+        cfg: &ModelConfig,
+        prompt_len: u64,
+        gen_tokens: u64,
+        fmt: FpFormat,
+    ) -> RunReport {
+        let mut total = model_cost(cfg, Mode::Nar, prompt_len, fmt, &self.platform).total;
+        for t in 0..gen_tokens {
+            let kv = prompt_len + t;
+            let step = block_cost(cfg, Mode::Ar, 1, kv, fmt, &self.platform)
+                .total
+                .repeat(cfg.blocks);
+            total = total.then(step);
+        }
+        let tp = if total.cycles > 0 {
+            gen_tokens as f64 / self.platform.cycles_to_seconds(total.cycles)
+        } else {
+            0.0
+        };
+        self.report(cfg, Mode::Ar, fmt, prompt_len + gen_tokens, total, tp, "tokens/s")
+    }
+
+    /// Fig. 10 latency breakdown for a pass.
+    pub fn breakdown(&self, cfg: &ModelConfig, mode: Mode, seq: u64, fmt: FpFormat) -> Breakdown {
+        let mc = model_cost(cfg, mode, seq, fmt, &self.platform);
+        Breakdown::from_cost(&mc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> InferenceEngine {
+        InferenceEngine::new(PlatformConfig::occamy())
+    }
+
+    #[test]
+    fn nar_utilization_in_paper_band() {
+        // Table III: GPT-J S=1024 NAR utilizations 65-80%.
+        let e = engine();
+        let cfg = ModelConfig::gpt_j();
+        for (fmt, lo, hi) in [
+            (FpFormat::Fp64, 0.55, 0.95),
+            (FpFormat::Fp32, 0.55, 0.95),
+            (FpFormat::Fp16, 0.45, 0.90),
+            (FpFormat::Fp8, 0.40, 0.85),
+        ] {
+            let r = e.run_nar(&cfg, 1024, fmt);
+            assert!(
+                (lo..=hi).contains(&r.fpu_utilization),
+                "{fmt}: util {}",
+                r.fpu_utilization
+            );
+        }
+    }
+
+    #[test]
+    fn ar_utilization_below_15pct() {
+        // Table III: AR utilization < 10% at every precision.
+        let e = engine();
+        let cfg = ModelConfig::gpt_j();
+        for fmt in FpFormat::LADDER {
+            let r = e.run_ar_step(&cfg, 1024, fmt);
+            assert!(r.fpu_utilization < 0.15, "{fmt}: util {}", r.fpu_utilization);
+            assert!(r.fpu_utilization > 0.005, "{fmt}: util {}", r.fpu_utilization);
+        }
+    }
+
+    #[test]
+    fn nar_beats_ar_in_utilization() {
+        let e = engine();
+        let cfg = ModelConfig::gpt3_xl();
+        let nar = e.run_nar(&cfg, 1024, FpFormat::Fp32);
+        let ar = e.run_ar_step(&cfg, 1024, FpFormat::Fp32);
+        assert!(nar.fpu_utilization > 5.0 * ar.fpu_utilization);
+    }
+
+    #[test]
+    fn vit_reports_images_per_second() {
+        let e = engine();
+        let r = e.run_nar(&ModelConfig::vit_b(), 197, FpFormat::Fp8);
+        assert_eq!(r.throughput_unit, "images/s");
+        // Paper: 26 images/s for ViT-B FP8 — same order of magnitude.
+        assert!(r.throughput > 5.0 && r.throughput < 120.0, "{}", r.throughput);
+    }
+
+    #[test]
+    fn generate_slower_than_single_step_estimate() {
+        let e = engine();
+        let cfg = ModelConfig::tiny();
+        let gen = e.run_generate(&cfg, 16, 8, FpFormat::Fp32);
+        let step = e.run_ar_step(&cfg, 16, FpFormat::Fp32);
+        assert!(gen.cycles > step.cycles, "prefill + 8 steps > 1 step");
+    }
+
+    #[test]
+    fn power_between_idle_and_max() {
+        let e = engine();
+        let r = e.run_nar(&ModelConfig::gpt_j(), 1024, FpFormat::Fp32);
+        assert!(r.power_w > energy::P_STATIC_W);
+        assert!(r.power_w < energy::P_STATIC_W + energy::P_ACTIVE_W);
+    }
+}

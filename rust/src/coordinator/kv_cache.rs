@@ -1,0 +1,155 @@
+//! Decode-time KV cache (paper Sec. II-B).
+//!
+//! Fixed-capacity per-block K/V buffers the AR artifacts update in place:
+//! the Rust coordinator owns the flat `[H, Smax, P]` f32 buffers, hands
+//! them to the PJRT executable each step, and swaps in the returned
+//! updated caches. Capacity is fixed at allocation so the decode loop
+//! never reallocates (the hot-path requirement of §Perf).
+
+/// KV cache for one transformer block.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    heads: usize,
+    capacity: usize,
+    p: usize,
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// Allocate an empty cache of `capacity` tokens.
+    pub fn new(heads: usize, capacity: usize, p: usize) -> KvCache {
+        KvCache {
+            heads,
+            capacity,
+            p,
+            len: 0,
+            k: vec![0.0; heads * capacity * p],
+            v: vec![0.0; heads * capacity * p],
+        }
+    }
+
+    /// Tokens currently cached.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum tokens.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Remaining slots.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Flat `[H, Smax, P]` K buffer (PJRT argument layout).
+    pub fn k_flat(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// Flat `[H, Smax, P]` V buffer.
+    pub fn v_flat(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Bulk-load prefill K/V of `n` tokens from `[H, n, P]`-shaped slices
+    /// (the NAR block's returned caches).
+    pub fn load_prefill(&mut self, k: &[f32], v: &[f32], n: usize) {
+        assert!(n <= self.capacity, "prefill {n} exceeds capacity {}", self.capacity);
+        assert_eq!(k.len(), self.heads * n * self.p);
+        assert_eq!(v.len(), self.heads * n * self.p);
+        for h in 0..self.heads {
+            let src = h * n * self.p..(h * n + n) * self.p;
+            let dst = h * self.capacity * self.p;
+            self.k[dst..dst + n * self.p].copy_from_slice(&k[src.clone()]);
+            self.v[dst..dst + n * self.p].copy_from_slice(&v[src]);
+        }
+        self.len = n;
+    }
+
+    /// Replace the whole cache with the executable's returned buffers
+    /// (already `[H, Smax, P]`) and advance the length by one.
+    pub fn store_step(&mut self, k: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(k.len(), self.k.len(), "returned K cache has wrong size");
+        assert_eq!(v.len(), self.v.len(), "returned V cache has wrong size");
+        assert!(self.len < self.capacity, "KV cache full");
+        self.k = k;
+        self.v = v;
+        self.len += 1;
+    }
+
+    /// K vector of head `h`, token `t` (testing/inspection).
+    pub fn k_at(&self, h: usize, t: usize) -> &[f32] {
+        let base = (h * self.capacity + t) * self.p;
+        &self.k[base..base + self.p]
+    }
+
+    /// V vector of head `h`, token `t`.
+    pub fn v_at(&self, h: usize, t: usize) -> &[f32] {
+        let base = (h * self.capacity + t) * self.p;
+        &self.v[base..base + self.p]
+    }
+
+    /// Cache bytes at f32 (both K and V).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_layout() {
+        let mut c = KvCache::new(2, 8, 4);
+        // K for 3 tokens, [H=2, n=3, P=4], distinguishable values.
+        let k: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..24).map(|i| 100.0 + i as f32).collect();
+        c.load_prefill(&k, &v, 3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.k_at(0, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(c.k_at(0, 2), &[8.0, 9.0, 10.0, 11.0]);
+        // Head 1 starts at capacity stride, not token stride.
+        assert_eq!(c.k_at(1, 0), &[12.0, 13.0, 14.0, 15.0]);
+        assert_eq!(c.v_at(1, 2), &[120.0, 121.0, 122.0, 123.0]);
+    }
+
+    #[test]
+    fn step_advances_len() {
+        let mut c = KvCache::new(1, 4, 2);
+        let size = c.k_flat().len();
+        c.store_step(vec![1.0; size], vec![2.0; size]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.remaining(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV cache full")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 1, 2);
+        let size = c.k_flat().len();
+        c.store_step(vec![0.0; size], vec![0.0; size]);
+        c.store_step(vec![0.0; size], vec![0.0; size]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds capacity")]
+    fn prefill_overflow_panics() {
+        let mut c = KvCache::new(1, 2, 2);
+        c.load_prefill(&[0.0; 6], &[0.0; 6], 3);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = KvCache::new(16, 1024, 256);
+        assert_eq!(c.bytes(), 2 * 16 * 1024 * 256 * 4);
+    }
+}

@@ -1,0 +1,17 @@
+//! The inference coordinator (Layer 3).
+//!
+//! Owns the mapping from model graphs to the platform: prices every layer
+//! with the kernel timing models (`schedule`), aggregates per-kernel-class
+//! breakdowns (`breakdown`, Fig. 10), runs end-to-end NAR/AR passes
+//! (`engine`), and manages the decode-time KV cache (`kv_cache`) used by
+//! the numeric runtime path.
+
+pub mod breakdown;
+pub mod engine;
+pub mod kv_cache;
+pub mod schedule;
+
+pub use breakdown::{Breakdown, KernelClassShare};
+pub use engine::{InferenceEngine, RunReport};
+pub use kv_cache::KvCache;
+pub use schedule::{block_cost, layer_cost, model_cost, ModelCost};

@@ -1,0 +1,238 @@
+//! Layer -> platform scheduling and pricing (paper Sec. V).
+//!
+//! Maps each [`Layer`] of a block onto the kernel timing models, honoring
+//! the paper's fusion decisions: the out-projection uses the fused
+//! concat+linear (tree reduction), GELU is fused with mlp-up, and fused
+//! inputs skip their HBM read.
+
+use std::collections::HashMap;
+
+use crate::arch::{FpFormat, MemLevel, PlatformConfig};
+use crate::kernels;
+use crate::kernels::gemm::OperandHome;
+use crate::model::{block_layers, Layer, LayerKind, Mode, ModelConfig};
+use crate::sim::KernelCost;
+
+/// Cost of one layer on the platform.
+pub fn layer_cost(layer: &Layer, fmt: FpFormat, platform: &PlatformConfig) -> KernelCost {
+    match layer.kind {
+        LayerKind::Gemm => {
+            let home = OperandHome {
+                a: if layer.fused_input { MemLevel::Spm } else { MemLevel::Hbm },
+                b: MemLevel::Hbm,
+                c: MemLevel::Hbm,
+            };
+            kernels::gemm_cost(layer.m, layer.k, layer.n, fmt, platform, home)
+        }
+        LayerKind::FlashAttention => kernels::flash_attention_cost(
+            layer.m, // heads
+            layer.n, // sq
+            layer.skv,
+            layer.k, // p
+            fmt,
+            layer.causal,
+            platform,
+        ),
+        LayerKind::FusedConcatLinear => {
+            if platform.features.cluster_to_cluster {
+                kernels::fused_concat_linear_cost(
+                    layer.m,
+                    layer.k / cfg_p_guard(layer),
+                    cfg_p_guard(layer),
+                    layer.n,
+                    fmt,
+                    platform,
+                )
+            } else {
+                kernels::unfused_concat_linear_cost(
+                    layer.m,
+                    layer.k / cfg_p_guard(layer),
+                    cfg_p_guard(layer),
+                    layer.n,
+                    fmt,
+                    platform,
+                )
+            }
+        }
+        LayerKind::Layernorm => kernels::layernorm_cost(layer.m, layer.k, fmt, platform),
+        LayerKind::Gelu => {
+            kernels::gelu_cost(layer.m, layer.k, fmt, layer.fused_input, platform)
+        }
+    }
+}
+
+/// The layer carries K = H*P for the fused layer; recover P from the
+/// stashed `skv=0,causal=false` convention: P is encoded as gcd-ish via
+/// the schedule builder storing heads in `m`? No — the fused layer's
+/// `k` is H*P and the head granularity only affects how K splits across
+/// clusters. We use P = K / heads with heads inferred from the standard
+/// 16/12-head configs via the largest power-of-two-ish divisor <= 16.
+/// To stay exact, `block_cost` passes P explicitly; this fallback exists
+/// for direct `layer_cost` calls on synthetic layers.
+fn cfg_p_guard(layer: &Layer) -> u64 {
+    // Default head granularity: 16 heads (all paper models except ViT-B).
+    let heads = if layer.k % 16 == 0 { 16 } else { 12 };
+    (layer.k / heads).max(1)
+}
+
+/// Per-block and per-model cost summary.
+#[derive(Debug, Clone, Default)]
+pub struct ModelCost {
+    /// Total cycles for one forward pass (NAR) or one token (AR).
+    pub cycles: u64,
+    /// Aggregate kernel costs by class.
+    pub by_kind: HashMap<LayerKind, KernelCost>,
+    /// Aggregate kernel costs by layer label ("q-proj", "mlp-up", ...).
+    pub by_label: HashMap<&'static str, KernelCost>,
+    /// Total cost.
+    pub total: KernelCost,
+    /// Blocks priced.
+    pub blocks: u64,
+}
+
+impl ModelCost {
+    /// Fraction of cycles spent in `kind`.
+    pub fn fraction(&self, kind: LayerKind) -> f64 {
+        if self.total.cycles == 0 {
+            return 0.0;
+        }
+        self.by_kind.get(&kind).map(|c| c.cycles as f64).unwrap_or(0.0)
+            / self.total.cycles as f64
+    }
+}
+
+/// Cost of one transformer block.
+pub fn block_cost(
+    cfg: &ModelConfig,
+    mode: Mode,
+    s: u64,
+    kv_len: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> ModelCost {
+    let mut out = ModelCost { blocks: 1, ..Default::default() };
+    for layer in block_layers(cfg, mode, s, kv_len) {
+        let c = match layer.kind {
+            // The fused layer needs exact head granularity from the config.
+            LayerKind::FusedConcatLinear => {
+                if platform.features.cluster_to_cluster {
+                    kernels::fused_concat_linear_cost(
+                        layer.m, cfg.heads, cfg.p, layer.n, fmt, platform,
+                    )
+                } else {
+                    kernels::unfused_concat_linear_cost(
+                        layer.m, cfg.heads, cfg.p, layer.n, fmt, platform,
+                    )
+                }
+            }
+            _ => layer_cost(&layer, fmt, platform),
+        };
+        let slot = out.by_kind.entry(layer.kind).or_default();
+        *slot = slot.then(c);
+        let slot = out.by_label.entry(layer.label).or_default();
+        *slot = slot.then(c);
+        out.total = out.total.then(c);
+    }
+    out.cycles = out.total.cycles;
+    out
+}
+
+/// Cost of a full model pass: `blocks` x block cost. In AR mode, `s` is
+/// the current KV length (per-token cost at that point in the sequence).
+pub fn model_cost(
+    cfg: &ModelConfig,
+    mode: Mode,
+    s: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> ModelCost {
+    let (bs, kv) = match mode {
+        Mode::Nar => (s, 0),
+        Mode::Ar => (1, s),
+    };
+    let one = block_cost(cfg, mode, bs, kv, fmt, platform);
+    let mut out = ModelCost { blocks: cfg.blocks, ..Default::default() };
+    for (k, v) in &one.by_kind {
+        out.by_kind.insert(*k, v.repeat(cfg.blocks));
+    }
+    for (k, v) in &one.by_label {
+        out.by_label.insert(*k, v.repeat(cfg.blocks));
+    }
+    out.total = one.total.repeat(cfg.blocks);
+    out.cycles = out.total.cycles;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ() -> PlatformConfig {
+        PlatformConfig::occamy()
+    }
+
+    #[test]
+    fn gemm_dominates_nar_latency() {
+        // Fig. 10: GEMMs are ~66% of GPT-J FP32 NAR latency.
+        let cfg = ModelConfig::gpt_j();
+        let mc = model_cost(&cfg, Mode::Nar, 1024, FpFormat::Fp32, &occ());
+        let gemm_frac = mc.fraction(LayerKind::Gemm)
+            + mc.fraction(LayerKind::FusedConcatLinear);
+        assert!(gemm_frac > 0.5, "gemm fraction {gemm_frac}");
+        let act_frac = mc.fraction(LayerKind::Layernorm) + mc.fraction(LayerKind::Gelu);
+        assert!(act_frac < 0.2, "activations {act_frac}");
+    }
+
+    #[test]
+    fn ar_gemm_fraction_higher_than_nar() {
+        // Fig. 10: AR is even more GEMM-dominated (97% FP32) — the plain
+        // GEMV weight streaming eats the token latency.
+        let cfg = ModelConfig::gpt_j();
+        let nar = model_cost(&cfg, Mode::Nar, 1024, FpFormat::Fp32, &occ());
+        let ar = model_cost(&cfg, Mode::Ar, 1024, FpFormat::Fp32, &occ());
+        let f = |mc: &ModelCost| mc.fraction(LayerKind::Gemm);
+        assert!(f(&ar) > f(&nar), "ar {} vs nar {}", f(&ar), f(&nar));
+        assert!(f(&ar) > 0.85, "ar gemv share {}", f(&ar));
+    }
+
+    #[test]
+    fn fa_fraction_grows_at_fp8() {
+        // Fig. 10: FA-2's relative share grows FP32 -> FP8 (FP32 softmax).
+        let cfg = ModelConfig::gpt_j();
+        let f32c = model_cost(&cfg, Mode::Nar, 1024, FpFormat::Fp32, &occ());
+        let f8c = model_cost(&cfg, Mode::Nar, 1024, FpFormat::Fp8, &occ());
+        assert!(
+            f8c.fraction(LayerKind::FlashAttention)
+                > f32c.fraction(LayerKind::FlashAttention),
+            "fp8 {} vs fp32 {}",
+            f8c.fraction(LayerKind::FlashAttention),
+            f32c.fraction(LayerKind::FlashAttention)
+        );
+    }
+
+    #[test]
+    fn model_cost_scales_with_blocks() {
+        let mut cfg = ModelConfig::vit_b();
+        let one = model_cost(&cfg, Mode::Nar, 197, FpFormat::Fp32, &occ());
+        cfg.blocks *= 2;
+        let two = model_cost(&cfg, Mode::Nar, 197, FpFormat::Fp32, &occ());
+        assert_eq!(two.cycles, 2 * one.cycles);
+    }
+
+    #[test]
+    fn block_cost_covers_all_kinds() {
+        let cfg = ModelConfig::vit_b();
+        let bc = block_cost(&cfg, Mode::Nar, 197, 0, FpFormat::Fp32, &occ());
+        for kind in [
+            LayerKind::Gemm,
+            LayerKind::FlashAttention,
+            LayerKind::FusedConcatLinear,
+            LayerKind::Layernorm,
+            LayerKind::Gelu,
+        ] {
+            assert!(bc.by_kind.contains_key(&kind), "{kind:?} missing");
+        }
+        let sum: u64 = bc.by_kind.values().map(|c| c.cycles).sum();
+        assert_eq!(sum, bc.cycles);
+    }
+}

@@ -1,0 +1,176 @@
+//! FlashAttention-2 timing model (paper Sec. V-A2, Fig. 6).
+//!
+//! Heads map spatially to clusters (temporal when H > C·G); each cluster
+//! iterates the FA-2 KV-tile loop with SPM-resident running statistics.
+//! The online softmax runs in FP32 in every precision variant, with
+//! pack/unpack conversions at the QKᵀ output and before the A·V GEMM for
+//! sub-32-bit formats — the reason the FA-2 share of the latency grows at
+//! FP8 (Fig. 10).
+
+use crate::arch::{FpFormat, MemLevel, PlatformConfig};
+use crate::sim::cluster::{ClusterSim, TilePhase};
+use crate::sim::core::{opcost, CoreModel};
+use crate::sim::dma::Transfer;
+use crate::sim::{KernelCost, MultiClusterSim};
+use crate::tiling::plan_flash_attention;
+
+/// Cost of multi-head FA-2: `heads` heads of `sq x skv` attention with
+/// projection dim `p`. `causal` halves the score work (GPT masking).
+/// Q/K/V are read from HBM; the per-head output tiles stay SPM-resident
+/// for the fused concat+linear that follows (Sec. V-B).
+pub fn flash_attention_cost(
+    heads: u64,
+    sq: u64,
+    skv: u64,
+    p: u64,
+    fmt: FpFormat,
+    causal: bool,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    if heads == 0 || sq == 0 || skv == 0 || p == 0 {
+        return KernelCost::default();
+    }
+    let plan = plan_flash_attention(heads, sq, skv, p, fmt, platform);
+    let core = CoreModel::new(platform.cluster, platform.features);
+    let cores = platform.cluster.compute_cores;
+    let el = fmt.bytes();
+    let active = heads.min(platform.total_clusters() as u64).max(1);
+
+    // Causal masking skips ~half the KV tiles on average.
+    let kv_steps_effective = if causal && sq == skv {
+        (plan.kv_steps + 1).div_ceil(2).max(1)
+    } else {
+        plan.kv_steps
+    };
+
+    // One kv-step phase shape (edge tiles priced as full tiles; grouped
+    // for the §Perf fast path — see ClusterSim::run_grouped).
+    let (bq, bkv) = (plan.bq, plan.bkv);
+    let rows_per_core = bq.div_ceil(cores);
+    let make = |kv_first: bool, kv_last: bool| -> TilePhase {
+        // s = Q Kᵀ tile: bq x bkv dots of length p (io precision,
+        // widening accumulation).
+        let mut compute = core.row_dots_cycles(rows_per_core, bkv, p, fmt);
+        // Online softmax on the fp32 island: row max, exp, row sum,
+        // rescale of acc — all per bq x bkv elements, scalar FP32 exp.
+        let elems = rows_per_core * bkv;
+        compute += core.elementwise_cycles(elems, opcost::SIMPLE, FpFormat::Fp32, true); // max
+        compute += core.elementwise_cycles(elems, opcost::EXP, FpFormat::Fp32, false); // exp
+        compute += core.elementwise_cycles(elems, opcost::SIMPLE, FpFormat::Fp32, true); // sum
+        if fmt.needs_fp32_conversion() {
+            // unpack s to fp32 + repack probabilities to io format
+            compute += 2 * core.elementwise_cycles(elems, opcost::CONVERT, fmt, true);
+        }
+        // acc rescale (bq x p fp32 FMAs) + P·V tile GEMM:
+        compute +=
+            core.elementwise_cycles(rows_per_core * p, opcost::SIMPLE, FpFormat::Fp32, true);
+        compute += core.row_dots_cycles(rows_per_core, p, bkv, fmt);
+        if kv_last {
+            // Final normalize: bq x p divisions in fp32; the output tile
+            // stays in SPM for the fused concat+linear.
+            compute +=
+                core.elementwise_cycles(rows_per_core * p, opcost::DIV, FpFormat::Fp32, false);
+        }
+        let flops = 2 * bq * bkv * p  // QK^T
+            + 5 * bq * bkv            // softmax update
+            + 2 * bq * bkv * p        // PV
+            + 2 * bq * p; // rescale
+        let mut phase = TilePhase::compute(compute, flops);
+        // K and V tiles stream from HBM each kv step.
+        phase = phase
+            .with_transfer(Transfer::d2(bkv * p * el, bkv, MemLevel::Hbm))
+            .with_transfer(Transfer::d2(bkv * p * el, bkv, MemLevel::Hbm));
+        if kv_first {
+            // Q tile loaded once per q step.
+            phase = phase.with_transfer(Transfer::d2(bq * p * el, bq, MemLevel::Hbm));
+        }
+        phase
+    };
+    let per_q = kv_steps_effective;
+    let reps = plan.heads * plan.q_steps; // (head, q-tile) pairs per cluster
+    let kv_first = 1u64;
+    let kv_last = if per_q > 1 { 1 } else { 0 };
+    let kv_mid = per_q - kv_first - kv_last;
+    let mut groups = Vec::with_capacity(3);
+    for (first, last, count) in [
+        (true, per_q == 1, kv_first * reps),
+        (false, false, kv_mid * reps),
+        (false, true, kv_last * reps),
+    ] {
+        if count > 0 {
+            groups.push((make(first, last), count));
+        }
+    }
+
+    let csim = ClusterSim::new(platform).with_hbm_sharers(active);
+    let one = csim.run_grouped(&groups);
+    let sim = MultiClusterSim::new(platform);
+    let per: Vec<KernelCost> = (0..active).map(|_| one).collect();
+    sim.parallel(&per)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm::{gemm_cost, OperandHome};
+
+    fn occ() -> PlatformConfig {
+        PlatformConfig::occamy()
+    }
+
+    #[test]
+    fn causal_cheaper_than_full() {
+        let full = flash_attention_cost(16, 1024, 1024, 128, FpFormat::Fp32, false, &occ());
+        let causal = flash_attention_cost(16, 1024, 1024, 128, FpFormat::Fp32, true, &occ());
+        assert!(causal.cycles < full.cycles);
+        assert!(causal.cycles * 3 > full.cycles, "should be ~half, not free");
+    }
+
+    #[test]
+    fn fa_flops_scale_quadratically_in_s() {
+        let a = flash_attention_cost(16, 512, 512, 128, FpFormat::Fp32, false, &occ());
+        let b = flash_attention_cost(16, 1024, 1024, 128, FpFormat::Fp32, false, &occ());
+        let ratio = b.flops as f64 / a.flops as f64;
+        assert!((3.8..=4.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fp8_speedup_damped_by_fp32_softmax() {
+        // FP32 -> FP8 is 4x on pure GEMM lanes but less on FA-2 because
+        // the exp/conversions stay FP32 (paper Sec. VII-C).
+        let f32c = flash_attention_cost(16, 1024, 1024, 128, FpFormat::Fp32, true, &occ());
+        let f8c = flash_attention_cost(16, 1024, 1024, 128, FpFormat::Fp8, true, &occ());
+        let fa_speedup = f32c.cycles as f64 / f8c.cycles as f64;
+        let g32 = gemm_cost(1024, 1024, 1024, FpFormat::Fp32, &occ(), OperandHome::default());
+        let g8 = gemm_cost(1024, 1024, 1024, FpFormat::Fp8, &occ(), OperandHome::default());
+        let gemm_speedup = g32.cycles as f64 / g8.cycles as f64;
+        assert!(fa_speedup > 1.0, "fa {fa_speedup}");
+        assert!(fa_speedup < gemm_speedup, "fa {fa_speedup} vs gemm {gemm_speedup}");
+    }
+
+    #[test]
+    fn heads_scale_across_clusters() {
+        // 16 heads on 16 clusters vs 4 clusters: about 4x faster.
+        let c16 = flash_attention_cost(16, 512, 512, 64, FpFormat::Fp32, false, &occ());
+        let four = PlatformConfig::with_clusters(4);
+        let c4 = flash_attention_cost(16, 512, 512, 64, FpFormat::Fp32, false, &four);
+        let ratio = c4.cycles as f64 / c16.cycles as f64;
+        assert!((2.0..=5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn decode_shape_single_query() {
+        // AR decode: one query, long history — must be cheap & memory-heavy.
+        let c = flash_attention_cost(16, 1, 1024, 128, FpFormat::Fp32, true, &occ());
+        assert!(c.cycles > 0);
+        assert!(c.hbm_read_bytes >= 16 * 1024 * 128 * 4 * 2); // K+V per head
+    }
+
+    #[test]
+    fn zero_work_free() {
+        assert_eq!(
+            flash_attention_cost(0, 1024, 1024, 64, FpFormat::Fp32, false, &occ()).cycles,
+            0
+        );
+    }
+}

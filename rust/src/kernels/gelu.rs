@@ -1,0 +1,87 @@
+//! i-GELU timing model (paper Sec. V-A4).
+//!
+//! The GELU is approximated with the i-GELU polynomial (Kim et al.) to
+//! avoid division/tanh; evaluated in FP32 (with pack/unpack conversions in
+//! the low-precision variants) and usually *fused* with the preceding
+//! Linear layer, in which case the activations are already SPM-resident
+//! and no HBM traffic occurs.
+
+use crate::arch::{FpFormat, MemLevel, PlatformConfig};
+use crate::sim::cluster::{ClusterSim, TilePhase};
+use crate::sim::core::{opcost, CoreModel};
+use crate::sim::dma::Transfer;
+use crate::sim::{KernelCost, MultiClusterSim};
+
+/// Cost of i-GELU over an `s x f` tensor. `fused` = the input is already
+/// in SPM from the preceding Linear (paper's layer fusion) and the output
+/// stays there for the next GEMM.
+pub fn gelu_cost(
+    s: u64,
+    f: u64,
+    fmt: FpFormat,
+    fused: bool,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    if s == 0 || f == 0 {
+        return KernelCost::default();
+    }
+    let clusters = platform.total_clusters() as u64;
+    let core = CoreModel::new(platform.cluster, platform.features);
+    let cores = platform.cluster.compute_cores;
+    let el = fmt.bytes();
+    let rows = s.div_ceil(clusters).max(1).min(s);
+    let active = s.div_ceil(rows).min(clusters);
+    let elems_per_core = (rows * f).div_ceil(cores);
+
+    // Polynomial evaluated on the FP32 lanes; conversions for narrow io.
+    let mut compute =
+        core.elementwise_cycles(elems_per_core, opcost::IGELU, FpFormat::Fp32, true);
+    if fmt.needs_fp32_conversion() {
+        compute += 2 * core.elementwise_cycles(elems_per_core, opcost::CONVERT, fmt, true);
+    }
+    let flops = rows * f * opcost::IGELU; // polynomial FMAs
+    let mut phase = TilePhase::compute(compute, flops);
+    if !fused {
+        phase = phase
+            .with_transfer(Transfer::d2(rows * f * el, rows, MemLevel::Hbm))
+            .with_transfer(Transfer::d2(rows * f * el, rows, MemLevel::Hbm).to_write());
+    }
+    let csim = ClusterSim::new(platform).with_hbm_sharers(active);
+    let one = csim.run(&[phase]);
+    let sim = MultiClusterSim::new(platform);
+    let per: Vec<KernelCost> = (0..active).map(|_| one).collect();
+    sim.parallel(&per)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ() -> PlatformConfig {
+        PlatformConfig::occamy()
+    }
+
+    #[test]
+    fn fused_has_no_hbm_traffic() {
+        let c = gelu_cost(1024, 8192, FpFormat::Fp32, true, &occ());
+        assert_eq!(c.hbm_bytes(), 0);
+        let u = gelu_cost(1024, 8192, FpFormat::Fp32, false, &occ());
+        assert_eq!(u.hbm_bytes(), 2 * 1024 * 8192 * 4);
+        assert!(u.cycles > c.cycles);
+    }
+
+    #[test]
+    fn narrow_formats_pay_conversions() {
+        let f32c = gelu_cost(1024, 8192, FpFormat::Fp32, true, &occ());
+        let f8c = gelu_cost(1024, 8192, FpFormat::Fp8, true, &occ());
+        // FP8 GELU is NOT 4x faster: polynomial runs on the FP32 island.
+        assert!(f8c.cycles * 3 > f32c.cycles, "f8 {} f32 {}", f8c.cycles, f32c.cycles);
+    }
+
+    #[test]
+    fn scales_with_elements() {
+        let a = gelu_cost(256, 1024, FpFormat::Fp32, true, &occ());
+        let b = gelu_cost(1024, 1024, FpFormat::Fp32, true, &occ());
+        assert!(b.cycles > 3 * a.cycles);
+    }
+}

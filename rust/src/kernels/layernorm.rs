@@ -1,0 +1,99 @@
+//! LayerNorm timing model (paper Sec. V-A3).
+//!
+//! Rows tile spatially across clusters; each cluster's 8 cores normalize
+//! rows in parallel with SSR+FREP accumulations; statistics in FP32.
+
+use crate::arch::{FpFormat, MemLevel, PlatformConfig};
+use crate::sim::cluster::{ClusterSim, TilePhase};
+use crate::sim::core::{opcost, CoreModel};
+use crate::sim::dma::Transfer;
+use crate::sim::{KernelCost, MultiClusterSim};
+
+/// Cost of layer-normalizing an `s x e` activation tensor.
+pub fn layernorm_cost(s: u64, e: u64, fmt: FpFormat, platform: &PlatformConfig) -> KernelCost {
+    if s == 0 || e == 0 {
+        return KernelCost::default();
+    }
+    let clusters = platform.total_clusters() as u64;
+    let core = CoreModel::new(platform.cluster, platform.features);
+    let cores = platform.cluster.compute_cores;
+    let el = fmt.bytes();
+    let rows = s.div_ceil(clusters).max(1).min(s);
+    let active = s.div_ceil(rows).min(clusters);
+
+    // Temporal tiling if a row block exceeds the SPM budget (2 buffers +
+    // output); rows are normalized independently so tiles split on rows.
+    let spm = platform.cluster.spm_bytes;
+    let bytes_per_row = e * el * 3; // in (x2 double buffer) + out
+    let rows_per_tile = (spm / bytes_per_row.max(1)).clamp(1, rows);
+    let tiles = rows.div_ceil(rows_per_tile);
+
+    let mut phases = Vec::with_capacity(tiles as usize);
+    for t in 0..tiles {
+        let r = rows_per_tile.min(rows - t * rows_per_tile);
+        let rows_per_core = r.div_ceil(cores);
+        // Per row: mean (sum reduce), variance (fma reduce), then the
+        // elementwise normalize (sub, mul-rsqrt, gamma/beta fma).
+        let mut compute = 0;
+        compute += rows_per_core * core.reduction_cycles(e, FpFormat::Fp32);
+        compute += rows_per_core * core.reduction_cycles(e, FpFormat::Fp32);
+        compute += rows_per_core
+            * core.elementwise_cycles(e, opcost::SIMPLE * 3, fmt, true);
+        // rsqrt per row (scalar).
+        compute += rows_per_core * opcost::SQRT;
+        if fmt.needs_fp32_conversion() {
+            compute += 2 * rows_per_core * core.elementwise_cycles(e, opcost::CONVERT, fmt, true);
+        }
+        let flops = r * (2 * e + 2 * e + 3 * e);
+        let phase = TilePhase::compute(compute, flops)
+            .with_transfer(Transfer::d2(r * e * el, r, MemLevel::Hbm))
+            .with_transfer(Transfer::d2(r * e * el, r, MemLevel::Hbm).to_write());
+        phases.push(phase);
+    }
+
+    let csim = ClusterSim::new(platform).with_hbm_sharers(active);
+    let one = csim.run(&phases);
+    let sim = MultiClusterSim::new(platform);
+    let per: Vec<KernelCost> = (0..active).map(|_| one).collect();
+    sim.parallel(&per)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ() -> PlatformConfig {
+        PlatformConfig::occamy()
+    }
+
+    #[test]
+    fn layernorm_linear_in_rows() {
+        let a = layernorm_cost(1024, 4096, FpFormat::Fp32, &occ());
+        let b = layernorm_cost(2048, 4096, FpFormat::Fp32, &occ());
+        let ratio = b.cycles as f64 / a.cycles as f64;
+        assert!((1.6..=2.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn layernorm_is_cheap_vs_gemm() {
+        // Fig. 10: activation layers have limited latency impact.
+        use crate::kernels::gemm::{gemm_cost, OperandHome};
+        let ln = layernorm_cost(1024, 4096, FpFormat::Fp32, &occ());
+        let g = gemm_cost(1024, 4096, 4096, FpFormat::Fp32, &occ(), OperandHome::default());
+        assert!(ln.cycles * 10 < g.cycles, "ln {} vs gemm {}", ln.cycles, g.cycles);
+    }
+
+    #[test]
+    fn single_row_works() {
+        let c = layernorm_cost(1, 4096, FpFormat::Fp32, &occ());
+        assert!(c.cycles > 0);
+        assert_eq!(c.flops, 7 * 4096);
+    }
+
+    #[test]
+    fn traffic_reads_and_writes_tensor_once() {
+        let c = layernorm_cost(1024, 1024, FpFormat::Fp32, &occ());
+        assert_eq!(c.hbm_read_bytes, 1024 * 1024 * 4);
+        assert_eq!(c.hbm_write_bytes, 1024 * 1024 * 4);
+    }
+}

@@ -1,0 +1,21 @@
+//! Timing models of the FM kernel library (paper Sec. V).
+//!
+//! Each function mirrors one kernel of the paper's software library and
+//! returns a [`crate::sim::KernelCost`]: the same tile schedule the Pallas
+//! artifacts express with BlockSpecs, priced by the cycle model in
+//! [`crate::sim`]. The coordinator composes these into per-layer and
+//! per-model costs; the benches regenerate the paper's figures from them.
+
+pub mod flash_attention;
+pub mod gelu;
+pub mod gemm;
+pub mod layernorm;
+pub mod softmax;
+pub mod tree_reduce;
+
+pub use flash_attention::flash_attention_cost;
+pub use gelu::gelu_cost;
+pub use gemm::{gemm_cost, gemv_cost};
+pub use layernorm::layernorm_cost;
+pub use softmax::softmax_cost;
+pub use tree_reduce::{fused_concat_linear_cost, unfused_concat_linear_cost};

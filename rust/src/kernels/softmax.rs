@@ -1,0 +1,92 @@
+//! Standalone row-softmax timing model.
+//!
+//! Used by the *unfused* attention baseline (the configuration
+//! FlashAttention-2 is compared against for the Fig. 1 memory analysis):
+//! the S x S score matrix round-trips through HBM around the softmax.
+//! Always evaluated in FP32.
+
+use crate::arch::{FpFormat, MemLevel, PlatformConfig};
+use crate::sim::cluster::{ClusterSim, TilePhase};
+use crate::sim::core::{opcost, CoreModel};
+use crate::sim::dma::Transfer;
+use crate::sim::{KernelCost, MultiClusterSim};
+
+/// Cost of softmax over the rows of an `s x n` matrix. `resident` = input
+/// and output stay in SPM (fused caller); otherwise HBM round trip.
+pub fn softmax_cost(
+    s: u64,
+    n: u64,
+    fmt: FpFormat,
+    resident: bool,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    if s == 0 || n == 0 {
+        return KernelCost::default();
+    }
+    let clusters = platform.total_clusters() as u64;
+    let core = CoreModel::new(platform.cluster, platform.features);
+    let cores = platform.cluster.compute_cores;
+    let el = fmt.bytes();
+    let rows = s.div_ceil(clusters).max(1).min(s);
+    let active = s.div_ceil(rows).min(clusters);
+    let rows_per_core = rows.div_ceil(cores);
+
+    // Per row: max reduce, exp (scalar fp32), sum reduce, divide.
+    let mut compute = 0;
+    compute += rows_per_core * core.reduction_cycles(n, FpFormat::Fp32);
+    compute += rows_per_core * core.elementwise_cycles(n, opcost::EXP, FpFormat::Fp32, false);
+    compute += rows_per_core * core.reduction_cycles(n, FpFormat::Fp32);
+    compute += rows_per_core * core.elementwise_cycles(n, opcost::DIV, FpFormat::Fp32, false);
+    if fmt.needs_fp32_conversion() {
+        compute += 2 * rows_per_core * core.elementwise_cycles(n, opcost::CONVERT, fmt, true);
+    }
+    let flops = rows * n * 4;
+    let mut phase = TilePhase::compute(compute, flops);
+    if !resident {
+        phase = phase
+            .with_transfer(Transfer::d2(rows * n * el, rows, MemLevel::Hbm))
+            .with_transfer(Transfer::d2(rows * n * el, rows, MemLevel::Hbm).to_write());
+    }
+    let csim = ClusterSim::new(platform).with_hbm_sharers(active);
+    let one = csim.run(&[phase]);
+    let sim = MultiClusterSim::new(platform);
+    let per: Vec<KernelCost> = (0..active).map(|_| one).collect();
+    sim.parallel(&per)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ() -> PlatformConfig {
+        PlatformConfig::occamy()
+    }
+
+    #[test]
+    fn exp_dominates() {
+        // The exponential is the expensive part (paper Sec. I).
+        let c = softmax_cost(1024, 1024, FpFormat::Fp32, true, &occ());
+        let rows_per_core = (1024u64 / 16) / 8;
+        let core = CoreModel::new(occ().cluster, occ().features);
+        let exp_only =
+            rows_per_core * core.elementwise_cycles(1024, opcost::EXP, FpFormat::Fp32, false);
+        assert!(exp_only as f64 > 0.5 * c.compute_cycles as f64);
+    }
+
+    #[test]
+    fn unfused_pays_hbm_roundtrip() {
+        let r = softmax_cost(2048, 2048, FpFormat::Fp32, true, &occ());
+        let u = softmax_cost(2048, 2048, FpFormat::Fp32, false, &occ());
+        assert_eq!(r.hbm_bytes(), 0);
+        assert_eq!(u.hbm_bytes(), 2 * 2048 * 2048 * 4);
+        assert!(u.cycles >= r.cycles);
+    }
+
+    #[test]
+    fn fp8_still_runs_exp_in_fp32() {
+        let f32c = softmax_cost(1024, 1024, FpFormat::Fp32, true, &occ());
+        let f8c = softmax_cost(1024, 1024, FpFormat::Fp8, true, &occ());
+        // No 4x here: conversions even add work.
+        assert!(f8c.compute_cycles >= f32c.compute_cycles);
+    }
+}

@@ -1,0 +1,31 @@
+//! # snitch-fm
+//!
+//! Reproduction of *"Optimizing Foundation Model Inference on a
+//! Many-tiny-core Open-source RISC-V Platform"* (Potocnik et al., 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time, `python/`)** — Pallas kernels
+//!   (FlashAttention-2, tiled GEMM, LayerNorm, i-GELU) and JAX transformer
+//!   blocks, AOT-lowered to HLO text artifacts.
+//! * **Layer 3 (this crate)** — the inference coordinator: model graphs,
+//!   tile planning, the cycle-level timing simulator standing in for the
+//!   paper's RTL testbed, the energy model, and a PJRT runtime executing
+//!   the HLO artifacts for real numerics. Python never runs at inference
+//!   time.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod kernels;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod soa;
+pub mod tiling;
+pub mod util;

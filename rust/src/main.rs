@@ -1,0 +1,275 @@
+//! snitch-fm CLI: run, sweep, breakdown, compare, validate, generate.
+//!
+//! The leader entrypoint of the Layer-3 coordinator. All timing numbers
+//! come from the cycle-level platform simulator; `validate` additionally
+//! executes the AOT HLO artifacts through PJRT and checks the golden
+//! numerics (proving the request path needs no Python).
+
+use anyhow::Result;
+
+use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
+use snitch_fm::config::parse_mode;
+use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::report;
+use snitch_fm::runtime::Runtime;
+use snitch_fm::soa;
+use snitch_fm::util::cli::Args;
+
+const USAGE: &str = "\
+snitch-fm — foundation-model inference on a many-tiny-core RISC-V platform
+
+USAGE: snitch-fm <COMMAND> [FLAGS]
+
+COMMANDS:
+  run        Price one model pass on the simulated platform
+             --model NAME --mode nar|ar --format FMT --seq N --clusters N
+             --baseline --config FILE --csv
+  sweep      Precision ladder, baseline -> fp8 (Fig. 7/8)
+             --model NAME --mode nar|ar --seq N --clusters N
+  breakdown  Kernel latency breakdown (Fig. 10)
+             --model NAME --mode nar|ar --format FMT --seq N
+  compare    SoA comparison --exp table4|h100|academic|fig1
+  validate   Execute AOT artifacts via PJRT, verify golden numerics
+             --artifacts DIR
+  help       Show this message
+
+Models: vit-b vit-l vit-h gpt3-xl gpt-j tiny
+Formats: fp64 fp32 fp16 bf16 fp8 fp8alt";
+
+fn model_by_name(name: &str) -> Result<ModelConfig> {
+    ModelConfig::preset(name).ok_or_else(|| anyhow::anyhow!("unknown model preset {name}"))
+}
+
+fn parse_format(s: &str) -> Result<FpFormat> {
+    FpFormat::parse(s).ok_or_else(|| anyhow::anyhow!("unknown format {s}"))
+}
+
+fn default_seq(cfg: &ModelConfig, seq: u64) -> u64 {
+    if seq == 0 {
+        cfg.seq
+    } else {
+        seq
+    }
+}
+
+const FLAGS: &[&str] = &[
+    "model", "mode", "format", "seq", "clusters", "baseline", "config", "csv",
+    "exp", "artifacts",
+];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), FLAGS)?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("breakdown") => cmd_breakdown(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command {other}\n\n{USAGE}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    // Config file first, CLI overrides.
+    let (cfg, platform, mode, format, seq) = if let Some(path) = args.get("config") {
+        let rc = snitch_fm::config::load(std::path::Path::new(path))?;
+        let cfg = rc.model.to_model()?;
+        let cli_seq = args.get_u64("seq", 0)?;
+        let seq = default_seq(&cfg, if cli_seq != 0 { cli_seq } else { rc.run.seq });
+        (cfg, rc.platform.to_platform(), rc.run.mode()?, rc.run.format()?, seq)
+    } else {
+        let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
+        let mut platform = PlatformConfig::with_clusters(args.get_u32("clusters", 16)?);
+        if args.get_bool("baseline") {
+            platform.features = Features::baseline();
+        }
+        let seq = default_seq(&cfg, args.get_u64("seq", 0)?);
+        (
+            cfg,
+            platform,
+            parse_mode(args.get_or("mode", "nar"))?,
+            parse_format(args.get_or("format", "fp32"))?,
+            seq,
+        )
+    };
+    let engine = InferenceEngine::new(platform);
+    let r = match mode {
+        Mode::Nar => engine.run_nar(&cfg, seq, format),
+        Mode::Ar => engine.run_ar_step(&cfg, seq, format),
+    };
+    if args.get_bool("csv") {
+        print!("{}", report::runs_csv(&[r]));
+    } else {
+        print!("{}", report::runs_table(&[r]));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
+    let mode = parse_mode(args.get_or("mode", "nar"))?;
+    let seq = default_seq(&cfg, args.get_u64("seq", 0)?);
+    let clusters = args.get_u32("clusters", 16)?;
+    let mut rows = Vec::new();
+    let mut ladder = Vec::new();
+    // Baseline FP64, then optimized at each precision (Fig. 7/8).
+    let mut base = PlatformConfig::with_clusters(clusters);
+    base.features = Features::baseline();
+    let engine = InferenceEngine::new(base);
+    let r = match mode {
+        Mode::Nar => engine.run_nar(&cfg, seq, FpFormat::Fp64),
+        Mode::Ar => engine.run_ar_step(&cfg, seq, FpFormat::Fp64),
+    };
+    ladder.push(("baseline fp64".to_string(), r.throughput));
+    rows.push(r);
+    let engine = InferenceEngine::new(PlatformConfig::with_clusters(clusters));
+    for fmt in FpFormat::LADDER {
+        let r = match mode {
+            Mode::Nar => engine.run_nar(&cfg, seq, fmt),
+            Mode::Ar => engine.run_ar_step(&cfg, seq, fmt),
+        };
+        ladder.push((format!("optimized {}", fmt.name()), r.throughput));
+        rows.push(r);
+    }
+    print!("{}", report::runs_table(&rows));
+    println!();
+    let unit = rows[0].throughput_unit;
+    print!(
+        "{}",
+        report::speedup_ladder(
+            &format!("{} {} ladder (Fig. 7/8)", cfg.name, rows[0].mode),
+            unit,
+            &ladder
+        )
+    );
+    Ok(())
+}
+
+fn cmd_breakdown(args: &Args) -> Result<()> {
+    let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
+    let mode = parse_mode(args.get_or("mode", "nar"))?;
+    let format = parse_format(args.get_or("format", "fp32"))?;
+    let seq = default_seq(&cfg, args.get_u64("seq", 0)?);
+    let engine = InferenceEngine::new(PlatformConfig::occamy());
+    let b = engine.breakdown(&cfg, mode, seq, format);
+    let mode_name = match mode {
+        Mode::Nar => "nar",
+        Mode::Ar => "ar",
+    };
+    print!(
+        "{}",
+        report::breakdown_table(
+            &format!("{} {} {} S={seq} (Fig. 10)", cfg.name, mode_name, format.name()),
+            &b
+        )
+    );
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    match args.get_or("exp", "table4") {
+        "table4" => {
+            let engine = InferenceEngine::new(PlatformConfig::occamy());
+            let r = engine.run_nar(&ModelConfig::gpt3_xl(), 1024, FpFormat::Fp16);
+            let ours = soa::OursRow::from_run(
+                r.gflops,
+                r.fpu_utilization,
+                engine.platform.total_cores(),
+            );
+            println!("Table IV — GPT NAR FP16 (SoA: GPT2-XL fwd, ours: GPT3-XL sim)");
+            println!(
+                "{:<10} {:>8} {:>10} {:>14} {:>8}",
+                "platform", "CUs", "TFLOPS", "TFLOPS/CU", "util%"
+            );
+            for s in soa::table4_soa() {
+                println!(
+                    "{:<10} {:>8} {:>10.2} {:>14.4} {:>8.1}",
+                    s.name, s.compute_units, s.tflops, s.tflops_per_cu, s.fpu_utilization_pct
+                );
+            }
+            println!(
+                "{:<10} {:>8} {:>10.2} {:>14.4} {:>8.1}",
+                "ours", ours.compute_units, ours.tflops, ours.tflops_per_cu,
+                ours.fpu_utilization_pct
+            );
+            println!(
+                "utilization advantage over best SoA: {:.2}x",
+                ours.utilization_advantage()
+            );
+        }
+        "h100" => {
+            let engine = InferenceEngine::new(PlatformConfig::occamy());
+            let r = engine.run_nar(&ModelConfig::vit_l(), 197, FpFormat::Fp8);
+            let h = soa::h100_vit_l_fp8();
+            let ours_cu = engine.platform.total_cores();
+            println!("H100 vs ours — ViT-L FP8 (Sec. VII-E)");
+            println!(
+                "H100: {:.0} samples/s, {:.2}/CU, {:.1}/W",
+                h.samples_per_s, h.samples_per_s_per_cu, h.samples_per_s_per_w
+            );
+            println!(
+                "ours: {:.1} samples/s, {:.3}/CU, {:.1}/W",
+                r.throughput,
+                r.throughput / ours_cu as f64,
+                r.throughput / r.power_w
+            );
+        }
+        "academic" => {
+            let engine = InferenceEngine::new(PlatformConfig::occamy());
+            let rj = engine.run_nar(&ModelConfig::gpt_j(), 1024, FpFormat::Fp8);
+            let w_per_pe = rj.power_w / engine.platform.total_cores() as f64;
+            let at = soa::acceltran();
+            println!(
+                "AccelTran: {:.2} W/PE | ours: {:.3} W/PE ({:.1}x better)",
+                at.watts_per_pe.unwrap(),
+                w_per_pe,
+                at.watts_per_pe.unwrap() / w_per_pe
+            );
+            let rb = engine.run_nar(&ModelConfig::vit_b(), 197, FpFormat::Fp8);
+            let t = soa::tambe();
+            println!(
+                "Tambe et al.: {:.0} ms | ours (ViT-B FP8): {:.1} ms ({:.1}x faster)",
+                t.bert_base_latency_ms.unwrap(),
+                rb.seconds * 1e3,
+                t.bert_base_latency_ms.unwrap() / (rb.seconds * 1e3)
+            );
+        }
+        "fig1" => {
+            use snitch_fm::kernels::{fused_concat_linear_cost, unfused_concat_linear_cost};
+            let p = PlatformConfig::occamy();
+            let cfg = ModelConfig::gpt_j();
+            let s = 2048;
+            let f = fused_concat_linear_cost(s, cfg.heads, cfg.p, cfg.e, FpFormat::Fp32, &p);
+            let u = unfused_concat_linear_cost(s, cfg.heads, cfg.p, cfg.e, FpFormat::Fp32, &p);
+            println!("Fig. 1 — GPT-J S=2048 concat+linear HBM traffic");
+            println!("  fused (c2c reduction): {:.1} MB", f.hbm_bytes() as f64 / 1e6);
+            println!("  unfused (HBM bounce):  {:.1} MB", u.hbm_bytes() as f64 / 1e6);
+            println!(
+                "  reduction: {:.2}x",
+                u.hbm_bytes() as f64 / f.hbm_bytes() as f64
+            );
+        }
+        other => anyhow::bail!("unknown experiment {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    let mut rt = match args.get("artifacts") {
+        Some(dir) => Runtime::with_dir(std::path::Path::new(dir))?,
+        None => Runtime::new()?,
+    };
+    println!("PJRT platform: {}", rt.platform_name());
+    let names: Vec<String> = rt.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+    for name in names {
+        let outs = rt.run_golden(&name, 1e-3)?;
+        println!("  {name}: OK ({} outputs)", outs.len());
+    }
+    println!("all artifacts validated against golden fingerprints");
+    Ok(())
+}

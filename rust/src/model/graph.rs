@@ -1,0 +1,117 @@
+//! Layer-graph expansion: one transformer block -> the kernel sequence the
+//! coordinator schedules (paper Fig. 1/2 block topology, with the fusions
+//! of Sec. V-B applied).
+
+use super::{Family, Mode, ModelConfig};
+
+/// Kernel class a layer belongs to (the Fig. 10 breakdown categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Plain GEMM (projections, MLP linears).
+    Gemm,
+    /// FlashAttention-2 fused attention.
+    FlashAttention,
+    /// Fused Concat+Linear with tree reduction.
+    FusedConcatLinear,
+    /// LayerNorm.
+    Layernorm,
+    /// i-GELU (fused with the preceding linear).
+    Gelu,
+}
+
+impl LayerKind {
+    pub const fn name(self) -> &'static str {
+        match self {
+            LayerKind::Gemm => "gemm",
+            LayerKind::FlashAttention => "flashattention",
+            LayerKind::FusedConcatLinear => "fused-concat-linear",
+            LayerKind::Layernorm => "layernorm",
+            LayerKind::Gelu => "gelu",
+        }
+    }
+}
+
+/// One layer instance of the block with concrete dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub kind: LayerKind,
+    pub label: &'static str,
+    /// GEMM: (m, k, n). FA: (heads, sq; skv via `skv`). LN/GELU: (rows, cols).
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    /// FA only: KV length (= S in NAR self-attention; cache length in AR).
+    pub skv: u64,
+    /// GPT causal masking.
+    pub causal: bool,
+    /// Activations arrive SPM-resident from the previous fused layer.
+    pub fused_input: bool,
+}
+
+/// Expand one transformer block at sequence length `s` (NAR) or for one
+/// token against a `kv_len`-entry cache (AR) into its kernel sequence.
+pub fn block_layers(cfg: &ModelConfig, mode: Mode, s: u64, kv_len: u64) -> Vec<Layer> {
+    let causal = cfg.family == Family::Gpt;
+    let (sq, skv) = match mode {
+        Mode::Nar => (s, s),
+        Mode::Ar => (1, kv_len + 1),
+    };
+    let hp = cfg.hp();
+    vec![
+        Layer { kind: LayerKind::Layernorm, label: "ln1", m: sq, k: cfg.e, n: cfg.e, skv: 0, causal: false, fused_input: false },
+        Layer { kind: LayerKind::Gemm, label: "q-proj", m: sq, k: cfg.e, n: hp, skv: 0, causal: false, fused_input: false },
+        Layer { kind: LayerKind::Gemm, label: "k-proj", m: sq, k: cfg.e, n: hp, skv: 0, causal: false, fused_input: false },
+        Layer { kind: LayerKind::Gemm, label: "v-proj", m: sq, k: cfg.e, n: hp, skv: 0, causal: false, fused_input: false },
+        Layer { kind: LayerKind::FlashAttention, label: "attention", m: cfg.heads, k: cfg.p, n: sq, skv, causal, fused_input: false },
+        Layer { kind: LayerKind::FusedConcatLinear, label: "out-proj", m: sq, k: hp, n: cfg.e, skv: 0, causal: false, fused_input: true },
+        Layer { kind: LayerKind::Layernorm, label: "ln2", m: sq, k: cfg.e, n: cfg.e, skv: 0, causal: false, fused_input: false },
+        Layer { kind: LayerKind::Gemm, label: "mlp-up", m: sq, k: cfg.e, n: cfg.ff, skv: 0, causal: false, fused_input: false },
+        Layer { kind: LayerKind::Gelu, label: "gelu", m: sq, k: cfg.ff, n: cfg.ff, skv: 0, causal: false, fused_input: true },
+        Layer { kind: LayerKind::Gemm, label: "mlp-down", m: sq, k: cfg.ff, n: cfg.e, skv: 0, causal: false, fused_input: true },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nar_block_layers() {
+        let cfg = ModelConfig::gpt_j();
+        let ls = block_layers(&cfg, Mode::Nar, 1024, 0);
+        assert_eq!(ls.len(), 10);
+        let att = ls.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert_eq!(att.m, 16);
+        assert_eq!(att.n, 1024);
+        assert_eq!(att.skv, 1024);
+        assert!(att.causal);
+    }
+
+    #[test]
+    fn vit_not_causal() {
+        let cfg = ModelConfig::vit_b();
+        let ls = block_layers(&cfg, Mode::Nar, 197, 0);
+        let att = ls.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert!(!att.causal);
+    }
+
+    #[test]
+    fn ar_block_single_query() {
+        let cfg = ModelConfig::gpt_j();
+        let ls = block_layers(&cfg, Mode::Ar, 1, 512);
+        let att = ls.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert_eq!(att.n, 1); // one query
+        assert_eq!(att.skv, 513); // cache + current token
+        let q = ls.iter().find(|l| l.label == "q-proj").unwrap();
+        assert_eq!(q.m, 1);
+    }
+
+    #[test]
+    fn fusions_marked() {
+        let cfg = ModelConfig::vit_b();
+        let ls = block_layers(&cfg, Mode::Nar, 197, 0);
+        assert!(ls.iter().find(|l| l.label == "gelu").unwrap().fused_input);
+        assert!(ls.iter().find(|l| l.label == "out-proj").unwrap().fused_input);
+        assert!(!ls.iter().find(|l| l.label == "q-proj").unwrap().fused_input);
+    }
+}

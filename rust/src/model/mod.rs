@@ -1,0 +1,206 @@
+//! Foundation-model definitions (paper Table II) and their layer graphs.
+//!
+//! `ModelConfig` carries the Table-II hyperparameters; `graph` expands one
+//! transformer block into the kernel sequence the coordinator prices and
+//! (for the tiny variants) executes through the PJRT artifacts.
+
+pub mod graph;
+
+pub use graph::{block_layers, Layer, LayerKind};
+
+use crate::arch::FpFormat;
+
+/// Encoder-only (ViT) vs decoder-only (GPT) family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Vit,
+    Gpt,
+}
+
+/// Execution mode for decoder-only models (paper Sec. VI-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Non-autoregressive / prompt encoding / training fwd: S tokens per
+    /// pass, causal masking. (ViTs always run this way, non-causal.)
+    Nar,
+    /// Autoregressive generation: one token per pass against the KV cache.
+    Ar,
+}
+
+/// One Table-II model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: Family,
+    /// Transformer blocks.
+    pub blocks: u64,
+    /// Embedding dim E.
+    pub e: u64,
+    /// Per-head projection dim P.
+    pub p: u64,
+    /// Heads H.
+    pub heads: u64,
+    /// MLP hidden dim FF.
+    pub ff: u64,
+    /// Default sequence length S (ViT: fixed 197; GPT: sweep default 1024).
+    pub seq: u64,
+}
+
+impl ModelConfig {
+    pub fn vit_b() -> ModelConfig {
+        ModelConfig { name: "vit-b".into(), family: Family::Vit, blocks: 12, e: 768, p: 64, heads: 12, ff: 3072, seq: 197 }
+    }
+    pub fn vit_l() -> ModelConfig {
+        ModelConfig { name: "vit-l".into(), family: Family::Vit, blocks: 24, e: 1024, p: 64, heads: 16, ff: 4096, seq: 197 }
+    }
+    pub fn vit_h() -> ModelConfig {
+        ModelConfig { name: "vit-h".into(), family: Family::Vit, blocks: 32, e: 1280, p: 80, heads: 16, ff: 5120, seq: 197 }
+    }
+    pub fn gpt3_xl() -> ModelConfig {
+        ModelConfig { name: "gpt3-xl".into(), family: Family::Gpt, blocks: 40, e: 2048, p: 128, heads: 16, ff: 8192, seq: 1024 }
+    }
+    pub fn gpt_j() -> ModelConfig {
+        ModelConfig { name: "gpt-j".into(), family: Family::Gpt, blocks: 28, e: 4096, p: 256, heads: 16, ff: 16384, seq: 1024 }
+    }
+    /// Tiny stand-in matching the Python TINY preset (integration tests).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig { name: "tiny".into(), family: Family::Gpt, blocks: 2, e: 64, p: 16, heads: 4, ff: 128, seq: 32 }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        match name {
+            "vit-b" => Some(Self::vit_b()),
+            "vit-l" => Some(Self::vit_l()),
+            "vit-h" => Some(Self::vit_h()),
+            "gpt3-xl" => Some(Self::gpt3_xl()),
+            "gpt-j" => Some(Self::gpt_j()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// All five paper models.
+    pub fn paper_models() -> Vec<ModelConfig> {
+        vec![Self::vit_b(), Self::vit_l(), Self::vit_h(), Self::gpt3_xl(), Self::gpt_j()]
+    }
+
+    /// H * P.
+    pub fn hp(&self) -> u64 {
+        self.heads * self.p
+    }
+
+    /// Weight parameters of one block (attention + MLP, no embeddings).
+    pub fn params_per_block(&self) -> u64 {
+        let attn = 3 * self.e * self.hp() + self.hp() * self.e;
+        let mlp = 2 * self.e * self.ff;
+        let norms = 4 * self.e + self.ff + self.e; // gammas/betas/biases
+        attn + mlp + norms
+    }
+
+    /// Total block parameters of the model.
+    pub fn params(&self) -> u64 {
+        self.blocks * self.params_per_block()
+    }
+
+    /// FLOPs of one block at sequence length `s` in `mode`.
+    /// `kv_len` only matters in AR mode (attention against the cache).
+    pub fn flops_per_block(&self, mode: Mode, s: u64, kv_len: u64) -> u64 {
+        match mode {
+            Mode::Nar => {
+                let proj = 3 * 2 * s * self.e * self.hp() + 2 * s * self.hp() * self.e;
+                // Causal attention for GPT halves the score work; ViT full.
+                let att = if self.family == Family::Gpt {
+                    2 * s * s * self.p * self.heads * 2 / 2
+                } else {
+                    2 * s * s * self.p * self.heads * 2
+                };
+                let mlp = 2 * s * self.e * self.ff * 2;
+                let norms = 2 * 7 * s * self.e;
+                proj + att + mlp + norms
+            }
+            Mode::Ar => {
+                let proj = 3 * 2 * self.e * self.hp() + 2 * self.hp() * self.e;
+                let att = 2 * kv_len * self.p * self.heads * 2;
+                let mlp = 2 * self.e * self.ff * 2;
+                let norms = 2 * 7 * self.e;
+                proj + att + mlp + norms
+            }
+        }
+    }
+
+    /// End-to-end FLOPs for one forward pass.
+    pub fn flops(&self, mode: Mode, s: u64, kv_len: u64) -> u64 {
+        self.blocks * self.flops_per_block(mode, s, kv_len)
+    }
+
+    /// Model weight bytes at a given precision.
+    pub fn weight_bytes(&self, fmt: FpFormat) -> u64 {
+        self.params() * fmt.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_param_counts_roughly_match() {
+        // Table II: ViT-B 86M, ViT-L 307M, ViT-H 632M, GPT3-XL 1.3B, GPT-J 6B.
+        // We count block weights only (no embeddings/heads), so expect the
+        // right order of magnitude and ranking.
+        // Note: Table II itself is internally inconsistent for GPT3-XL —
+        // 40 blocks x (E=2048, FF=8192) is ~2.0B block weights, not 1.3B
+        // (GPT-3 XL 1.3B has 24 layers). We follow Table II's dims, so the
+        // GPT3-XL bound is wide.
+        let cases = [
+            (ModelConfig::vit_b(), 86e6, 0.70, 1.3),
+            (ModelConfig::vit_l(), 307e6, 0.70, 1.3),
+            (ModelConfig::vit_h(), 632e6, 0.70, 1.3),
+            (ModelConfig::gpt3_xl(), 1.3e9, 0.55, 1.65),
+            (ModelConfig::gpt_j(), 6e9, 0.70, 1.3),
+        ];
+        for (m, paper, min_frac, max_frac) in cases {
+            let got = m.params() as f64;
+            assert!(
+                got > min_frac * paper && got < max_frac * paper,
+                "{}: {got:.2e} vs paper {paper:.2e}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn nar_flops_quadratic_attention() {
+        let m = ModelConfig::gpt_j();
+        let f1 = m.flops_per_block(Mode::Nar, 1024, 0) as f64;
+        let f2 = m.flops_per_block(Mode::Nar, 2048, 0) as f64;
+        assert!(f2 / f1 > 2.0 && f2 / f1 < 4.0);
+    }
+
+    #[test]
+    fn ar_flops_much_smaller_than_nar_per_token() {
+        let m = ModelConfig::gpt_j();
+        let nar_per_token = m.flops_per_block(Mode::Nar, 1024, 0) / 1024;
+        let ar = m.flops_per_block(Mode::Ar, 1, 1024);
+        // AR per-token ~= NAR per-token (same math) — the *rate* differs.
+        let ratio = ar as f64 / nar_per_token as f64;
+        assert!((0.5..=2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["vit-b", "vit-l", "vit-h", "gpt3-xl", "gpt-j", "tiny"] {
+            assert!(ModelConfig::preset(name).is_some(), "{name}");
+        }
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn gptj_weight_bytes() {
+        let m = ModelConfig::gpt_j();
+        // ~5.6B block params -> ~22 GB FP32, ~5.6 GB FP8.
+        assert!(m.weight_bytes(FpFormat::Fp32) > 20_000_000_000);
+        assert_eq!(m.weight_bytes(FpFormat::Fp8), m.params());
+    }
+}

@@ -1,0 +1,141 @@
+//! Paper-style table/figure text output + CSV export.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::{Breakdown, RunReport};
+
+/// Render run reports as an aligned text table (one row per run).
+pub fn runs_table(rows: &[RunReport]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<10} {:<5} {:<7} {:>6} {:>14} {:>12} {:>9} {:>8} {:>10} {:>9}",
+        "model", "mode", "fmt", "S", "throughput", "GFLOPS", "util%", "P[W]", "GFLOPS/W", "HBM[GB]"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:<10} {:<5} {:<7} {:>6} {:>9.2} {:<4} {:>12.1} {:>9.2} {:>8.2} {:>10.1} {:>9.3}",
+            r.model,
+            r.mode,
+            r.format,
+            r.seq,
+            r.throughput,
+            r.throughput_unit.trim_end_matches("/s"),
+            r.gflops,
+            r.fpu_utilization * 100.0,
+            r.power_w,
+            r.gflops_per_w,
+            r.hbm_gb,
+        );
+    }
+    s
+}
+
+/// CSV export of run reports.
+pub fn runs_csv(rows: &[RunReport]) -> String {
+    let mut s = String::from(
+        "model,mode,format,seq,cycles,seconds,throughput,throughput_unit,gflops,fpu_utilization,power_w,gflops_per_w,hbm_gb,c2c_gb\n",
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            r.model,
+            r.mode,
+            r.format,
+            r.seq,
+            r.cycles,
+            r.seconds,
+            r.throughput,
+            r.throughput_unit,
+            r.gflops,
+            r.fpu_utilization,
+            r.power_w,
+            r.gflops_per_w,
+            r.hbm_gb,
+            r.c2c_gb
+        );
+    }
+    s
+}
+
+/// Render a Fig. 10-style latency breakdown.
+pub fn breakdown_table(title: &str, b: &Breakdown) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{title} (total {} cycles)", b.total_cycles);
+    for share in &b.shares {
+        let bar_len = (share.fraction * 40.0).round() as usize;
+        let _ = writeln!(
+            s,
+            "  {:<20} {:>6.1}%  {}",
+            share.kind,
+            share.fraction * 100.0,
+            "#".repeat(bar_len)
+        );
+    }
+    s
+}
+
+/// Render a speedup ladder (Fig. 7/8 style): (label, throughput) pairs
+/// normalized to the first entry.
+pub fn speedup_ladder(title: &str, unit: &str, rows: &[(String, f64)]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{title}");
+    let base = rows.first().map(|r| r.1).unwrap_or(1.0);
+    for (label, tp) in rows {
+        let speedup = if base > 0.0 { tp / base } else { 0.0 };
+        let _ = writeln!(s, "  {label:<24} {tp:>10.2} {unit:<9} ({speedup:>5.1}x)");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{FpFormat, PlatformConfig};
+    use crate::coordinator::InferenceEngine;
+    use crate::model::{Mode, ModelConfig};
+
+    fn sample_report() -> RunReport {
+        InferenceEngine::new(PlatformConfig::occamy()).run_nar(
+            &ModelConfig::vit_b(),
+            197,
+            FpFormat::Fp32,
+        )
+    }
+
+    #[test]
+    fn table_contains_model_and_numbers() {
+        let t = runs_table(&[sample_report()]);
+        assert!(t.contains("vit-b"));
+        assert!(t.contains("nar"));
+        assert!(t.contains("fp32"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = runs_csv(&[sample_report(), sample_report()]);
+        assert_eq!(c.lines().count(), 3);
+        assert!(c.starts_with("model,mode"));
+    }
+
+    #[test]
+    fn breakdown_renders_bars() {
+        let e = InferenceEngine::new(PlatformConfig::occamy());
+        let b = e.breakdown(&ModelConfig::vit_b(), Mode::Nar, 197, FpFormat::Fp32);
+        let t = breakdown_table("vit-b fp32", &b);
+        assert!(t.contains("gemm"));
+        assert!(t.contains('#'));
+    }
+
+    #[test]
+    fn ladder_normalizes_to_first() {
+        let s = speedup_ladder(
+            "test",
+            "tok/s",
+            &[("base".into(), 2.0), ("fast".into(), 8.0)],
+        );
+        assert!(s.contains("4.0x"), "{s}");
+    }
+}

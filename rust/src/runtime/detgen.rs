@@ -1,0 +1,66 @@
+//! Deterministic cross-language tensor generator.
+//!
+//! Bit-exact mirror of `python/compile/aot.py::det_f32`: a lowbias32
+//! integer hash mapped to f32 in `[offset - scale/2, offset + scale/2)`.
+//! Every operation (u32 wrap-mul, exact u32→f64, /2^32, f64→f32 round,
+//! f32 mul/add) is IEEE-deterministic in both numpy and Rust, so the Rust
+//! integration tests can regenerate the exact inputs the Python golden
+//! run used — no tensor files ship with the artifacts.
+
+/// lowbias32 hash (u32 -> u32).
+pub fn hash32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7FEB_352D);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846C_A68B);
+    x ^= x >> 16;
+    x
+}
+
+/// Deterministic f32 vector of length `n`.
+pub fn det_f32(n: usize, seed: u32, scale: f32, offset: f32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = hash32((i as u32).wrapping_add(seed));
+            let base = (h as f64 / 4294967296.0 - 0.5) as f32;
+            base * scale + offset
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_and_determinism() {
+        let v1 = det_f32(4096, 7, 1.0, 0.0);
+        let v2 = det_f32(4096, 7, 1.0, 0.0);
+        assert_eq!(v1, v2);
+        assert!(v1.iter().all(|&x| (-0.5..0.5).contains(&x)));
+        let mean: f32 = v1.iter().sum::<f32>() / v1.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        let v3 = det_f32(4096, 8, 1.0, 0.0);
+        assert_ne!(v1, v3);
+    }
+
+    #[test]
+    fn scale_offset() {
+        let v = det_f32(1024, 1, 0.2, 1.0);
+        assert!(v.iter().all(|&x| (0.9..1.1).contains(&x)));
+    }
+
+    #[test]
+    fn hash_avalanche() {
+        // Consecutive inputs must decorrelate (same check as test_aot.py).
+        let a: Vec<f64> = (0..1000u32).map(|i| hash32(i) as f64).collect();
+        let mean = a.iter().sum::<f64>() / a.len() as f64;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for w in a.windows(2) {
+            num += (w[0] - mean) * (w[1] - mean);
+            den += (w[0] - mean) * (w[0] - mean);
+        }
+        assert!((num / den).abs() < 0.1);
+    }
+}

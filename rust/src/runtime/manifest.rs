@@ -1,0 +1,230 @@
+//! `artifacts/manifest.json` schema: the contract `python/compile/aot.py`
+//! writes and the Rust runtime consumes (argument order, shapes,
+//! deterministic generator specs, golden output fingerprints).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::detgen;
+use crate::util::json::{self, Value};
+
+/// Generator spec for one argument.
+#[derive(Debug, Clone)]
+pub enum GenSpec {
+    /// Deterministic f32 tensor (see `detgen`).
+    Det { seed: u32, scale: f64, offset: f64 },
+    /// A fixed i32 scalar (e.g. `kv_len`).
+    I32 { value: i32 },
+}
+
+/// One argument of an artifact's entry computation.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub gen: GenSpec,
+}
+
+impl ArgSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    /// Materialize the argument exactly as the Python golden run did.
+    pub fn generate_f32(&self) -> Option<Vec<f32>> {
+        match &self.gen {
+            GenSpec::Det { seed, scale, offset } => Some(detgen::det_f32(
+                self.element_count(),
+                *seed,
+                *scale as f32,
+                *offset as f32,
+            )),
+            GenSpec::I32 { .. } => None,
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<ArgSpec> {
+        let gen_v = v.req("gen")?;
+        let gen = match gen_v.req("kind")?.as_str() {
+            Some("det") => GenSpec::Det {
+                seed: gen_v.req("seed")?.as_u64().context("seed")? as u32,
+                scale: gen_v.req("scale")?.as_f64().context("scale")?,
+                offset: gen_v.req("offset")?.as_f64().context("offset")?,
+            },
+            Some("i32") => GenSpec::I32 {
+                value: gen_v.req("value")?.as_i64().context("value")? as i32,
+            },
+            other => anyhow::bail!("unknown generator kind {other:?}"),
+        };
+        Ok(ArgSpec {
+            name: v.req("name")?.as_str().context("name")?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_u64().context("dim").map(|d| d as usize))
+                .collect::<Result<_>>()?,
+            dtype: v.req("dtype")?.as_str().context("dtype")?.to_string(),
+            gen,
+        })
+    }
+}
+
+/// Golden fingerprint of one output.
+#[derive(Debug, Clone)]
+pub struct OutputFingerprint {
+    pub shape: Vec<usize>,
+    pub l2: f64,
+    pub first: Vec<f64>,
+}
+
+impl OutputFingerprint {
+    fn from_json(v: &Value) -> Result<OutputFingerprint> {
+        Ok(OutputFingerprint {
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_u64().context("dim").map(|d| d as usize))
+                .collect::<Result<_>>()?,
+            l2: v.req("l2")?.as_f64().context("l2")?,
+            first: v
+                .req("first")?
+                .as_arr()
+                .context("first")?
+                .iter()
+                .map(|d| d.as_f64().context("first elem"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<OutputFingerprint>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactEntry>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Parse from JSON text (root path supplied separately).
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let artifacts = v
+            .req("artifacts")?
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    name: a.req("name")?.as_str().context("name")?.to_string(),
+                    file: a.req("file")?.as_str().context("file")?.to_string(),
+                    args: a
+                        .req("args")?
+                        .as_arr()
+                        .context("args")?
+                        .iter()
+                        .map(ArgSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .map(OutputFingerprint::from_json)
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(Manifest { artifacts, root })
+    }
+
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Default artifacts directory: `$SNITCH_FM_ARTIFACTS` or `artifacts/`
+    /// under the workspace root (resolves from any working directory).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("SNITCH_FM_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.root.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "seed_stride": 1,
+      "artifacts": [{
+        "name": "t", "file": "t.hlo.txt",
+        "args": [
+          {"name": "x", "shape": [2, 3], "dtype": "f32",
+           "gen": {"kind": "det", "seed": 5, "scale": 1.0, "offset": 0.0}},
+          {"name": "n", "shape": [], "dtype": "i32",
+           "gen": {"kind": "i32", "value": 17}}
+        ],
+        "outputs": [{"shape": [2, 3], "l2": 1.5, "first": [0.1]}]
+      }]
+    }"#;
+
+    #[test]
+    fn parse_manifest_json() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let a = m.get("t").unwrap();
+        assert_eq!(a.args[0].element_count(), 6);
+        let v = a.args[0].generate_f32().unwrap();
+        assert_eq!(v, crate::runtime::detgen::det_f32(6, 5, 1.0, 0.0));
+        assert!(a.args[1].generate_f32().is_none());
+        match a.args[1].gen {
+            GenSpec::I32 { value } => assert_eq!(value, 17),
+            _ => panic!("wrong kind"),
+        }
+        assert_eq!(a.outputs[0].l2, 1.5);
+        assert!(m.get("missing").is_err());
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/t.hlo.txt"));
+    }
+
+    #[test]
+    fn scalar_shape_has_one_element() {
+        let a = ArgSpec {
+            name: "s".into(),
+            shape: vec![],
+            dtype: "f32".into(),
+            gen: GenSpec::Det { seed: 0, scale: 1.0, offset: 0.0 },
+        };
+        assert_eq!(a.element_count(), 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path (paper architecture: Python only at build time).
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO *text* is the
+//! interchange format because jax >= 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod detgen;
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, GenSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Output arity (the artifacts are lowered with `return_tuple=True`).
+    pub n_outputs: usize,
+}
+
+impl Executable {
+    /// Execute with f32 tensors / i32 scalars and return each output
+    /// flattened to `Vec<f32>`.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        let mut vecs = Vec::with_capacity(outs.len());
+        for o in outs {
+            vecs.push(o.to_vec::<f32>()?);
+        }
+        Ok(vecs)
+    }
+}
+
+/// One runtime argument.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    /// f32 tensor with shape.
+    F32(Vec<f32>, Vec<i64>),
+    /// i32 scalar (e.g. the AR `kv_len`).
+    I32(i32),
+}
+
+impl Arg {
+    /// Borrowed-slice constructor to avoid clones on the hot path.
+    pub fn f32(data: &[f32], shape: &[usize]) -> Arg {
+        Arg::F32(data.to_vec(), shape.iter().map(|&d| d as i64).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Arg::F32(data, shape) => {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    // rank-0: reshape to scalar
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    Ok(lit.reshape(shape)?)
+                }
+            }
+            Arg::I32(v) => Ok(xla::Literal::scalar(*v)),
+        }
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(&Manifest::default_dir())
+    }
+
+    /// Create a runtime over a specific artifacts directory.
+    pub fn with_dir(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.get(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))
+                .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable { exe, n_outputs: entry.outputs.len().max(1) },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Generate the manifest's deterministic inputs for an artifact
+    /// (integration tests / golden verification).
+    pub fn manifest_args(&self, name: &str) -> Result<Vec<Arg>> {
+        let entry = self.manifest.get(name)?;
+        entry
+            .args
+            .iter()
+            .map(|spec| match &spec.gen {
+                GenSpec::Det { .. } => {
+                    let data = spec.generate_f32().unwrap();
+                    let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                    Ok(Arg::F32(data, shape))
+                }
+                GenSpec::I32 { value } => Ok(Arg::I32(*value)),
+            })
+            .collect()
+    }
+
+    /// Run an artifact on its manifest inputs and verify every output's
+    /// golden fingerprint (L2 norm + first elements). Returns the outputs.
+    pub fn run_golden(&mut self, name: &str, rtol: f64) -> Result<Vec<Vec<f32>>> {
+        let args = self.manifest_args(name)?;
+        let outs = {
+            let exe = self.load(name)?;
+            exe.run(&args)?
+        };
+        let entry = self.manifest.get(name)?;
+        anyhow::ensure!(
+            outs.len() == entry.outputs.len(),
+            "{name}: {} outputs, manifest says {}",
+            outs.len(),
+            entry.outputs.len()
+        );
+        for (i, (got, want)) in outs.iter().zip(&entry.outputs).enumerate() {
+            let l2 = got.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+            anyhow::ensure!(
+                (l2 - want.l2).abs() <= rtol * want.l2.abs().max(1e-6),
+                "{name} output {i}: l2 {l2} vs golden {}",
+                want.l2
+            );
+            for (j, (&g, &w)) in got.iter().zip(&want.first).enumerate() {
+                anyhow::ensure!(
+                    (g as f64 - w).abs() <= rtol * w.abs().max(1e-4),
+                    "{name} output {i}[{j}]: {g} vs golden {w}"
+                );
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_literal_shapes() {
+        let a = Arg::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = a.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 4);
+        let s = Arg::I32(5).to_literal().unwrap();
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn default_dir_points_at_workspace_artifacts() {
+        let d = Manifest::default_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+}

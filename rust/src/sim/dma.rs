@@ -1,0 +1,188 @@
+//! DMA engine timing (paper Sec. IV-A, VI-B).
+//!
+//! Each cluster's ninth core drives a DMA unit with 1D and 2D transfer
+//! support. Measured constants from the paper: 27 ns setup per transfer,
+//! 88 ns HBM round-trip latency, 56 B/cycle sustained per-cluster HBM
+//! bandwidth — i.e. a 115 ns static overhead before a main-memory transfer
+//! streams. Cluster-to-cluster transfers skip the HBM latency and ride the
+//! group crossbars instead.
+
+use crate::arch::{MemLevel, PlatformConfig};
+
+/// One DMA transfer request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    /// Payload size in bytes.
+    pub bytes: u64,
+    /// Where the remote end of the transfer lives.
+    pub level: MemLevel,
+    /// Rows for a 2D (strided) transfer; 1 for plain 1D.
+    pub rows: u64,
+    /// Direction: true when the cluster writes to the remote end.
+    pub write: bool,
+}
+
+impl Transfer {
+    /// 1D read of `bytes` from `level`.
+    pub fn d1(bytes: u64, level: MemLevel) -> Transfer {
+        Transfer { bytes, level, rows: 1, write: false }
+    }
+
+    /// 2D read: `rows` strided rows totalling `bytes`.
+    pub fn d2(bytes: u64, rows: u64, level: MemLevel) -> Transfer {
+        Transfer { bytes, level, rows: rows.max(1), write: false }
+    }
+
+    /// Mark this transfer as a write to the remote end.
+    pub fn to_write(mut self) -> Transfer {
+        self.write = true;
+        self
+    }
+}
+
+/// Per-cluster DMA timing model.
+#[derive(Debug, Clone)]
+pub struct DmaEngine {
+    platform: PlatformConfig,
+    /// Extra cycles per row of a 2D transfer (descriptor advance).
+    pub row_overhead_cycles: u64,
+    /// Contention divisor: how many clusters concurrently share the HBM
+    /// (set by the multi-cluster engine; 1 = full per-cluster bandwidth).
+    pub hbm_sharers: u64,
+    /// HBM efficiency derate in (0, 1]. The AR/GEMV access pattern —
+    /// short strided weight rows with zero reuse and a single token in
+    /// flight — cannot saturate HBM the way blocked NAR GEMMs do; the
+    /// paper measures <10% FPU utilization in AR mode (Table III).
+    /// `gemv_cost` sets this to `InterconnectConfig::gemv_hbm_efficiency`
+    /// (calibrated against Table III / Fig. 9 AR numbers); everything
+    /// else leaves it at 1.0.
+    pub hbm_derate: f64,
+}
+
+impl DmaEngine {
+    pub fn new(platform: &PlatformConfig) -> DmaEngine {
+        DmaEngine {
+            platform: platform.clone(),
+            row_overhead_cycles: 2,
+            hbm_sharers: 1,
+            hbm_derate: 1.0,
+        }
+    }
+
+    /// Apply an HBM-efficiency derate (see `hbm_derate`).
+    pub fn with_hbm_derate(mut self, derate: f64) -> DmaEngine {
+        self.hbm_derate = derate.clamp(1e-3, 1.0);
+        self
+    }
+
+    /// Set the number of clusters concurrently hammering HBM; effective
+    /// per-cluster bandwidth is `min(per_cluster, aggregate / sharers)`.
+    pub fn with_hbm_sharers(mut self, sharers: u64) -> DmaEngine {
+        self.hbm_sharers = sharers.max(1);
+        self
+    }
+
+    /// Effective bytes/cycle for a transfer at `level`.
+    pub fn bytes_per_cycle(&self, level: MemLevel) -> f64 {
+        let raw = self.platform.link_bytes_per_cycle(level);
+        if level == MemLevel::Hbm {
+            let aggregate =
+                self.platform.interconnect.hbm_bw_gbps / self.platform.freq_ghz;
+            raw.min(aggregate / self.hbm_sharers as f64) * self.hbm_derate
+        } else {
+            raw
+        }
+    }
+
+    /// Static overhead cycles before `level`'s payload streams.
+    pub fn static_cycles(&self, level: MemLevel) -> u64 {
+        let ic = &self.platform.interconnect;
+        let ns = match level {
+            // Main memory: DMA setup + HBM round trip (115 ns).
+            MemLevel::Hbm => ic.dma_setup_ns + ic.hbm_latency_ns,
+            // On-chip: setup + a short crossbar traversal.
+            MemLevel::PeerClusterSameGroup => ic.dma_setup_ns + 5.0,
+            MemLevel::PeerClusterOtherGroup => ic.dma_setup_ns + 10.0,
+            // SPM-to-SPM within the cluster: just the setup.
+            MemLevel::Spm => ic.dma_setup_ns,
+        };
+        self.platform.ns_to_cycles(ns)
+    }
+
+    /// Total cycles for one transfer.
+    pub fn transfer_cycles(&self, t: Transfer) -> u64 {
+        if t.bytes == 0 {
+            return 0;
+        }
+        let stream = (t.bytes as f64 / self.bytes_per_cycle(t.level)).ceil() as u64;
+        self.static_cycles(t.level) + stream + (t.rows - 1) * self.row_overhead_cycles
+    }
+
+    /// Cycles for a batch of transfers issued back-to-back by the DMA core.
+    pub fn batch_cycles(&self, ts: &[Transfer]) -> u64 {
+        ts.iter().map(|&t| self.transfer_cycles(t)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dma() -> DmaEngine {
+        DmaEngine::new(&PlatformConfig::occamy())
+    }
+
+    #[test]
+    fn static_overhead_matches_paper() {
+        // 115 ns at 1 GHz = 115 cycles before an HBM payload moves.
+        assert_eq!(dma().static_cycles(MemLevel::Hbm), 115);
+    }
+
+    #[test]
+    fn hbm_streaming_rate() {
+        // 56 kB at 56 B/cycle = 1000 cycles + 115 static.
+        let c = dma().transfer_cycles(Transfer::d1(56_000, MemLevel::Hbm));
+        assert_eq!(c, 1115);
+    }
+
+    #[test]
+    fn c2c_beats_hbm_for_small_tiles() {
+        // The motivation for cluster-to-cluster transfers (Sec. V-B): a
+        // tile bounced via HBM pays the round trip twice.
+        let d = dma();
+        let tile = 8 * 1024;
+        let c2c = d.transfer_cycles(Transfer::d1(tile, MemLevel::PeerClusterSameGroup));
+        let via_hbm = d.transfer_cycles(Transfer::d1(tile, MemLevel::Hbm)) * 2;
+        assert!(c2c < via_hbm, "c2c {c2c} vs hbm bounce {via_hbm}");
+    }
+
+    #[test]
+    fn contention_halves_bandwidth() {
+        let alone = dma().transfer_cycles(Transfer::d1(1 << 20, MemLevel::Hbm));
+        // 16 sharers: aggregate 410 B/cycle / 16 = 25.6 B/cycle < 56.
+        let shared = dma()
+            .with_hbm_sharers(16)
+            .transfer_cycles(Transfer::d1(1 << 20, MemLevel::Hbm));
+        assert!(shared > 2 * alone, "shared {shared} vs alone {alone}");
+    }
+
+    #[test]
+    fn contention_caps_at_per_cluster_bw() {
+        // Few sharers: per-cluster 56 B/cycle is the binding limit.
+        let d4 = dma().with_hbm_sharers(4);
+        assert_eq!(d4.bytes_per_cycle(MemLevel::Hbm), 56.0);
+    }
+
+    #[test]
+    fn d2_rows_add_overhead() {
+        let d = dma();
+        let one = d.transfer_cycles(Transfer::d1(4096, MemLevel::Hbm));
+        let many = d.transfer_cycles(Transfer::d2(4096, 64, MemLevel::Hbm));
+        assert_eq!(many - one, 63 * d.row_overhead_cycles);
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        assert_eq!(dma().transfer_cycles(Transfer::d1(0, MemLevel::Hbm)), 0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Multi-cluster simulation: barriers, parallel sections, and the
+//! logarithmic cluster-to-cluster reduction (paper Sec. V-B).
+
+use crate::arch::{Features, MemLevel, PlatformConfig};
+use crate::sim::dma::{DmaEngine, Transfer};
+use crate::sim::noc;
+use crate::sim::KernelCost;
+
+/// Cycles for a hardware-barrier synchronization across clusters.
+const BARRIER_CYCLES: u64 = 50;
+
+/// Result of simulating a tree reduction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReductionOutcome {
+    pub cycles: u64,
+    pub c2c_bytes: u64,
+    pub hbm_bytes: u64,
+    pub levels: u32,
+}
+
+/// Simulates work spread across the platform's clusters.
+#[derive(Debug, Clone)]
+pub struct MultiClusterSim {
+    pub platform: PlatformConfig,
+}
+
+impl MultiClusterSim {
+    pub fn new(platform: &PlatformConfig) -> MultiClusterSim {
+        MultiClusterSim { platform: platform.clone() }
+    }
+
+    pub fn features(&self) -> Features {
+        self.platform.features
+    }
+
+    /// Combine per-cluster costs of one parallel section: wall-clock is the
+    /// slowest cluster plus a barrier; traffic/flops aggregate.
+    pub fn parallel(&self, per_cluster: &[KernelCost]) -> KernelCost {
+        let mut total = KernelCost::default();
+        if per_cluster.is_empty() {
+            return total;
+        }
+        let mut crit = KernelCost::default();
+        for c in per_cluster {
+            total.flops += c.flops;
+            total.hbm_read_bytes += c.hbm_read_bytes;
+            total.hbm_write_bytes += c.hbm_write_bytes;
+            total.c2c_bytes += c.c2c_bytes;
+            total.dma_transfers += c.dma_transfers;
+            if c.cycles > crit.cycles {
+                crit = *c;
+            }
+        }
+        total.cycles = crit.cycles + BARRIER_CYCLES;
+        total.compute_cycles = crit.compute_cycles;
+        total.dma_exposed_cycles = crit.dma_exposed_cycles;
+        total
+    }
+
+    /// Simulate the binary-tree sum reduction of one partial tile of
+    /// `tile_bytes` living in every cluster's SPM, with `add_cycles_per_level`
+    /// the receiver's elementwise-add time (paper Sec. V-B):
+    ///
+    /// * with `cluster_to_cluster`: sends ride the group/global crossbars,
+    ///   all sends of one level run in parallel, `log2(n)` levels.
+    /// * without it (baseline ablation): every partial bounces through HBM
+    ///   (write + read back), and HBM serializes the level's transfers.
+    pub fn tree_reduce(
+        &self,
+        tile_bytes: u64,
+        add_cycles_per_level: u64,
+    ) -> ReductionOutcome {
+        let n = self.platform.total_clusters();
+        if n <= 1 || tile_bytes == 0 {
+            return ReductionOutcome { cycles: 0, c2c_bytes: 0, hbm_bytes: 0, levels: 0 };
+        }
+        let schedule = noc::reduction_schedule(&self.platform);
+        let dma = DmaEngine::new(&self.platform);
+        let mut cycles = 0u64;
+        let mut c2c = 0u64;
+        let mut hbm = 0u64;
+        for level in &schedule {
+            if level.is_empty() {
+                continue;
+            }
+            if self.platform.features.cluster_to_cluster {
+                // Parallel sends over dedicated links; level cost = one
+                // transfer + receiver add + barrier.
+                let worst = level
+                    .iter()
+                    .map(|s| dma.transfer_cycles(Transfer::d1(tile_bytes, s.link)))
+                    .max()
+                    .unwrap_or(0);
+                cycles += worst + add_cycles_per_level + BARRIER_CYCLES;
+                c2c += tile_bytes * level.len() as u64;
+            } else {
+                // Baseline: write partial to HBM, partner reads it back.
+                // The level's transfers share the HBM.
+                let sharers = (level.len() as u64 * 2).max(1);
+                let shared = dma.clone().with_hbm_sharers(sharers);
+                let write =
+                    shared.transfer_cycles(Transfer::d1(tile_bytes, MemLevel::Hbm));
+                let read =
+                    shared.transfer_cycles(Transfer::d1(tile_bytes, MemLevel::Hbm));
+                cycles += write + read + add_cycles_per_level + BARRIER_CYCLES;
+                hbm += 2 * tile_bytes * level.len() as u64;
+            }
+        }
+        ReductionOutcome { cycles, c2c_bytes: c2c, hbm_bytes: hbm, levels: schedule.len() as u32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_takes_max() {
+        let sim = MultiClusterSim::new(&PlatformConfig::occamy());
+        let costs = vec![
+            KernelCost { cycles: 100, flops: 10, ..Default::default() },
+            KernelCost { cycles: 300, flops: 10, ..Default::default() },
+            KernelCost { cycles: 200, flops: 10, ..Default::default() },
+        ];
+        let c = sim.parallel(&costs);
+        assert_eq!(c.cycles, 300 + BARRIER_CYCLES);
+        assert_eq!(c.flops, 30);
+    }
+
+    #[test]
+    fn tree_reduce_has_log_levels() {
+        let sim = MultiClusterSim::new(&PlatformConfig::occamy());
+        let out = sim.tree_reduce(64 * 1024, 100);
+        assert_eq!(out.levels, 4); // log2(16)
+        assert!(out.c2c_bytes > 0);
+        assert_eq!(out.hbm_bytes, 0);
+    }
+
+    #[test]
+    fn c2c_reduction_beats_hbm_bounce() {
+        // The paper's claim: hierarchical-interconnect reduction avoids
+        // serialized HBM round trips.
+        let opt = MultiClusterSim::new(&PlatformConfig::occamy());
+        let base = MultiClusterSim::new(&PlatformConfig {
+            features: Features { cluster_to_cluster: false, ..Features::all() },
+            ..PlatformConfig::occamy()
+        });
+        let tile = 128 * 1024;
+        let a = opt.tree_reduce(tile, 200);
+        let b = base.tree_reduce(tile, 200);
+        assert!(a.cycles < b.cycles, "c2c {} vs hbm {}", a.cycles, b.cycles);
+        assert_eq!(a.hbm_bytes, 0);
+        assert_eq!(b.c2c_bytes, 0);
+        assert_eq!(b.hbm_bytes, 2 * tile * 15);
+    }
+
+    #[test]
+    fn single_cluster_no_reduction() {
+        let sim = MultiClusterSim::new(&PlatformConfig::with_clusters(1));
+        let out = sim.tree_reduce(1 << 20, 10);
+        assert_eq!(out.cycles, 0);
+        assert_eq!(out.levels, 0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Cycle-level timing model of the Snitch many-core platform.
+//!
+//! This is the substrate that replaces the paper's cycle-accurate RTL
+//! simulation (see DESIGN.md §1 for the substitution argument). It is an
+//! *analytical + event* model: per-core instruction-issue arithmetic for
+//! the kernels' inner loops (`core`), DMA/interconnect transfer timing with
+//! contention (`dma`, `noc`), cluster-level double-buffered tile pipelines
+//! (`cluster`), and a multi-cluster engine for barriers and the
+//! logarithmic reduction tree (`engine`).
+//!
+//! Everything is deterministic and integer-cycled, so results are exactly
+//! reproducible across runs and platforms.
+
+pub mod cluster;
+pub mod core;
+pub mod dma;
+pub mod engine;
+pub mod noc;
+
+pub use cluster::{ClusterSim, TilePhase};
+pub use core::CoreModel;
+pub use dma::{DmaEngine, Transfer};
+pub use engine::{MultiClusterSim, ReductionOutcome};
+
+/// Aggregate cost of running a kernel (or kernel fragment) on the platform.
+///
+/// Produced by every kernel timing model in [`crate::kernels`]; consumed by
+/// the coordinator, the energy model and the report generators.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KernelCost {
+    /// Wall-clock cycles on the critical path (max over clusters).
+    pub cycles: u64,
+    /// Cycles the critical cluster spent in FPU compute.
+    pub compute_cycles: u64,
+    /// Cycles the critical cluster spent waiting on DMA (not hidden by
+    /// double buffering).
+    pub dma_exposed_cycles: u64,
+    /// Useful FLOPs of the whole kernel (all clusters).
+    pub flops: u64,
+    /// Bytes read from HBM (all clusters).
+    pub hbm_read_bytes: u64,
+    /// Bytes written to HBM (all clusters).
+    pub hbm_write_bytes: u64,
+    /// Bytes moved cluster-to-cluster (all clusters).
+    pub c2c_bytes: u64,
+    /// Number of DMA transfers issued (for static-overhead accounting).
+    pub dma_transfers: u64,
+}
+
+impl KernelCost {
+    /// Sequential composition: `self` then `other`.
+    pub fn then(self, other: KernelCost) -> KernelCost {
+        KernelCost {
+            cycles: self.cycles + other.cycles,
+            compute_cycles: self.compute_cycles + other.compute_cycles,
+            dma_exposed_cycles: self.dma_exposed_cycles + other.dma_exposed_cycles,
+            flops: self.flops + other.flops,
+            hbm_read_bytes: self.hbm_read_bytes + other.hbm_read_bytes,
+            hbm_write_bytes: self.hbm_write_bytes + other.hbm_write_bytes,
+            c2c_bytes: self.c2c_bytes + other.c2c_bytes,
+            dma_transfers: self.dma_transfers + other.dma_transfers,
+        }
+    }
+
+    /// Repeat this cost `n` times back-to-back.
+    pub fn repeat(self, n: u64) -> KernelCost {
+        KernelCost {
+            cycles: self.cycles * n,
+            compute_cycles: self.compute_cycles * n,
+            dma_exposed_cycles: self.dma_exposed_cycles * n,
+            flops: self.flops * n,
+            hbm_read_bytes: self.hbm_read_bytes * n,
+            hbm_write_bytes: self.hbm_write_bytes * n,
+            c2c_bytes: self.c2c_bytes * n,
+            dma_transfers: self.dma_transfers * n,
+        }
+    }
+
+    /// Total HBM traffic in bytes.
+    pub fn hbm_bytes(&self) -> u64 {
+        self.hbm_read_bytes + self.hbm_write_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_composition() {
+        let a = KernelCost { cycles: 10, flops: 100, hbm_read_bytes: 5, ..Default::default() };
+        let b = KernelCost { cycles: 20, flops: 50, hbm_write_bytes: 7, ..Default::default() };
+        let c = a.then(b);
+        assert_eq!(c.cycles, 30);
+        assert_eq!(c.flops, 150);
+        assert_eq!(c.hbm_bytes(), 12);
+        let r = a.repeat(3);
+        assert_eq!(r.cycles, 30);
+        assert_eq!(r.flops, 300);
+    }
+}

@@ -1,0 +1,145 @@
+//! Hierarchical interconnect topology helpers (paper Sec. IV-B, Fig. 4).
+//!
+//! Determines which [`MemLevel`] a cluster-to-cluster transfer rides and
+//! models the binary reduction tree the fused Concat+Linear layer uses
+//! (paper Sec. V-B): at tree level `d`, cluster `i` sends its partial tile
+//! to cluster `i - 2^d` if `i mod 2^(d+1) == 2^d`.
+
+use crate::arch::{MemLevel, PlatformConfig};
+
+/// Identifies one cluster as (group, index-within-group).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterId {
+    pub group: u32,
+    pub index: u32,
+}
+
+impl ClusterId {
+    /// Flat id in [0, C*G).
+    pub fn flat(&self, p: &PlatformConfig) -> u32 {
+        self.group * p.clusters_per_group + self.index
+    }
+
+    /// From a flat id.
+    pub fn from_flat(flat: u32, p: &PlatformConfig) -> ClusterId {
+        ClusterId { group: flat / p.clusters_per_group, index: flat % p.clusters_per_group }
+    }
+}
+
+/// The interconnect level a transfer between two clusters traverses.
+pub fn path_level(src: ClusterId, dst: ClusterId) -> MemLevel {
+    if src == dst {
+        MemLevel::Spm
+    } else if src.group == dst.group {
+        MemLevel::PeerClusterSameGroup
+    } else {
+        MemLevel::PeerClusterOtherGroup
+    }
+}
+
+/// One send in the binary reduction tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReductionStep {
+    pub level: u32,
+    pub src: u32,
+    pub dst: u32,
+    pub link: MemLevel,
+}
+
+/// Depth of the binary reduction tree over `n` clusters:
+/// `d = ceil(log2(n))` (paper: d = log2(C*G)).
+pub fn tree_depth(n: u32) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        32 - (n - 1).leading_zeros()
+    }
+}
+
+/// All sends of the binary reduction tree over the platform's clusters,
+/// grouped by level. Clusters are numbered so that same-group pairs reduce
+/// first (level 0..log2(C)) and cross-group reductions happen last —
+/// "first among clusters in a group and then among groups" (Sec. V-B).
+pub fn reduction_schedule(p: &PlatformConfig) -> Vec<Vec<ReductionStep>> {
+    let n = p.total_clusters();
+    let depth = tree_depth(n);
+    let mut levels = Vec::with_capacity(depth as usize);
+    for d in 0..depth {
+        let stride = 1u32 << d;
+        let mut steps = Vec::new();
+        let mut i = stride;
+        while i < n {
+            let src = ClusterId::from_flat(i, p);
+            let dst = ClusterId::from_flat(i - stride, p);
+            steps.push(ReductionStep {
+                level: d,
+                src: i,
+                dst: i - stride,
+                link: path_level(src, dst),
+            });
+            i += stride * 2;
+        }
+        levels.push(steps);
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_matches_paper_formula() {
+        // d = log2(C*G): 16 clusters -> 4 levels.
+        assert_eq!(tree_depth(16), 4);
+        assert_eq!(tree_depth(8), 3);
+        assert_eq!(tree_depth(4), 2);
+        assert_eq!(tree_depth(1), 0);
+        assert_eq!(tree_depth(2), 1);
+    }
+
+    #[test]
+    fn schedule_covers_every_cluster_once() {
+        // Every cluster except 0 sends exactly once across all levels
+        // (each partial is delivered exactly once).
+        let p = PlatformConfig::occamy();
+        let sched = reduction_schedule(&p);
+        assert_eq!(sched.len(), 4);
+        let mut senders: Vec<u32> = sched.iter().flatten().map(|s| s.src).collect();
+        senders.sort_unstable();
+        let expect: Vec<u32> = (1..16).collect();
+        assert_eq!(senders, expect);
+    }
+
+    #[test]
+    fn intra_group_reductions_first() {
+        // With 4 clusters/group, levels 0-1 stay inside a group and levels
+        // 2-3 cross groups.
+        let p = PlatformConfig::occamy();
+        let sched = reduction_schedule(&p);
+        for step in sched[0].iter().chain(sched[1].iter()) {
+            assert_eq!(step.link, MemLevel::PeerClusterSameGroup, "{step:?}");
+        }
+        for step in sched[2].iter().chain(sched[3].iter()) {
+            assert_eq!(step.link, MemLevel::PeerClusterOtherGroup, "{step:?}");
+        }
+    }
+
+    #[test]
+    fn level_parallelism_halves() {
+        let p = PlatformConfig::occamy();
+        let sched = reduction_schedule(&p);
+        assert_eq!(sched[0].len(), 8);
+        assert_eq!(sched[1].len(), 4);
+        assert_eq!(sched[2].len(), 2);
+        assert_eq!(sched[3].len(), 1);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let p = PlatformConfig::occamy();
+        for f in 0..p.total_clusters() {
+            assert_eq!(ClusterId::from_flat(f, &p).flat(&p), f);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! State-of-the-art comparison data and calculators (paper Tables I & IV).
+//!
+//! The SoA numbers are constants transcribed from the paper (which in turn
+//! sources Emani et al. for the GPT2-XL forward pass and MLPerf for the
+//! H100 ViT-L benchmark); our side of each comparison is produced by the
+//! simulator at bench time.
+
+/// One accelerator platform's published numbers (Table IV, FP16 NAR).
+#[derive(Debug, Clone)]
+pub struct SoaPlatform {
+    pub name: &'static str,
+    /// Compute units (CUDA cores + tensor cores, PCUs, TPCs+MMEs, ...).
+    pub compute_units: u64,
+    /// Throughput on the GPT2-XL training-forward (== NAR) pass, TFLOPS.
+    pub tflops: f64,
+    /// TFLOPS per compute unit.
+    pub tflops_per_cu: f64,
+    /// FPU/compute utilization (achieved / peak), percent.
+    pub fpu_utilization_pct: f64,
+}
+
+/// Table IV rows (SoA columns): A100, MI250, SN30, Gaudi2.
+pub fn table4_soa() -> Vec<SoaPlatform> {
+    vec![
+        SoaPlatform { name: "A100", compute_units: 6912 + 432, tflops: 5.63, tflops_per_cu: 0.0008, fpu_utilization_pct: 14.4 },
+        SoaPlatform { name: "MI250", compute_units: 13312 + 208, tflops: 3.75, tflops_per_cu: 0.0003, fpu_utilization_pct: 7.8 },
+        SoaPlatform { name: "SN30", compute_units: 1280, tflops: 13.8, tflops_per_cu: 0.0107, fpu_utilization_pct: 16.0 },
+        SoaPlatform { name: "Gaudi2", compute_units: 24 + 2, tflops: 11.3, tflops_per_cu: 0.4327, fpu_utilization_pct: 34.6 },
+    ]
+}
+
+/// H100 MLPerf ViT-L FP8 reference (Sec. VII-E).
+#[derive(Debug, Clone, Copy)]
+pub struct H100VitRef {
+    pub samples_per_s: f64,
+    pub power_w: f64,
+    pub compute_units: u64,
+    pub samples_per_s_per_cu: f64,
+    pub samples_per_s_per_w: f64,
+}
+
+pub fn h100_vit_l_fp8() -> H100VitRef {
+    H100VitRef {
+        samples_per_s: 2683.0,
+        power_w: 670.0,
+        compute_units: 17424,
+        samples_per_s_per_cu: 0.15,
+        samples_per_s_per_w: 4.0,
+    }
+}
+
+/// Academic accelerator references (Sec. VII-E).
+#[derive(Debug, Clone, Copy)]
+pub struct AcademicRef {
+    pub name: &'static str,
+    /// AccelTran: W per PE. Tambe et al.: BERT-base latency @1 GHz, ms.
+    pub watts_per_pe: Option<f64>,
+    pub bert_base_latency_ms: Option<f64>,
+}
+
+pub fn acceltran() -> AcademicRef {
+    AcademicRef { name: "AccelTran", watts_per_pe: Some(14.03 / 64.0), bert_base_latency_ms: None }
+}
+
+pub fn tambe() -> AcademicRef {
+    AcademicRef { name: "Tambe et al.", watts_per_pe: None, bert_base_latency_ms: Some(489.0) }
+}
+
+/// Our row of Table IV, computed from a simulated run.
+#[derive(Debug, Clone)]
+pub struct OursRow {
+    pub compute_units: u64,
+    pub tflops: f64,
+    pub tflops_per_cu: f64,
+    pub fpu_utilization_pct: f64,
+}
+
+impl OursRow {
+    pub fn from_run(gflops: f64, utilization: f64, compute_units: u64) -> OursRow {
+        OursRow {
+            compute_units,
+            tflops: gflops / 1e3,
+            tflops_per_cu: gflops / 1e3 / compute_units as f64,
+            fpu_utilization_pct: utilization * 100.0,
+        }
+    }
+
+    /// Utilization advantage over the best SoA platform (paper: 2.04x
+    /// vs Gaudi2).
+    pub fn utilization_advantage(&self) -> f64 {
+        let best = table4_soa()
+            .iter()
+            .map(|s| s.fpu_utilization_pct)
+            .fold(f64::MIN, f64::max);
+        self.fpu_utilization_pct / best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_constants_sane() {
+        let rows = table4_soa();
+        assert_eq!(rows.len(), 4);
+        let gaudi = rows.iter().find(|r| r.name == "Gaudi2").unwrap();
+        assert!(gaudi.fpu_utilization_pct > 34.0);
+        for r in &rows {
+            let derived = r.tflops / r.compute_units as f64;
+            // tflops_per_cu column is rounded in the paper; allow slack.
+            assert!(
+                (derived - r.tflops_per_cu).abs() / r.tflops_per_cu < 0.5,
+                "{}: {derived} vs {}",
+                r.name,
+                r.tflops_per_cu
+            );
+        }
+    }
+
+    #[test]
+    fn ours_advantage_matches_paper_with_paper_numbers() {
+        // Feeding the paper's own numbers (0.72 TFLOPS, 70.6% util, 128 CUs)
+        // must reproduce the 2.04x Gaudi2 advantage.
+        let ours = OursRow::from_run(720.0, 0.706, 128);
+        let adv = ours.utilization_advantage();
+        assert!((adv - 2.04).abs() < 0.03, "advantage {adv}");
+        assert!((ours.tflops_per_cu - 0.0056).abs() < 0.0003);
+    }
+
+    #[test]
+    fn h100_reference() {
+        let h = h100_vit_l_fp8();
+        assert!((h.samples_per_s / h.compute_units as f64 - 0.15).abs() < 0.01);
+        assert!((h.samples_per_s / h.power_w - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn academic_references() {
+        assert!((acceltran().watts_per_pe.unwrap() - 0.22).abs() < 0.01);
+        assert_eq!(tambe().bert_base_latency_ms, Some(489.0));
+    }
+}

@@ -1,0 +1,302 @@
+//! Spatio-temporal tile planning (paper Sec. V-A1, Fig. 5).
+//!
+//! Decides how a GEMM / FlashAttention-2 workload is split:
+//!
+//! * **spatially** across clusters — M-rows for GEMMs (B broadcast),
+//!   heads for attention, K/heads for the fused concat+linear layer;
+//! * **temporally** across iterations of one cluster — tiles sized so a
+//!   double-buffered working set fits the 128 kB L1 SPM.
+//!
+//! The planner mirrors `python/compile/kernels/*.spm_footprint_bytes` so
+//! the artifacts' BlockSpec schedule and the simulated schedule agree.
+
+use crate::arch::{FpFormat, PlatformConfig};
+
+/// Tile plan for one cluster's share of a GEMM `C[M,N] = A[M,K] @ B[K,N]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmPlan {
+    /// Rows of C assigned to this cluster (spatial share of M).
+    pub rows: u64,
+    /// Temporal tile sizes.
+    pub bm: u64,
+    pub bn: u64,
+    pub bk: u64,
+    /// Number of temporal steps = ceil(rows/bm)*ceil(N/bn)*ceil(K/bk).
+    pub steps: u64,
+}
+
+impl GemmPlan {
+    /// Bytes of SPM this plan's working set occupies (double-buffered
+    /// inputs + accumulator at the widening-accumulation precision + output).
+    pub fn spm_bytes(&self, fmt: FpFormat, double_buffered: bool) -> u64 {
+        let el = fmt.bytes();
+        let acc_el = fmt.accumulation_format().bytes().max(4); // stats fp32
+        let a = self.bm * self.bk * el;
+        let b = self.bk * self.bn * el;
+        let acc = self.bm * self.bn * acc_el;
+        let out = self.bm * self.bn * el;
+        let inputs = if double_buffered { 2 * (a + b) } else { a + b };
+        inputs + acc + out
+    }
+}
+
+/// Tile plan for one cluster's share of FlashAttention-2 (one head at a
+/// time; Sq x Skv attention with projection dim P).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaPlan {
+    /// Heads assigned to this cluster (temporal if > 1).
+    pub heads: u64,
+    pub bq: u64,
+    pub bkv: u64,
+    /// KV-tile steps per q tile.
+    pub kv_steps: u64,
+    /// Q-tile steps per head.
+    pub q_steps: u64,
+}
+
+impl FaPlan {
+    /// SPM footprint: Q tile + double-buffered K/V tiles + fp32 accumulator
+    /// + (m, l) statistics + output tile.
+    pub fn spm_bytes(&self, p: u64, fmt: FpFormat, double_buffered: bool) -> u64 {
+        let el = fmt.bytes();
+        let q = self.bq * p * el;
+        let kv = 2 * self.bkv * p * el;
+        let kv_buf = if double_buffered { 2 * kv } else { kv };
+        let acc = self.bq * p * 4;
+        let stats = 2 * self.bq * 4;
+        let out = self.bq * p * el;
+        q + kv_buf + acc + stats + out
+    }
+}
+
+/// Largest power-of-two <= x (tiles are pow2 for bank-conflict-free SPM
+/// interleaving), never below 1.
+fn pow2_floor(x: u64) -> u64 {
+    if x == 0 {
+        1
+    } else {
+        1u64 << (63 - x.leading_zeros() as u64)
+    }
+}
+
+/// Plan the per-cluster GEMM tiling for `clusters` clusters.
+///
+/// Strategy (paper): split M spatially; temporally maximize `bk` first
+/// (longest FREP inner loop amortizes SSR setup), then `bn`, then `bm`,
+/// subject to the SPM budget.
+pub fn plan_gemm(
+    m: u64,
+    k: u64,
+    n: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> GemmPlan {
+    let clusters = platform.total_clusters() as u64;
+    let spm = platform.cluster.spm_bytes;
+    let db = platform.features.double_buffering;
+    // Spatial share of M; at least one row. When M < clusters the extra
+    // clusters split N instead (handled by the caller via `plan_gemm_wide`).
+    let rows = m.div_ceil(clusters).max(1).min(m);
+
+    let mut bm = pow2_floor(rows.min(64));
+    let mut bn = pow2_floor(n.min(512));
+    let mut bk = pow2_floor(k.min(512));
+    // Shrink until the working set fits: bm first (cheapest to iterate),
+    // then bn, then bk — preserving the long inner loop as long as possible.
+    loop {
+        let plan = GemmPlan { rows, bm: bm.min(rows), bn: bn.min(n), bk: bk.min(k), steps: 0 };
+        if plan.spm_bytes(fmt, db) <= spm {
+            break;
+        }
+        if bm > 8 {
+            bm /= 2;
+        } else if bn > 32 {
+            bn /= 2;
+        } else if bk > 32 {
+            bk /= 2;
+        } else if bn > 8 {
+            bn /= 2;
+        } else if bk > 8 {
+            bk /= 2;
+        } else {
+            break; // degenerate; smallest tiles
+        }
+    }
+    let bm = bm.min(rows);
+    let bn = bn.min(n);
+    let bk = bk.min(k);
+    let steps = rows.div_ceil(bm) * n.div_ceil(bn) * k.div_ceil(bk);
+    GemmPlan { rows, bm, bn, bk, steps }
+}
+
+/// GEMV/wide variant: when M is tiny (AR mode, M=1..8), clusters split the
+/// *N* dimension spatially instead (each cluster owns a slab of output
+/// columns and the full K).
+pub fn plan_gemm_wide(
+    m: u64,
+    k: u64,
+    n: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> GemmPlan {
+    let clusters = platform.total_clusters() as u64;
+    let spm = platform.cluster.spm_bytes;
+    let db = platform.features.double_buffering;
+    let cols = n.div_ceil(clusters).max(1).min(n);
+    let mut bn = pow2_floor(cols.min(256));
+    let mut bk = pow2_floor(k.min(1024));
+    loop {
+        let plan = GemmPlan { rows: m, bm: m, bn: bn.min(cols), bk: bk.min(k), steps: 0 };
+        if plan.spm_bytes(fmt, db) <= spm {
+            break;
+        }
+        if bk > 64 {
+            bk /= 2;
+        } else if bn > 8 {
+            bn /= 2;
+        } else if bk > 8 {
+            bk /= 2;
+        } else {
+            break;
+        }
+    }
+    let bn = bn.min(cols);
+    let bk = bk.min(k);
+    let steps = cols.div_ceil(bn) * k.div_ceil(bk);
+    GemmPlan { rows: m, bm: m, bn, bk, steps }
+}
+
+/// Plan FlashAttention-2: heads spatial over clusters (temporal when
+/// H > clusters), (bq, bkv) sized to SPM (paper Sec. V-A2).
+pub fn plan_flash_attention(
+    heads: u64,
+    sq: u64,
+    skv: u64,
+    p: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> FaPlan {
+    let clusters = platform.total_clusters() as u64;
+    let spm = platform.cluster.spm_bytes;
+    let db = platform.features.double_buffering;
+    let heads_per_cluster = heads.div_ceil(clusters).max(1);
+    let mut bq = pow2_floor(sq.min(64));
+    let mut bkv = pow2_floor(skv.min(128));
+    loop {
+        let plan = FaPlan {
+            heads: heads_per_cluster,
+            bq: bq.min(sq),
+            bkv: bkv.min(skv),
+            kv_steps: 0,
+            q_steps: 0,
+        };
+        if plan.spm_bytes(p, fmt, db) <= spm {
+            break;
+        }
+        if bkv > 16 {
+            bkv /= 2;
+        } else if bq > 8 {
+            bq /= 2;
+        } else if bkv > 4 {
+            bkv /= 2;
+        } else {
+            break;
+        }
+    }
+    let bq = bq.min(sq);
+    let bkv = bkv.min(skv);
+    FaPlan {
+        heads: heads_per_cluster,
+        bq,
+        bkv,
+        kv_steps: skv.div_ceil(bkv),
+        q_steps: sq.div_ceil(bq),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn occ() -> PlatformConfig {
+        PlatformConfig::occamy()
+    }
+
+    #[test]
+    fn gemm_plan_fits_spm() {
+        for fmt in FpFormat::LADDER {
+            for (m, k, n) in [(1024, 4096, 4096), (197, 768, 768), (2048, 16384, 4096)] {
+                let p = plan_gemm(m, k, n, fmt, &occ());
+                assert!(
+                    p.spm_bytes(fmt, true) <= occ().cluster.spm_bytes,
+                    "{fmt} {m}x{k}x{n}: {:?} = {} B",
+                    p,
+                    p.spm_bytes(fmt, true)
+                );
+                assert!(p.steps >= 1);
+                assert!(p.bm <= p.rows && p.bn <= n && p.bk <= k);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_spatial_split_on_m() {
+        // 1024 rows over 16 clusters = 64 rows each.
+        let p = plan_gemm(1024, 1024, 1024, FpFormat::Fp32, &occ());
+        assert_eq!(p.rows, 64);
+    }
+
+    #[test]
+    fn wide_plan_splits_n() {
+        // AR GEMV: M=1, big N -> each cluster owns N/16 columns.
+        let p = plan_gemm_wide(1, 4096, 16384, FpFormat::Fp32, &occ());
+        assert_eq!(p.rows, 1);
+        assert!(p.bn <= 1024);
+        assert!(p.spm_bytes(FpFormat::Fp32, true) <= occ().cluster.spm_bytes);
+    }
+
+    #[test]
+    fn lower_precision_allows_bigger_tiles() {
+        // The Fig. 7 observation: FP32 tiles fit better than FP64 ones,
+        // improving parallelization beyond the pure SIMD factor.
+        let p64 = plan_gemm(2048, 4096, 4096, FpFormat::Fp64, &occ());
+        let p8 = plan_gemm(2048, 4096, 4096, FpFormat::Fp8, &occ());
+        let elems64 = p64.bm * p64.bk + p64.bk * p64.bn;
+        let elems8 = p8.bm * p8.bk + p8.bk * p8.bn;
+        assert!(elems8 >= elems64);
+    }
+
+    #[test]
+    fn fa_plan_fits_spm() {
+        for fmt in FpFormat::LADDER {
+            for (h, sq, skv, p) in [(16, 1024, 1024, 128), (12, 197, 197, 64), (16, 1, 2048, 256)] {
+                let plan = plan_flash_attention(h, sq, skv, p, fmt, &occ());
+                assert!(
+                    plan.spm_bytes(p, fmt, true) <= occ().cluster.spm_bytes,
+                    "{fmt} h{h} {sq}x{skv} p{p}: {plan:?}"
+                );
+                assert_eq!(plan.kv_steps, skv.div_ceil(plan.bkv));
+            }
+        }
+    }
+
+    #[test]
+    fn fa_heads_temporal_when_fewer_clusters() {
+        let four = PlatformConfig::with_clusters(4);
+        let plan = plan_flash_attention(16, 197, 197, 64, FpFormat::Fp32, &four);
+        assert_eq!(plan.heads, 4); // 16 heads / 4 clusters
+        let sixteen = occ();
+        let plan = plan_flash_attention(16, 197, 197, 64, FpFormat::Fp32, &sixteen);
+        assert_eq!(plan.heads, 1);
+    }
+
+    #[test]
+    fn pow2_floor_values() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(2), 2);
+        assert_eq!(pow2_floor(3), 2);
+        assert_eq!(pow2_floor(64), 64);
+        assert_eq!(pow2_floor(197), 128);
+        assert_eq!(pow2_floor(0), 1);
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal `--flag value` command-line parser (clap is not available in
+//! the offline registry). Supports `--key value`, `--key=value`, and bare
+//! boolean flags; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: the subcommand (first bare word) + flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags the caller has declared (for unknown-flag errors).
+    known: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `std::env::args` (skipping argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>, known: &[&'static str]) -> Result<Args> {
+        let mut out = Args { known: known.to_vec(), ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                let (key, inline_val) = match flag.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (flag.to_string(), None),
+                };
+                if !known.contains(&key.as_str()) {
+                    bail!("unknown flag --{key}");
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // Consume the next token unless it is another flag;
+                        // bare flags become "true".
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.flags.insert(key, val);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        debug_assert!(self.known.contains(&key), "flag --{key} was not declared");
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
+        Ok(self.get_u64(key, default as u64)? as u32)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, known: &[&'static str]) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from), known)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run --model gpt-j --seq=2048 --baseline", &["model", "seq", "baseline"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("gpt-j"));
+        assert_eq!(a.get_u64("seq", 0).unwrap(), 2048);
+        assert!(a.get_bool("baseline"));
+        assert!(!a.get_bool("model")); // has a non-bool value
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run", &["model", "seq"]).unwrap();
+        assert_eq!(a.get_or("model", "gpt-j"), "gpt-j");
+        assert_eq!(a.get_u64("seq", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parse("run --nope 1", &["model"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("run --seq abc", &["seq"]).unwrap();
+        assert!(a.get_u64("seq", 0).is_err());
+    }
+
+    #[test]
+    fn double_positional_errors() {
+        assert!(parse("run extra", &[]).is_err());
+    }
+}

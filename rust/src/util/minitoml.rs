@@ -1,0 +1,182 @@
+//! Minimal TOML-subset parser for run configs.
+//!
+//! Supports exactly what the checked-in configs use: `[section]` headers,
+//! `key = value` with string/integer/float/boolean values, `#` comments
+//! and blank lines. Nested tables/arrays are out of scope on purpose.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Scalar {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Scalar::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Scalar::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Scalar::Float(f) => Some(*f),
+            Scalar::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Scalar::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`. Keys before any `[section]` land in `""`.
+pub type Doc = BTreeMap<String, BTreeMap<String, Scalar>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = key.trim().to_string();
+        let value = parse_scalar(value.trim())
+            .ok_or_else(|| anyhow::anyhow!("line {}: bad value {value:?}", lineno + 1))?;
+        doc.entry(section.clone()).or_default().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_scalar(s: &str) -> Option<Scalar> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        return stripped.strip_suffix('"').map(|inner| Scalar::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Scalar::Bool(true)),
+        "false" => return Some(Scalar::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Scalar::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Scalar::Float(f));
+    }
+    None
+}
+
+/// Convenience typed getters over a parsed doc.
+pub fn get_str<'d>(doc: &'d Doc, section: &str, key: &str) -> Option<&'d str> {
+    doc.get(section)?.get(key)?.as_str()
+}
+
+pub fn get_u64(doc: &Doc, section: &str, key: &str) -> Option<u64> {
+    doc.get(section)?.get(key)?.as_u64()
+}
+
+pub fn get_f64(doc: &Doc, section: &str, key: &str) -> Option<f64> {
+    doc.get(section)?.get(key)?.as_f64()
+}
+
+pub fn get_bool(doc: &Doc, section: &str, key: &str) -> Option<bool> {
+    doc.get(section)?.get(key)?.as_bool()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run config
+[platform]
+clusters = 8
+xssr = false
+freq_ghz = 1.5
+
+[model]
+preset = "gpt-j"   # with a comment
+
+[run]
+mode = "ar"
+seq = 2048
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let d = parse(SAMPLE).unwrap();
+        assert_eq!(get_u64(&d, "platform", "clusters"), Some(8));
+        assert_eq!(get_bool(&d, "platform", "xssr"), Some(false));
+        assert_eq!(get_f64(&d, "platform", "freq_ghz"), Some(1.5));
+        assert_eq!(get_str(&d, "model", "preset"), Some("gpt-j"));
+        assert_eq!(get_str(&d, "run", "mode"), Some("ar"));
+        assert_eq!(get_u64(&d, "run", "seq"), Some(2048));
+        assert_eq!(get_u64(&d, "run", "missing"), None);
+        assert_eq!(get_u64(&d, "nope", "seq"), None);
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let d = parse("[a]\nx = \"val#ue\"\n").unwrap();
+        assert_eq!(get_str(&d, "a", "x"), Some("val#ue"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let d = parse("[a]\ni = 3\nf = 3.5\n").unwrap();
+        assert_eq!(d["a"]["i"], Scalar::Int(3));
+        assert_eq!(d["a"]["f"], Scalar::Float(3.5));
+        assert_eq!(d["a"]["i"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[a\nx=1").is_err());
+        assert!(parse("[a]\njust a line").is_err());
+        assert!(parse("[a]\nx = @bad").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Small in-tree utilities.
+//!
+//! The build environment is fully offline and the vendored registry only
+//! carries `xla` + `anyhow`, so the (tiny, well-specified) formats this
+//! project consumes — the `manifest.json` our own `aot.py` writes and the
+//! TOML-subset run configs — are parsed by the minimal, tested parsers in
+//! this module instead of serde_json/toml.
+
+pub mod cli;
+pub mod json;
+pub mod minitoml;

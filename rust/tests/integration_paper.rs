@@ -1,0 +1,276 @@
+//! Integration: paper-shape assertions over the full stack — every
+//! headline claim of the evaluation section is encoded as a test band.
+//! (Exact numbers live in EXPERIMENTS.md; these tests pin the *shape*:
+//! who wins, by roughly what factor, where crossovers fall.)
+
+use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{Breakdown, InferenceEngine};
+use snitch_fm::coordinator::schedule::model_cost;
+use snitch_fm::kernels::{fused_concat_linear_cost, unfused_concat_linear_cost};
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::soa;
+
+fn engine() -> InferenceEngine {
+    InferenceEngine::new(PlatformConfig::occamy())
+}
+
+fn baseline_engine() -> InferenceEngine {
+    let mut p = PlatformConfig::occamy();
+    p.features = Features::baseline();
+    InferenceEngine::new(p)
+}
+
+// ---------------------------------------------------------- Fig. 7 (GPT)
+#[test]
+fn fig7_gpt_ladder_shape() {
+    let e = engine();
+    let b = baseline_engine();
+    for cfg in [ModelConfig::gpt3_xl(), ModelConfig::gpt_j()] {
+        for mode in [Mode::Nar, Mode::Ar] {
+            let run = |eng: &InferenceEngine, fmt| match mode {
+                Mode::Nar => eng.run_nar(&cfg, 1024, fmt),
+                Mode::Ar => eng.run_ar_step(&cfg, 1024, fmt),
+            };
+            let base = run(&b, FpFormat::Fp64).throughput;
+            let fp64 = run(&e, FpFormat::Fp64).throughput;
+            let fp32 = run(&e, FpFormat::Fp32).throughput;
+            let fp16 = run(&e, FpFormat::Fp16).throughput;
+            let fp8 = run(&e, FpFormat::Fp8).throughput;
+            // Extensions: paper 4.6x (NAR) / 5.0x (AR). Our model gives
+            // ~5x in NAR; in AR the token is HBM-bound (the paper's own
+            // Table III shows <10% AR utilization, which entails memory-
+            // boundedness), so extensions only shave the compute shadow:
+            // ~1.1-1.5x. See EXPERIMENTS.md §Deviations.
+            let ext = fp64 / base;
+            let lo = if mode == Mode::Nar { 3.0 } else { 1.05 };
+            assert!((lo..=8.0).contains(&ext), "{} {mode:?} ext {ext}", cfg.name);
+            // Each precision step helps, at most the ideal 2x + fitting
+            // effects (paper sees up to 2.1x).
+            for (lo, hi, name) in
+                [(fp32 / fp64, 2.6, "64->32"), (fp16 / fp32, 2.6, "32->16"), (fp8 / fp16, 2.6, "16->8")]
+            {
+                assert!(lo > 1.1 && lo < hi, "{} {mode:?} {name}: {lo}", cfg.name);
+            }
+            // Overall ladder lands in the paper's order of magnitude
+            // (16.1x NAR / 35.6x AR; our per-step ratios compound to more).
+            let total = fp8 / base;
+            assert!((6.0..=80.0).contains(&total), "{} {mode:?} total {total}", cfg.name);
+        }
+    }
+}
+
+#[test]
+fn fig7_absolute_fp8_throughput_near_paper() {
+    // Paper: 260 / 142 tokens/s NAR FP8 for GPT3-XL / GPT-J at S=1024.
+    let e = engine();
+    let xl = e.run_nar(&ModelConfig::gpt3_xl(), 1024, FpFormat::Fp8).throughput;
+    let j = e.run_nar(&ModelConfig::gpt_j(), 1024, FpFormat::Fp8).throughput;
+    assert!((130.0..=600.0).contains(&xl), "gpt3-xl {xl}");
+    assert!((70.0..=300.0).contains(&j), "gpt-j {j}");
+    assert!(xl > j, "smaller model must be faster");
+}
+
+// ---------------------------------------------------------- Fig. 8 (ViT)
+#[test]
+fn fig8_vit_ladder_and_absolute() {
+    let e = engine();
+    let b = baseline_engine();
+    // Paper FP8: 26 / 12 / 8 images/s for B/L/H.
+    let expected = [(ModelConfig::vit_b(), 26.0), (ModelConfig::vit_l(), 12.0), (ModelConfig::vit_h(), 8.0)];
+    let mut prev = f64::MAX;
+    for (cfg, paper) in expected {
+        let fp8 = e.run_nar(&cfg, cfg.seq, FpFormat::Fp8).throughput;
+        assert!(
+            fp8 > 0.5 * paper && fp8 < 3.0 * paper,
+            "{}: {fp8} vs paper {paper}",
+            cfg.name
+        );
+        assert!(fp8 < prev, "bigger ViT must be slower");
+        prev = fp8;
+        let base = b.run_nar(&cfg, cfg.seq, FpFormat::Fp64).throughput;
+        let total = fp8 / base;
+        // Paper: 17.9x total for ViTs.
+        assert!((8.0..=80.0).contains(&total), "{} total {total}", cfg.name);
+    }
+}
+
+// ------------------------------------------------- Fig. 9 (S / clusters)
+#[test]
+fn fig9_sequence_scaling_monotonic() {
+    let e = engine();
+    for cfg in [ModelConfig::gpt3_xl(), ModelConfig::gpt_j()] {
+        let mut prev_nar = f64::MAX;
+        let mut prev_ar = f64::MAX;
+        for s in [128u64, 512, 1024, 2048] {
+            let nar = e.run_nar(&cfg, s, FpFormat::Fp8).throughput;
+            let ar = e.run_ar_step(&cfg, s, FpFormat::Fp8).throughput;
+            assert!(nar <= prev_nar, "{} NAR S={s}", cfg.name);
+            assert!(ar <= prev_ar, "{} AR S={s}", cfg.name);
+            assert!(nar > 5.0 * ar, "{} S={s}: NAR {nar} vs AR {ar}", cfg.name);
+            prev_nar = nar;
+            prev_ar = ar;
+        }
+    }
+}
+
+#[test]
+fn fig9_cluster_scaling_close_to_linear() {
+    // Paper: 16 clusters give 12x/11.9x/15.8x over 1 cluster (B/L/H).
+    for cfg in [ModelConfig::vit_b(), ModelConfig::vit_l(), ModelConfig::vit_h()] {
+        let one = InferenceEngine::new(PlatformConfig::with_clusters(1))
+            .run_nar(&cfg, cfg.seq, FpFormat::Fp8)
+            .throughput;
+        let sixteen = InferenceEngine::new(PlatformConfig::with_clusters(16))
+            .run_nar(&cfg, cfg.seq, FpFormat::Fp8)
+            .throughput;
+        let speedup = sixteen / one;
+        assert!((8.0..=16.5).contains(&speedup), "{}: 16-cluster speedup {speedup}", cfg.name);
+        // 4 clusters ~ 4x (paper: exactly 4x for all three).
+        let four = InferenceEngine::new(PlatformConfig::with_clusters(4))
+            .run_nar(&cfg, cfg.seq, FpFormat::Fp8)
+            .throughput;
+        let s4 = four / one;
+        assert!((2.8..=4.4).contains(&s4), "{}: 4-cluster speedup {s4}", cfg.name);
+    }
+}
+
+// ------------------------------------------------------ Fig. 10 (buckets)
+#[test]
+fn fig10_breakdown_buckets() {
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::gpt_j();
+    // NAR FP32: paper GEMM(mlp) 66%; FA bucket grows FP32 -> FP8.
+    let nar32 = model_cost(&cfg, Mode::Nar, 1024, FpFormat::Fp32, &p);
+    let b32 = Breakdown::fig10_buckets(&nar32);
+    let frac = |b: &[snitch_fm::coordinator::KernelClassShare], k: &str| {
+        b.iter().find(|s| s.kind.starts_with(k)).map(|s| s.fraction).unwrap_or(0.0)
+    };
+    let gemm32 = frac(&b32, "gemm");
+    let fa32 = frac(&b32, "flashattention");
+    assert!((0.45..=0.80).contains(&gemm32), "NAR fp32 gemm {gemm32}");
+    assert!((0.15..=0.50).contains(&fa32), "NAR fp32 fa {fa32}");
+    let nar8 = model_cost(&cfg, Mode::Nar, 1024, FpFormat::Fp8, &p);
+    let b8 = Breakdown::fig10_buckets(&nar8);
+    assert!(frac(&b8, "flashattention") > fa32, "FA share must grow at FP8");
+    // AR: GEMM-dominated (97% FP32 in the paper).
+    let ar32 = model_cost(&cfg, Mode::Ar, 1024, FpFormat::Fp32, &p);
+    let ba = Breakdown::fig10_buckets(&ar32);
+    assert!(frac(&ba, "gemm") + frac(&ba, "flashattention") > 0.90);
+    // Activations are never the bottleneck.
+    for b in [&b32, &b8, &ba] {
+        assert!(frac(b, "layernorm") + frac(b, "gelu") < 0.15);
+    }
+}
+
+// ----------------------------------------------------- Table III (power)
+#[test]
+fn table3_power_and_efficiency_bands() {
+    let e = engine();
+    let cfg = ModelConfig::gpt_j();
+    // NAR: power ~5 W, GFLOPS/W ladder roughly doubling per step.
+    let mut prev_eff = 0.0;
+    for (fmt, paper_eff) in [
+        (FpFormat::Fp64, 38.8),
+        (FpFormat::Fp32, 78.8),
+        (FpFormat::Fp16, 151.0),
+        (FpFormat::Fp8, 294.0),
+    ] {
+        let r = e.run_nar(&cfg, 1024, fmt);
+        assert!((3.5..=6.5).contains(&r.power_w), "{fmt} power {}", r.power_w);
+        assert!(
+            r.gflops_per_w > 0.6 * paper_eff && r.gflops_per_w < 1.6 * paper_eff,
+            "{fmt} eff {} vs paper {paper_eff}",
+            r.gflops_per_w
+        );
+        assert!(r.gflops_per_w > prev_eff, "{fmt} must improve efficiency");
+        prev_eff = r.gflops_per_w;
+    }
+    // AR: low power, low utilization.
+    for fmt in FpFormat::LADDER {
+        let r = e.run_ar_step(&cfg, 1024, fmt);
+        assert!((1.8..=3.2).contains(&r.power_w), "{fmt} AR power {}", r.power_w);
+        assert!(r.fpu_utilization < 0.15, "{fmt} AR util {}", r.fpu_utilization);
+    }
+}
+
+// ----------------------------------------------------- Table IV (vs SoA)
+#[test]
+fn table4_utilization_beats_every_soa_platform() {
+    let e = engine();
+    let r = e.run_nar(&ModelConfig::gpt3_xl(), 1024, FpFormat::Fp16);
+    let ours = soa::OursRow::from_run(r.gflops, r.fpu_utilization, e.platform.total_cores());
+    for s in soa::table4_soa() {
+        assert!(
+            ours.fpu_utilization_pct > s.fpu_utilization_pct,
+            "must beat {} ({}% vs {}%)",
+            s.name,
+            ours.fpu_utilization_pct,
+            s.fpu_utilization_pct
+        );
+    }
+    // Paper: 2.04x over Gaudi2 (the best competitor); band 1.3-3x.
+    let adv = ours.utilization_advantage();
+    assert!((1.3..=3.0).contains(&adv), "advantage {adv}");
+    // Throughput/CU comparable to SoA (paper: 0.0056 TFLOPS/CU).
+    assert!((0.002..=0.02).contains(&ours.tflops_per_cu), "{}", ours.tflops_per_cu);
+}
+
+#[test]
+fn table4_h100_vit_comparison() {
+    // Paper Sec. VII-E claims 27 samples/s for ViT-L FP8 (0.2/CU, 6/W) —
+    // which is inconsistent with the paper's own Fig. 8 (12 images/s for
+    // ViT-L FP8). Our simulator reproduces the Fig. 8 operating point, so
+    // the honest H100 comparison band is "same order of magnitude per CU
+    // and per W", not the paper's >1x headline. See EXPERIMENTS.md.
+    let e = engine();
+    let r = e.run_nar(&ModelConfig::vit_l(), 197, FpFormat::Fp8);
+    let h = soa::h100_vit_l_fp8();
+    let per_cu = r.throughput / e.platform.total_cores() as f64;
+    let per_w = r.throughput / r.power_w;
+    assert!(per_cu > 0.3 * h.samples_per_s_per_cu, "{per_cu} vs {}", h.samples_per_s_per_cu);
+    assert!(per_w > 0.4 * h.samples_per_s_per_w, "{per_w} vs {}", h.samples_per_s_per_w);
+    // At the paper's claimed 27 samples/s the advantage would reproduce:
+    let paper_ours = 27.0;
+    assert!(paper_ours / 128.0 > h.samples_per_s_per_cu);
+    assert!(paper_ours / 4.5 > h.samples_per_s_per_w);
+}
+
+// ------------------------------------------------------ Fig. 1 (traffic)
+#[test]
+fn fig1_fusion_cuts_hbm_traffic() {
+    // Paper: 1.6x fewer HBM reads for GPT-J S=2048 (624 -> 384 MB total
+    // block traffic). Our layer-level view: the fused concat+linear moves
+    // several times less HBM data than the unfused one.
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::gpt_j();
+    let f = fused_concat_linear_cost(2048, cfg.heads, cfg.p, cfg.e, FpFormat::Fp32, &p);
+    let u = unfused_concat_linear_cost(2048, cfg.heads, cfg.p, cfg.e, FpFormat::Fp32, &p);
+    let ratio = u.hbm_bytes() as f64 / f.hbm_bytes() as f64;
+    assert!(ratio > 1.6, "traffic reduction {ratio}");
+    assert!(f.c2c_bytes > 0, "fused path must use the c2c interconnect");
+    // Whole-block view: with c2c off, total block HBM traffic grows.
+    let mut base = PlatformConfig::occamy();
+    base.features.cluster_to_cluster = false;
+    let opt_cost = model_cost(&cfg, Mode::Nar, 2048, FpFormat::Fp32, &p);
+    let base_cost = model_cost(&cfg, Mode::Nar, 2048, FpFormat::Fp32, &base);
+    assert!(
+        base_cost.total.hbm_bytes() > opt_cost.total.hbm_bytes(),
+        "c2c must reduce HBM traffic: {} vs {}",
+        base_cost.total.hbm_bytes(),
+        opt_cost.total.hbm_bytes()
+    );
+}
+
+// ------------------------------------------------- Sec. VII-E (academic)
+#[test]
+fn academic_comparisons_hold() {
+    let e = engine();
+    // AccelTran: 0.22 W/PE; ours well below (paper: 6.3x better).
+    let rj = e.run_nar(&ModelConfig::gpt_j(), 1024, FpFormat::Fp8);
+    let w_per_pe = rj.power_w / e.platform.total_cores() as f64;
+    assert!(w_per_pe < soa::acceltran().watts_per_pe.unwrap() / 3.0, "{w_per_pe}");
+    // Tambe et al.: 489 ms BERT-base; ours (ViT-B FP8) far below (paper 38 ms).
+    let rb = e.run_nar(&ModelConfig::vit_b(), 197, FpFormat::Fp8);
+    let ms = rb.seconds * 1e3;
+    assert!(ms < 120.0, "ViT-B FP8 latency {ms} ms");
+}

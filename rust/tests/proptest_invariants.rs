@@ -1,0 +1,276 @@
+//! Property-based invariant tests over the coordinator substrate.
+//!
+//! The offline registry carries no proptest, so this file uses a small
+//! seeded-LCG case generator (`cases`) — deterministic, shrink-free, but
+//! sweeping hundreds of random parameter combinations per invariant.
+
+use snitch_fm::arch::{Features, FpFormat, MemLevel, PlatformConfig};
+use snitch_fm::coordinator::schedule::{block_cost, model_cost};
+use snitch_fm::coordinator::KvCache;
+use snitch_fm::kernels::{flash_attention_cost, gemm_cost, layernorm_cost};
+use snitch_fm::kernels::gemm::OperandHome;
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::sim::noc;
+use snitch_fm::tiling::{plan_flash_attention, plan_gemm, plan_gemm_wide};
+
+/// Deterministic LCG over a seed; yields values in [lo, hi].
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self, lo: u64, hi: u64) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        lo + (self.0 >> 33) % (hi - lo + 1)
+    }
+
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.next(0, xs.len() as u64 - 1) as usize]
+    }
+}
+
+const CASES: usize = 300;
+
+#[test]
+fn gemm_plans_always_fit_spm_double_buffered() {
+    let mut rng = Rng(1);
+    for _ in 0..CASES {
+        let m = rng.next(1, 8192);
+        let k = rng.next(1, 16384);
+        let n = rng.next(1, 16384);
+        let fmt = rng.pick(&FpFormat::ALL);
+        let clusters = rng.pick(&[1u32, 4, 8, 16]);
+        let p = PlatformConfig::with_clusters(clusters);
+        let plan = plan_gemm(m, k, n, fmt, &p);
+        assert!(
+            plan.spm_bytes(fmt, true) <= p.cluster.spm_bytes,
+            "{fmt} {m}x{k}x{n} c{clusters}: {plan:?} = {}B",
+            plan.spm_bytes(fmt, true)
+        );
+        assert!(plan.bm >= 1 && plan.bn >= 1 && plan.bk >= 1);
+        assert!(plan.bm <= plan.rows.max(1) && plan.bn <= n && plan.bk <= k);
+        // The plan's steps cover the whole per-cluster iteration space.
+        let expect =
+            plan.rows.div_ceil(plan.bm) * n.div_ceil(plan.bn) * k.div_ceil(plan.bk);
+        assert_eq!(plan.steps, expect);
+    }
+}
+
+#[test]
+fn gemv_plans_fit_and_cover() {
+    let mut rng = Rng(2);
+    for _ in 0..CASES {
+        let m = rng.next(1, 8);
+        let k = rng.next(1, 16384);
+        let n = rng.next(1, 32768);
+        let fmt = rng.pick(&FpFormat::ALL);
+        let p = PlatformConfig::occamy();
+        let plan = plan_gemm_wide(m, k, n, fmt, &p);
+        assert!(plan.spm_bytes(fmt, true) <= p.cluster.spm_bytes, "{plan:?}");
+        assert!(plan.bn >= 1 && plan.bk >= 1);
+    }
+}
+
+#[test]
+fn fa_plans_fit_spm() {
+    let mut rng = Rng(3);
+    for _ in 0..CASES {
+        let heads = rng.next(1, 32);
+        let sq = rng.next(1, 4096);
+        let skv = rng.next(1, 4096);
+        let pdim = rng.pick(&[32u64, 64, 80, 128, 256]);
+        let fmt = rng.pick(&FpFormat::ALL);
+        let p = PlatformConfig::occamy();
+        let plan = plan_flash_attention(heads, sq, skv, pdim, fmt, &p);
+        assert!(
+            plan.spm_bytes(pdim, fmt, true) <= p.cluster.spm_bytes,
+            "h{heads} {sq}x{skv} p{pdim} {fmt}: {plan:?}"
+        );
+        assert_eq!(plan.kv_steps, skv.div_ceil(plan.bkv));
+        assert_eq!(plan.q_steps, sq.div_ceil(plan.bq));
+    }
+}
+
+#[test]
+fn reduction_tree_delivers_every_partial_exactly_once() {
+    for clusters in [1u32, 2, 4, 8, 16] {
+        let p = if clusters <= 4 {
+            PlatformConfig::with_clusters(clusters)
+        } else {
+            PlatformConfig::with_clusters(clusters)
+        };
+        let sched = noc::reduction_schedule(&p);
+        // Union of senders = {1..n-1}; receiver of the last level is 0.
+        let mut senders: Vec<u32> = sched.iter().flatten().map(|s| s.src).collect();
+        senders.sort_unstable();
+        let expect: Vec<u32> = (1..clusters).collect();
+        assert_eq!(senders, expect, "clusters={clusters}");
+        // No cluster receives after it has sent (tree property).
+        let mut sent = vec![false; clusters as usize];
+        for level in &sched {
+            for step in level {
+                assert!(!sent[step.dst as usize], "dst {} already sent", step.dst);
+                sent[step.src as usize] = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_cost_monotonic_in_problem_size() {
+    let mut rng = Rng(4);
+    let p = PlatformConfig::occamy();
+    for _ in 0..60 {
+        let m = rng.next(64, 2048);
+        let k = rng.next(64, 4096);
+        let n = rng.next(64, 4096);
+        let a = gemm_cost(m, k, n, FpFormat::Fp32, &p, OperandHome::default());
+        let b = gemm_cost(2 * m, k, n, FpFormat::Fp32, &p, OperandHome::default());
+        assert!(b.cycles >= a.cycles, "2x rows not slower: {m}x{k}x{n}");
+        assert_eq!(b.flops, 2 * a.flops);
+    }
+}
+
+#[test]
+fn flops_invariant_under_features_and_format() {
+    // The useful work is a property of the problem, not the platform.
+    let mut rng = Rng(5);
+    for _ in 0..40 {
+        let m = rng.next(16, 1024);
+        let k = rng.next(16, 2048);
+        let n = rng.next(16, 2048);
+        let mut costs = Vec::new();
+        for fmt in FpFormat::LADDER {
+            for features in [Features::all(), Features::baseline()] {
+                let mut p = PlatformConfig::occamy();
+                p.features = features;
+                costs.push(gemm_cost(m, k, n, fmt, &p, OperandHome::default()).flops);
+            }
+        }
+        assert!(costs.windows(2).all(|w| w[0] == w[1]), "{m}x{k}x{n}: {costs:?}");
+    }
+}
+
+#[test]
+fn extensions_never_hurt() {
+    let mut rng = Rng(6);
+    for _ in 0..40 {
+        let m = rng.next(64, 2048);
+        let k = rng.next(64, 2048);
+        let n = rng.next(64, 2048);
+        let fmt = rng.pick(&[FpFormat::Fp64, FpFormat::Fp32]);
+        let opt = PlatformConfig::occamy();
+        let mut base = PlatformConfig::occamy();
+        base.features = Features::baseline();
+        let co = gemm_cost(m, k, n, fmt, &opt, OperandHome::default());
+        let cb = gemm_cost(m, k, n, fmt, &base, OperandHome::default());
+        assert!(co.cycles <= cb.cycles, "{fmt} {m}x{k}x{n}: opt {} base {}", co.cycles, cb.cycles);
+    }
+}
+
+#[test]
+fn more_clusters_never_slower_for_big_workloads() {
+    let mut rng = Rng(7);
+    for _ in 0..30 {
+        let s = rng.next(512, 2048);
+        let heads = 16;
+        let pdim = rng.pick(&[64u64, 128]);
+        let small = flash_attention_cost(
+            heads, s, s, pdim, FpFormat::Fp32, false, &PlatformConfig::with_clusters(4));
+        let big = flash_attention_cost(
+            heads, s, s, pdim, FpFormat::Fp32, false, &PlatformConfig::with_clusters(16));
+        assert!(big.cycles <= small.cycles, "s={s} p={pdim}");
+    }
+}
+
+#[test]
+fn block_cost_sums_layer_costs() {
+    let mut rng = Rng(8);
+    let p = PlatformConfig::occamy();
+    for _ in 0..20 {
+        let cfg = ModelConfig {
+            name: "prop".into(),
+            family: snitch_fm::model::Family::Gpt,
+            blocks: 1,
+            e: rng.pick(&[256u64, 512, 1024]),
+            p: rng.pick(&[32u64, 64]),
+            heads: rng.pick(&[4u64, 8, 16]),
+            ff: rng.pick(&[1024u64, 4096]),
+            seq: 256,
+        };
+        let bc = block_cost(&cfg, Mode::Nar, 256, 0, FpFormat::Fp32, &p);
+        let kind_sum: u64 = bc.by_kind.values().map(|c| c.cycles).sum();
+        let label_sum: u64 = bc.by_label.values().map(|c| c.cycles).sum();
+        assert_eq!(kind_sum, bc.cycles);
+        assert_eq!(label_sum, bc.cycles);
+        assert!(bc.total.flops > 0);
+    }
+}
+
+#[test]
+fn ar_cost_grows_with_kv_length() {
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::gpt3_xl();
+    let mut prev = 0;
+    for kv in [128u64, 512, 1024, 2048] {
+        let c = model_cost(&cfg, Mode::Ar, kv, FpFormat::Fp32, &p);
+        assert!(c.cycles >= prev, "kv={kv}");
+        prev = c.cycles;
+    }
+}
+
+#[test]
+fn layernorm_cost_scales_linearly() {
+    let mut rng = Rng(9);
+    let p = PlatformConfig::occamy();
+    for _ in 0..30 {
+        let s = rng.next(64, 2048);
+        let e = rng.next(64, 8192);
+        let one = layernorm_cost(s, e, FpFormat::Fp32, &p);
+        let two = layernorm_cost(2 * s, e, FpFormat::Fp32, &p);
+        let ratio = two.cycles as f64 / one.cycles.max(1) as f64;
+        assert!((1.0..=3.0).contains(&ratio), "s={s} e={e}: ratio {ratio}");
+    }
+}
+
+#[test]
+fn kv_cache_prefill_then_steps_random() {
+    let mut rng = Rng(10);
+    for _ in 0..50 {
+        let heads = rng.next(1, 8) as usize;
+        let p = rng.next(2, 32) as usize;
+        let cap = rng.next(4, 64) as usize;
+        let n = rng.next(1, cap as u64) as usize;
+        let mut cache = KvCache::new(heads, cap, p);
+        let k: Vec<f32> = (0..heads * n * p).map(|i| i as f32).collect();
+        cache.load_prefill(&k, &k, n);
+        assert_eq!(cache.len(), n);
+        // Every prefilled vector is retrievable at the right offset.
+        let h = rng.next(0, heads as u64 - 1) as usize;
+        let t = rng.next(0, n as u64 - 1) as usize;
+        let expect0 = (h * n + t) * p;
+        assert_eq!(cache.k_at(h, t)[0], expect0 as f32);
+        // Steps up to capacity never panic.
+        let size = cache.k_flat().len();
+        for _ in n..cap {
+            cache.store_step(vec![0.0; size], vec![0.0; size]);
+        }
+        assert_eq!(cache.len(), cap);
+        assert_eq!(cache.remaining(), 0);
+    }
+}
+
+#[test]
+fn json_parser_roundtrips_random_nesting() {
+    use snitch_fm::util::json;
+    let mut rng = Rng(11);
+    for _ in 0..100 {
+        // Build a random nested doc and print it via Display, re-parse it.
+        let n = rng.next(1, 6);
+        let items: Vec<String> = (0..n)
+            .map(|i| format!("{{\"k{i}\": [{}, {}.5, \"s{i}\"]}}", rng.next(0, 99), rng.next(0, 99)))
+            .collect();
+        let doc = format!("[{}]", items.join(","));
+        let v = json::parse(&doc).expect("parse");
+        let v2 = json::parse(&v.to_string()).expect("reparse");
+        assert_eq!(v, v2);
+    }
+}
