@@ -1,0 +1,71 @@
+//! Batch scaling — the motivation for the serving coordinator. Table III
+//! pins single-request AR decode below 10% FPU utilization (every token
+//! is a GEMV streaming all weights from HBM for one row of work).
+//! Batching b requests turns each decode GEMV into a skinny GEMM (m = b)
+//! that reads the weights once per batch, so utilization must rise
+//! monotonically with b and close on the NAR band (65-80%).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{InferenceEngine, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::report;
+
+const BATCHES: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+fn main() {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let cfg = ModelConfig::gpt_j();
+    let seq = 1024;
+
+    common::header("batch scaling", "GPT-J batched AR decode at KV=1024");
+    for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+        let legacy = e.run_ar_step(&cfg, seq, fmt);
+        let (t, rows) = common::time_median(3, || {
+            BATCHES
+                .iter()
+                .map(|&b| e.run_ar_step_batched(&cfg, b, seq, fmt))
+                .collect::<Vec<_>>()
+        });
+        println!(
+            "{:<6} {:>4} {:>14} {:>9} {:>12}",
+            "fmt", "b", "tokens/s", "util%", "vs b=1"
+        );
+        let mut prev_util = 0.0;
+        for r in &rows {
+            println!(
+                "{:<6} {:>4} {:>14.2} {:>9.2} {:>11.1}x",
+                fmt.name(),
+                r.batch,
+                r.throughput,
+                r.fpu_utilization * 100.0,
+                r.throughput / rows[0].throughput
+            );
+            assert!(
+                r.fpu_utilization > prev_util,
+                "{fmt} b={}: utilization must rise strictly with batch ({} !> {prev_util})",
+                r.batch,
+                r.fpu_utilization
+            );
+            prev_util = r.fpu_utilization;
+        }
+        // b=1 must price exactly like the legacy single-request step.
+        assert_eq!(rows[0].cycles, legacy.cycles, "{fmt}: b=1 diverged from run_ar_step");
+        assert_eq!(rows[0].fpu_utilization, legacy.fpu_utilization);
+        let nar = e.run_nar(&cfg, seq, fmt);
+        println!(
+            "{:<6}  NAR reference util {:.1}%; b=32 reaches {:.1}% of it\n",
+            fmt.name(),
+            nar.fpu_utilization * 100.0,
+            100.0 * rows.last().unwrap().fpu_utilization / nar.fpu_utilization
+        );
+        common::report_timing(&format!("batch-sweep-{}", fmt.name()), t);
+    }
+
+    common::header("serving", "continuous batching, 32 requests, batch 8, FP8");
+    let w = Workload::uniform(32, 1024, 64);
+    let (t, r) = common::time_median(3, || e.serve(&cfg, &w, 8, FpFormat::Fp8));
+    print!("{}", report::serve_table(&r));
+    common::report_timing("serve-32req-b8", t);
+}

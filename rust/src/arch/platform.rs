@@ -145,6 +145,10 @@ pub struct InterconnectConfig {
     /// Calibrated to Table III's <10% AR FPU utilization and the Fig. 9 AR
     /// throughput range; NAR's blocked GEMMs are unaffected.
     pub gemv_hbm_efficiency: f64,
+    /// Total HBM capacity in bytes (8 HBM2E channels). Bounds what the
+    /// serving coordinator may resident-ize: model weights + the KV
+    /// caches of all admitted requests must fit.
+    pub hbm_capacity_bytes: u64,
 }
 
 impl Default for InterconnectConfig {
@@ -159,6 +163,7 @@ impl Default for InterconnectConfig {
             hbm_latency_ns: 88.0,
             dma_setup_ns: 27.0,
             gemv_hbm_efficiency: 0.15,
+            hbm_capacity_bytes: 32 * (1 << 30),
         }
     }
 }
@@ -310,5 +315,11 @@ mod tests {
     #[test]
     fn total_cores_occamy() {
         assert_eq!(PlatformConfig::occamy().total_cores(), 128);
+    }
+
+    #[test]
+    fn hbm_capacity_is_32_gib() {
+        let p = PlatformConfig::occamy();
+        assert_eq!(p.interconnect.hbm_capacity_bytes, 32 * (1u64 << 30));
     }
 }

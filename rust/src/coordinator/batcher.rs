@@ -1,0 +1,447 @@
+//! Continuous-batching serving coordinator.
+//!
+//! Admits [`Request`]s against a KV-cache HBM budget, interleaves prefill
+//! (NAR) and batched decode (AR) steps, and prices the whole trace on the
+//! cycle-level platform model. This is the scheduling layer the paper's
+//! single-request engine lacked: batched decode shares one weight stream
+//! across all active requests, which is what lifts AR FPU utilization out
+//! of the <10% Table III regime.
+//!
+//! Scheduling policy (deliberately simple, follow-ons in ROADMAP):
+//! * FCFS admission — a request is admitted when a batch slot is free AND
+//!   its full-length KV cache (at the serving precision) fits in the
+//!   remaining HBM budget (weights and all admitted caches are resident;
+//!   no paging, no preemption).
+//! * Prefill runs as its own NAR pass on admission and briefly stalls the
+//!   decode stream (vLLM-style non-chunked prefill).
+//! * One decode step advances every active request by one token, priced
+//!   as a single batched AR pass at the batch's longest KV length
+//!   (conservative: shorter requests ride along for free).
+
+use std::collections::VecDeque;
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::schedule::{model_cost, model_cost_batched};
+use crate::coordinator::workload::{Request, Workload};
+use crate::energy;
+use crate::metrics;
+use crate::model::{Mode, ModelConfig};
+use crate::sim::KernelCost;
+
+/// Admission limits for the serving loop.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum concurrently decoding requests (batch slots).
+    pub max_batch: usize,
+    /// HBM bytes available for KV caches (platform capacity minus
+    /// resident weights).
+    pub kv_budget_bytes: u64,
+}
+
+/// Per-request serving outcome.
+#[derive(Debug, Clone)]
+pub struct RequestStats {
+    pub id: usize,
+    pub prompt_len: u64,
+    pub gen_tokens: u64,
+    /// Arrival -> admission (queue wait), seconds.
+    pub admitted_s: f64,
+    /// Arrival -> first generated token, seconds.
+    pub ttft_s: f64,
+    /// Arrival -> last generated token, seconds.
+    pub latency_s: f64,
+}
+
+/// Everything the serving run reports.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub format: &'static str,
+    /// Requests offered / completed; ids rejected because a single KV
+    /// cache exceeds the whole budget.
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: Vec<usize>,
+    pub max_batch: usize,
+    pub kv_budget_bytes: u64,
+    /// High-water mark of admitted KV bytes (must stay <= budget).
+    pub peak_kv_bytes: u64,
+    pub total_cycles: u64,
+    pub total_seconds: f64,
+    pub prefill_tokens: u64,
+    pub gen_tokens: u64,
+    pub ttft_mean_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// Aggregate generated tokens / total wall-clock.
+    pub tokens_per_s: f64,
+    /// Generated tokens / decode-only wall-clock.
+    pub decode_tokens_per_s: f64,
+    /// Mean decode batch occupancy (tokens per decode step).
+    pub avg_batch_occupancy: f64,
+    pub fpu_utilization: f64,
+    pub power_w: f64,
+    pub hbm_gb: f64,
+    pub per_request: Vec<RequestStats>,
+}
+
+struct ActiveRequest {
+    req: Request,
+    kv_len: u64,
+    produced: u64,
+    admitted_cycle: u64,
+    ttft_cycle: Option<u64>,
+}
+
+/// Prices a serving trace over one model/platform/precision.
+pub struct ContinuousBatcher<'a> {
+    pub cfg: &'a ModelConfig,
+    pub platform: &'a PlatformConfig,
+    pub fmt: FpFormat,
+    pub opts: BatcherConfig,
+}
+
+impl<'a> ContinuousBatcher<'a> {
+    pub fn new(
+        cfg: &'a ModelConfig,
+        platform: &'a PlatformConfig,
+        fmt: FpFormat,
+        opts: BatcherConfig,
+    ) -> ContinuousBatcher<'a> {
+        ContinuousBatcher { cfg, platform, fmt, opts }
+    }
+
+    /// Run the whole workload to completion (all requests arrive at t=0)
+    /// and return the priced serving report.
+    pub fn run(&self, workload: &Workload) -> ServeReport {
+        let max_batch = self.opts.max_batch.max(1);
+        let budget = self.opts.kv_budget_bytes;
+
+        let mut rejected = Vec::new();
+        let mut pending: VecDeque<Request> = VecDeque::new();
+        for r in &workload.requests {
+            if r.kv_bytes_at(self.cfg, self.fmt) > budget {
+                rejected.push(r.id);
+            } else {
+                pending.push_back(r.clone());
+            }
+        }
+
+        let mut active: Vec<ActiveRequest> = Vec::new();
+        let mut used_kv: u64 = 0;
+        let mut peak_kv: u64 = 0;
+        let mut time: u64 = 0;
+        let mut total = KernelCost::default();
+        let mut decode_cycles: u64 = 0;
+        let mut decode_tokens: u64 = 0;
+        let mut decode_steps: u64 = 0;
+        let mut prefill_tokens: u64 = 0;
+        let mut done: Vec<RequestStats> = Vec::new();
+
+        loop {
+            // ---- admission + prefill --------------------------------
+            while active.len() < max_batch {
+                let Some(front) = pending.front() else { break };
+                let need = front.kv_bytes_at(self.cfg, self.fmt);
+                if used_kv + need > budget {
+                    break; // FCFS: wait for retirements to free KV space
+                }
+                let req = pending.pop_front().unwrap();
+                used_kv += need;
+                peak_kv = peak_kv.max(used_kv);
+                let admitted_cycle = time;
+                let prefill = model_cost(
+                    self.cfg,
+                    Mode::Nar,
+                    req.prompt_len,
+                    self.fmt,
+                    self.platform,
+                )
+                .total;
+                time += prefill.cycles;
+                total = total.then(prefill);
+                prefill_tokens += req.prompt_len;
+                if req.gen_tokens == 0 {
+                    // Prefill-only request: done at prefill completion.
+                    used_kv -= need;
+                    done.push(self.stats(&req, admitted_cycle, time, time));
+                    continue;
+                }
+                active.push(ActiveRequest {
+                    kv_len: req.prompt_len,
+                    produced: 0,
+                    admitted_cycle,
+                    ttft_cycle: None,
+                    req,
+                });
+            }
+
+            if active.is_empty() {
+                // Pending must be empty too: with no active requests the
+                // whole budget is free and single-request overflows were
+                // rejected upfront, so the admission loop above drains the
+                // queue. Guard against a scheduling bug hanging the loop.
+                debug_assert!(pending.is_empty());
+                break;
+            }
+
+            // ---- one batched decode step ----------------------------
+            let b = active.len() as u64;
+            let kv = active.iter().map(|a| a.kv_len).max().unwrap();
+            let step =
+                model_cost_batched(self.cfg, Mode::Ar, b, kv, self.fmt, self.platform)
+                    .total;
+            time += step.cycles;
+            total = total.then(step);
+            decode_cycles += step.cycles;
+            decode_tokens += b;
+            decode_steps += 1;
+
+            let mut i = 0;
+            while i < active.len() {
+                let a = &mut active[i];
+                a.kv_len += 1;
+                a.produced += 1;
+                if a.ttft_cycle.is_none() {
+                    a.ttft_cycle = Some(time);
+                }
+                if a.produced >= a.req.gen_tokens {
+                    let a = active.swap_remove(i);
+                    used_kv -= a.req.kv_bytes_at(self.cfg, self.fmt);
+                    let ttft = a.ttft_cycle.unwrap_or(time);
+                    done.push(self.stats(&a.req, a.admitted_cycle, ttft, time));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        self.report(
+            workload, rejected, done, total, time, decode_cycles, decode_tokens,
+            decode_steps, prefill_tokens, peak_kv,
+        )
+    }
+
+    fn stats(
+        &self,
+        req: &Request,
+        admitted_cycle: u64,
+        ttft_cycle: u64,
+        done_cycle: u64,
+    ) -> RequestStats {
+        let s = |c| self.platform.cycles_to_seconds(c);
+        RequestStats {
+            id: req.id,
+            prompt_len: req.prompt_len,
+            gen_tokens: req.gen_tokens,
+            admitted_s: s(admitted_cycle),
+            ttft_s: s(ttft_cycle),
+            latency_s: s(done_cycle),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn report(
+        &self,
+        workload: &Workload,
+        rejected: Vec<usize>,
+        mut done: Vec<RequestStats>,
+        total: KernelCost,
+        time: u64,
+        decode_cycles: u64,
+        decode_tokens: u64,
+        decode_steps: u64,
+        prefill_tokens: u64,
+        peak_kv: u64,
+    ) -> ServeReport {
+        done.sort_by_key(|r| r.id);
+        // TTFT is defined over generated tokens: prefill-only requests
+        // (gen_tokens == 0) never produce one, so they are excluded from
+        // the TTFT aggregates (their per-request ttft_s equals prefill
+        // completion).
+        let ttfts: Vec<f64> =
+            done.iter().filter(|r| r.gen_tokens > 0).map(|r| r.ttft_s).collect();
+        let lats: Vec<f64> = done.iter().map(|r| r.latency_s).collect();
+        let total_seconds = self.platform.cycles_to_seconds(time);
+        let decode_seconds = self.platform.cycles_to_seconds(decode_cycles);
+        let gen_tokens: u64 = done.iter().map(|r| r.gen_tokens).sum();
+        let power = energy::power_report(&total, self.fmt, self.platform);
+        ServeReport {
+            model: self.cfg.name.clone(),
+            format: self.fmt.name(),
+            requests: workload.len(),
+            completed: done.len(),
+            rejected,
+            max_batch: self.opts.max_batch.max(1),
+            kv_budget_bytes: self.opts.kv_budget_bytes,
+            peak_kv_bytes: peak_kv,
+            total_cycles: time,
+            total_seconds,
+            prefill_tokens,
+            gen_tokens,
+            ttft_mean_s: metrics::mean(&ttfts),
+            ttft_p50_s: metrics::percentile(&ttfts, 50.0),
+            ttft_p99_s: metrics::percentile(&ttfts, 99.0),
+            latency_mean_s: metrics::mean(&lats),
+            latency_p50_s: metrics::percentile(&lats, 50.0),
+            latency_p99_s: metrics::percentile(&lats, 99.0),
+            tokens_per_s: if total_seconds > 0.0 {
+                gen_tokens as f64 / total_seconds
+            } else {
+                0.0
+            },
+            decode_tokens_per_s: if decode_seconds > 0.0 {
+                decode_tokens as f64 / decode_seconds
+            } else {
+                0.0
+            },
+            avg_batch_occupancy: if decode_steps > 0 {
+                decode_tokens as f64 / decode_steps as f64
+            } else {
+                0.0
+            },
+            fpu_utilization: power.fpu_utilization,
+            power_w: power.power_w,
+            hbm_gb: total.hbm_bytes() as f64 / 1e9,
+            per_request: done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_batcher(
+        cfg: &ModelConfig,
+        platform: &PlatformConfig,
+        max_batch: usize,
+        budget: u64,
+    ) -> ServeReport {
+        let b = ContinuousBatcher::new(
+            cfg,
+            platform,
+            FpFormat::Fp32,
+            BatcherConfig { max_batch, kv_budget_bytes: budget },
+        );
+        b.run(&Workload::uniform(6, 16, 8))
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let budget = Request { id: 0, prompt_len: 16, gen_tokens: 8 }.kv_bytes(&cfg) * 3;
+        let r = tiny_batcher(&cfg, &p, 4, budget);
+        assert_eq!(r.completed, 6);
+        assert!(r.rejected.is_empty());
+        assert!(r.tokens_per_s > 0.0);
+        assert_eq!(r.gen_tokens, 6 * 8);
+        assert_eq!(r.prefill_tokens, 6 * 16);
+    }
+
+    #[test]
+    fn kv_budget_is_never_exceeded() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let one = Request { id: 0, prompt_len: 16, gen_tokens: 8 }.kv_bytes(&cfg);
+        // Budget for exactly two concurrent caches, batch slots for four.
+        let r = tiny_batcher(&cfg, &p, 4, 2 * one);
+        assert_eq!(r.completed, 6);
+        assert!(r.peak_kv_bytes <= 2 * one, "{} > {}", r.peak_kv_bytes, 2 * one);
+        assert!(r.avg_batch_occupancy <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn oversized_request_rejected_not_wedged() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let mut w = Workload::uniform(2, 16, 8);
+        w.requests.push(Request { id: 2, prompt_len: 100_000, gen_tokens: 8 });
+        let budget = w.requests[0].kv_bytes(&cfg) * 4;
+        let b = ContinuousBatcher::new(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            BatcherConfig { max_batch: 4, kv_budget_bytes: budget },
+        );
+        let r = b.run(&w);
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.rejected, vec![2]);
+    }
+
+    #[test]
+    fn latency_ordering_sane() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let budget = Request { id: 0, prompt_len: 16, gen_tokens: 8 }.kv_bytes(&cfg) * 8;
+        let r = tiny_batcher(&cfg, &p, 8, budget);
+        for s in &r.per_request {
+            assert!(s.admitted_s <= s.ttft_s, "{s:?}");
+            assert!(s.ttft_s <= s.latency_s, "{s:?}");
+        }
+        assert!(r.ttft_p50_s <= r.ttft_p99_s);
+        assert!(r.latency_p50_s <= r.latency_p99_s);
+        assert!(r.latency_mean_s <= r.total_seconds);
+        // Decode-only throughput excludes prefill stalls, so it can only
+        // be faster than the end-to-end rate.
+        assert!(r.decode_tokens_per_s >= r.tokens_per_s);
+    }
+
+    #[test]
+    fn prefill_only_requests_excluded_from_ttft_aggregates() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let mut w = Workload::uniform(2, 16, 4);
+        w.requests.push(Request { id: 2, prompt_len: 16, gen_tokens: 0 });
+        let budget = w.requests[0].kv_bytes(&cfg) * 8;
+        let b = ContinuousBatcher::new(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            BatcherConfig { max_batch: 1, kv_budget_bytes: budget },
+        );
+        let r = b.run(&w);
+        assert_eq!(r.completed, 3);
+        // Serial admission (max_batch 1) finishes the prefill-only
+        // request last, so including it would inflate p99; the TTFT
+        // percentiles must cover only the two generating requests.
+        let max_gen_ttft = r
+            .per_request
+            .iter()
+            .filter(|s| s.gen_tokens > 0)
+            .map(|s| s.ttft_s)
+            .fold(0.0, f64::max);
+        assert_eq!(r.ttft_p99_s, max_gen_ttft);
+        assert!(r.ttft_mean_s <= max_gen_ttft);
+    }
+
+    #[test]
+    fn bigger_batch_serves_faster() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let w = Workload::uniform(8, 16, 16);
+        let budget = w.requests[0].kv_bytes(&cfg) * 8;
+        let serial = ContinuousBatcher::new(
+            &cfg, &p, FpFormat::Fp32,
+            BatcherConfig { max_batch: 1, kv_budget_bytes: budget },
+        )
+        .run(&w);
+        let batched = ContinuousBatcher::new(
+            &cfg, &p, FpFormat::Fp32,
+            BatcherConfig { max_batch: 8, kv_budget_bytes: budget },
+        )
+        .run(&w);
+        assert!(
+            batched.total_seconds < serial.total_seconds,
+            "batched {} vs serial {}",
+            batched.total_seconds,
+            serial.total_seconds
+        );
+        assert!(batched.tokens_per_s > serial.tokens_per_s);
+        assert!(batched.avg_batch_occupancy > serial.avg_batch_occupancy);
+    }
+}

@@ -99,7 +99,14 @@ impl KvCache {
 
     /// Cache bytes at f32 (both K and V).
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        Self::bytes_for(self.heads, self.capacity, self.p)
+    }
+
+    /// Bytes a cache of this geometry occupies (both K and V, f32) —
+    /// what [`KvCache::bytes`] reports, without allocating the buffers.
+    /// The serving batcher sizes its HBM admission budget with this.
+    pub fn bytes_for(heads: usize, capacity: usize, p: usize) -> usize {
+        2 * heads * capacity * p * std::mem::size_of::<f32>()
     }
 }
 
@@ -151,5 +158,7 @@ mod tests {
     fn bytes_accounting() {
         let c = KvCache::new(16, 1024, 256);
         assert_eq!(c.bytes(), 2 * 16 * 1024 * 256 * 4);
+        // Allocation-free sizing matches the allocated cache exactly.
+        assert_eq!(KvCache::bytes_for(16, 1024, 256), c.bytes());
     }
 }

@@ -2,16 +2,24 @@
 //!
 //! Owns the mapping from model graphs to the platform: prices every layer
 //! with the kernel timing models (`schedule`), aggregates per-kernel-class
-//! breakdowns (`breakdown`, Fig. 10), runs end-to-end NAR/AR passes
-//! (`engine`), and manages the decode-time KV cache (`kv_cache`) used by
-//! the numeric runtime path.
+//! breakdowns (`breakdown`, Fig. 10), runs end-to-end NAR/AR passes and
+//! batched multi-request runs (`engine`), schedules multi-user serving
+//! traffic with continuous batching against the HBM KV budget
+//! (`workload`, `batcher`), and manages the decode-time KV cache
+//! (`kv_cache`) used by the numeric runtime path.
 
+pub mod batcher;
 pub mod breakdown;
 pub mod engine;
 pub mod kv_cache;
 pub mod schedule;
+pub mod workload;
 
+pub use batcher::{BatcherConfig, ContinuousBatcher, RequestStats, ServeReport};
 pub use breakdown::{Breakdown, KernelClassShare};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;
-pub use schedule::{block_cost, layer_cost, model_cost, ModelCost};
+pub use schedule::{
+    block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched, ModelCost,
+};
+pub use workload::{Request, Workload};

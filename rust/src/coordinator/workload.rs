@@ -1,0 +1,156 @@
+//! Serving workloads: the requests a multi-user deployment throws at the
+//! platform (the ROADMAP's "heavy traffic" scenario the single-request
+//! engine could not even express).
+//!
+//! A [`Request`] is a prompt to prefill plus a number of tokens to decode;
+//! a [`Workload`] is the batch of requests handed to the continuous
+//! batcher. Synthetic workloads are generated with a seeded LCG so every
+//! serving experiment is exactly reproducible.
+
+use crate::arch::FpFormat;
+use crate::coordinator::kv_cache::KvCache;
+use crate::model::ModelConfig;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Stable id (index in the workload; reports key on it).
+    pub id: usize,
+    /// Prompt tokens to prefill (NAR pass).
+    pub prompt_len: u64,
+    /// Tokens to generate autoregressively.
+    pub gen_tokens: u64,
+}
+
+impl Request {
+    /// KV slots this request needs at its longest (prompt + generation).
+    pub fn kv_capacity(&self) -> u64 {
+        self.prompt_len + self.gen_tokens
+    }
+
+    /// HBM bytes the request's KV caches occupy across all blocks at full
+    /// length, sized exactly like the runtime [`KvCache`] buffers
+    /// (f32 K + V).
+    pub fn kv_bytes(&self, cfg: &ModelConfig) -> u64 {
+        cfg.blocks
+            * KvCache::bytes_for(
+                cfg.heads as usize,
+                self.kv_capacity() as usize,
+                cfg.p as usize,
+            ) as u64
+    }
+
+    /// KV bytes at the serving precision — the quantity the batcher
+    /// admits against the HBM budget, consistent with the cost models
+    /// streaming KV at `fmt` (the f32 [`KvCache`] geometry scaled to the
+    /// element size).
+    pub fn kv_bytes_at(&self, cfg: &ModelConfig, fmt: FpFormat) -> u64 {
+        self.kv_bytes(cfg) / std::mem::size_of::<f32>() as u64 * fmt.bytes()
+    }
+}
+
+/// A batch of requests to serve.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    /// `n` identical requests (throughput benchmarking).
+    pub fn uniform(n: usize, prompt_len: u64, gen_tokens: u64) -> Workload {
+        Workload {
+            requests: (0..n).map(|id| Request { id, prompt_len, gen_tokens }).collect(),
+        }
+    }
+
+    /// `n` requests with prompt/generation lengths drawn uniformly from
+    /// the inclusive ranges by a seeded LCG (deterministic).
+    pub fn synthetic(
+        seed: u64,
+        n: usize,
+        prompt_range: (u64, u64),
+        gen_range: (u64, u64),
+    ) -> Workload {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let mut next = |lo: u64, hi: u64| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            lo + (state >> 33) % (hi - lo + 1)
+        };
+        let requests = (0..n)
+            .map(|id| Request {
+                id,
+                prompt_len: next(prompt_range.0, prompt_range.1).max(1),
+                gen_tokens: next(gen_range.0, gen_range.1).max(1),
+            })
+            .collect();
+        Workload { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total tokens the workload generates (the numerator of aggregate
+    /// tokens/s).
+    pub fn total_gen_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.gen_tokens).sum()
+    }
+
+    /// Total prompt tokens across requests.
+    pub fn total_prompt_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.prompt_len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_workload_shape() {
+        let w = Workload::uniform(4, 128, 32);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.total_gen_tokens(), 4 * 32);
+        assert_eq!(w.total_prompt_tokens(), 4 * 128);
+        assert_eq!(w.requests[3].id, 3);
+        assert_eq!(w.requests[0].kv_capacity(), 160);
+    }
+
+    #[test]
+    fn synthetic_deterministic_and_in_range() {
+        let a = Workload::synthetic(7, 32, (64, 512), (16, 128));
+        let b = Workload::synthetic(7, 32, (64, 512), (16, 128));
+        assert_eq!(a.requests, b.requests);
+        for r in &a.requests {
+            assert!((64..=512).contains(&r.prompt_len), "{r:?}");
+            assert!((16..=128).contains(&r.gen_tokens), "{r:?}");
+        }
+        // Different seeds differ (overwhelmingly likely over 32 draws).
+        let c = Workload::synthetic(8, 32, (64, 512), (16, 128));
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn kv_bytes_matches_allocated_caches() {
+        let cfg = ModelConfig::tiny();
+        let r = Request { id: 0, prompt_len: 24, gen_tokens: 8 };
+        let one_block =
+            KvCache::new(cfg.heads as usize, 32, cfg.p as usize).bytes() as u64;
+        assert_eq!(r.kv_bytes(&cfg), cfg.blocks * one_block);
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_serving_precision() {
+        let cfg = ModelConfig::gpt_j();
+        let r = Request { id: 0, prompt_len: 1024, gen_tokens: 64 };
+        assert_eq!(r.kv_bytes_at(&cfg, FpFormat::Fp32), r.kv_bytes(&cfg));
+        assert_eq!(r.kv_bytes_at(&cfg, FpFormat::Fp8), r.kv_bytes(&cfg) / 4);
+        assert_eq!(r.kv_bytes_at(&cfg, FpFormat::Fp16), r.kv_bytes(&cfg) / 2);
+    }
+}

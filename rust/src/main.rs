@@ -1,4 +1,4 @@
-//! snitch-fm CLI: run, sweep, breakdown, compare, validate, generate.
+//! snitch-fm CLI: run, sweep, breakdown, compare, serve, validate.
 //!
 //! The leader entrypoint of the Layer-3 coordinator. All timing numbers
 //! come from the cycle-level platform simulator; `validate` additionally
@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
-use snitch_fm::coordinator::InferenceEngine;
+use snitch_fm::coordinator::{InferenceEngine, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
@@ -30,6 +30,9 @@ COMMANDS:
   breakdown  Kernel latency breakdown (Fig. 10)
              --model NAME --mode nar|ar --format FMT --seq N
   compare    SoA comparison --exp table4|h100|academic|fig1
+  serve      Continuous-batching multi-request serving simulation
+             --model NAME --requests N --batch N --format FMT
+             --prompt N --gen N --seed N --clusters N
   validate   Execute AOT artifacts via PJRT, verify golden numerics
              --artifacts DIR
   help       Show this message
@@ -55,7 +58,7 @@ fn default_seq(cfg: &ModelConfig, seq: u64) -> u64 {
 
 const FLAGS: &[&str] = &[
     "model", "mode", "format", "seq", "clusters", "baseline", "config", "csv",
-    "exp", "artifacts",
+    "exp", "artifacts", "requests", "batch", "prompt", "gen", "seed",
 ];
 
 fn main() -> Result<()> {
@@ -65,6 +68,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("breakdown") => cmd_breakdown(&args),
         Some("compare") => cmd_compare(&args),
+        Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -256,6 +260,45 @@ fn cmd_compare(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown experiment {other}"),
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
+    let format = parse_format(args.get_or("format", "fp8"))?;
+    let requests = args.get_u64("requests", 32)? as usize;
+    let batch = args.get_u64("batch", 8)? as usize;
+    let prompt = default_seq(&cfg, args.get_u64("prompt", 0)?);
+    let gen = args.get_u64("gen", 64)?;
+    let seed = args.get_u64("seed", 0)?;
+    let platform = PlatformConfig::with_clusters(args.get_u32("clusters", 16)?);
+    let engine = InferenceEngine::new(platform);
+    anyhow::ensure!(requests > 0, "--requests must be > 0");
+    anyhow::ensure!(batch > 0, "--batch must be > 0");
+    if engine.kv_budget_bytes(&cfg, format) == 0 {
+        anyhow::bail!(
+            "{} weights at {} ({:.1} GB) exceed the {:.1} GB HBM capacity; \
+             try a lower precision (--format fp8)",
+            cfg.name,
+            format.name(),
+            cfg.weight_bytes(format) as f64 / 1e9,
+            engine.platform.interconnect.hbm_capacity_bytes as f64 / 1e9,
+        );
+    }
+    // seed 0 = uniform workload (reproducible headline numbers); any
+    // other seed draws prompt/gen lengths around the requested means.
+    let workload = if seed == 0 {
+        Workload::uniform(requests, prompt, gen)
+    } else {
+        Workload::synthetic(
+            seed,
+            requests,
+            ((prompt / 2).max(1), prompt.max(2) * 2),
+            ((gen / 2).max(1), gen.max(2) * 2),
+        )
+    };
+    let report = engine.serve(&cfg, &workload, batch, format);
+    print!("{}", report::serve_table(&report));
     Ok(())
 }
 

@@ -43,6 +43,26 @@ pub fn images_per_second(cycles_per_image: u64, platform: &PlatformConfig) -> f6
     tokens_per_second_ar(cycles_per_image, platform)
 }
 
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Nearest-rank percentile (`q` in 0..=100); 0 for an empty slice. The
+/// serving report's p50/p99 latency and TTFT come from here.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// Effective HBM bandwidth in GB/s over the run.
 pub fn hbm_bandwidth_gbps(cost: &KernelCost, platform: &PlatformConfig) -> f64 {
     if cost.cycles == 0 {
@@ -126,6 +146,17 @@ mod tests {
         assert!((1.2..=1.8).contains(&ratio), "ratio {ratio}");
         // Weights dominate the fused traffic.
         assert!(fused > cfg.params_per_block() * 2);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 99.0), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
     }
 
     #[test]

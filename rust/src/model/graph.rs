@@ -1,6 +1,11 @@
 //! Layer-graph expansion: one transformer block -> the kernel sequence the
 //! coordinator schedules (paper Fig. 1/2 block topology, with the fusions
 //! of Sec. V-B applied).
+//!
+//! Every layer carries an explicit batch dimension `b` (concurrent
+//! requests whose token rows are stacked) plus the head geometry
+//! (`heads`, `p`) the fused concat+linear needs — the schedule no longer
+//! has to guess P from K.
 
 use super::{Family, Mode, ModelConfig};
 
@@ -36,38 +41,95 @@ impl LayerKind {
 pub struct Layer {
     pub kind: LayerKind,
     pub label: &'static str,
-    /// GEMM: (m, k, n). FA: (heads, sq; skv via `skv`). LN/GELU: (rows, cols).
+    /// Batch size: independent requests stacked along the token/row axis.
+    /// Weights are shared across the batch, so GEMM-like layers see
+    /// `b * m` rows against one weight read, and attention sees
+    /// `b * heads` independent head instances.
+    pub b: u64,
+    /// GEMM: (m, k, n) per request. FA: (heads, sq; skv via `skv`).
+    /// LN/GELU: (rows, cols) per request.
     pub m: u64,
     pub k: u64,
     pub n: u64,
     /// FA only: KV length (= S in NAR self-attention; cache length in AR).
     pub skv: u64,
+    /// Attention heads of the model (FA instance count per request; the
+    /// K-split granularity of the fused concat+linear).
+    pub heads: u64,
+    /// Per-head projection dim P (exact, from the model config — replaces
+    /// the old `cfg_p_guard` divisor guess in the schedule).
+    pub p: u64,
     /// GPT causal masking.
     pub causal: bool,
     /// Activations arrive SPM-resident from the previous fused layer.
     pub fused_input: bool,
 }
 
-/// Expand one transformer block at sequence length `s` (NAR) or for one
-/// token against a `kv_len`-entry cache (AR) into its kernel sequence.
+impl Layer {
+    /// Token rows this layer processes across the whole batch (GEMM-like
+    /// and elementwise layers; FA instead scales head instances).
+    pub fn batch_rows(&self) -> u64 {
+        self.b * self.m
+    }
+
+    /// Independent attention-head instances across the batch (FA layers).
+    pub fn batch_heads(&self) -> u64 {
+        self.b * self.heads
+    }
+}
+
+/// Expand one transformer block for a single request (`b = 1`); see
+/// [`block_layers_batched`].
 pub fn block_layers(cfg: &ModelConfig, mode: Mode, s: u64, kv_len: u64) -> Vec<Layer> {
+    block_layers_batched(cfg, mode, 1, s, kv_len)
+}
+
+/// Expand one transformer block for `b` concurrent requests, each at
+/// sequence length `s` (NAR) or one token against a `kv_len`-entry cache
+/// (AR), into its kernel sequence.
+///
+/// Batching changes *shape*, not topology: the same ten layers come back,
+/// each annotated with `b`. The scheduler prices GEMM-like layers with
+/// `b*m` rows (one weight stream amortized over the batch — the whole
+/// point of batched AR decode) and attention with `b*heads` instances
+/// (each request attends to its own KV history).
+pub fn block_layers_batched(
+    cfg: &ModelConfig,
+    mode: Mode,
+    b: u64,
+    s: u64,
+    kv_len: u64,
+) -> Vec<Layer> {
     let causal = cfg.family == Family::Gpt;
     let (sq, skv) = match mode {
         Mode::Nar => (s, s),
         Mode::Ar => (1, kv_len + 1),
     };
     let hp = cfg.hp();
+    let layer = |kind, label, m, k, n, skv, causal, fused_input| Layer {
+        kind,
+        label,
+        b,
+        m,
+        k,
+        n,
+        skv,
+        heads: cfg.heads,
+        p: cfg.p,
+        causal,
+        fused_input,
+    };
     vec![
-        Layer { kind: LayerKind::Layernorm, label: "ln1", m: sq, k: cfg.e, n: cfg.e, skv: 0, causal: false, fused_input: false },
-        Layer { kind: LayerKind::Gemm, label: "q-proj", m: sq, k: cfg.e, n: hp, skv: 0, causal: false, fused_input: false },
-        Layer { kind: LayerKind::Gemm, label: "k-proj", m: sq, k: cfg.e, n: hp, skv: 0, causal: false, fused_input: false },
-        Layer { kind: LayerKind::Gemm, label: "v-proj", m: sq, k: cfg.e, n: hp, skv: 0, causal: false, fused_input: false },
-        Layer { kind: LayerKind::FlashAttention, label: "attention", m: cfg.heads, k: cfg.p, n: sq, skv, causal, fused_input: false },
-        Layer { kind: LayerKind::FusedConcatLinear, label: "out-proj", m: sq, k: hp, n: cfg.e, skv: 0, causal: false, fused_input: true },
-        Layer { kind: LayerKind::Layernorm, label: "ln2", m: sq, k: cfg.e, n: cfg.e, skv: 0, causal: false, fused_input: false },
-        Layer { kind: LayerKind::Gemm, label: "mlp-up", m: sq, k: cfg.e, n: cfg.ff, skv: 0, causal: false, fused_input: false },
-        Layer { kind: LayerKind::Gelu, label: "gelu", m: sq, k: cfg.ff, n: cfg.ff, skv: 0, causal: false, fused_input: true },
-        Layer { kind: LayerKind::Gemm, label: "mlp-down", m: sq, k: cfg.ff, n: cfg.e, skv: 0, causal: false, fused_input: true },
+        layer(LayerKind::Layernorm, "ln1", sq, cfg.e, cfg.e, 0, false, false),
+        layer(LayerKind::Gemm, "q-proj", sq, cfg.e, hp, 0, false, false),
+        layer(LayerKind::Gemm, "k-proj", sq, cfg.e, hp, 0, false, false),
+        layer(LayerKind::Gemm, "v-proj", sq, cfg.e, hp, 0, false, false),
+        layer(LayerKind::FlashAttention, "attention", cfg.heads, cfg.p, sq, skv, causal, false),
+        layer(LayerKind::FusedConcatLinear, "out-proj", sq, hp, cfg.e, 0, false, true),
+        layer(LayerKind::Layernorm, "ln2", sq, cfg.e, cfg.e, 0, false, false),
+        layer(LayerKind::Gemm, "mlp-up", sq, cfg.e, cfg.ff, 0, false, false),
+        layer(LayerKind::Gelu, "gelu", sq, cfg.ff, cfg.ff, 0, false, true),
+        layer(LayerKind::Gemm, "mlp-down", sq, cfg.ff, cfg.e, 0, false, true),
     ]
 }
 
@@ -85,6 +147,9 @@ mod tests {
         assert_eq!(att.n, 1024);
         assert_eq!(att.skv, 1024);
         assert!(att.causal);
+        assert_eq!(att.b, 1);
+        assert_eq!(att.heads, 16);
+        assert_eq!(att.p, 256);
     }
 
     #[test]
@@ -113,5 +178,33 @@ mod tests {
         assert!(ls.iter().find(|l| l.label == "gelu").unwrap().fused_input);
         assert!(ls.iter().find(|l| l.label == "out-proj").unwrap().fused_input);
         assert!(!ls.iter().find(|l| l.label == "q-proj").unwrap().fused_input);
+    }
+
+    #[test]
+    fn batched_layers_scale_rows_not_topology() {
+        let cfg = ModelConfig::gpt_j();
+        let one = block_layers_batched(&cfg, Mode::Ar, 1, 1, 1024);
+        let eight = block_layers_batched(&cfg, Mode::Ar, 8, 1, 1024);
+        assert_eq!(one.len(), eight.len());
+        for (a, b) in one.iter().zip(&eight) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!((a.m, a.k, a.n, a.skv), (b.m, b.k, b.n, b.skv));
+            assert_eq!(b.b, 8);
+            assert_eq!(b.batch_rows(), 8 * a.m);
+        }
+        let att = eight.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert_eq!(att.batch_heads(), 8 * 16);
+    }
+
+    #[test]
+    fn exact_head_geometry_on_every_layer() {
+        // ViT-B has 12 heads — the old schedule-side divisor guess assumed
+        // 16 whenever K % 16 == 0 (768 = 12*64 is divisible by 16, so it
+        // guessed wrong); the graph now carries the exact values.
+        let cfg = ModelConfig::vit_b();
+        for l in block_layers(&cfg, Mode::Nar, 197, 0) {
+            assert_eq!(l.heads, 12);
+            assert_eq!(l.p, 64);
+        }
     }
 }

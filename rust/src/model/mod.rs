@@ -6,7 +6,7 @@
 
 pub mod graph;
 
-pub use graph::{block_layers, Layer, LayerKind};
+pub use graph::{block_layers, block_layers_batched, Layer, LayerKind};
 
 use crate::arch::FpFormat;
 

@@ -2,24 +2,35 @@
 
 use std::fmt::Write as _;
 
-use crate::coordinator::{Breakdown, RunReport};
+use crate::coordinator::{Breakdown, RunReport, ServeReport};
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
-        "{:<10} {:<5} {:<7} {:>6} {:>14} {:>12} {:>9} {:>8} {:>10} {:>9}",
-        "model", "mode", "fmt", "S", "throughput", "GFLOPS", "util%", "P[W]", "GFLOPS/W", "HBM[GB]"
+        "{:<10} {:<5} {:<7} {:>6} {:>4} {:>14} {:>12} {:>9} {:>8} {:>10} {:>9}",
+        "model",
+        "mode",
+        "fmt",
+        "S",
+        "b",
+        "throughput",
+        "GFLOPS",
+        "util%",
+        "P[W]",
+        "GFLOPS/W",
+        "HBM[GB]"
     );
     for r in rows {
         let _ = writeln!(
             s,
-            "{:<10} {:<5} {:<7} {:>6} {:>9.2} {:<4} {:>12.1} {:>9.2} {:>8.2} {:>10.1} {:>9.3}",
+            "{:<10} {:<5} {:<7} {:>6} {:>4} {:>9.2} {:<4} {:>12.1} {:>9.2} {:>8.2} {:>10.1} {:>9.3}",
             r.model,
             r.mode,
             r.format,
             r.seq,
+            r.batch,
             r.throughput,
             r.throughput_unit.trim_end_matches("/s"),
             r.gflops,
@@ -35,20 +46,23 @@ pub fn runs_table(rows: &[RunReport]) -> String {
 /// CSV export of run reports.
 pub fn runs_csv(rows: &[RunReport]) -> String {
     let mut s = String::from(
-        "model,mode,format,seq,cycles,seconds,throughput,throughput_unit,gflops,fpu_utilization,power_w,gflops_per_w,hbm_gb,c2c_gb\n",
+        "model,mode,format,seq,batch,cycles,seconds,throughput,throughput_unit,decode_throughput,ttft_s,gflops,fpu_utilization,power_w,gflops_per_w,hbm_gb,c2c_gb\n",
     );
     for r in rows {
         let _ = writeln!(
             s,
-            "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
             r.model,
             r.mode,
             r.format,
             r.seq,
+            r.batch,
             r.cycles,
             r.seconds,
             r.throughput,
             r.throughput_unit,
+            r.decode_throughput,
+            r.ttft_s,
             r.gflops,
             r.fpu_utilization,
             r.power_w,
@@ -57,6 +71,58 @@ pub fn runs_csv(rows: &[RunReport]) -> String {
             r.c2c_gb
         );
     }
+    s
+}
+
+/// Render a serving report (the `serve` subcommand's output): aggregate
+/// throughput, latency percentiles, TTFT, and resource use.
+pub fn serve_table(r: &ServeReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "serving {} ({}) — {} requests, max batch {}",
+        r.model, r.format, r.requests, r.max_batch
+    );
+    let _ = writeln!(
+        s,
+        "  completed {} / rejected {}{}",
+        r.completed,
+        r.rejected.len(),
+        if r.rejected.is_empty() {
+            String::new()
+        } else {
+            format!(" (ids {:?}: KV exceeds budget)", r.rejected)
+        }
+    );
+    let _ = writeln!(
+        s,
+        "  tokens: {} prefill + {} generated in {:.3} s",
+        r.prefill_tokens, r.gen_tokens, r.total_seconds
+    );
+    let _ = writeln!(
+        s,
+        "  throughput: {:.1} tokens/s aggregate ({:.1} decode-only), occupancy {:.2}",
+        r.tokens_per_s, r.decode_tokens_per_s, r.avg_batch_occupancy
+    );
+    let _ = writeln!(
+        s,
+        "  TTFT [s]:    mean {:.4}  p50 {:.4}  p99 {:.4}",
+        r.ttft_mean_s, r.ttft_p50_s, r.ttft_p99_s
+    );
+    let _ = writeln!(
+        s,
+        "  latency [s]: mean {:.4}  p50 {:.4}  p99 {:.4}",
+        r.latency_mean_s, r.latency_p50_s, r.latency_p99_s
+    );
+    let _ = writeln!(
+        s,
+        "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB  KV peak {:.2}/{:.2} GB",
+        r.fpu_utilization * 100.0,
+        r.power_w,
+        r.hbm_gb,
+        r.peak_kv_bytes as f64 / 1e9,
+        r.kv_budget_bytes as f64 / 1e9,
+    );
     s
 }
 
@@ -127,6 +193,19 @@ mod tests {
         let t = breakdown_table("vit-b fp32", &b);
         assert!(t.contains("gemm"));
         assert!(t.contains('#'));
+    }
+
+    #[test]
+    fn serve_table_has_percentiles() {
+        let e = InferenceEngine::new(PlatformConfig::occamy());
+        let w = crate::coordinator::Workload::uniform(4, 16, 8);
+        let r = e.serve(&ModelConfig::tiny(), &w, 2, FpFormat::Fp32);
+        let t = serve_table(&r);
+        assert!(t.contains("tiny"));
+        assert!(t.contains("p50"));
+        assert!(t.contains("p99"));
+        assert!(t.contains("TTFT"));
+        assert!(t.contains("tokens/s"));
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! interchange format because jax >= 0.5 emits protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` bindings are not in the offline registry, so the whole
+//! numeric path is gated behind the `pjrt` cargo feature. Without it the
+//! same API surface exists but `Runtime::new` returns a descriptive error
+//! — the timing simulator, serving coordinator, benches, and CLI (minus
+//! `validate`) are fully functional without PJRT.
 
 pub mod detgen;
 pub mod manifest;
@@ -14,10 +20,18 @@ pub use manifest::{ArtifactEntry, GenSpec, Manifest};
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "snitch_fm was built without the `pjrt` feature; \
+     rebuild with `--features pjrt` and a vendored `xla` crate to execute \
+     the AOT artifacts";
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Output arity (the artifacts are lowered with `return_tuple=True`).
     pub n_outputs: usize,
@@ -26,6 +40,7 @@ pub struct Executable {
 impl Executable {
     /// Execute with f32 tensors / i32 scalars and return each output
     /// flattened to `Vec<f32>`.
+    #[cfg(feature = "pjrt")]
     pub fn run(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
         let literals: Vec<xla::Literal> = args
             .iter()
@@ -39,6 +54,13 @@ impl Executable {
             vecs.push(o.to_vec::<f32>()?);
         }
         Ok(vecs)
+    }
+
+    /// PJRT-less stub: always errors (the runtime cannot be constructed
+    /// without the feature, so this is unreachable in practice).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn run(&self, _args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!(NO_PJRT)
     }
 }
 
@@ -57,6 +79,7 @@ impl Arg {
         Arg::F32(data.to_vec(), shape.iter().map(|&d| d as i64).collect())
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             Arg::F32(data, shape) => {
@@ -75,8 +98,10 @@ impl Arg {
 
 /// The runtime: one PJRT CPU client + a compiled-executable cache.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     pub manifest: Manifest,
+    #[allow(dead_code)]
     cache: HashMap<String, Executable>,
 }
 
@@ -87,18 +112,32 @@ impl Runtime {
     }
 
     /// Create a runtime over a specific artifacts directory.
+    #[cfg(feature = "pjrt")]
     pub fn with_dir(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
         Ok(Runtime { client, manifest, cache: HashMap::new() })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn with_dir(_dir: &Path) -> Result<Runtime> {
+        anyhow::bail!(NO_PJRT)
+    }
+
     /// PJRT platform name (diagnostics).
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "pjrt-disabled".to_string()
+        }
     }
 
     /// Compile (or fetch from cache) an artifact by manifest name.
+    #[cfg(feature = "pjrt")]
     pub fn load(&mut self, name: &str) -> Result<&Executable> {
         if !self.cache.contains_key(name) {
             let entry = self.manifest.get(name)?.clone();
@@ -118,6 +157,11 @@ impl Runtime {
             );
         }
         Ok(&self.cache[name])
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&mut self, _name: &str) -> Result<&Executable> {
+        anyhow::bail!(NO_PJRT)
     }
 
     /// Generate the manifest's deterministic inputs for an artifact
@@ -175,6 +219,7 @@ impl Runtime {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn arg_literal_shapes() {
         let a = Arg::F32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
@@ -188,5 +233,24 @@ mod tests {
     fn default_dir_points_at_workspace_artifacts() {
         let d = Manifest::default_dir();
         assert!(d.ends_with("artifacts"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn runtime_without_pjrt_errors_descriptively() {
+        let err = Runtime::new().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn arg_constructor_shapes() {
+        let a = Arg::f32(&[1.0, 2.0], &[2, 1]);
+        match a {
+            Arg::F32(d, s) => {
+                assert_eq!(d.len(), 2);
+                assert_eq!(s, vec![2, 1]);
+            }
+            _ => panic!("wrong variant"),
+        }
     }
 }

@@ -1,0 +1,238 @@
+//! Batch-aware pricing + serving coordinator invariants:
+//!
+//! * b = 1 prices identically to the single-request path (the refactor
+//!   must not move any legacy number),
+//! * batched AR FPU utilization is monotonically non-decreasing in b,
+//! * the batcher never admits more KV bytes than the budget,
+//! * serving reports are internally consistent.
+
+use snitch_fm::arch::{FpFormat, MemLevel, PlatformConfig};
+use snitch_fm::coordinator::schedule::{
+    block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,
+};
+use snitch_fm::coordinator::{
+    BatcherConfig, ContinuousBatcher, InferenceEngine, Request, Workload,
+};
+use snitch_fm::kernels;
+use snitch_fm::kernels::gemm::OperandHome;
+use snitch_fm::metrics;
+use snitch_fm::model::{block_layers, Family, LayerKind, Mode, ModelConfig};
+
+/// Deterministic LCG over a seed; yields values in [lo, hi].
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self, lo: u64, hi: u64) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        lo + (self.0 >> 33) % (hi - lo + 1)
+    }
+
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.next(0, xs.len() as u64 - 1) as usize]
+    }
+}
+
+fn random_cfg(rng: &mut Rng) -> ModelConfig {
+    let heads = rng.pick(&[4u64, 8, 12, 16]);
+    ModelConfig {
+        name: "prop".into(),
+        family: Family::Gpt,
+        blocks: rng.next(1, 4),
+        e: rng.pick(&[256u64, 512, 768, 1024]),
+        p: rng.pick(&[32u64, 64, 128]),
+        heads,
+        ff: rng.pick(&[512u64, 1024, 4096]),
+        seq: 256,
+    }
+}
+
+#[test]
+fn b1_prices_identically_to_single_request_path() {
+    let p = PlatformConfig::occamy();
+    let mut rng = Rng(0xB1);
+    for _ in 0..25 {
+        let cfg = random_cfg(&mut rng);
+        let fmt = rng.pick(&[FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8]);
+        let (mode, s, kv) = if rng.next(0, 1) == 0 {
+            (Mode::Nar, rng.next(32, 512), 0)
+        } else {
+            (Mode::Ar, 1, rng.next(16, 1024))
+        };
+        let single = block_cost(&cfg, mode, s, kv, fmt, &p);
+        let batched = block_cost_batched(&cfg, mode, 1, s, kv, fmt, &p);
+        assert_eq!(single.total, batched.total, "{cfg:?} {mode:?} {fmt}");
+        assert_eq!(single.cycles, batched.cycles);
+        let seq = if mode == Mode::Nar { s } else { kv };
+        let m1 = model_cost(&cfg, mode, seq, fmt, &p);
+        let mb = model_cost_batched(&cfg, mode, 1, seq, fmt, &p);
+        assert_eq!(m1.total, mb.total);
+    }
+}
+
+#[test]
+fn unified_layer_dispatch_matches_direct_kernel_calls() {
+    // The old schedule had two FusedConcatLinear dispatch sites (one of
+    // them guessing P from K); the unified path must price every layer
+    // exactly as a direct kernel call with the exact geometry.
+    let p = PlatformConfig::occamy();
+    for cfg in [ModelConfig::vit_b(), ModelConfig::gpt_j(), ModelConfig::tiny()] {
+        for (mode, s, kv) in [(Mode::Nar, cfg.seq, 0), (Mode::Ar, 1, 256)] {
+            if cfg.family == Family::Vit && mode == Mode::Ar {
+                continue;
+            }
+            for layer in block_layers(&cfg, mode, s, kv) {
+                let fmt = FpFormat::Fp32;
+                let got = layer_cost(&layer, fmt, &p);
+                let want = match layer.kind {
+                    LayerKind::Gemm => kernels::gemm_cost(
+                        layer.m,
+                        layer.k,
+                        layer.n,
+                        fmt,
+                        &p,
+                        OperandHome {
+                            a: if layer.fused_input {
+                                MemLevel::Spm
+                            } else {
+                                MemLevel::Hbm
+                            },
+                            b: MemLevel::Hbm,
+                            c: MemLevel::Hbm,
+                        },
+                    ),
+                    LayerKind::FlashAttention => kernels::flash_attention_cost(
+                        cfg.heads, layer.n, layer.skv, cfg.p, fmt, layer.causal, &p,
+                    ),
+                    LayerKind::FusedConcatLinear => kernels::fused_concat_linear_cost(
+                        layer.m, cfg.heads, cfg.p, layer.n, fmt, &p,
+                    ),
+                    LayerKind::Layernorm => {
+                        kernels::layernorm_cost(layer.m, layer.k, fmt, &p)
+                    }
+                    LayerKind::Gelu => {
+                        kernels::gelu_cost(layer.m, layer.k, fmt, layer.fused_input, &p)
+                    }
+                };
+                assert_eq!(got, want, "{} {:?} {mode:?}", cfg.name, layer.label);
+            }
+        }
+    }
+}
+
+#[test]
+fn ar_utilization_monotone_in_batch() {
+    let p = PlatformConfig::occamy();
+    for (cfg, fmt) in [
+        (ModelConfig::gpt_j(), FpFormat::Fp32),
+        (ModelConfig::gpt_j(), FpFormat::Fp8),
+        (ModelConfig::gpt3_xl(), FpFormat::Fp32),
+    ] {
+        let mut prev = 0.0;
+        for b in [1u64, 2, 4, 8, 16, 32] {
+            let mc = model_cost_batched(&cfg, Mode::Ar, b, 1024, fmt, &p);
+            let util = metrics::fpu_utilization(&mc.total, fmt, &p);
+            assert!(
+                util >= prev,
+                "{} {fmt} b={b}: util {util} < {prev}",
+                cfg.name
+            );
+            prev = util;
+        }
+        // ...and the lift is substantial, heading for the NAR band.
+        let one = model_cost_batched(&cfg, Mode::Ar, 1, 1024, fmt, &p);
+        let u1 = metrics::fpu_utilization(&one.total, fmt, &p);
+        assert!(prev > 5.0 * u1, "{}: b=32 util {prev} vs b=1 {u1}", cfg.name);
+    }
+}
+
+#[test]
+fn batched_flops_exactly_linear_in_b() {
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::gpt_j();
+    let one = model_cost_batched(&cfg, Mode::Ar, 1, 512, FpFormat::Fp32, &p);
+    for b in [2u64, 4, 8, 32] {
+        let mb = model_cost_batched(&cfg, Mode::Ar, b, 512, FpFormat::Fp32, &p);
+        assert_eq!(mb.total.flops, b * one.total.flops, "b={b}");
+        // Batched cycles grow sublinearly: that is the amortization.
+        assert!(mb.cycles < b * one.cycles, "b={b}");
+    }
+}
+
+#[test]
+fn batcher_never_exceeds_kv_budget() {
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng(0xC0FFEE);
+    for _ in 0..20 {
+        let n = rng.next(1, 12) as usize;
+        let w = Workload::synthetic(rng.next(1, 1 << 30), n, (8, 64), (4, 32));
+        let one = w.requests.iter().map(|r| r.kv_bytes(&cfg)).max().unwrap();
+        let budget = one * rng.next(1, 4);
+        let max_batch = rng.next(1, 8) as usize;
+        let b = ContinuousBatcher::new(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            BatcherConfig { max_batch, kv_budget_bytes: budget },
+        );
+        let r = b.run(&w);
+        assert!(
+            r.peak_kv_bytes <= budget,
+            "peak {} > budget {budget}",
+            r.peak_kv_bytes
+        );
+        assert!(r.avg_batch_occupancy <= max_batch as f64 + 1e-9);
+        assert_eq!(r.completed + r.rejected.len(), n, "no request lost");
+    }
+}
+
+#[test]
+fn serve_report_consistent_end_to_end() {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let cfg = ModelConfig::gpt_j();
+    let w = Workload::uniform(32, 1024, 64);
+    let r = e.serve(&cfg, &w, 8, FpFormat::Fp8);
+    assert_eq!(r.completed, 32);
+    assert!(r.rejected.is_empty());
+    assert_eq!(r.gen_tokens, 32 * 64);
+    assert_eq!(r.prefill_tokens, 32 * 1024);
+    assert!(r.ttft_p50_s <= r.ttft_p99_s);
+    assert!(r.latency_p50_s <= r.latency_p99_s);
+    assert!(r.ttft_mean_s <= r.latency_mean_s);
+    assert!(r.decode_tokens_per_s >= r.tokens_per_s);
+    assert!(r.avg_batch_occupancy > 1.0, "{}", r.avg_batch_occupancy);
+    // Serving at batch 8 must beat 32 sequential run_generate calls.
+    let serial = e.run_generate(&cfg, 1024, 64, FpFormat::Fp8);
+    let serial_tokens_per_s = serial.throughput;
+    assert!(
+        r.tokens_per_s > 2.0 * serial_tokens_per_s,
+        "serving {} vs serial {serial_tokens_per_s}",
+        r.tokens_per_s
+    );
+    // Utilization climbs well above the single-request AR ceiling.
+    let single = e.run_ar_step(&cfg, 1024, FpFormat::Fp8);
+    assert!(r.fpu_utilization > 2.0 * single.fpu_utilization);
+}
+
+#[test]
+fn run_batch_b1_equals_run_generate() {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let cfg = ModelConfig::tiny();
+    let a = e.run_generate(&cfg, 32, 8, FpFormat::Fp32);
+    let b = e.run_batch(&cfg, 1, 32, 8, FpFormat::Fp32);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.throughput, b.throughput);
+    assert_eq!(a.decode_throughput, b.decode_throughput);
+}
+
+#[test]
+fn rejected_oversize_request_reported() {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let cfg = ModelConfig::gpt_j();
+    let mut w = Workload::uniform(2, 128, 16);
+    // A single request whose KV cache alone dwarfs the HBM budget.
+    w.requests.push(Request { id: 2, prompt_len: 40_000_000, gen_tokens: 1 });
+    let r = e.serve(&cfg, &w, 4, FpFormat::Fp8);
+    assert_eq!(r.completed, 2);
+    assert_eq!(r.rejected, vec![2]);
+}

@@ -2,7 +2,10 @@
 //! the Python golden fingerprints — the proof that the Rust request path
 //! is numerically equivalent to the L1/L2 stack without Python present.
 //!
-//! Requires `make artifacts` (the Makefile orders this before cargo test).
+//! Requires `make artifacts` (the Makefile orders this before cargo test)
+//! and the `pjrt` cargo feature (vendored `xla` crate); without the
+//! feature this whole file compiles to nothing.
+#![cfg(feature = "pjrt")]
 
 use snitch_fm::coordinator::KvCache;
 use snitch_fm::runtime::{Arg, Runtime};
