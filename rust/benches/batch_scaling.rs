@@ -18,6 +18,7 @@ fn main() {
     let e = InferenceEngine::new(PlatformConfig::occamy());
     let cfg = ModelConfig::gpt_j();
     let seq = 1024;
+    let mut json_rows = Vec::new();
 
     common::header("batch scaling", "GPT-J batched AR decode at KV=1024");
     for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
@@ -61,11 +62,25 @@ fn main() {
             100.0 * rows.last().unwrap().fpu_utilization / nar.fpu_utilization
         );
         common::report_timing(&format!("batch-sweep-{}", fmt.name()), t);
+        json_rows.extend(rows);
     }
 
-    common::header("serving", "continuous batching, 32 requests, batch 8, FP8");
-    let w = Workload::uniform(32, 1024, 64);
+    let requests = if common::smoke() { 8 } else { 32 };
+    common::header(
+        "serving",
+        &format!("continuous batching, {requests} requests, batch 8, FP8"),
+    );
+    let w = Workload::uniform(requests, 1024, 64);
     let (t, r) = common::time_median(3, || e.serve(&cfg, &w, 8, FpFormat::Fp8));
     print!("{}", report::serve_table(&r));
-    common::report_timing("serve-32req-b8", t);
+    common::report_timing(&format!("serve-{requests}req-b8"), t);
+
+    common::write_bench_json(
+        "batch_scaling",
+        &format!(
+            "{{\"sweep\":{},\"serve\":{}}}",
+            report::runs_json(&json_rows),
+            report::serve_json(&r)
+        ),
+    );
 }

@@ -30,3 +30,23 @@ pub fn report_timing(name: &str, seconds: f64) {
 pub fn header(id: &str, what: &str) {
     println!("==== {id}: {what} ====");
 }
+
+/// Whether the bench should run its reduced CI-smoke configuration
+/// (`BENCH_SMOKE=1`, set by the CI bench-smoke job).
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Write a bench's JSON results to `$BENCH_JSON_DIR/BENCH_<name>.json`
+/// when `BENCH_JSON_DIR` is set (the CI job uploads these as workflow
+/// artifacts, seeding the perf-trajectory record). A no-op otherwise.
+#[allow(dead_code)]
+pub fn write_bench_json(name: &str, json: &str) {
+    let Some(dir) = std::env::var_os("BENCH_JSON_DIR") else { return };
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("bench-json written: {}", path.display()),
+        Err(e) => eprintln!("bench-json write failed ({}): {e}", path.display()),
+    }
+}

@@ -22,7 +22,11 @@ fn main() {
         )
     });
     println!("layer view (concat+linear only):");
-    println!("  fused   (c2c reduction): {:>8.1} MB HBM, {:>8.1} MB c2c", f.hbm_bytes() as f64 / 1e6, f.c2c_bytes as f64 / 1e6);
+    println!(
+        "  fused   (c2c reduction): {:>8.1} MB HBM, {:>8.1} MB c2c",
+        f.hbm_bytes() as f64 / 1e6,
+        f.c2c_bytes as f64 / 1e6
+    );
     println!("  unfused (HBM bounce):    {:>8.1} MB HBM", u.hbm_bytes() as f64 / 1e6);
     println!("  reduction: {:.2}x", u.hbm_bytes() as f64 / f.hbm_bytes() as f64);
     common::report_timing("fig1-layer", t);

@@ -31,7 +31,8 @@ fn main() {
     common::report_timing("kernels::flash_attention_cost", t);
 
     let cfg = ModelConfig::gpt_j();
-    let (t, _) = common::time_median(20, || block_cost(&cfg, Mode::Nar, 1024, 0, FpFormat::Fp32, &p));
+    let (t, _) =
+        common::time_median(20, || block_cost(&cfg, Mode::Nar, 1024, 0, FpFormat::Fp32, &p));
     common::report_timing("coordinator::block_cost(gpt-j nar)", t);
 
     let (t, _) = common::time_median(10, || model_cost(&cfg, Mode::Nar, 2048, FpFormat::Fp8, &p));

@@ -1,0 +1,129 @@
+//! Serving-scheduler sweep: paged KV vs full reservation, chunked vs
+//! monolithic prefill, priority classes, open-loop Poisson arrivals.
+//!
+//! The headline claim this bench defends: on a mixed workload where a
+//! long batch-class prompt shares the system with short interactive
+//! requests, chunked prefill cuts the interactive p99 TTFT against the
+//! monolithic-prefill FCFS configuration, and paged KV admits more
+//! concurrent work than full-length reservation from the same HBM budget.
+//!
+//! Short mode (`BENCH_SMOKE=1`) shrinks the request count for CI; with
+//! `BENCH_JSON_DIR` set the sweep is written to `BENCH_serve_scheduler.json`.
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Request, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::report;
+
+/// Mixed serving trace: one long batch-ingest prompt (prefill-only,
+/// patient class) offered at t=0, plus `n` short interactive requests
+/// arriving open-loop at `rate_per_s`. The rate keeps the interactive
+/// side underloaded and the arrivals inside the long prompt's prefill
+/// window — the regime where monolithic prefill visibly blocks TTFT.
+fn mixed_workload(n: usize, rate_per_s: f64) -> Workload {
+    let mut w = Workload::synthetic(42, n, (64, 160), (16, 32))
+        .with_priority_classes(2)
+        .with_poisson_arrivals(7, rate_per_s);
+    w.requests.push(Request::new(n, 2048, 0).with_class(1));
+    w
+}
+
+fn main() {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let cfg = ModelConfig::gpt_j();
+    let n = if common::smoke() { 8 } else { 32 };
+    let w = mixed_workload(n, 1.0);
+
+    let sweep: Vec<(&str, BatcherConfig)> = [
+        ("reserve-full fcfs", {
+            let mut o = BatcherConfig::new(8, 0);
+            o.reserve_full = true;
+            o
+        }),
+        ("paged", BatcherConfig::new(8, 0)),
+        ("paged+chunk512", {
+            let mut o = BatcherConfig::new(8, 0);
+            o.prefill_chunk = 512;
+            o
+        }),
+        ("paged+chunk256", {
+            let mut o = BatcherConfig::new(8, 0);
+            o.prefill_chunk = 256;
+            o
+        }),
+        ("paged+chunk128", {
+            let mut o = BatcherConfig::new(8, 0);
+            o.prefill_chunk = 128;
+            o
+        }),
+    ]
+    .into_iter()
+    .collect();
+
+    let (t, rows) = common::time_median(3, || {
+        sweep
+            .iter()
+            .map(|(label, opts)| (*label, e.serve_with(&cfg, &w, *opts, FpFormat::Fp8)))
+            .collect::<Vec<_>>()
+    });
+
+    common::header(
+        "serve scheduler",
+        "GPT-J FP8, long batch prompt + short interactive poisson traffic",
+    );
+    println!(
+        "{:<20} {:>10} {:>7} {:>9} {:>9} {:>9} {:>6} {:>7}",
+        "config", "tokens/s", "occup", "ttftP50", "ttftP99", "queueP99", "evict", "chunks"
+    );
+    for (label, r) in &rows {
+        println!(
+            "{label:<20} {:>10.1} {:>7.2} {:>9.4} {:>9.4} {:>9.4} {:>6} {:>7}",
+            r.tokens_per_s,
+            r.avg_batch_occupancy,
+            r.ttft_p50_s,
+            r.ttft_p99_s,
+            r.queue_p99_s,
+            r.preemptions,
+            r.prefill_chunks,
+        );
+    }
+    common::report_timing("serve-scheduler-sweep", t);
+
+    let monolithic = &rows[1].1;
+    let chunked = &rows[3].1;
+    assert_eq!(monolithic.completed, n + 1);
+    assert_eq!(chunked.completed, n + 1);
+    assert!(
+        chunked.ttft_p99_s < monolithic.ttft_p99_s,
+        "chunked prefill must cut interactive p99 TTFT: {} !< {}",
+        chunked.ttft_p99_s,
+        monolithic.ttft_p99_s
+    );
+
+    // Page-size sensitivity at the chunked operating point.
+    println!();
+    common::header("page size", "KV page granularity sweep (chunk 256)");
+    for page_tokens in [8u64, 16, 64, 256] {
+        let mut opts = BatcherConfig::new(8, 0);
+        opts.prefill_chunk = 256;
+        opts.page_tokens = page_tokens;
+        let r = e.serve_with(&cfg, &w, opts, FpFormat::Fp8);
+        println!(
+            "page {page_tokens:>4} tokens: {:>8} pages, peak {:>6.2} GB, {:>8.1} tokens/s",
+            r.total_pages,
+            r.peak_kv_bytes as f64 / 1e9,
+            r.tokens_per_s
+        );
+        assert!(r.peak_kv_bytes <= r.kv_budget_bytes);
+    }
+
+    let json: Vec<String> = rows
+        .iter()
+        .map(|(label, r)| {
+            format!("{{\"config\":\"{label}\",\"report\":{}}}", report::serve_json(r))
+        })
+        .collect();
+    common::write_bench_json("serve_scheduler", &format!("[{}]", json.join(",")));
+}

@@ -14,7 +14,8 @@ use snitch_fm::soa;
 fn main() {
     common::header("Table IV", "SoA comparison, GPT NAR FP16");
     let e = InferenceEngine::new(PlatformConfig::occamy());
-    let (t, r) = common::time_median(5, || e.run_nar(&ModelConfig::gpt3_xl(), 1024, FpFormat::Fp16));
+    let (t, r) =
+        common::time_median(5, || e.run_nar(&ModelConfig::gpt3_xl(), 1024, FpFormat::Fp16));
     let ours = soa::OursRow::from_run(r.gflops, r.fpu_utilization, e.platform.total_cores());
     println!("{:<10} {:>8} {:>9} {:>12} {:>8}", "platform", "CUs", "TFLOPS", "TFLOPS/CU", "util%");
     for s in soa::table4_soa() {

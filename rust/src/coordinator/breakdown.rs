@@ -75,7 +75,10 @@ impl Breakdown {
         };
         let buckets = [
             ("gemm (mlp)", sum(&["mlp-up", "mlp-down"])),
-            ("flashattention-2 (mha)", sum(&["q-proj", "k-proj", "v-proj", "attention", "out-proj"])),
+            (
+                "flashattention-2 (mha)",
+                sum(&["q-proj", "k-proj", "v-proj", "attention", "out-proj"]),
+            ),
             ("layernorm", sum(&["ln1", "ln2"])),
             ("gelu", sum(&["gelu"])),
         ];

@@ -177,7 +177,11 @@ impl InferenceEngine {
         total = total.then(decode);
         let seconds = self.platform.cycles_to_seconds(total.cycles);
         let produced = b * gen_tokens;
-        let tp = if total.cycles > 0 { produced as f64 / seconds } else { 0.0 };
+        let tp = if total.cycles > 0 {
+            produced as f64 / seconds
+        } else {
+            0.0
+        };
         let mut r = self.report(
             cfg,
             Mode::Ar,
@@ -197,10 +201,9 @@ impl InferenceEngine {
         r
     }
 
-    /// Serve a multi-request workload with continuous batching: requests
-    /// are admitted FCFS against the HBM KV budget (capacity minus
-    /// resident weights), prefill and decode interleave, and the full
-    /// trace is priced. `max_batch` caps concurrent decode slots.
+    /// Serve a multi-request workload with continuous batching and the
+    /// default scheduler policy (paged KV, monolithic prefill, single
+    /// priority class). `max_batch` caps concurrent resident requests.
     pub fn serve(
         &self,
         cfg: &ModelConfig,
@@ -208,24 +211,29 @@ impl InferenceEngine {
         max_batch: usize,
         fmt: FpFormat,
     ) -> ServeReport {
-        let budget = self.kv_budget_bytes(cfg, fmt);
-        let batcher = ContinuousBatcher::new(
-            cfg,
-            &self.platform,
-            fmt,
-            BatcherConfig { max_batch, kv_budget_bytes: budget },
-        );
-        batcher.run(workload)
+        self.serve_with(cfg, workload, BatcherConfig::new(max_batch, 0), fmt)
+    }
+
+    /// Serve with explicit scheduler policy (page size, prefill chunking,
+    /// full-reservation baseline, aging). A zero `kv_budget_bytes` in
+    /// `opts` resolves to the platform's budget (HBM capacity minus
+    /// resident weights at the serving precision; see
+    /// [`ContinuousBatcher::new`]).
+    pub fn serve_with(
+        &self,
+        cfg: &ModelConfig,
+        workload: &Workload,
+        opts: BatcherConfig,
+        fmt: FpFormat,
+    ) -> ServeReport {
+        ContinuousBatcher::new(cfg, &self.platform, fmt, opts).run(workload)
     }
 
     /// HBM bytes left for KV caches once the model weights are resident
     /// at serving precision. Zero when the weights alone exceed capacity
     /// (the serve path then rejects everything rather than pretending).
     pub fn kv_budget_bytes(&self, cfg: &ModelConfig, fmt: FpFormat) -> u64 {
-        self.platform
-            .interconnect
-            .hbm_capacity_bytes
-            .saturating_sub(cfg.weight_bytes(fmt))
+        crate::coordinator::kv_paging::platform_kv_budget_bytes(cfg, fmt, &self.platform)
     }
 
     /// Fig. 10 latency breakdown for a pass.

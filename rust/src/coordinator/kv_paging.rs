@@ -1,0 +1,269 @@
+//! Paged KV-cache allocation (vLLM-style PagedAttention bookkeeping).
+//!
+//! The PR-1 batcher reserved every request's *full-length* KV cache
+//! (prompt + all tokens it may ever generate) at admission, so the HBM
+//! budget was exhausted by reservations that mostly sat empty during
+//! decode. This module carves the KV budget into fixed-size pages of
+//! `page_tokens` tokens each; a request holds a [`PageTable`] of pages
+//! covering exactly the tokens it has materialized so far, grows it
+//! on demand one decode token at a time, and returns every page on
+//! retirement (or preemption).
+//!
+//! The allocator is pure bookkeeping — the timing model prices KV traffic
+//! through the kernel costs — but its invariants are the serving
+//! scheduler's safety argument: pages are never double-allocated, bytes
+//! in use never exceed the budget, and a drained allocator is whole again.
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::kv_cache::KvCache;
+use crate::model::ModelConfig;
+
+/// HBM bytes left for KV caches once the model weights are resident at
+/// the serving precision — zero when the weights alone exceed capacity
+/// (the serve path then rejects everything rather than pretending).
+/// Single source of the budget formula for `InferenceEngine` and
+/// `ContinuousBatcher`.
+pub fn platform_kv_budget_bytes(
+    cfg: &ModelConfig,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> u64 {
+    platform.interconnect.hbm_capacity_bytes.saturating_sub(cfg.weight_bytes(fmt))
+}
+
+/// Geometry of one request's KV footprint: bytes per cached token (across
+/// all transformer blocks, K + V, at the serving precision) and the page
+/// granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvGeometry {
+    /// KV bytes one token occupies across every block (K and V).
+    pub token_bytes: u64,
+    /// Tokens per page (fixed allocation granularity).
+    pub page_tokens: u64,
+}
+
+impl KvGeometry {
+    /// Geometry for `cfg` served at `fmt`, consistent with
+    /// [`KvCache::bytes_for`] scaled to the serving element size (the same
+    /// accounting `Request::kv_bytes_at` uses).
+    pub fn new(cfg: &ModelConfig, fmt: FpFormat, page_tokens: u64) -> KvGeometry {
+        let f32_token =
+            cfg.blocks * KvCache::bytes_for(cfg.heads as usize, 1, cfg.p as usize) as u64;
+        KvGeometry {
+            token_bytes: f32_token / std::mem::size_of::<f32>() as u64 * fmt.bytes(),
+            page_tokens: page_tokens.max(1),
+        }
+    }
+
+    /// Bytes one page occupies.
+    pub fn page_bytes(&self) -> u64 {
+        self.token_bytes * self.page_tokens
+    }
+
+    /// Pages needed to hold `tokens` cached tokens.
+    pub fn pages_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.page_tokens)
+    }
+}
+
+/// Per-request mapping from KV positions to allocated pages. Page `i`
+/// holds tokens `[i * page_tokens, (i + 1) * page_tokens)` of the
+/// request's cache.
+#[derive(Debug, Clone, Default)]
+pub struct PageTable {
+    pages: Vec<u32>,
+}
+
+impl PageTable {
+    pub fn new() -> PageTable {
+        PageTable::default()
+    }
+
+    /// Allocated pages, in position order.
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// Tokens this table can hold.
+    pub fn capacity_tokens(&self, geom: &KvGeometry) -> u64 {
+        self.pages.len() as u64 * geom.page_tokens
+    }
+}
+
+/// Fixed-pool page allocator over the HBM KV budget.
+///
+/// Pages are identified by dense `u32` ids; a never-yet-used id is handed
+/// out from a cursor, retired pages go to a recycle stack. A page id is
+/// therefore owned by at most one [`PageTable`] at any time (the no-double-
+/// allocation invariant the property tests check from the outside).
+#[derive(Debug, Clone)]
+pub struct PagedKvAllocator {
+    geom: KvGeometry,
+    total_pages: u64,
+    next_fresh: u32,
+    recycled: Vec<u32>,
+    in_use: u64,
+    peak_in_use: u64,
+}
+
+impl PagedKvAllocator {
+    /// Carve `budget_bytes` into pages of `geom.page_bytes()`.
+    pub fn new(budget_bytes: u64, geom: KvGeometry) -> PagedKvAllocator {
+        let total_pages =
+            (budget_bytes / geom.page_bytes().max(1)).min(u32::MAX as u64);
+        PagedKvAllocator {
+            geom,
+            total_pages,
+            next_fresh: 0,
+            recycled: Vec::new(),
+            in_use: 0,
+            peak_in_use: 0,
+        }
+    }
+
+    pub fn geometry(&self) -> KvGeometry {
+        self.geom
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> u64 {
+        self.total_pages - self.in_use
+    }
+
+    pub fn used_pages(&self) -> u64 {
+        self.in_use
+    }
+
+    /// Bytes currently mapped (always <= the budget by construction).
+    pub fn bytes_in_use(&self) -> u64 {
+        self.in_use * self.geom.page_bytes()
+    }
+
+    /// High-water mark of mapped bytes over the allocator's lifetime.
+    pub fn peak_bytes_in_use(&self) -> u64 {
+        self.peak_in_use * self.geom.page_bytes()
+    }
+
+    /// Whether a request that will cache `tokens` tokens can *ever* be
+    /// served from this pool (upfront-rejection check).
+    pub fn fits_pool(&self, tokens: u64) -> bool {
+        self.geom.pages_for(tokens) <= self.total_pages
+    }
+
+    /// Grow `table` until it holds at least `tokens` tokens. All-or-
+    /// nothing: on failure the table is unchanged and `false` returns.
+    pub fn try_grow(&mut self, table: &mut PageTable, tokens: u64) -> bool {
+        let want = self.geom.pages_for(tokens);
+        let have = table.pages.len() as u64;
+        if want <= have {
+            return true;
+        }
+        let need = want - have;
+        if need > self.free_pages() {
+            return false;
+        }
+        for _ in 0..need {
+            let id = match self.recycled.pop() {
+                Some(id) => id,
+                None => {
+                    let id = self.next_fresh;
+                    self.next_fresh += 1;
+                    id
+                }
+            };
+            table.pages.push(id);
+        }
+        self.in_use += need;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        true
+    }
+
+    /// Return every page of `table` to the pool (retirement/preemption).
+    pub fn release(&mut self, table: &mut PageTable) {
+        self.in_use -= table.pages.len() as u64;
+        self.recycled.append(&mut table.pages);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> KvGeometry {
+        KvGeometry { token_bytes: 1024, page_tokens: 16 }
+    }
+
+    #[test]
+    fn geometry_matches_request_accounting() {
+        use crate::coordinator::workload::Request;
+        let cfg = ModelConfig::tiny();
+        for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+            let g = KvGeometry::new(&cfg, fmt, 16);
+            let r = Request::new(0, 48, 16);
+            assert_eq!(g.token_bytes * r.kv_capacity(), r.kv_bytes_at(&cfg, fmt));
+        }
+    }
+
+    #[test]
+    fn pages_round_up() {
+        let g = geom();
+        assert_eq!(g.pages_for(0), 0);
+        assert_eq!(g.pages_for(1), 1);
+        assert_eq!(g.pages_for(16), 1);
+        assert_eq!(g.pages_for(17), 2);
+        assert_eq!(g.page_bytes(), 16 * 1024);
+    }
+
+    #[test]
+    fn grow_is_incremental_and_all_or_nothing() {
+        let mut a = PagedKvAllocator::new(4 * 16 * 1024, geom()); // 4 pages
+        let mut t = PageTable::new();
+        assert!(a.try_grow(&mut t, 17)); // 2 pages
+        assert_eq!(t.len(), 2);
+        assert_eq!(a.free_pages(), 2);
+        assert!(a.try_grow(&mut t, 32)); // already covered
+        assert_eq!(t.len(), 2);
+        assert!(!a.try_grow(&mut t, 16 * 7)); // needs 5 more than exist
+        assert_eq!(t.len(), 2, "failed grow must not partially allocate");
+        assert!(a.try_grow(&mut t, 64));
+        assert_eq!(a.free_pages(), 0);
+    }
+
+    #[test]
+    fn release_returns_every_page() {
+        let mut a = PagedKvAllocator::new(8 * 16 * 1024, geom());
+        let mut t1 = PageTable::new();
+        let mut t2 = PageTable::new();
+        assert!(a.try_grow(&mut t1, 50));
+        assert!(a.try_grow(&mut t2, 60));
+        assert_eq!(a.used_pages(), 8);
+        assert_eq!(a.peak_bytes_in_use(), 8 * 16 * 1024);
+        a.release(&mut t1);
+        a.release(&mut t2);
+        assert_eq!(a.used_pages(), 0);
+        assert_eq!(a.free_pages(), a.total_pages());
+        assert!(t1.is_empty() && t2.is_empty());
+        // Recycled pages are reusable.
+        let mut t3 = PageTable::new();
+        assert!(a.try_grow(&mut t3, 8 * 16));
+        assert_eq!(a.free_pages(), 0);
+    }
+
+    #[test]
+    fn pool_fit_check() {
+        let a = PagedKvAllocator::new(4 * 16 * 1024, geom());
+        assert!(a.fits_pool(64));
+        assert!(!a.fits_pool(65));
+    }
+}

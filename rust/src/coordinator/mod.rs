@@ -4,22 +4,26 @@
 //! with the kernel timing models (`schedule`), aggregates per-kernel-class
 //! breakdowns (`breakdown`, Fig. 10), runs end-to-end NAR/AR passes and
 //! batched multi-request runs (`engine`), schedules multi-user serving
-//! traffic with continuous batching against the HBM KV budget
-//! (`workload`, `batcher`), and manages the decode-time KV cache
-//! (`kv_cache`) used by the numeric runtime path.
+//! traffic with paged-KV continuous batching, chunked prefill and
+//! priority-aware admission (`workload`, `kv_paging`, `batcher`), and
+//! manages the decode-time KV cache (`kv_cache`) used by the numeric
+//! runtime path.
 
 pub mod batcher;
 pub mod breakdown;
 pub mod engine;
 pub mod kv_cache;
+pub mod kv_paging;
 pub mod schedule;
 pub mod workload;
 
-pub use batcher::{BatcherConfig, ContinuousBatcher, RequestStats, ServeReport};
+pub use batcher::{BatcherConfig, ClassStats, ContinuousBatcher, RequestStats, ServeReport};
 pub use breakdown::{Breakdown, KernelClassShare};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;
+pub use kv_paging::{platform_kv_budget_bytes, KvGeometry, PagedKvAllocator, PageTable};
 pub use schedule::{
-    block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched, ModelCost,
+    block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,
+    model_cost_decode, ModelCost,
 };
-pub use workload::{Request, Workload};
+pub use workload::{Arrival, Request, Workload};

@@ -16,19 +16,47 @@ use std::collections::HashMap;
 use crate::arch::{FpFormat, MemLevel, PlatformConfig};
 use crate::kernels;
 use crate::kernels::gemm::OperandHome;
-use crate::model::{block_layers_batched, Layer, LayerKind, Mode, ModelConfig};
+use crate::model::{
+    block_layers_batched, block_layers_decode, Layer, LayerKind, Mode, ModelConfig,
+};
 use crate::sim::KernelCost;
 
-/// Row count below which a *batched* GEMM keeps the N-split
-/// weight-streaming schedule (each cluster owns output columns, weights
-/// read from HBM exactly once). Above it, the M-split blocked schedule
-/// wins: its per-cluster weight broadcast costs ~C x the HBM reads, but
-/// with >= 16 rows per cluster the inner loops are compute-bound enough
-/// to hide them (the crossover sits near rows ~= 16 * clusters on the
-/// default platform; switching earlier would jump the cost discontinuity
-/// into the bench's b = 1..32 sweep).
+/// Row count below which the N-split weight-streaming schedule (each
+/// cluster owns output columns, weights read from HBM exactly once) can
+/// still beat the M-split blocked schedule, whose per-cluster weight
+/// broadcast costs ~C x the HBM reads. At or above `16 * clusters` rows
+/// the M-split inner loops are compute-bound enough to hide the broadcast
+/// on every geometry in the model zoo, so only the skinny region prices
+/// both candidates.
 fn skinny_rows_threshold(platform: &PlatformConfig) -> u64 {
     platform.total_clusters() as u64 * 16
+}
+
+/// GEMM-layer dispatch on *stacked rows alone* (`b * m`): in the skinny
+/// region both candidate schedules are priced and the cheaper one wins, so
+/// a batched layer and a single-request layer with the same row count cost
+/// the same (the b=2,s=16 vs b=1,s=32 price discontinuity the old
+/// `layer.b > 1` guard caused is gone). `gemm_cost` itself falls back to
+/// the gemv schedule below `total_clusters` rows, so b = 1 AR decode is
+/// bit-identical to the legacy path.
+fn gemm_layer_cost(
+    rows: u64,
+    k: u64,
+    n: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+    home: OperandHome,
+) -> KernelCost {
+    let msplit = kernels::gemm_cost(rows, k, n, fmt, platform, home);
+    if rows >= skinny_rows_threshold(platform) {
+        return msplit;
+    }
+    let nsplit = kernels::gemv_cost(rows, k, n, fmt, platform, home);
+    if nsplit.cycles < msplit.cycles {
+        nsplit
+    } else {
+        msplit
+    }
 }
 
 /// Cost of one layer on the platform. This is the single dispatch path —
@@ -43,20 +71,7 @@ pub fn layer_cost(layer: &Layer, fmt: FpFormat, platform: &PlatformConfig) -> Ke
                 b: MemLevel::Hbm,
                 c: MemLevel::Hbm,
             };
-            if layer.b > 1 && rows < skinny_rows_threshold(platform) {
-                // Batched decode: m = b token rows against one weight
-                // stream (N-split). The `b > 1` guard is deliberate: at
-                // b = 1 the layer must price exactly like the legacy
-                // single-request path (an acceptance invariant), which
-                // routes through `gemm_cost` — itself dispatching to this
-                // same gemv schedule below `total_clusters` rows. A
-                // small-s single-request NAR pass therefore keeps its
-                // historical M-split price even where a batched layer of
-                // equal row count would stream N-split.
-                kernels::gemv_cost(rows, layer.k, layer.n, fmt, platform, home)
-            } else {
-                kernels::gemm_cost(rows, layer.k, layer.n, fmt, platform, home)
-            }
+            gemm_layer_cost(rows, layer.k, layer.n, fmt, platform, home)
         }
         LayerKind::FlashAttention => kernels::flash_attention_cost(
             // Each request attends to its own KV history: b*H independent
@@ -128,6 +143,40 @@ pub fn block_cost(
     block_cost_batched(cfg, mode, 1, s, kv_len, fmt, platform)
 }
 
+/// Price a block's layer list into a one-block [`ModelCost`].
+fn price_layers(
+    layers: &[Layer],
+    batch: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> ModelCost {
+    let mut out = ModelCost { blocks: 1, batch, ..Default::default() };
+    for layer in layers {
+        let c = layer_cost(layer, fmt, platform);
+        let slot = out.by_kind.entry(layer.kind).or_default();
+        *slot = slot.then(c);
+        let slot = out.by_label.entry(layer.label).or_default();
+        *slot = slot.then(c);
+        out.total = out.total.then(c);
+    }
+    out.cycles = out.total.cycles;
+    out
+}
+
+/// Repeat a one-block cost over the model's `blocks` blocks.
+fn repeat_blocks(one: &ModelCost, blocks: u64, batch: u64) -> ModelCost {
+    let mut out = ModelCost { blocks, batch, ..Default::default() };
+    for (k, v) in &one.by_kind {
+        out.by_kind.insert(*k, v.repeat(blocks));
+    }
+    for (k, v) in &one.by_label {
+        out.by_label.insert(*k, v.repeat(blocks));
+    }
+    out.total = one.total.repeat(blocks);
+    out.cycles = out.total.cycles;
+    out
+}
+
 /// Cost of one transformer block for `b` concurrent requests.
 pub fn block_cost_batched(
     cfg: &ModelConfig,
@@ -138,17 +187,8 @@ pub fn block_cost_batched(
     fmt: FpFormat,
     platform: &PlatformConfig,
 ) -> ModelCost {
-    let mut out = ModelCost { blocks: 1, batch: b.max(1), ..Default::default() };
-    for layer in block_layers_batched(cfg, mode, b.max(1), s, kv_len) {
-        let c = layer_cost(&layer, fmt, platform);
-        let slot = out.by_kind.entry(layer.kind).or_default();
-        *slot = slot.then(c);
-        let slot = out.by_label.entry(layer.label).or_default();
-        *slot = slot.then(c);
-        out.total = out.total.then(c);
-    }
-    out.cycles = out.total.cycles;
-    out
+    let layers = block_layers_batched(cfg, mode, b.max(1), s, kv_len);
+    price_layers(&layers, b.max(1), fmt, platform)
 }
 
 /// Cost of a full single-request model pass: `blocks` x block cost. In AR
@@ -180,16 +220,29 @@ pub fn model_cost_batched(
         Mode::Ar => (1, s),
     };
     let one = block_cost_batched(cfg, mode, b, bs, kv, fmt, platform);
-    let mut out = ModelCost { blocks: cfg.blocks, batch: b.max(1), ..Default::default() };
-    for (k, v) in &one.by_kind {
-        out.by_kind.insert(*k, v.repeat(cfg.blocks));
+    repeat_blocks(&one, cfg.blocks, b.max(1))
+}
+
+/// Cost of one decode step over requests with *per-request* KV lengths
+/// (`kv_lens[i]` = tokens request `i` has cached, excluding the token
+/// being decoded). Weight streams are shared across the whole batch;
+/// attention is priced per distinct KV length (see
+/// [`block_layers_decode`]). A uniform batch prices identically to
+/// [`model_cost_batched`] at that length; a ragged batch prices strictly
+/// between the all-min and all-max (batch-max) estimates — the batcher no
+/// longer bills every request at its longest resident neighbor's length.
+pub fn model_cost_decode(
+    cfg: &ModelConfig,
+    kv_lens: &[u64],
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> ModelCost {
+    if kv_lens.is_empty() {
+        return ModelCost::default();
     }
-    for (k, v) in &one.by_label {
-        out.by_label.insert(*k, v.repeat(cfg.blocks));
-    }
-    out.total = one.total.repeat(cfg.blocks);
-    out.cycles = out.total.cycles;
-    out
+    let layers = block_layers_decode(cfg, kv_lens);
+    let one = price_layers(&layers, kv_lens.len() as u64, fmt, platform);
+    repeat_blocks(&one, cfg.blocks, kv_lens.len() as u64)
 }
 
 #[cfg(test)]
@@ -296,6 +349,97 @@ mod tests {
             batched.cycles,
             b,
             b * one.cycles
+        );
+    }
+
+    #[test]
+    fn gemm_dispatch_depends_on_rows_not_batch() {
+        // The fixed discontinuity: b=2,s=16 stacks the same 32 rows as
+        // b=1,s=32, so every GEMM-like layer must price identically.
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let two = block_cost_batched(&cfg, Mode::Nar, 2, 16, 0, FpFormat::Fp32, &p);
+        let one = block_cost_batched(&cfg, Mode::Nar, 1, 32, 0, FpFormat::Fp32, &p);
+        for label in ["q-proj", "mlp-up", "mlp-down"] {
+            assert_eq!(
+                two.by_label[label], one.by_label[label],
+                "{label}: equal stacked rows must price equally"
+            );
+        }
+    }
+
+    #[test]
+    fn skinny_dispatch_never_above_either_schedule() {
+        let p = occ();
+        for rows in [1u64, 8, 24, 32, 64, 128, 197, 255, 256, 1024] {
+            let (k, n) = (4096, 4096);
+            let layer = Layer {
+                kind: LayerKind::Gemm,
+                label: "probe",
+                b: 1,
+                m: rows,
+                k,
+                n,
+                skv: 0,
+                heads: 16,
+                p: 256,
+                causal: false,
+                fused_input: false,
+            };
+            let got = layer_cost(&layer, FpFormat::Fp32, &p);
+            let home = OperandHome::default();
+            let ms = kernels::gemm_cost(rows, k, n, FpFormat::Fp32, &p, home);
+            let ns = kernels::gemv_cost(rows, k, n, FpFormat::Fp32, &p, home);
+            assert!(got.cycles <= ms.cycles, "rows={rows}");
+            if rows < p.total_clusters() as u64 * 16 {
+                assert!(got.cycles <= ns.cycles, "rows={rows}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_decode_between_min_and_max_uniform_bounds() {
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let lens = [64u64, 256, 1024, 1024];
+        let ragged = model_cost_decode(&cfg, &lens, FpFormat::Fp32, &p);
+        let all_min = model_cost_batched(&cfg, Mode::Ar, 4, 64, FpFormat::Fp32, &p);
+        let all_max = model_cost_batched(&cfg, Mode::Ar, 4, 1024, FpFormat::Fp32, &p);
+        assert!(ragged.cycles > all_min.cycles);
+        assert!(
+            ragged.cycles < all_max.cycles,
+            "ragged {} must undercut batch-max {}",
+            ragged.cycles,
+            all_max.cycles
+        );
+        // Uniform batch degenerates to the batched price exactly.
+        let uniform = model_cost_decode(&cfg, &[512; 8], FpFormat::Fp32, &p);
+        let batched = model_cost_batched(&cfg, Mode::Ar, 8, 512, FpFormat::Fp32, &p);
+        assert_eq!(uniform.total, batched.total);
+    }
+
+    #[test]
+    fn chunked_prefill_cost_close_to_monolithic() {
+        // Chunked prefill redoes no FLOPs (each chunk attends to the cache
+        // so far) but pays per-chunk scheduling overheads; the sum of the
+        // chunk passes must land within a modest factor of the one-shot
+        // prompt cost.
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let fmt = FpFormat::Fp32;
+        let whole = model_cost(&cfg, Mode::Nar, 1024, fmt, &p).cycles;
+        let mut chunked = 0u64;
+        let chunk = 256;
+        for i in 0..(1024 / chunk) {
+            chunked += block_cost_batched(&cfg, Mode::Nar, 1, chunk, i * chunk, fmt, &p)
+                .total
+                .repeat(cfg.blocks)
+                .cycles;
+        }
+        assert!(chunked >= whole, "chunking cannot be free");
+        assert!(
+            (chunked as f64) < 2.0 * whole as f64,
+            "chunk overhead out of band: {chunked} vs {whole}"
         );
     }
 

@@ -2,8 +2,9 @@
 //! platform (the ROADMAP's "heavy traffic" scenario the single-request
 //! engine could not even express).
 //!
-//! A [`Request`] is a prompt to prefill plus a number of tokens to decode;
-//! a [`Workload`] is the batch of requests handed to the continuous
+//! A [`Request`] is a prompt to prefill plus a number of tokens to decode,
+//! stamped with an arrival time (open-loop traces) and a priority class;
+//! a [`Workload`] is the trace of requests handed to the continuous
 //! batcher. Synthetic workloads are generated with a seeded LCG so every
 //! serving experiment is exactly reproducible.
 
@@ -20,9 +21,30 @@ pub struct Request {
     pub prompt_len: u64,
     /// Tokens to generate autoregressively.
     pub gen_tokens: u64,
+    /// Arrival time in nanoseconds since trace start (0 = closed-loop
+    /// "all offered at once", the legacy behavior).
+    pub arrival_ns: u64,
+    /// Priority class: 0 is most urgent, larger is more patient. The
+    /// scheduler ages waiting requests toward class 0 so no class starves.
+    pub class: u8,
 }
 
 impl Request {
+    /// A class-0 request arriving at t=0.
+    pub fn new(id: usize, prompt_len: u64, gen_tokens: u64) -> Request {
+        Request { id, prompt_len, gen_tokens, arrival_ns: 0, class: 0 }
+    }
+
+    pub fn with_class(mut self, class: u8) -> Request {
+        self.class = class;
+        self
+    }
+
+    pub fn with_arrival_ns(mut self, arrival_ns: u64) -> Request {
+        self.arrival_ns = arrival_ns;
+        self
+    }
+
     /// KV slots this request needs at its longest (prompt + generation).
     pub fn kv_capacity(&self) -> u64 {
         self.prompt_len + self.gen_tokens
@@ -40,16 +62,42 @@ impl Request {
             ) as u64
     }
 
-    /// KV bytes at the serving precision — the quantity the batcher
-    /// admits against the HBM budget, consistent with the cost models
-    /// streaming KV at `fmt` (the f32 [`KvCache`] geometry scaled to the
-    /// element size).
+    /// KV bytes at the serving precision — full-length, the quantity the
+    /// legacy batcher reserved at admission. The paged allocator instead
+    /// maps `KvGeometry::token_bytes` (this value divided by
+    /// `kv_capacity`) one page at a time.
     pub fn kv_bytes_at(&self, cfg: &ModelConfig, fmt: FpFormat) -> u64 {
         self.kv_bytes(cfg) / std::mem::size_of::<f32>() as u64 * fmt.bytes()
     }
 }
 
-/// A batch of requests to serve.
+/// Deterministic 64-bit LCG shared by the synthetic generators.
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Lcg {
+        Lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1))
+    }
+
+    fn next(&mut self, lo: u64, hi: u64) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        lo + (self.0 >> 33) % (hi - lo + 1)
+    }
+
+    /// Uniform in (0, 1]. One `next` draw only carries 31 random bits
+    /// (the generator emits `state >> 33`), so a 53-bit mantissa is
+    /// assembled from two draws.
+    fn unit(&mut self) -> f64 {
+        let hi = self.next(0, (1 << 27) - 1);
+        let lo = self.next(0, (1 << 26) - 1);
+        (((hi << 26) | lo) + 1) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// A trace of requests to serve.
 #[derive(Debug, Clone, Default)]
 pub struct Workload {
     pub requests: Vec<Request>,
@@ -59,7 +107,7 @@ impl Workload {
     /// `n` identical requests (throughput benchmarking).
     pub fn uniform(n: usize, prompt_len: u64, gen_tokens: u64) -> Workload {
         Workload {
-            requests: (0..n).map(|id| Request { id, prompt_len, gen_tokens }).collect(),
+            requests: (0..n).map(|id| Request::new(id, prompt_len, gen_tokens)).collect(),
         }
     }
 
@@ -71,21 +119,43 @@ impl Workload {
         prompt_range: (u64, u64),
         gen_range: (u64, u64),
     ) -> Workload {
-        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
-        let mut next = |lo: u64, hi: u64| {
-            state = state
-                .wrapping_mul(6364136223846793005)
-                .wrapping_add(1442695040888963407);
-            lo + (state >> 33) % (hi - lo + 1)
-        };
+        let mut rng = Lcg::new(seed);
         let requests = (0..n)
-            .map(|id| Request {
-                id,
-                prompt_len: next(prompt_range.0, prompt_range.1).max(1),
-                gen_tokens: next(gen_range.0, gen_range.1).max(1),
+            .map(|id| {
+                Request::new(
+                    id,
+                    rng.next(prompt_range.0, prompt_range.1).max(1),
+                    rng.next(gen_range.0, gen_range.1).max(1),
+                )
             })
             .collect();
         Workload { requests }
+    }
+
+    /// Stamp open-loop Poisson arrivals: exponential inter-arrival gaps at
+    /// `rate_per_s` requests/second, drawn from a seeded stream. Requests
+    /// keep their id order (= arrival order).
+    pub fn with_poisson_arrivals(mut self, seed: u64, rate_per_s: f64) -> Workload {
+        assert!(rate_per_s > 0.0, "arrival rate must be positive");
+        let mut rng = Lcg::new(seed ^ 0xA1217);
+        let mut t_ns = 0u64;
+        for r in &mut self.requests {
+            let gap_s = -rng.unit().ln() / rate_per_s;
+            t_ns += (gap_s * 1e9).round() as u64;
+            r.arrival_ns = t_ns;
+        }
+        self
+    }
+
+    /// Assign `classes` priority classes round-robin by id (class 0 = most
+    /// urgent). A no-op for `classes <= 1`.
+    pub fn with_priority_classes(mut self, classes: u8) -> Workload {
+        if classes > 1 {
+            for r in &mut self.requests {
+                r.class = (r.id % classes as usize) as u8;
+            }
+        }
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -108,6 +178,26 @@ impl Workload {
     }
 }
 
+/// Arrival process selector (the `serve --arrival` flag).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Closed-loop: every request is offered at t=0 (legacy default).
+    Batch,
+    /// Open-loop Poisson arrivals at the given rate.
+    Poisson { rate_per_s: f64 },
+}
+
+impl Arrival {
+    /// Parse `batch` or `poisson:<rate>` (rate in requests/second).
+    pub fn parse(s: &str) -> Option<Arrival> {
+        if s == "batch" {
+            return Some(Arrival::Batch);
+        }
+        let rate = s.strip_prefix("poisson:")?.parse::<f64>().ok()?;
+        (rate > 0.0 && rate.is_finite()).then_some(Arrival::Poisson { rate_per_s: rate })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +210,8 @@ mod tests {
         assert_eq!(w.total_prompt_tokens(), 4 * 128);
         assert_eq!(w.requests[3].id, 3);
         assert_eq!(w.requests[0].kv_capacity(), 160);
+        assert_eq!(w.requests[0].arrival_ns, 0);
+        assert_eq!(w.requests[0].class, 0);
     }
 
     #[test]
@@ -137,9 +229,50 @@ mod tests {
     }
 
     #[test]
+    fn poisson_arrivals_deterministic_monotone_and_rate_shaped() {
+        let w = Workload::uniform(256, 64, 16).with_poisson_arrivals(3, 100.0);
+        let w2 = Workload::uniform(256, 64, 16).with_poisson_arrivals(3, 100.0);
+        assert_eq!(w.requests, w2.requests);
+        let mut prev = 0;
+        for r in &w.requests {
+            assert!(r.arrival_ns >= prev, "{r:?}");
+            prev = r.arrival_ns;
+        }
+        // Mean inter-arrival over 256 draws should land near 1/rate = 10ms
+        // (law of large numbers; the band is generous).
+        let mean_gap_s = prev as f64 / 1e9 / 256.0;
+        assert!((0.005..=0.02).contains(&mean_gap_s), "mean gap {mean_gap_s}");
+        // A faster rate compresses the trace.
+        let fast = Workload::uniform(256, 64, 16).with_poisson_arrivals(3, 1000.0);
+        assert!(fast.requests.last().unwrap().arrival_ns < prev);
+    }
+
+    #[test]
+    fn priority_classes_round_robin() {
+        let w = Workload::uniform(6, 64, 16).with_priority_classes(3);
+        let classes: Vec<u8> = w.requests.iter().map(|r| r.class).collect();
+        assert_eq!(classes, vec![0, 1, 2, 0, 1, 2]);
+        // <= 1 class is a no-op.
+        let w = Workload::uniform(3, 64, 16).with_priority_classes(1);
+        assert!(w.requests.iter().all(|r| r.class == 0));
+    }
+
+    #[test]
+    fn arrival_parse() {
+        assert_eq!(Arrival::parse("batch"), Some(Arrival::Batch));
+        assert_eq!(
+            Arrival::parse("poisson:4.5"),
+            Some(Arrival::Poisson { rate_per_s: 4.5 })
+        );
+        assert_eq!(Arrival::parse("poisson:0"), None);
+        assert_eq!(Arrival::parse("poisson:"), None);
+        assert_eq!(Arrival::parse("uniform"), None);
+    }
+
+    #[test]
     fn kv_bytes_matches_allocated_caches() {
         let cfg = ModelConfig::tiny();
-        let r = Request { id: 0, prompt_len: 24, gen_tokens: 8 };
+        let r = Request::new(0, 24, 8);
         let one_block =
             KvCache::new(cfg.heads as usize, 32, cfg.p as usize).bytes() as u64;
         assert_eq!(r.kv_bytes(&cfg), cfg.blocks * one_block);
@@ -148,7 +281,7 @@ mod tests {
     #[test]
     fn kv_bytes_scale_with_serving_precision() {
         let cfg = ModelConfig::gpt_j();
-        let r = Request { id: 0, prompt_len: 1024, gen_tokens: 64 };
+        let r = Request::new(0, 1024, 64);
         assert_eq!(r.kv_bytes_at(&cfg, FpFormat::Fp32), r.kv_bytes(&cfg));
         assert_eq!(r.kv_bytes_at(&cfg, FpFormat::Fp8), r.kv_bytes(&cfg) / 4);
         assert_eq!(r.kv_bytes_at(&cfg, FpFormat::Fp16), r.kv_bytes(&cfg) / 2);

@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
-use snitch_fm::coordinator::{InferenceEngine, Workload};
+use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
@@ -30,9 +30,17 @@ COMMANDS:
   breakdown  Kernel latency breakdown (Fig. 10)
              --model NAME --mode nar|ar --format FMT --seq N
   compare    SoA comparison --exp table4|h100|academic|fig1
-  serve      Continuous-batching multi-request serving simulation
+  serve      Multi-request serving simulation: continuous batching with
+             paged KV, chunked prefill, priority admission
              --model NAME --requests N --batch N --format FMT
              --prompt N --gen N --seed N --clusters N
+             --kv-page-tokens N (default 16)
+             --prefill-chunk N (0 = monolithic prefill)
+             --arrival batch|poisson:<rate-per-s>
+             --priorities N (round-robin classes, aged FCFS)
+             --aging S (seconds of wait per class promotion; 0 = off)
+             --reserve-full (legacy full-length KV reservation)
+             --json (machine-readable report)
   validate   Execute AOT artifacts via PJRT, verify golden numerics
              --artifacts DIR
   help       Show this message
@@ -59,6 +67,8 @@ fn default_seq(cfg: &ModelConfig, seq: u64) -> u64 {
 const FLAGS: &[&str] = &[
     "model", "mode", "format", "seq", "clusters", "baseline", "config", "csv",
     "exp", "artifacts", "requests", "batch", "prompt", "gen", "seed",
+    "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
+    "aging", "json",
 ];
 
 fn main() -> Result<()> {
@@ -287,7 +297,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // seed 0 = uniform workload (reproducible headline numbers); any
     // other seed draws prompt/gen lengths around the requested means.
-    let workload = if seed == 0 {
+    let mut workload = if seed == 0 {
         Workload::uniform(requests, prompt, gen)
     } else {
         Workload::synthetic(
@@ -297,8 +307,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ((gen / 2).max(1), gen.max(2) * 2),
         )
     };
-    let report = engine.serve(&cfg, &workload, batch, format);
-    print!("{}", report::serve_table(&report));
+    let classes = args.get_u64("priorities", 1)?;
+    anyhow::ensure!((1..=255).contains(&classes), "--priorities must be 1..=255");
+    workload = workload.with_priority_classes(classes as u8);
+    let arrival = match args.get("arrival") {
+        None => Arrival::Batch,
+        Some(s) => Arrival::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--arrival {s:?}: expected batch or poisson:<rate>")
+        })?,
+    };
+    if let Arrival::Poisson { rate_per_s } = arrival {
+        workload = workload.with_poisson_arrivals(seed ^ 0xA441_7353, rate_per_s);
+    }
+    let mut opts = BatcherConfig::new(batch, 0);
+    opts.page_tokens = args.get_u64("kv-page-tokens", 16)?.max(1);
+    opts.prefill_chunk = args.get_u64("prefill-chunk", 0)?;
+    opts.reserve_full = args.get_bool("reserve-full");
+    opts.aging_promote_s = args.get_f64("aging", opts.aging_promote_s)?;
+    anyhow::ensure!(opts.aging_promote_s >= 0.0, "--aging must be >= 0");
+    let report = engine.serve_with(&cfg, &workload, opts, format);
+    if args.get_bool("json") {
+        println!("{}", report::serve_json(&report));
+    } else {
+        print!("{}", report::serve_table(&report));
+    }
     Ok(())
 }
 

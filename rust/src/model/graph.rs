@@ -93,6 +93,11 @@ pub fn block_layers(cfg: &ModelConfig, mode: Mode, s: u64, kv_len: u64) -> Vec<L
 /// `b*m` rows (one weight stream amortized over the batch — the whole
 /// point of batched AR decode) and attention with `b*heads` instances
 /// (each request attends to its own KV history).
+///
+/// In NAR mode `kv_len` is the number of *already-cached* context tokens
+/// the `s` new tokens additionally attend to — 0 for a from-scratch
+/// prompt (the legacy behavior, bit-identical), positive for a chunked-
+/// prefill continuation where earlier chunks populated the cache.
 pub fn block_layers_batched(
     cfg: &ModelConfig,
     mode: Mode,
@@ -102,7 +107,7 @@ pub fn block_layers_batched(
 ) -> Vec<Layer> {
     let causal = cfg.family == Family::Gpt;
     let (sq, skv) = match mode {
-        Mode::Nar => (s, s),
+        Mode::Nar => (s, kv_len + s),
         Mode::Ar => (1, kv_len + 1),
     };
     let hp = cfg.hp();
@@ -131,6 +136,46 @@ pub fn block_layers_batched(
         layer(LayerKind::Gelu, "gelu", sq, cfg.ff, cfg.ff, 0, false, true),
         layer(LayerKind::Gemm, "mlp-down", sq, cfg.ff, cfg.e, 0, false, true),
     ]
+}
+
+/// Expand one decode step for `b = kv_lens.len()` concurrent requests
+/// with *per-request* KV lengths (each entry is one request's cached
+/// tokens, excluding the token being decoded).
+///
+/// Weight-bound layers (projections, MLP, norms) are shared across the
+/// batch exactly as in [`block_layers_batched`], but attention is priced
+/// per distinct KV length: the single FlashAttention layer is replaced by
+/// one layer per length group, each covering the requests at that length.
+/// With a uniform batch this degenerates to the batch-max layer list, so
+/// lockstep decode prices identically; ragged batches stop paying the
+/// longest resident request's attention price for every short one.
+pub fn block_layers_decode(cfg: &ModelConfig, kv_lens: &[u64]) -> Vec<Layer> {
+    let b = kv_lens.len() as u64;
+    assert!(b > 0, "decode step needs at least one request");
+    let mut sorted = kv_lens.to_vec();
+    sorted.sort_unstable();
+    let mut groups: Vec<(u64, u64)> = Vec::new(); // (kv_len, count)
+    for &kv in &sorted {
+        match groups.last_mut() {
+            Some((g, n)) if *g == kv => *n += 1,
+            _ => groups.push((kv, 1)),
+        }
+    }
+    let mut layers = block_layers_batched(cfg, Mode::Ar, b, 1, sorted[0]);
+    let at = layers
+        .iter()
+        .position(|l| l.kind == LayerKind::FlashAttention)
+        .expect("block has an attention layer");
+    let template = layers[at].clone();
+    layers.splice(
+        at..=at,
+        groups.into_iter().map(|(kv, count)| Layer {
+            b: count,
+            skv: kv + 1,
+            ..template.clone()
+        }),
+    );
+    layers
 }
 
 #[cfg(test)]
@@ -194,6 +239,44 @@ mod tests {
         }
         let att = eight.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
         assert_eq!(att.batch_heads(), 8 * 16);
+    }
+
+    #[test]
+    fn chunked_prefill_attends_to_cached_context() {
+        let cfg = ModelConfig::gpt_j();
+        let ls = block_layers_batched(&cfg, Mode::Nar, 1, 128, 512);
+        let att = ls.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert_eq!(att.n, 128); // chunk queries
+        assert_eq!(att.skv, 640); // cached context + chunk
+        // kv_len = 0 is the legacy from-scratch prompt.
+        let fresh = block_layers_batched(&cfg, Mode::Nar, 1, 128, 0);
+        let att = fresh.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert_eq!(att.skv, 128);
+    }
+
+    #[test]
+    fn ragged_decode_groups_attention_by_kv_len() {
+        let cfg = ModelConfig::gpt_j();
+        let ls = block_layers_decode(&cfg, &[512, 64, 512]);
+        // 10 layers + 1 extra FA group for the second distinct length.
+        assert_eq!(ls.len(), 11);
+        let fas: Vec<&Layer> =
+            ls.iter().filter(|l| l.kind == LayerKind::FlashAttention).collect();
+        assert_eq!(fas.len(), 2);
+        assert_eq!((fas[0].b, fas[0].skv), (1, 65));
+        assert_eq!((fas[1].b, fas[1].skv), (2, 513));
+        // Weight-bound layers stack the whole batch.
+        let q = ls.iter().find(|l| l.label == "q-proj").unwrap();
+        assert_eq!(q.b, 3);
+        assert_eq!(q.batch_rows(), 3);
+    }
+
+    #[test]
+    fn uniform_decode_equals_batched_layers() {
+        let cfg = ModelConfig::gpt_j();
+        let ragged = block_layers_decode(&cfg, &[256, 256, 256, 256]);
+        let batched = block_layers_batched(&cfg, Mode::Ar, 4, 1, 256);
+        assert_eq!(ragged, batched);
     }
 
     #[test]

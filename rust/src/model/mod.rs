@@ -6,7 +6,7 @@
 
 pub mod graph;
 
-pub use graph::{block_layers, block_layers_batched, Layer, LayerKind};
+pub use graph::{block_layers, block_layers_batched, block_layers_decode, Layer, LayerKind};
 
 use crate::arch::FpFormat;
 
@@ -48,23 +48,37 @@ pub struct ModelConfig {
 
 impl ModelConfig {
     pub fn vit_b() -> ModelConfig {
-        ModelConfig { name: "vit-b".into(), family: Family::Vit, blocks: 12, e: 768, p: 64, heads: 12, ff: 3072, seq: 197 }
+        Self::preset_cfg("vit-b", Family::Vit, 12, 768, 64, 12, 3072, 197)
     }
     pub fn vit_l() -> ModelConfig {
-        ModelConfig { name: "vit-l".into(), family: Family::Vit, blocks: 24, e: 1024, p: 64, heads: 16, ff: 4096, seq: 197 }
+        Self::preset_cfg("vit-l", Family::Vit, 24, 1024, 64, 16, 4096, 197)
     }
     pub fn vit_h() -> ModelConfig {
-        ModelConfig { name: "vit-h".into(), family: Family::Vit, blocks: 32, e: 1280, p: 80, heads: 16, ff: 5120, seq: 197 }
+        Self::preset_cfg("vit-h", Family::Vit, 32, 1280, 80, 16, 5120, 197)
     }
     pub fn gpt3_xl() -> ModelConfig {
-        ModelConfig { name: "gpt3-xl".into(), family: Family::Gpt, blocks: 40, e: 2048, p: 128, heads: 16, ff: 8192, seq: 1024 }
+        Self::preset_cfg("gpt3-xl", Family::Gpt, 40, 2048, 128, 16, 8192, 1024)
     }
     pub fn gpt_j() -> ModelConfig {
-        ModelConfig { name: "gpt-j".into(), family: Family::Gpt, blocks: 28, e: 4096, p: 256, heads: 16, ff: 16384, seq: 1024 }
+        Self::preset_cfg("gpt-j", Family::Gpt, 28, 4096, 256, 16, 16384, 1024)
     }
     /// Tiny stand-in matching the Python TINY preset (integration tests).
     pub fn tiny() -> ModelConfig {
-        ModelConfig { name: "tiny".into(), family: Family::Gpt, blocks: 2, e: 64, p: 16, heads: 4, ff: 128, seq: 32 }
+        Self::preset_cfg("tiny", Family::Gpt, 2, 64, 16, 4, 128, 32)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn preset_cfg(
+        name: &str,
+        family: Family,
+        blocks: u64,
+        e: u64,
+        p: u64,
+        heads: u64,
+        ff: u64,
+        seq: u64,
+    ) -> ModelConfig {
+        ModelConfig { name: name.into(), family, blocks, e, p, heads, ff, seq }
     }
 
     /// Look up a preset by name.

@@ -75,7 +75,8 @@ pub fn runs_csv(rows: &[RunReport]) -> String {
 }
 
 /// Render a serving report (the `serve` subcommand's output): aggregate
-/// throughput, latency percentiles, TTFT, and resource use.
+/// throughput, latency percentiles, TTFT, scheduler counters, and
+/// resource use.
 pub fn serve_table(r: &ServeReport) -> String {
     let mut s = String::new();
     let _ = writeln!(
@@ -96,8 +97,8 @@ pub fn serve_table(r: &ServeReport) -> String {
     );
     let _ = writeln!(
         s,
-        "  tokens: {} prefill + {} generated in {:.3} s",
-        r.prefill_tokens, r.gen_tokens, r.total_seconds
+        "  tokens: {} prefill ({} chunks) + {} generated in {:.3} s",
+        r.prefill_tokens, r.prefill_chunks, r.gen_tokens, r.total_seconds
     );
     let _ = writeln!(
         s,
@@ -116,14 +117,122 @@ pub fn serve_table(r: &ServeReport) -> String {
     );
     let _ = writeln!(
         s,
-        "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB  KV peak {:.2}/{:.2} GB",
-        r.fpu_utilization * 100.0,
-        r.power_w,
-        r.hbm_gb,
+        "  queue [s]:   mean {:.4}  p99 {:.4}  preemptions {}",
+        r.queue_mean_s, r.queue_p99_s, r.preemptions
+    );
+    for c in &r.per_class {
+        let _ = writeln!(
+            s,
+            "  class {}: {} done  TTFT p50 {:.4} p99 {:.4}  latency p50 {:.4} p99 {:.4}",
+            c.class, c.completed, c.ttft_p50_s, c.ttft_p99_s, c.latency_p50_s,
+            c.latency_p99_s
+        );
+    }
+    let _ = writeln!(
+        s,
+        "  KV pages: {} x {} tokens, peak {:.2}/{:.2} GB",
+        r.total_pages,
+        r.page_tokens,
         r.peak_kv_bytes as f64 / 1e9,
         r.kv_budget_bytes as f64 / 1e9,
     );
+    let _ = writeln!(
+        s,
+        "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB",
+        r.fpu_utilization * 100.0,
+        r.power_w,
+        r.hbm_gb,
+    );
     s
+}
+
+/// JSON export of a serving report (bench-trend artifacts; scalar summary
+/// plus per-class percentiles, no per-request detail).
+pub fn serve_json(r: &ServeReport) -> String {
+    let classes: Vec<String> = r
+        .per_class
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"class\":{},\"completed\":{},\"ttft_p50_s\":{},\"ttft_p99_s\":{},\
+                 \"latency_p50_s\":{},\"latency_p99_s\":{}}}",
+                c.class, c.completed, c.ttft_p50_s, c.ttft_p99_s, c.latency_p50_s,
+                c.latency_p99_s
+            )
+        })
+        .collect();
+    format!(
+        "{{\"model\":\"{}\",\"format\":\"{}\",\"requests\":{},\"completed\":{},\
+         \"rejected\":{},\"max_batch\":{},\"page_tokens\":{},\"total_pages\":{},\
+         \"peak_kv_bytes\":{},\"kv_budget_bytes\":{},\"total_seconds\":{},\
+         \"prefill_tokens\":{},\"prefill_chunks\":{},\"gen_tokens\":{},\
+         \"preemptions\":{},\"tokens_per_s\":{},\"decode_tokens_per_s\":{},\
+         \"avg_batch_occupancy\":{},\"ttft_mean_s\":{},\"ttft_p50_s\":{},\
+         \"ttft_p99_s\":{},\"latency_p50_s\":{},\"latency_p99_s\":{},\
+         \"queue_mean_s\":{},\"queue_p99_s\":{},\"fpu_utilization\":{},\
+         \"power_w\":{},\"per_class\":[{}]}}",
+        r.model,
+        r.format,
+        r.requests,
+        r.completed,
+        r.rejected.len(),
+        r.max_batch,
+        r.page_tokens,
+        r.total_pages,
+        r.peak_kv_bytes,
+        r.kv_budget_bytes,
+        r.total_seconds,
+        r.prefill_tokens,
+        r.prefill_chunks,
+        r.gen_tokens,
+        r.preemptions,
+        r.tokens_per_s,
+        r.decode_tokens_per_s,
+        r.avg_batch_occupancy,
+        r.ttft_mean_s,
+        r.ttft_p50_s,
+        r.ttft_p99_s,
+        r.latency_p50_s,
+        r.latency_p99_s,
+        r.queue_mean_s,
+        r.queue_p99_s,
+        r.fpu_utilization,
+        r.power_w,
+        classes.join(",")
+    )
+}
+
+/// JSON export of run reports (bench-trend artifacts).
+pub fn runs_json(rows: &[RunReport]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"model\":\"{}\",\"mode\":\"{}\",\"format\":\"{}\",\"seq\":{},\
+                 \"batch\":{},\"cycles\":{},\"seconds\":{},\"throughput\":{},\
+                 \"throughput_unit\":\"{}\",\"decode_throughput\":{},\"ttft_s\":{},\
+                 \"gflops\":{},\"fpu_utilization\":{},\"power_w\":{},\
+                 \"gflops_per_w\":{},\"hbm_gb\":{}}}",
+                r.model,
+                r.mode,
+                r.format,
+                r.seq,
+                r.batch,
+                r.cycles,
+                r.seconds,
+                r.throughput,
+                r.throughput_unit,
+                r.decode_throughput,
+                r.ttft_s,
+                r.gflops,
+                r.fpu_utilization,
+                r.power_w,
+                r.gflops_per_w,
+                r.hbm_gb
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
 }
 
 /// Render a Fig. 10-style latency breakdown.
@@ -206,6 +315,30 @@ mod tests {
         assert!(t.contains("p99"));
         assert!(t.contains("TTFT"));
         assert!(t.contains("tokens/s"));
+        assert!(t.contains("KV pages"));
+        assert!(t.contains("preemptions"));
+    }
+
+    #[test]
+    fn serve_json_parses_back() {
+        let e = InferenceEngine::new(PlatformConfig::occamy());
+        let w = crate::coordinator::Workload::uniform(4, 16, 8).with_priority_classes(2);
+        let r = e.serve(&ModelConfig::tiny(), &w, 2, FpFormat::Fp32);
+        let v = crate::util::json::parse(&serve_json(&r)).expect("valid JSON");
+        assert_eq!(v.req("model").unwrap().as_str(), Some("tiny"));
+        assert_eq!(v.req("completed").unwrap().as_u64(), Some(4));
+        assert_eq!(v.req("per_class").unwrap().as_arr().unwrap().len(), 2);
+        assert!(v.req("ttft_p99_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn runs_json_parses_back() {
+        let v = crate::util::json::parse(&runs_json(&[sample_report(), sample_report()]))
+            .expect("valid JSON");
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req("model").unwrap().as_str(), Some("vit-b"));
+        assert!(arr[0].req("throughput").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -22,10 +22,34 @@ pub struct SoaPlatform {
 /// Table IV rows (SoA columns): A100, MI250, SN30, Gaudi2.
 pub fn table4_soa() -> Vec<SoaPlatform> {
     vec![
-        SoaPlatform { name: "A100", compute_units: 6912 + 432, tflops: 5.63, tflops_per_cu: 0.0008, fpu_utilization_pct: 14.4 },
-        SoaPlatform { name: "MI250", compute_units: 13312 + 208, tflops: 3.75, tflops_per_cu: 0.0003, fpu_utilization_pct: 7.8 },
-        SoaPlatform { name: "SN30", compute_units: 1280, tflops: 13.8, tflops_per_cu: 0.0107, fpu_utilization_pct: 16.0 },
-        SoaPlatform { name: "Gaudi2", compute_units: 24 + 2, tflops: 11.3, tflops_per_cu: 0.4327, fpu_utilization_pct: 34.6 },
+        SoaPlatform {
+            name: "A100",
+            compute_units: 6912 + 432,
+            tflops: 5.63,
+            tflops_per_cu: 0.0008,
+            fpu_utilization_pct: 14.4,
+        },
+        SoaPlatform {
+            name: "MI250",
+            compute_units: 13312 + 208,
+            tflops: 3.75,
+            tflops_per_cu: 0.0003,
+            fpu_utilization_pct: 7.8,
+        },
+        SoaPlatform {
+            name: "SN30",
+            compute_units: 1280,
+            tflops: 13.8,
+            tflops_per_cu: 0.0107,
+            fpu_utilization_pct: 16.0,
+        },
+        SoaPlatform {
+            name: "Gaudi2",
+            compute_units: 24 + 2,
+            tflops: 11.3,
+            tflops_per_cu: 0.4327,
+            fpu_utilization_pct: 34.6,
+        },
     ]
 }
 

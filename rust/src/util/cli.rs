@@ -70,6 +70,13 @@ impl Args {
         Ok(self.get_u64(key, default as u64)? as u32)
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
     pub fn get_bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -110,6 +117,16 @@ mod tests {
     fn bad_number_errors() {
         let a = parse("run --seq abc", &["seq"]).unwrap();
         assert!(a.get_u64("seq", 0).is_err());
+    }
+
+    #[test]
+    fn float_flag() {
+        let a = parse("serve --aging 0.25", &["aging"]).unwrap();
+        assert_eq!(a.get_f64("aging", 5.0).unwrap(), 0.25);
+        let b = parse("serve", &["aging"]).unwrap();
+        assert_eq!(b.get_f64("aging", 5.0).unwrap(), 5.0);
+        let c = parse("serve --aging nope", &["aging"]).unwrap();
+        assert!(c.get_f64("aging", 5.0).is_err());
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //! * the batcher never admits more KV bytes than the budget,
 //! * serving reports are internally consistent.
 
+mod common;
+
+use common::Rng;
 use snitch_fm::arch::{FpFormat, MemLevel, PlatformConfig};
 use snitch_fm::coordinator::schedule::{
     block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,
@@ -17,20 +20,6 @@ use snitch_fm::kernels;
 use snitch_fm::kernels::gemm::OperandHome;
 use snitch_fm::metrics;
 use snitch_fm::model::{block_layers, Family, LayerKind, Mode, ModelConfig};
-
-/// Deterministic LCG over a seed; yields values in [lo, hi].
-struct Rng(u64);
-
-impl Rng {
-    fn next(&mut self, lo: u64, hi: u64) -> u64 {
-        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-        lo + (self.0 >> 33) % (hi - lo + 1)
-    }
-
-    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
-        xs[self.next(0, xs.len() as u64 - 1) as usize]
-    }
-}
 
 fn random_cfg(rng: &mut Rng) -> ModelConfig {
     let heads = rng.pick(&[4u64, 8, 12, 16]);
@@ -73,7 +62,10 @@ fn b1_prices_identically_to_single_request_path() {
 fn unified_layer_dispatch_matches_direct_kernel_calls() {
     // The old schedule had two FusedConcatLinear dispatch sites (one of
     // them guessing P from K); the unified path must price every layer
-    // exactly as a direct kernel call with the exact geometry.
+    // exactly as a direct kernel call with the exact geometry. GEMM
+    // layers dispatch on stacked rows alone: below the skinny threshold
+    // (16 * clusters rows) the cheaper of the M-split and N-split
+    // schedules wins, independent of the batch dimension.
     let p = PlatformConfig::occamy();
     for cfg in [ModelConfig::vit_b(), ModelConfig::gpt_j(), ModelConfig::tiny()] {
         for (mode, s, kv) in [(Mode::Nar, cfg.seq, 0), (Mode::Ar, 1, 256)] {
@@ -84,13 +76,8 @@ fn unified_layer_dispatch_matches_direct_kernel_calls() {
                 let fmt = FpFormat::Fp32;
                 let got = layer_cost(&layer, fmt, &p);
                 let want = match layer.kind {
-                    LayerKind::Gemm => kernels::gemm_cost(
-                        layer.m,
-                        layer.k,
-                        layer.n,
-                        fmt,
-                        &p,
-                        OperandHome {
+                    LayerKind::Gemm => {
+                        let home = OperandHome {
                             a: if layer.fused_input {
                                 MemLevel::Spm
                             } else {
@@ -98,8 +85,22 @@ fn unified_layer_dispatch_matches_direct_kernel_calls() {
                             },
                             b: MemLevel::Hbm,
                             c: MemLevel::Hbm,
-                        },
-                    ),
+                        };
+                        let msplit =
+                            kernels::gemm_cost(layer.m, layer.k, layer.n, fmt, &p, home);
+                        if layer.m < p.total_clusters() as u64 * 16 {
+                            let nsplit = kernels::gemv_cost(
+                                layer.m, layer.k, layer.n, fmt, &p, home,
+                            );
+                            if nsplit.cycles < msplit.cycles {
+                                nsplit
+                            } else {
+                                msplit
+                            }
+                        } else {
+                            msplit
+                        }
+                    }
                     LayerKind::FlashAttention => kernels::flash_attention_cost(
                         cfg.heads, layer.n, layer.skv, cfg.p, fmt, layer.causal, &p,
                     ),
@@ -169,20 +170,28 @@ fn batcher_never_exceeds_kv_budget() {
         let one = w.requests.iter().map(|r| r.kv_bytes(&cfg)).max().unwrap();
         let budget = one * rng.next(1, 4);
         let max_batch = rng.next(1, 8) as usize;
-        let b = ContinuousBatcher::new(
-            &cfg,
-            &p,
-            FpFormat::Fp32,
-            BatcherConfig { max_batch, kv_budget_bytes: budget },
-        );
+        let mut opts = BatcherConfig::new(max_batch, budget);
+        opts.prefill_chunk = rng.next(0, 24);
+        opts.page_tokens = rng.next(1, 32);
+        opts.reserve_full = rng.next(0, 1) == 1;
+        let b = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts);
         let r = b.run(&w);
         assert!(
             r.peak_kv_bytes <= budget,
-            "peak {} > budget {budget}",
+            "peak {} > budget {budget} ({opts:?})",
             r.peak_kv_bytes
         );
         assert!(r.avg_batch_occupancy <= max_batch as f64 + 1e-9);
-        assert_eq!(r.completed + r.rejected.len(), n, "no request lost");
+        assert_eq!(r.completed + r.rejected.len(), n, "no request lost ({opts:?})");
+        assert_eq!(
+            r.gen_tokens,
+            w.requests
+                .iter()
+                .filter(|q| !r.rejected.contains(&q.id))
+                .map(|q| q.gen_tokens)
+                .sum::<u64>(),
+            "every admitted request generates exactly its tokens ({opts:?})"
+        );
     }
 }
 
@@ -231,7 +240,7 @@ fn rejected_oversize_request_reported() {
     let cfg = ModelConfig::gpt_j();
     let mut w = Workload::uniform(2, 128, 16);
     // A single request whose KV cache alone dwarfs the HBM budget.
-    w.requests.push(Request { id: 2, prompt_len: 40_000_000, gen_tokens: 1 });
+    w.requests.push(Request::new(2, 40_000_000, 1));
     let r = e.serve(&cfg, &w, 4, FpFormat::Fp8);
     assert_eq!(r.completed, 2);
     assert_eq!(r.rejected, vec![2]);

@@ -1,0 +1,22 @@
+//! Shared helpers for the integration tests (each test binary compiles
+//! its own copy via `mod common;`).
+
+/// Deterministic 64-bit LCG over a seed; yields values in `[lo, hi]`.
+/// The single definition the test binaries share (the crate-internal
+/// generator lives in `coordinator::workload`).
+pub struct Rng(pub u64);
+
+#[allow(dead_code)]
+impl Rng {
+    pub fn next(&mut self, lo: u64, hi: u64) -> u64 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        lo + (self.0 >> 33) % (hi - lo + 1)
+    }
+
+    pub fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.next(0, xs.len() as u64 - 1) as usize]
+    }
+}

@@ -46,8 +46,11 @@ fn fig7_gpt_ladder_shape() {
             assert!((lo..=8.0).contains(&ext), "{} {mode:?} ext {ext}", cfg.name);
             // Each precision step helps, at most the ideal 2x + fitting
             // effects (paper sees up to 2.1x).
-            for (lo, hi, name) in
-                [(fp32 / fp64, 2.6, "64->32"), (fp16 / fp32, 2.6, "32->16"), (fp8 / fp16, 2.6, "16->8")]
+            for (lo, hi, name) in [
+                (fp32 / fp64, 2.6, "64->32"),
+                (fp16 / fp32, 2.6, "32->16"),
+                (fp8 / fp16, 2.6, "16->8"),
+            ]
             {
                 assert!(lo > 1.1 && lo < hi, "{} {mode:?} {name}: {lo}", cfg.name);
             }
@@ -76,7 +79,11 @@ fn fig8_vit_ladder_and_absolute() {
     let e = engine();
     let b = baseline_engine();
     // Paper FP8: 26 / 12 / 8 images/s for B/L/H.
-    let expected = [(ModelConfig::vit_b(), 26.0), (ModelConfig::vit_l(), 12.0), (ModelConfig::vit_h(), 8.0)];
+    let expected = [
+        (ModelConfig::vit_b(), 26.0),
+        (ModelConfig::vit_l(), 12.0),
+        (ModelConfig::vit_h(), 8.0),
+    ];
     let mut prev = f64::MAX;
     for (cfg, paper) in expected {
         let fp8 = e.run_nar(&cfg, cfg.seq, FpFormat::Fp8).throughput;

@@ -4,6 +4,9 @@
 //! seeded-LCG case generator (`cases`) — deterministic, shrink-free, but
 //! sweeping hundreds of random parameter combinations per invariant.
 
+mod common;
+
+use common::Rng;
 use snitch_fm::arch::{Features, FpFormat, MemLevel, PlatformConfig};
 use snitch_fm::coordinator::schedule::{block_cost, model_cost};
 use snitch_fm::coordinator::KvCache;
@@ -12,20 +15,6 @@ use snitch_fm::kernels::gemm::OperandHome;
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::sim::noc;
 use snitch_fm::tiling::{plan_flash_attention, plan_gemm, plan_gemm_wide};
-
-/// Deterministic LCG over a seed; yields values in [lo, hi].
-struct Rng(u64);
-
-impl Rng {
-    fn next(&mut self, lo: u64, hi: u64) -> u64 {
-        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-        lo + (self.0 >> 33) % (hi - lo + 1)
-    }
-
-    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
-        xs[self.next(0, xs.len() as u64 - 1) as usize]
-    }
-}
 
 const CASES: usize = 300;
 
@@ -266,7 +255,13 @@ fn json_parser_roundtrips_random_nesting() {
         // Build a random nested doc and print it via Display, re-parse it.
         let n = rng.next(1, 6);
         let items: Vec<String> = (0..n)
-            .map(|i| format!("{{\"k{i}\": [{}, {}.5, \"s{i}\"]}}", rng.next(0, 99), rng.next(0, 99)))
+            .map(|i| {
+                format!(
+                    "{{\"k{i}\": [{}, {}.5, \"s{i}\"]}}",
+                    rng.next(0, 99),
+                    rng.next(0, 99)
+                )
+            })
             .collect();
         let doc = format!("[{}]", items.join(","));
         let v = json::parse(&doc).expect("parse");
