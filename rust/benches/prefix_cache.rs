@@ -1,0 +1,172 @@
+//! Prefix-cache + token-budget serving bench — the PR-3 acceptance sweep.
+//!
+//! Three claims defended here:
+//!
+//! 1. On a shared-prefix trace (groups of requests behind common system
+//!    prompts, arriving open-loop), prefix caching ON strictly improves
+//!    p99 TTFT *and* aggregate tokens/s over OFF — the serving analogue
+//!    of the paper's redundant-HBM-traffic elimination.
+//! 2. `--no-prefix-cache` with chunked prefill keeps the PR-2 scheduler:
+//!    with no shared content the ON and OFF paths price the same trace
+//!    to the cycle, and the OFF path is exactly reproducible run to run.
+//!    (The one scheduling refinement over PR 2 — the priority order is
+//!    computed once per iteration, making aging iteration-atomic — is
+//!    inert on this trace.)
+//! 3. With memoized layer pricing and token-budget mixed passes, a
+//!    50k-request open-loop Poisson trace completes inside the CI
+//!    bench-smoke job (it runs in *both* smoke and full modes — making
+//!    that scale tractable is the point of the memo).
+//!
+//! `BENCH_SMOKE=1` shrinks the comparison sweeps; with `BENCH_JSON_DIR`
+//! set the results land in `BENCH_prefix_cache.json` for the CI trend
+//! comparison.
+
+mod common;
+
+use std::time::Instant;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::report;
+
+/// Chat traffic behind shared system prompts: groups of `fanout` requests
+/// share a `prefix`-token template, user turns are short, arrivals are
+/// open-loop and slow enough that group leaders usually finish their
+/// template prefill before the followers show up.
+fn shared_prefix_trace(n: usize, prefix: u64, fanout: usize, rate: f64) -> Workload {
+    Workload::synthetic(11, n, (48, 160), (8, 24))
+        .with_shared_prefix(prefix, fanout)
+        .with_poisson_arrivals(13, rate)
+}
+
+fn main() {
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let gpt = ModelConfig::gpt_j();
+    let fmt = FpFormat::Fp8;
+    let n = if common::smoke() { 16 } else { 48 };
+    let mut json = Vec::new();
+
+    // ---- Claim 1: prefix cache ON strictly beats OFF on shared prefixes.
+    let w = shared_prefix_trace(n, 2048, 8, 0.5);
+    let on = BatcherConfig::new(8, 0);
+    let mut off = on;
+    off.prefix_cache = false;
+    let (t, (r_on, r_off)) = common::time_median(3, || {
+        (e.serve_with(&gpt, &w, on, fmt), e.serve_with(&gpt, &w, off, fmt))
+    });
+    common::header(
+        "prefix cache",
+        "GPT-J FP8, 2048-token shared system prompts, fanout 8, poisson 0.5/s",
+    );
+    println!(
+        "{:<10} {:>10} {:>9} {:>9} {:>12} {:>9}",
+        "config", "tokens/s", "ttftP50", "ttftP99", "hit tokens", "hit rate"
+    );
+    for (label, r) in [("cache off", &r_off), ("cache on", &r_on)] {
+        println!(
+            "{label:<10} {:>10.2} {:>9.3} {:>9.3} {:>12} {:>8.1}%",
+            r.tokens_per_s,
+            r.ttft_p50_s,
+            r.ttft_p99_s,
+            r.prefix_hit_tokens,
+            r.prefix_hit_rate * 100.0,
+        );
+    }
+    common::report_timing("prefix-cache-on-off", t);
+    assert_eq!(r_on.completed, n);
+    assert_eq!(r_off.completed, n);
+    assert_eq!(r_on.gen_tokens, r_off.gen_tokens, "same service delivered");
+    assert!(r_on.prefix_hit_tokens > 0, "shared prefixes must hit");
+    assert!(
+        r_on.ttft_p99_s < r_off.ttft_p99_s,
+        "prefix cache must strictly improve p99 TTFT: {} !< {}",
+        r_on.ttft_p99_s,
+        r_off.ttft_p99_s
+    );
+    assert!(
+        r_on.tokens_per_s > r_off.tokens_per_s,
+        "prefix cache must strictly improve aggregate tokens/s: {} !> {}",
+        r_on.tokens_per_s,
+        r_off.tokens_per_s
+    );
+    json.push(format!(
+        "{{\"config\":\"shared-prefix cache-on\",\"report\":{}}}",
+        report::serve_json(&r_on)
+    ));
+    json.push(format!(
+        "{{\"config\":\"shared-prefix cache-off\",\"report\":{}}}",
+        report::serve_json(&r_off)
+    ));
+
+    // ---- Claim 2: --no-prefix-cache + --prefill-chunk == the PR-2 path.
+    // With unique prompt content the cache can never hit, so the ON path
+    // must price the identical trace to the cycle — and the OFF (PR-2)
+    // path must be exactly reproducible.
+    let w2 = Workload::synthetic(7, n, (256, 1024), (32, 128))
+        .with_poisson_arrivals(3, 1.0);
+    let mut chunked_off = BatcherConfig::new(8, 0);
+    chunked_off.prefill_chunk = 256;
+    chunked_off.prefix_cache = false;
+    let mut chunked_on = chunked_off;
+    chunked_on.prefix_cache = true;
+    let a = e.serve_with(&gpt, &w2, chunked_off, fmt);
+    let b = e.serve_with(&gpt, &w2, chunked_off, fmt);
+    let c = e.serve_with(&gpt, &w2, chunked_on, fmt);
+    assert_eq!(a.total_cycles, b.total_cycles, "PR-2 path must be deterministic");
+    assert_eq!(a.ttft_p99_s, b.ttft_p99_s);
+    assert_eq!(c.prefix_hit_tokens, 0, "unique content cannot hit");
+    assert_eq!(
+        a.total_cycles, c.total_cycles,
+        "cache without hits must not change the trace"
+    );
+    assert_eq!(a.prefill_tokens, c.prefill_tokens);
+    assert_eq!(a.prefill_chunks, c.prefill_chunks);
+    assert_eq!(a.ttft_p99_s, c.ttft_p99_s);
+    assert_eq!(a.tokens_per_s, c.tokens_per_s);
+    println!(
+        "\nno-prefix-cache + prefill-chunk keeps the PR-2 scheduler: \
+         deterministic and cycle-identical to the cache-on no-hit path \
+         ({} cycles)",
+        a.total_cycles
+    );
+
+    // ---- Claim 3: 50k-request open-loop trace, tractable via the memo.
+    let n_big = 50_000;
+    let big = Workload::synthetic(3, n_big, (16, 48), (4, 12))
+        .with_shared_prefix(64, 16)
+        .with_poisson_arrivals(17, 5000.0);
+    let tiny = ModelConfig::tiny();
+    let mut opts = BatcherConfig::new(64, 0);
+    opts.token_budget = 256;
+    opts.prefill_chunk = 64;
+    let wall = Instant::now();
+    let r = e.serve_with(&tiny, &big, opts, FpFormat::Fp32);
+    let wall_s = wall.elapsed().as_secs_f64();
+    common::header("50k trace", "tiny FP32, poisson 5k/s, token budget 256");
+    println!(
+        "completed {}/{} in {wall_s:.2} s wall ({:.1} sim-s): {:.0} tokens/s, \
+         hit rate {:.1}%, memo hit {:.2}%, budget fill {:.1}%",
+        r.completed,
+        n_big,
+        r.total_seconds,
+        r.tokens_per_s,
+        r.prefix_hit_rate * 100.0,
+        r.pricing_cache_hit_rate * 100.0,
+        r.budget_utilization * 100.0,
+    );
+    assert_eq!(r.completed, n_big, "50k-request trace must fully drain");
+    assert_eq!(r.gen_tokens, big.total_gen_tokens());
+    assert!(
+        r.pricing_cache_hit_rate > 0.9,
+        "the memo must absorb the pricing hot path, got {}",
+        r.pricing_cache_hit_rate
+    );
+    common::report_timing("serve-50k-requests", wall_s);
+    json.push(format!(
+        "{{\"config\":\"50k-open-loop\",\"wall_seconds\":{wall_s},\"report\":{}}}",
+        report::serve_json(&r)
+    ));
+
+    common::write_bench_json("prefix_cache", &format!("[{}]", json.join(",")));
+}

@@ -1,42 +1,54 @@
-//! Continuous-batching serving scheduler: paged KV, chunked prefill,
-//! priority-aware admission.
+//! Continuous-batching serving scheduler: paged KV with prefix sharing,
+//! chunked prefill, token-budget mixed iterations, priority-aware
+//! admission.
 //!
 //! Admits [`Request`]s against a paged HBM KV budget, interleaves prefill
-//! chunks (NAR) with ragged batched decode (AR) steps, and prices the
-//! whole trace on the cycle-level platform model. PR 1's batcher was the
-//! FCFS skeleton of this; this version closes its tracked simplifications:
+//! work (NAR) with ragged batched decode (AR), and prices the whole trace
+//! on the cycle-level platform model through a memoized layer-pricing
+//! cache. PR 2 built the paged/chunked/priority skeleton; this version
+//! closes its tracked simplifications:
 //!
-//! * **Paged KV** ([`super::kv_paging`]) — fixed-size pages allocated on
-//!   demand as tokens materialize, freed at retirement, instead of a
-//!   full-length (prompt + max generation) reservation at admission. When
-//!   decode outgrows the pool, the lowest-priority / youngest resident is
-//!   preempted vLLM-recompute-style: its pages are freed and it re-queues
-//!   to re-prefill prompt + already-produced tokens.
+//! * **Prefix caching with ref-counted page sharing**
+//!   ([`super::kv_paging::PrefixCache`]) — prompt pages are content-hashed
+//!   at page granularity; a request whose prompt prefix is already cached
+//!   maps the cached pages (copy-on-write-guarded, billed to the budget
+//!   once) and *skips the prefill passes for those tokens entirely*, so
+//!   shared-system-prompt traffic ([`Workload::with_shared_prefix`]) sees
+//!   both TTFT and tokens/s improve. Eviction is ref-count-aware LRU.
+//!   `prefix_cache = false` (`--no-prefix-cache`) keeps the PR-2 code
+//!   path: identical pricing and scheduling, except that the iteration's
+//!   priority order is now computed once at iteration start (see
+//!   [`Self::iteration_order`] for the one aging corner this refines).
+//! * **Token-budget mixed iterations** (Sarathi-style) — with
+//!   `token_budget > 0`, each iteration fills one budget with decode
+//!   tokens first and prefill-chunk tokens after, priced as a *single
+//!   fused pass* ([`model_total_mixed`]) that streams the weights once,
+//!   killing the prefill/decode pass-alternation overhead.
+//!   `token_budget = 0` keeps the legacy one-chunk-per-resident
+//!   alternation.
+//! * **Memoized layer pricing** ([`LayerCostCache`]) — every pricing call
+//!   goes through an interned signature -> `KernelCost` memo (platform-
+//!   generation tagged), making long open-loop traces tractable; the memo
+//!   is bit-transparent, so no number changes.
+//! * **Paged KV** — fixed-size pages allocated on demand, freed at
+//!   retirement; when the pool runs dry the scheduler first reclaims
+//!   unreferenced cached prefix pages, then preempts the least urgent
+//!   resident vLLM-recompute-style.
 //! * **Chunked prefill** — prompts prefill in `prefill_chunk`-token NAR
-//!   passes (each attending to the request's cached context so far),
-//!   interleaved with decode steps, so a long prompt no longer stalls the
-//!   decode stream or the time-to-first-token of everything queued behind
-//!   it. `prefill_chunk = 0` restores monolithic prefill.
-//! * **Priority + aging admission** — requests carry a priority class
-//!   (0 = most urgent); the queue admits by effective class, where waiting
-//!   `aging_promote_s` seconds promotes a request one class (so no class
-//!   starves). Within a class, FCFS by arrival.
-//! * **Open-loop arrivals** — requests arrive per their `arrival_ns`
-//!   stamps ([`Workload::with_poisson_arrivals`]); the scheduler idles
-//!   forward to the next arrival when the system drains.
-//! * **Ragged decode pricing** — one decode step advances every active
-//!   request by one token, priced with per-request KV lengths
-//!   (`model_cost_decode`) instead of the batch-max length.
+//!   passes attending to the cached context; 0 = monolithic.
+//! * **Priority + aging admission / open-loop arrivals / ragged decode
+//!   pricing** — unchanged from PR 2; the per-iteration priority order is
+//!   now computed once and shared by every stage of the iteration.
 
 use std::collections::VecDeque;
 
 use crate::arch::{FpFormat, PlatformConfig};
-use crate::coordinator::kv_paging::{KvGeometry, PagedKvAllocator, PageTable};
-use crate::coordinator::schedule::{block_cost_batched, model_cost_decode};
+use crate::coordinator::kv_paging::{KvGeometry, PagedKvAllocator, PageTable, PrefixCache};
+use crate::coordinator::schedule::{model_total_mixed, LayerCostCache};
 use crate::coordinator::workload::{Request, Workload};
 use crate::energy;
-use crate::metrics;
-use crate::model::{Mode, ModelConfig};
+use crate::metrics::Percentiles;
+use crate::model::ModelConfig;
 use crate::sim::KernelCost;
 
 /// Scheduling policy knobs for the serving loop.
@@ -50,11 +62,13 @@ pub struct BatcherConfig {
     /// KV page size in tokens (paged-allocator granularity).
     pub page_tokens: u64,
     /// Prefill chunk in tokens; 0 = monolithic prefill (whole prompt in
-    /// one NAR pass, the PR-1 behavior).
+    /// one NAR pass, the PR-1 behavior). With a token budget this is a
+    /// per-request cap on the tokens one iteration may prefill.
     pub prefill_chunk: u64,
     /// Reserve pages for the full prompt + generation at admission
     /// (legacy full-length reservation semantics, page-granular). Used as
-    /// the baseline the paged mode is measured against.
+    /// the baseline the paged mode is measured against; disables prefix
+    /// caching to keep the baseline pure.
     pub reserve_full: bool,
     /// Seconds of queue wait that promote a request one priority class
     /// (anti-starvation aging); 0 disables aging. The default (5 s) is
@@ -62,13 +76,21 @@ pub struct BatcherConfig {
     /// single GPT-class prefill takes seconds — small enough to prevent
     /// starvation, large enough that classes actually separate.
     pub aging_promote_s: f64,
+    /// Content-addressed prefix caching over the page pool: requests
+    /// whose prompts share a cached prefix map the cached pages and skip
+    /// those prefill tokens. `false` restores PR-2 behavior bit-for-bit.
+    pub prefix_cache: bool,
+    /// Per-iteration token budget shared between prefill chunks and
+    /// decode tokens, priced as one fused mixed pass (Sarathi-style);
+    /// 0 = legacy prefill/decode pass alternation.
+    pub token_budget: u64,
 }
 
 impl BatcherConfig {
-    /// Paged, non-chunked, single-class defaults at the given budget.
-    /// `kv_budget_bytes = 0` means "the platform's KV budget" (HBM
-    /// capacity minus resident weights); [`ContinuousBatcher::new`]
-    /// resolves it.
+    /// Paged, non-chunked, single-class, prefix-cached defaults at the
+    /// given budget. `kv_budget_bytes = 0` means "the platform's KV
+    /// budget" (HBM capacity minus resident weights);
+    /// [`ContinuousBatcher::new`] resolves it.
     pub fn new(max_batch: usize, kv_budget_bytes: u64) -> BatcherConfig {
         BatcherConfig {
             max_batch,
@@ -77,6 +99,8 @@ impl BatcherConfig {
             prefill_chunk: 0,
             reserve_full: false,
             aging_promote_s: 5.0,
+            prefix_cache: true,
+            token_budget: 0,
         }
     }
 }
@@ -100,6 +124,8 @@ pub struct RequestStats {
     pub latency_s: f64,
     /// Times this request was preempted (pages reclaimed, recompute).
     pub preemptions: u32,
+    /// Prompt tokens served from the prefix cache (prefill skipped).
+    pub prefix_hit_tokens: u64,
 }
 
 /// Latency percentiles of one priority class.
@@ -130,11 +156,14 @@ pub struct ServeReport {
     /// Paged-allocator geometry: tokens per page / pages in the pool.
     pub page_tokens: u64,
     pub total_pages: u64,
-    /// High-water mark of mapped KV bytes (must stay <= budget).
+    /// High-water mark of mapped KV bytes (must stay <= budget; shared
+    /// prefix pages count once, cached-but-idle pages count until
+    /// evicted).
     pub peak_kv_bytes: u64,
     pub total_cycles: u64,
     pub total_seconds: f64,
-    /// Prompt tokens prefilled, including recompute after preemption.
+    /// Prompt tokens prefilled, including recompute after preemption and
+    /// excluding prefix-cache hits.
     pub prefill_tokens: u64,
     /// Prefill NAR passes issued (chunks).
     pub prefill_chunks: u64,
@@ -152,13 +181,30 @@ pub struct ServeReport {
     pub queue_p99_s: f64,
     /// Aggregate generated tokens / total wall-clock.
     pub tokens_per_s: f64,
-    /// Generated tokens / decode-only wall-clock.
+    /// Generated tokens / decode wall-clock. In token-budget mode decode
+    /// shares its passes with prefill chunks, so the denominator covers
+    /// every pass that advanced at least one decode token.
     pub decode_tokens_per_s: f64,
-    /// Mean decode batch occupancy (tokens per decode step).
+    /// Mean decode batch occupancy (decode tokens per decode-carrying
+    /// pass).
     pub avg_batch_occupancy: f64,
     pub fpu_utilization: f64,
     pub power_w: f64,
     pub hbm_gb: f64,
+    /// Whether prefix caching was active for this run.
+    pub prefix_cache: bool,
+    /// Prompt tokens served from the prefix cache instead of prefill.
+    pub prefix_hit_tokens: u64,
+    /// prefix_hit_tokens / (prefix_hit_tokens + prefill_tokens): the
+    /// fraction of required prompt work the cache absorbed.
+    pub prefix_hit_rate: f64,
+    /// Per-iteration token budget (0 = legacy alternation).
+    pub token_budget: u64,
+    /// Mean fraction of the token budget filled per mixed iteration
+    /// (0 when the budget mode is off).
+    pub budget_utilization: f64,
+    /// Fraction of layer-pricing lookups served by the memo.
+    pub pricing_cache_hit_rate: f64,
     /// Per-priority-class percentiles (one entry per class present).
     pub per_class: Vec<ClassStats>,
     pub per_request: Vec<RequestStats>,
@@ -169,12 +215,14 @@ pub struct ServeReport {
 struct Job {
     req: Request,
     arrival_cycle: u64,
-    /// Tokens that must be prefilled before (more) decode: the prompt,
+    /// Tokens that must be materialized before (more) decode: the prompt,
     /// plus already-produced tokens after a recompute preemption.
     prefill_target: u64,
     /// Tokens generated so far (credited once; never re-generated).
     produced: u64,
     preemptions: u32,
+    /// Prompt tokens served from the prefix cache across the job's life.
+    prefix_hit_tokens: u64,
     first_admitted_cycle: Option<u64>,
     ttft_cycle: Option<u64>,
 }
@@ -182,10 +230,28 @@ struct Job {
 /// A resident request (holds pages).
 struct ActiveJob {
     job: Job,
+    /// Tokens materialized toward `prefill_target` (prefix hits included).
     prefill_done: u64,
     /// Tokens currently materialized in KV.
     kv_len: u64,
     table: PageTable,
+    /// Content hashes of the prompt's full pages (empty when prefix
+    /// caching is off).
+    page_hashes: Vec<u64>,
+    /// Leading prompt pages already registered in (or attached from) the
+    /// prefix cache.
+    registered: u64,
+}
+
+impl ActiveJob {
+    fn prefilling(&self) -> bool {
+        self.prefill_done < self.job.prefill_target
+    }
+
+    fn decodable(&self) -> bool {
+        self.prefill_done >= self.job.prefill_target
+            && self.job.produced < self.job.req.gen_tokens
+    }
 }
 
 /// Prices a serving trace over one model/platform/precision.
@@ -206,6 +272,25 @@ struct RunCounters {
     prefill_tokens: u64,
     prefill_chunks: u64,
     preemptions: u64,
+    prefix_hit_tokens: u64,
+    /// Tokens claimed / iterations run in token-budget mode.
+    budget_tokens: u64,
+    budget_iterations: u64,
+}
+
+/// Mutable state of one serving run, threaded through the per-iteration
+/// stages (the fields are split-borrowed, so stages can touch tables,
+/// the allocator and the prefix cache at once).
+struct RunState {
+    ready: Vec<Job>,
+    active: Vec<ActiveJob>,
+    done: Vec<RequestStats>,
+    rejected: Vec<usize>,
+    alloc: PagedKvAllocator,
+    cache: PrefixCache,
+    costs: LayerCostCache,
+    c: RunCounters,
+    time: u64,
 }
 
 impl<'a> ContinuousBatcher<'a> {
@@ -224,6 +309,12 @@ impl<'a> ContinuousBatcher<'a> {
                 super::kv_paging::platform_kv_budget_bytes(cfg, fmt, platform);
         }
         ContinuousBatcher { cfg, platform, fmt, opts }
+    }
+
+    /// Whether this run deduplicates shared prompt prefixes. Off under
+    /// `reserve_full` so the legacy-reservation baseline stays pure.
+    fn prefix_caching(&self) -> bool {
+        self.opts.prefix_cache && !self.opts.reserve_full
     }
 
     /// Scheduling key: most urgent first — effective (aged) class, then
@@ -251,28 +342,39 @@ impl<'a> ContinuousBatcher<'a> {
         job.req.class.saturating_sub(promoted)
     }
 
-    /// Pages a job needs at admission time.
-    fn admission_pages(&self, geom: &KvGeometry, job: &Job) -> u64 {
+    /// Pages a job must be able to map at admission time, net of the
+    /// cached prefix pages it would share (those bill the pool nothing
+    /// new).
+    fn admission_pages(&self, geom: &KvGeometry, job: &Job, cached_hits: u64) -> u64 {
         if self.opts.reserve_full {
             geom.pages_for(job.prefill_target + (job.req.gen_tokens - job.produced))
         } else {
-            geom.pages_for(job.prefill_target)
+            geom.pages_for(job.prefill_target).saturating_sub(cached_hits)
         }
     }
 
     /// Run the whole workload to completion and return the priced report.
     pub fn run(&self, workload: &Workload) -> ServeReport {
         let geom = KvGeometry::new(self.cfg, self.fmt, self.opts.page_tokens);
-        let mut alloc = PagedKvAllocator::new(self.opts.kv_budget_bytes, geom);
+        let mut st = RunState {
+            ready: Vec::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            rejected: Vec::new(),
+            alloc: PagedKvAllocator::new(self.opts.kv_budget_bytes, geom),
+            cache: PrefixCache::new(),
+            costs: LayerCostCache::new(self.platform),
+            c: RunCounters::default(),
+            time: 0,
+        };
         let aging_cycles = self.aging_cycles();
 
-        let mut rejected = Vec::new();
         let mut arrivals: VecDeque<Job> = VecDeque::new();
         {
             let mut jobs: Vec<Job> = Vec::new();
             for r in &workload.requests {
-                if !alloc.fits_pool(r.kv_capacity()) {
-                    rejected.push(r.id);
+                if !st.alloc.fits_pool(r.kv_capacity()) {
+                    st.rejected.push(r.id);
                     continue;
                 }
                 jobs.push(Job {
@@ -280,6 +382,7 @@ impl<'a> ContinuousBatcher<'a> {
                     prefill_target: r.prompt_len,
                     produced: 0,
                     preemptions: 0,
+                    prefix_hit_tokens: 0,
                     first_admitted_cycle: None,
                     ttft_cycle: None,
                     req: r.clone(),
@@ -289,171 +392,295 @@ impl<'a> ContinuousBatcher<'a> {
             arrivals.extend(jobs);
         }
 
-        let mut ready: Vec<Job> = Vec::new();
-        let mut active: Vec<ActiveJob> = Vec::new();
-        let mut done: Vec<RequestStats> = Vec::new();
-        let mut c = RunCounters::default();
-        let mut time: u64 = 0;
-
         loop {
-            while arrivals.front().is_some_and(|j| j.arrival_cycle <= time) {
-                ready.push(arrivals.pop_front().unwrap());
+            while arrivals.front().is_some_and(|j| j.arrival_cycle <= st.time) {
+                st.ready.push(arrivals.pop_front().unwrap());
             }
 
-            self.admit(&mut ready, &mut active, &mut alloc, &geom, time, aging_cycles);
+            self.admit(&mut st, aging_cycles);
 
-            if active.is_empty() {
+            if st.active.is_empty() {
                 debug_assert!(
-                    ready.is_empty(),
+                    st.ready.is_empty(),
                     "admission must drain the queue when the pool is free"
                 );
                 match arrivals.front() {
-                    Some(next) if ready.is_empty() => {
+                    Some(next) if st.ready.is_empty() => {
                         // System idle: jump to the next arrival.
-                        time = time.max(next.arrival_cycle);
+                        st.time = st.time.max(next.arrival_cycle);
                         continue;
                     }
-                    None if ready.is_empty() => break,
+                    None if st.ready.is_empty() => break,
                     _ => break, // wedged-queue guard (upfront reject covers this)
                 }
             }
 
-            let mut progressed = false;
-            progressed |=
-                self.prefill_quanta(&mut active, &mut alloc, &mut c, &mut time, aging_cycles);
-            self.retire_finished(&mut active, &mut alloc, &mut done, time);
-            progressed |= self.decode_step(
-                &mut active,
-                &mut ready,
-                &mut alloc,
-                &mut done,
-                &mut c,
-                &mut time,
-                aging_cycles,
-            );
+            // One priority order per iteration, shared by every stage
+            // (ids, so stages survive `active` reshuffles).
+            let order = self.iteration_order(&st, aging_cycles);
+            let progressed = if self.opts.token_budget > 0 {
+                let p = self.mixed_iteration(&mut st, &order);
+                self.retire_finished(&mut st);
+                p
+            } else {
+                let mut p = self.prefill_quanta(&mut st, &order);
+                self.retire_finished(&mut st);
+                p |= self.decode_step(&mut st, &order);
+                p
+            };
 
             if !progressed {
-                // Every resident job is stalled on pages: reclaim from the
-                // least urgent one so the rest can move.
-                if active.len() > 1 {
-                    if let Some(v) = Self::victim_index(&active, None) {
-                        Self::preempt(&mut active, v, &mut ready, &mut alloc, &mut c);
+                // Every resident job is stalled on pages. Reclaim idle
+                // cached prefix pages first; only then evict a resident.
+                if st.cache.evict_lru(&mut st.alloc, 1) > 0 {
+                    continue;
+                }
+                if st.active.len() > 1 {
+                    if let Some(v) = Self::victim_index(&st.active, None) {
+                        Self::preempt(&mut st, v);
                     }
                 } else {
                     // A lone resident can always grow (oversize requests
-                    // were rejected against the whole pool upfront).
+                    // were rejected against the whole pool upfront, and
+                    // cached pages were just drained).
                     debug_assert!(false, "lone resident job stalled");
-                    if let Some(mut a) = active.pop() {
-                        alloc.release(&mut a.table);
-                        rejected.push(a.job.req.id);
+                    if let Some(mut a) = st.active.pop() {
+                        st.alloc.release(&mut a.table);
+                        st.rejected.push(a.job.req.id);
                     }
                 }
             }
         }
 
-        self.report(workload, rejected, done, &alloc, c, time)
+        self.report(workload, st)
     }
 
-    /// Admit ready jobs by effective priority while slots and pages allow.
-    fn admit(
-        &self,
-        ready: &mut Vec<Job>,
-        active: &mut Vec<ActiveJob>,
-        alloc: &mut PagedKvAllocator,
-        geom: &KvGeometry,
-        time: u64,
-        aging_cycles: u64,
-    ) {
-        while active.len() < self.opts.max_batch.max(1) && !ready.is_empty() {
-            let best = (0..ready.len())
-                .min_by_key(|&i| Self::sched_key(&ready[i], time, aging_cycles))
+    /// The iteration's scheduling order: every resident job's id, most
+    /// urgent first. Computed once per iteration and passed to each stage
+    /// (PR 2 re-sorted per stage); stages filter it for eligibility.
+    ///
+    /// Deliberate refinement over PR 2: the order is evaluated at
+    /// iteration-start time, so an aging promotion that lands *mid*-
+    /// iteration (while a prefill pass advances the clock) no longer
+    /// reorders that same iteration's decode stage — the iteration is
+    /// atomic with respect to aging. On traces where no promotion falls
+    /// inside an iteration (aging off, or any bounded trace with the
+    /// defaults), scheduling is identical to PR 2.
+    fn iteration_order(&self, st: &RunState, aging_cycles: u64) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..st.active.len()).collect();
+        idx.sort_by_key(|&i| Self::sched_key(&st.active[i].job, st.time, aging_cycles));
+        idx.into_iter().map(|i| st.active[i].job.req.id).collect()
+    }
+
+    /// Admit ready jobs by effective priority while slots and pages allow,
+    /// attaching cached prompt prefixes (and skipping their prefill).
+    fn admit(&self, st: &mut RunState, aging_cycles: u64) {
+        while st.active.len() < self.opts.max_batch.max(1) && !st.ready.is_empty() {
+            let best = (0..st.ready.len())
+                .min_by_key(|&i| Self::sched_key(&st.ready[i], st.time, aging_cycles))
                 .unwrap();
-            if self.admission_pages(geom, &ready[best]) > alloc.free_pages() {
-                // Strict priority: lower classes do not jump the head of
-                // the queue on pages; retirements will free them.
-                break;
+            let geom = st.alloc.geometry();
+            let page_hashes = if self.prefix_caching() {
+                st.ready[best].req.prompt_page_hashes(geom.page_tokens)
+            } else {
+                Vec::new()
+            };
+            let hits = st.cache.probe(&page_hashes);
+            let need = self.admission_pages(&geom, &st.ready[best], hits);
+            if need > st.alloc.free_pages() {
+                // Idle cached prefixes are reclaimable capacity — but only
+                // spend them when they actually cover the shortfall;
+                // otherwise the admission fails anyway and the evicted
+                // prefixes (hot system prompts other queued requests would
+                // hit) would be destroyed for nothing.
+                let missing = need - st.alloc.free_pages();
+                if st.cache.reclaimable(&st.alloc) >= missing {
+                    st.cache.evict_lru(&mut st.alloc, missing);
+                }
+                if need > st.alloc.free_pages() {
+                    // Strict priority: lower classes do not jump the head
+                    // of the queue on pages; retirements will free them.
+                    break;
+                }
             }
-            let mut job = ready.swap_remove(best);
+            let mut job = st.ready.swap_remove(best);
             let mut table = PageTable::new();
+            // Under pool pressure the eviction above may have reclaimed
+            // some of the very entries just probed, so the attach can come
+            // up short of the probe; the job then prefills those tokens
+            // like any miss (later grows reclaim/preempt as usual).
+            let attached = st.cache.attach_prefix(&mut st.alloc, &mut table, &page_hashes);
+            debug_assert!(attached <= hits, "attach cannot exceed the probe");
+            let hit_tokens = attached * geom.page_tokens;
+            job.prefix_hit_tokens += hit_tokens;
+            st.c.prefix_hit_tokens += hit_tokens;
             if self.opts.reserve_full {
-                let reserved = alloc.try_grow(
+                let reserved = st.alloc.try_grow(
                     &mut table,
                     job.prefill_target + (job.req.gen_tokens - job.produced),
                 );
                 debug_assert!(reserved, "admission check guarantees the reservation");
             }
             if job.first_admitted_cycle.is_none() {
-                job.first_admitted_cycle = Some(time);
+                job.first_admitted_cycle = Some(st.time);
             }
-            active.push(ActiveJob { job, prefill_done: 0, kv_len: 0, table });
+            st.active.push(ActiveJob {
+                job,
+                prefill_done: hit_tokens,
+                kv_len: hit_tokens,
+                table,
+                page_hashes,
+                registered: attached,
+            });
         }
     }
 
-    /// Advance every prefilling job by one chunk (priority order). Returns
-    /// whether any prefill work ran.
-    fn prefill_quanta(
-        &self,
-        active: &mut [ActiveJob],
+    /// Grow `table` to `tokens`, reclaiming idle cached prefix pages when
+    /// the pool alone cannot satisfy it. All-or-nothing like `try_grow`.
+    fn grow_reclaiming(
         alloc: &mut PagedKvAllocator,
-        c: &mut RunCounters,
-        time: &mut u64,
-        aging_cycles: u64,
+        cache: &mut PrefixCache,
+        table: &mut PageTable,
+        tokens: u64,
     ) -> bool {
-        let mut order: Vec<usize> = (0..active.len())
-            .filter(|&i| active[i].prefill_done < active[i].job.prefill_target)
-            .collect();
-        order.sort_by_key(|&i| Self::sched_key(&active[i].job, *time, aging_cycles));
+        if alloc.try_grow(table, tokens) {
+            return true;
+        }
+        let missing = alloc
+            .geometry()
+            .pages_for(tokens)
+            .saturating_sub(table.len() as u64)
+            .saturating_sub(alloc.free_pages());
+        cache.evict_lru(alloc, missing);
+        alloc.try_grow(table, tokens)
+    }
+
+    /// Extend a table that is being *written* from `have` to `want`
+    /// tokens: when the write lands inside the current tail page, the
+    /// copy-on-write guard forks it first (structurally a no-op — shared
+    /// pages are full prompt pages and writes land past them — but the
+    /// fork keeps that invariant local).
+    fn grow_written(
+        alloc: &mut PagedKvAllocator,
+        cache: &mut PrefixCache,
+        table: &mut PageTable,
+        have: u64,
+        want: u64,
+    ) -> bool {
+        let inside_tail = have % alloc.geometry().page_tokens != 0;
+        if inside_tail
+            && !alloc.ensure_private_tail(table)
+            // The fork itself needs a free page: reclaim one and retry.
+            && (cache.evict_lru(alloc, 1) == 0 || !alloc.ensure_private_tail(table))
+        {
+            return false;
+        }
+        Self::grow_reclaiming(alloc, cache, table, want)
+    }
+
+    /// Make room for one more decode token of job `id`, preempting less
+    /// urgent residents if reclaiming cached pages is not enough. Returns
+    /// whether the token's page is mapped (false also when the job itself
+    /// got preempted while others grew).
+    fn grow_for_decode(&self, st: &mut RunState, id: usize) -> bool {
+        loop {
+            let Some(i) = st.active.iter().position(|a| a.job.req.id == id) else {
+                return false;
+            };
+            let ok = {
+                let RunState { active, alloc, cache, .. } = &mut *st;
+                let a = &mut active[i];
+                Self::grow_written(alloc, cache, &mut a.table, a.kv_len, a.kv_len + 1)
+            };
+            if ok {
+                return true;
+            }
+            match Self::victim_index(&st.active, Some(i)) {
+                Some(v) => Self::preempt(st, v),
+                None => return false, // nobody less urgent; wait a step
+            }
+        }
+    }
+
+    /// Register newly materialized full prompt pages in the prefix cache
+    /// (up to the prompt boundary; generated tokens are never shareable).
+    fn register_prompt_pages(st: &mut RunState, i: usize) {
+        let RunState { active, alloc, cache, .. } = &mut *st;
+        let a = &mut active[i];
+        let pt = alloc.geometry().page_tokens;
+        let full = (a.prefill_done.min(a.job.req.prompt_len) / pt)
+            .min(a.page_hashes.len() as u64);
+        while a.registered < full {
+            let idx = a.registered as usize;
+            cache.insert(alloc, a.page_hashes[idx], a.table.pages()[idx]);
+            a.registered += 1;
+        }
+    }
+
+    /// Advance every prefilling job by one chunk (shared priority order).
+    /// Returns whether any prefill work ran. Legacy (non-budget) path:
+    /// each chunk is its own NAR pass.
+    fn prefill_quanta(&self, st: &mut RunState, order: &[usize]) -> bool {
         let mut ran = false;
-        for i in order {
-            let a = &mut active[i];
-            let remaining = a.job.prefill_target - a.prefill_done;
+        for &id in order {
+            let Some(i) = st.active.iter().position(|a| a.job.req.id == id) else {
+                continue;
+            };
+            if !st.active[i].prefilling() {
+                continue;
+            }
+            let remaining = st.active[i].job.prefill_target - st.active[i].prefill_done;
             let quantum = match self.opts.prefill_chunk {
                 0 => remaining,
                 chunk => remaining.min(chunk),
             };
-            if !alloc.try_grow(&mut a.table, a.prefill_done + quantum) {
+            let grown = {
+                let RunState { active, alloc, cache, .. } = &mut *st;
+                let a = &mut active[i];
+                Self::grow_written(
+                    alloc,
+                    cache,
+                    &mut a.table,
+                    a.prefill_done,
+                    a.prefill_done + quantum,
+                )
+            };
+            if !grown {
                 continue; // wait for pages; decode/retirements will free some
             }
-            let cost = block_cost_batched(
+            let cost = model_total_mixed(
+                &mut st.costs,
                 self.cfg,
-                Mode::Nar,
-                1,
-                quantum,
-                a.prefill_done,
+                &[(quantum, st.active[i].prefill_done)],
+                &[],
                 self.fmt,
                 self.platform,
-            )
-            .total
-            .repeat(self.cfg.blocks);
-            *time += cost.cycles;
-            c.total = c.total.then(cost);
+            );
+            st.time += cost.cycles;
+            st.c.total = st.c.total.then(cost);
+            let a = &mut st.active[i];
             a.prefill_done += quantum;
             a.kv_len = a.prefill_done;
-            c.prefill_tokens += quantum;
-            c.prefill_chunks += 1;
+            st.c.prefill_tokens += quantum;
+            st.c.prefill_chunks += 1;
+            Self::register_prompt_pages(st, i);
             ran = true;
         }
         ran
     }
 
     /// Retire jobs that need no (further) decode (prefill-only requests).
-    fn retire_finished(
-        &self,
-        active: &mut Vec<ActiveJob>,
-        alloc: &mut PagedKvAllocator,
-        done: &mut Vec<RequestStats>,
-        time: u64,
-    ) {
+    fn retire_finished(&self, st: &mut RunState) {
         let mut i = 0;
-        while i < active.len() {
-            let a = &active[i];
+        while i < st.active.len() {
+            let a = &st.active[i];
             if a.prefill_done >= a.job.prefill_target
                 && a.job.produced >= a.job.req.gen_tokens
             {
-                let mut a = active.swap_remove(i);
-                alloc.release(&mut a.table);
-                let ttft = a.job.ttft_cycle.unwrap_or(time);
-                done.push(self.finish_stats(&a.job, ttft, time));
+                let mut a = st.active.swap_remove(i);
+                st.alloc.release(&mut a.table);
+                let ttft = a.job.ttft_cycle.unwrap_or(st.time);
+                st.done.push(self.finish_stats(&a.job, ttft, st.time));
             } else {
                 i += 1;
             }
@@ -461,79 +688,170 @@ impl<'a> ContinuousBatcher<'a> {
     }
 
     /// One ragged batched decode step over every fully-prefilled resident
-    /// job, growing pages on demand (preempting less urgent residents when
-    /// the pool is dry). Returns whether a step ran.
-    #[allow(clippy::too_many_arguments)]
-    fn decode_step(
-        &self,
-        active: &mut Vec<ActiveJob>,
-        ready: &mut Vec<Job>,
-        alloc: &mut PagedKvAllocator,
-        done: &mut Vec<RequestStats>,
-        c: &mut RunCounters,
-        time: &mut u64,
-        aging_cycles: u64,
-    ) -> bool {
-        let mut order: Vec<usize> = (0..active.len())
-            .filter(|&i| {
-                active[i].prefill_done >= active[i].job.prefill_target
-                    && active[i].job.produced < active[i].job.req.gen_tokens
-            })
-            .collect();
-        order.sort_by_key(|&i| Self::sched_key(&active[i].job, *time, aging_cycles));
-        // Index-stable id list (preemption below reshuffles `active`).
-        let ids: Vec<usize> = order.iter().map(|&i| active[i].job.req.id).collect();
-
+    /// job (shared priority order), growing pages on demand. Returns
+    /// whether a step ran. Legacy (non-budget) path.
+    fn decode_step(&self, st: &mut RunState, order: &[usize]) -> bool {
         let mut stepped: Vec<usize> = Vec::new();
-        for id in ids {
-            'grow: loop {
-                let Some(i) = active.iter().position(|a| a.job.req.id == id) else {
-                    break 'grow; // preempted while growing others
-                };
-                let want = active[i].kv_len + 1;
-                if alloc.try_grow(&mut active[i].table, want) {
-                    stepped.push(id);
-                    break 'grow;
-                }
-                match Self::victim_index(active, Some(i)) {
-                    Some(v) => Self::preempt(active, v, ready, alloc, c),
-                    None => break 'grow, // nobody less urgent; wait a step
-                }
+        for &id in order {
+            let eligible = st.active.iter().any(|a| a.job.req.id == id && a.decodable());
+            if eligible && self.grow_for_decode(st, id) {
+                stepped.push(id);
             }
         }
         // A job that grew early can itself be evicted while later jobs
         // grow; only still-resident jobs take part in the step.
-        stepped.retain(|id| active.iter().any(|a| a.job.req.id == *id));
+        stepped.retain(|id| st.active.iter().any(|a| a.job.req.id == *id));
         if stepped.is_empty() {
             return false;
         }
 
         let kv_lens: Vec<u64> = stepped
             .iter()
-            .map(|id| active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len)
+            .map(|id| st.active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len)
             .collect();
-        let cost = model_cost_decode(self.cfg, &kv_lens, self.fmt, self.platform).total;
-        *time += cost.cycles;
-        c.total = c.total.then(cost);
-        c.decode_cycles += cost.cycles;
-        c.decode_tokens += stepped.len() as u64;
-        c.decode_steps += 1;
+        let cost = model_total_mixed(
+            &mut st.costs,
+            self.cfg,
+            &[],
+            &kv_lens,
+            self.fmt,
+            self.platform,
+        );
+        st.time += cost.cycles;
+        st.c.total = st.c.total.then(cost);
+        st.c.decode_cycles += cost.cycles;
+        st.c.decode_tokens += stepped.len() as u64;
+        st.c.decode_steps += 1;
 
-        for id in stepped {
-            let i = active.iter().position(|a| a.job.req.id == id).unwrap();
-            let a = &mut active[i];
+        self.apply_decode(st, &stepped);
+        true
+    }
+
+    /// Credit one decoded token to each job in `stepped` (TTFT on the
+    /// first, inline retirement on the last).
+    fn apply_decode(&self, st: &mut RunState, stepped: &[usize]) {
+        for &id in stepped {
+            let i = st.active.iter().position(|a| a.job.req.id == id).unwrap();
+            let a = &mut st.active[i];
             a.kv_len += 1;
             a.job.produced += 1;
             if a.job.ttft_cycle.is_none() {
-                a.job.ttft_cycle = Some(*time);
+                a.job.ttft_cycle = Some(st.time);
             }
             if a.job.produced >= a.job.req.gen_tokens {
-                let mut a = active.swap_remove(i);
-                alloc.release(&mut a.table);
-                let ttft = a.job.ttft_cycle.unwrap_or(*time);
-                done.push(self.finish_stats(&a.job, ttft, *time));
+                let mut a = st.active.swap_remove(i);
+                st.alloc.release(&mut a.table);
+                let ttft = a.job.ttft_cycle.unwrap_or(st.time);
+                st.done.push(self.finish_stats(&a.job, ttft, st.time));
             }
         }
+    }
+
+    /// One Sarathi-style mixed iteration: a single token budget is filled
+    /// with decode tokens first (latency), then prefill-chunk tokens, and
+    /// the whole claim is priced as one fused pass that streams the
+    /// weights once. Returns whether any work ran.
+    fn mixed_iteration(&self, st: &mut RunState, order: &[usize]) -> bool {
+        let budget = self.opts.token_budget.max(1);
+        let mut left = budget;
+
+        // Phase 1: decode claims, most urgent first.
+        let mut decode_ids: Vec<usize> = Vec::new();
+        for &id in order {
+            if left == 0 {
+                break;
+            }
+            let eligible = st.active.iter().any(|a| a.job.req.id == id && a.decodable());
+            if eligible && self.grow_for_decode(st, id) {
+                decode_ids.push(id);
+                left -= 1;
+            }
+        }
+        // Decode growth can preempt earlier claimants; drop them and
+        // return their budget slots, so prefill can use what the pass
+        // will not actually spend on decode.
+        decode_ids.retain(|id| st.active.iter().any(|a| a.job.req.id == *id));
+        left = budget - decode_ids.len() as u64;
+
+        // Phase 2: prefill chunks from the remaining budget.
+        let mut prefill_claims: Vec<(usize, u64, u64)> = Vec::new(); // (id, quantum, kv)
+        for &id in order {
+            if left == 0 {
+                break;
+            }
+            let Some(i) = st.active.iter().position(|a| a.job.req.id == id) else {
+                continue;
+            };
+            if !st.active[i].prefilling() {
+                continue;
+            }
+            let remaining = st.active[i].job.prefill_target - st.active[i].prefill_done;
+            let cap = match self.opts.prefill_chunk {
+                0 => u64::MAX,
+                chunk => chunk,
+            };
+            let quantum = remaining.min(cap).min(left);
+            let grown = {
+                let RunState { active, alloc, cache, .. } = &mut *st;
+                let a = &mut active[i];
+                Self::grow_written(
+                    alloc,
+                    cache,
+                    &mut a.table,
+                    a.prefill_done,
+                    a.prefill_done + quantum,
+                )
+            };
+            if !grown {
+                continue; // wait for pages
+            }
+            prefill_claims.push((id, quantum, st.active[i].prefill_done));
+            left -= quantum;
+        }
+
+        if decode_ids.is_empty() && prefill_claims.is_empty() {
+            return false;
+        }
+
+        let kv_lens: Vec<u64> = decode_ids
+            .iter()
+            .map(|id| st.active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len)
+            .collect();
+        let prefills: Vec<(u64, u64)> =
+            prefill_claims.iter().map(|&(_, q, kv)| (q, kv)).collect();
+        let cost = model_total_mixed(
+            &mut st.costs,
+            self.cfg,
+            &prefills,
+            &kv_lens,
+            self.fmt,
+            self.platform,
+        );
+        st.time += cost.cycles;
+        st.c.total = st.c.total.then(cost);
+        let prefill_claimed: u64 = prefills.iter().map(|&(s, _)| s).sum();
+        st.c.budget_tokens += kv_lens.len() as u64 + prefill_claimed;
+        st.c.budget_iterations += 1;
+        if !decode_ids.is_empty() {
+            st.c.decode_cycles += cost.cycles;
+            st.c.decode_tokens += decode_ids.len() as u64;
+            st.c.decode_steps += 1;
+        }
+
+        for &(id, quantum, _) in &prefill_claims {
+            let i = st
+                .active
+                .iter()
+                .position(|a| a.job.req.id == id)
+                .expect("prefill claimants cannot be preempted after phase 1");
+            let a = &mut st.active[i];
+            a.prefill_done += quantum;
+            a.kv_len = a.prefill_done;
+            st.c.prefill_tokens += quantum;
+            st.c.prefill_chunks += 1;
+            Self::register_prompt_pages(st, i);
+        }
+        self.apply_decode(st, &decode_ids);
         true
     }
 
@@ -553,20 +871,15 @@ impl<'a> ContinuousBatcher<'a> {
     }
 
     /// Evict a resident job: free its pages and requeue it to recompute
-    /// (re-prefill prompt + already-produced tokens, then resume decode).
-    fn preempt(
-        active: &mut Vec<ActiveJob>,
-        victim: usize,
-        ready: &mut Vec<Job>,
-        alloc: &mut PagedKvAllocator,
-        c: &mut RunCounters,
-    ) {
-        let mut a = active.swap_remove(victim);
-        alloc.release(&mut a.table);
+    /// (re-prefill prompt + already-produced tokens, then resume decode —
+    /// often partly from the prefix cache it populated itself).
+    fn preempt(st: &mut RunState, victim: usize) {
+        let mut a = st.active.swap_remove(victim);
+        st.alloc.release(&mut a.table);
         a.job.preemptions += 1;
         a.job.prefill_target = a.job.req.prompt_len + a.job.produced;
-        c.preemptions += 1;
-        ready.push(a.job);
+        st.c.preemptions += 1;
+        st.ready.push(a.job);
     }
 
     fn finish_stats(&self, job: &Job, ttft_cycle: u64, done_cycle: u64) -> RequestStats {
@@ -585,27 +898,23 @@ impl<'a> ContinuousBatcher<'a> {
             ttft_s: s(ttft_cycle.saturating_sub(arrival)),
             latency_s: s(done_cycle.saturating_sub(arrival)),
             preemptions: job.preemptions,
+            prefix_hit_tokens: job.prefix_hit_tokens,
         }
     }
 
-    fn report(
-        &self,
-        workload: &Workload,
-        rejected: Vec<usize>,
-        mut done: Vec<RequestStats>,
-        alloc: &PagedKvAllocator,
-        c: RunCounters,
-        time: u64,
-    ) -> ServeReport {
+    fn report(&self, workload: &Workload, st: RunState) -> ServeReport {
+        let RunState { mut done, rejected, alloc, costs, c, time, .. } = st;
         done.sort_by_key(|r| r.id);
         // TTFT is defined over generated tokens: prefill-only requests
         // (gen_tokens == 0) never produce one, so they are excluded from
         // the TTFT aggregates (their per-request ttft_s equals prefill
-        // completion).
-        let ttfts: Vec<f64> =
-            done.iter().filter(|r| r.gen_tokens > 0).map(|r| r.ttft_s).collect();
-        let lats: Vec<f64> = done.iter().map(|r| r.latency_s).collect();
-        let queues: Vec<f64> = done.iter().map(|r| r.admitted_s).collect();
+        // completion). Each sample vector is sorted once; every
+        // percentile after that is an index.
+        let ttft = Percentiles::new(
+            done.iter().filter(|r| r.gen_tokens > 0).map(|r| r.ttft_s).collect(),
+        );
+        let lat = Percentiles::new(done.iter().map(|r| r.latency_s).collect());
+        let queue = Percentiles::new(done.iter().map(|r| r.admitted_s).collect());
         let total_seconds = self.platform.cycles_to_seconds(time);
         let decode_seconds = self.platform.cycles_to_seconds(c.decode_cycles);
         let gen_tokens: u64 = done.iter().map(|r| r.gen_tokens).sum();
@@ -617,23 +926,25 @@ impl<'a> ContinuousBatcher<'a> {
         let per_class = classes
             .into_iter()
             .map(|class| {
-                let t: Vec<f64> = done
-                    .iter()
-                    .filter(|r| r.class == class && r.gen_tokens > 0)
-                    .map(|r| r.ttft_s)
-                    .collect();
-                let l: Vec<f64> = done
-                    .iter()
-                    .filter(|r| r.class == class)
-                    .map(|r| r.latency_s)
-                    .collect();
+                let t = Percentiles::new(
+                    done.iter()
+                        .filter(|r| r.class == class && r.gen_tokens > 0)
+                        .map(|r| r.ttft_s)
+                        .collect(),
+                );
+                let l = Percentiles::new(
+                    done.iter()
+                        .filter(|r| r.class == class)
+                        .map(|r| r.latency_s)
+                        .collect(),
+                );
                 ClassStats {
                     class,
                     completed: l.len(),
-                    ttft_p50_s: metrics::percentile(&t, 50.0),
-                    ttft_p99_s: metrics::percentile(&t, 99.0),
-                    latency_p50_s: metrics::percentile(&l, 50.0),
-                    latency_p99_s: metrics::percentile(&l, 99.0),
+                    ttft_p50_s: t.p(50.0),
+                    ttft_p99_s: t.p(99.0),
+                    latency_p50_s: l.p(50.0),
+                    latency_p99_s: l.p(99.0),
                 }
             })
             .collect();
@@ -645,6 +956,7 @@ impl<'a> ContinuousBatcher<'a> {
                 0.0
             }
         };
+        let hit_denom = c.prefix_hit_tokens + c.prefill_tokens;
         ServeReport {
             model: self.cfg.name.clone(),
             format: self.fmt.name(),
@@ -662,14 +974,14 @@ impl<'a> ContinuousBatcher<'a> {
             prefill_chunks: c.prefill_chunks,
             gen_tokens,
             preemptions: c.preemptions,
-            ttft_mean_s: metrics::mean(&ttfts),
-            ttft_p50_s: metrics::percentile(&ttfts, 50.0),
-            ttft_p99_s: metrics::percentile(&ttfts, 99.0),
-            latency_mean_s: metrics::mean(&lats),
-            latency_p50_s: metrics::percentile(&lats, 50.0),
-            latency_p99_s: metrics::percentile(&lats, 99.0),
-            queue_mean_s: metrics::mean(&queues),
-            queue_p99_s: metrics::percentile(&queues, 99.0),
+            ttft_mean_s: ttft.mean(),
+            ttft_p50_s: ttft.p(50.0),
+            ttft_p99_s: ttft.p(99.0),
+            latency_mean_s: lat.mean(),
+            latency_p50_s: lat.p(50.0),
+            latency_p99_s: lat.p(99.0),
+            queue_mean_s: queue.mean(),
+            queue_p99_s: queue.p(99.0),
             tokens_per_s: per_s(gen_tokens, total_seconds),
             decode_tokens_per_s: per_s(c.decode_tokens, decode_seconds),
             avg_batch_occupancy: if c.decode_steps > 0 {
@@ -680,6 +992,21 @@ impl<'a> ContinuousBatcher<'a> {
             fpu_utilization: power.fpu_utilization,
             power_w: power.power_w,
             hbm_gb: c.total.hbm_bytes() as f64 / 1e9,
+            prefix_cache: self.prefix_caching(),
+            prefix_hit_tokens: c.prefix_hit_tokens,
+            prefix_hit_rate: if hit_denom > 0 {
+                c.prefix_hit_tokens as f64 / hit_denom as f64
+            } else {
+                0.0
+            },
+            token_budget: self.opts.token_budget,
+            budget_utilization: if c.budget_iterations > 0 {
+                c.budget_tokens as f64
+                    / (c.budget_iterations * self.opts.token_budget.max(1)) as f64
+            } else {
+                0.0
+            },
+            pricing_cache_hit_rate: costs.hit_rate(),
             per_class,
             per_request: done,
         }
@@ -727,6 +1054,9 @@ mod tests {
         assert_eq!(r.gen_tokens, 6 * 8);
         assert_eq!(r.prefill_tokens, 6 * 16);
         assert_eq!(r.preemptions, 0);
+        // Unique prompt content: registrations, but no cross-request hits.
+        assert_eq!(r.prefix_hit_tokens, 0);
+        assert!(r.pricing_cache_hit_rate > 0.0, "decode steps must re-hit the memo");
     }
 
     #[test]
@@ -754,6 +1084,7 @@ mod tests {
         let rf = run_cfg(&cfg, &p, &Workload::uniform(6, 16, 8), full);
         assert!(rf.avg_batch_occupancy <= 2.0 + 1e-9);
         assert_eq!(rf.preemptions, 0, "reservations never need eviction");
+        assert!(!rf.prefix_cache, "reserve_full disables prefix caching");
     }
 
     #[test]
@@ -958,10 +1289,123 @@ mod tests {
         assert_eq!(r.completed, 3, "{:?}", r.rejected);
         assert_eq!(r.gen_tokens, 3 * 64);
         assert!(r.preemptions > 0, "pool pressure must trigger eviction");
-        // Recompute re-prefills prompt + produced tokens.
-        assert!(r.prefill_tokens > 3 * 16);
+        // Recompute re-prefills prompt + produced tokens (some prompt
+        // pages may come back from the prefix cache).
+        assert!(r.prefill_tokens + r.prefix_hit_tokens > 3 * 16);
         assert!(r.peak_kv_bytes <= budget);
         let preempted: u32 = r.per_request.iter().map(|s| s.preemptions).sum();
         assert_eq!(preempted as u64, r.preemptions);
+    }
+
+    #[test]
+    fn shared_prefix_hits_skip_prefill_and_cut_ttft() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        // 6 requests sharing one 64-token template (page-aligned), spread
+        // out in time so the first prefills it and the rest arrive after.
+        let w = Workload::uniform(6, 32, 8)
+            .with_shared_prefix(64, 6)
+            .with_poisson_arrivals(3, 2.0);
+        let budget = Request::new(0, 96, 8).kv_bytes(&cfg) * 12;
+        let on = BatcherConfig::new(4, budget);
+        let mut off = on;
+        off.prefix_cache = false;
+        let r_on = run_cfg(&cfg, &p, &w, on);
+        let r_off = run_cfg(&cfg, &p, &w, off);
+        assert_eq!(r_on.completed, 6);
+        assert_eq!(r_off.completed, 6);
+        assert_eq!(r_off.prefix_hit_tokens, 0);
+        assert!(r_on.prefix_cache && !r_off.prefix_cache);
+        // Followers skip the shared 64 tokens entirely.
+        assert!(
+            r_on.prefix_hit_tokens > 0,
+            "shared template must hit the cache"
+        );
+        assert_eq!(
+            r_on.prefix_hit_tokens + r_on.prefill_tokens,
+            6 * 96,
+            "hits + prefill must cover every prompt token exactly once"
+        );
+        assert!(r_on.prefix_hit_rate > 0.0 && r_on.prefix_hit_rate < 1.0);
+        // Less prefill work: the trace finishes sooner and first tokens
+        // come earlier.
+        assert!(r_on.total_seconds < r_off.total_seconds);
+        assert!(r_on.ttft_p99_s <= r_off.ttft_p99_s);
+        assert!(r_on.tokens_per_s > r_off.tokens_per_s);
+        // Same service delivered.
+        assert_eq!(r_on.gen_tokens, r_off.gen_tokens);
+    }
+
+    #[test]
+    fn prefix_cache_off_matches_on_without_sharing() {
+        // With unique prompt content, ample budget and no preemption, the
+        // cache never hits, so ON and OFF must produce the same trace
+        // timing (cache retention only shows up in the page watermark).
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let w = Workload::synthetic(5, 10, (8, 80), (2, 12));
+        let budget = Request::new(0, 200, 20).kv_bytes(&cfg) * 16;
+        let mut on = BatcherConfig::new(4, budget);
+        on.prefill_chunk = 24;
+        let mut off = on;
+        off.prefix_cache = false;
+        let r_on = run_cfg(&cfg, &p, &w, on);
+        let r_off = run_cfg(&cfg, &p, &w, off);
+        assert_eq!(r_on.prefix_hit_tokens, 0);
+        assert_eq!(r_on.total_cycles, r_off.total_cycles);
+        assert_eq!(r_on.prefill_tokens, r_off.prefill_tokens);
+        assert_eq!(r_on.prefill_chunks, r_off.prefill_chunks);
+        assert_eq!(r_on.ttft_p99_s, r_off.ttft_p99_s);
+        assert_eq!(r_on.latency_p99_s, r_off.latency_p99_s);
+        assert_eq!(r_on.tokens_per_s, r_off.tokens_per_s);
+    }
+
+    #[test]
+    fn token_budget_serves_everything_and_fills_budget() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let w = Workload::uniform(6, 48, 12);
+        let budget = Request::new(0, 48, 12).kv_bytes(&cfg) * 12;
+        let mut opts = BatcherConfig::new(4, budget);
+        opts.token_budget = 32;
+        opts.prefill_chunk = 16;
+        let r = run_cfg(&cfg, &p, &w, opts);
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.gen_tokens, 6 * 12);
+        assert_eq!(r.prefill_tokens + r.prefix_hit_tokens, 6 * 48);
+        assert_eq!(r.token_budget, 32);
+        assert!(
+            r.budget_utilization > 0.0 && r.budget_utilization <= 1.0,
+            "{}",
+            r.budget_utilization
+        );
+        assert!(r.tokens_per_s > 0.0);
+    }
+
+    #[test]
+    fn token_budget_mixed_pass_beats_alternation() {
+        // Prefill chunks and decode tokens priced as one fused pass must
+        // serve a mixed trace faster than the legacy chunk/decode
+        // alternation that streams the weights once per stage.
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        // Long prompts keep prefill running while earlier requests decode.
+        let w = Workload::uniform(6, 128, 24);
+        let budget = Request::new(0, 128, 24).kv_bytes(&cfg) * 12;
+        let mut legacy = BatcherConfig::new(6, budget);
+        legacy.prefill_chunk = 32;
+        let mut fused = legacy;
+        fused.token_budget = 64;
+        let r_legacy = run_cfg(&cfg, &p, &w, legacy);
+        let r_fused = run_cfg(&cfg, &p, &w, fused);
+        assert_eq!(r_legacy.completed, 6);
+        assert_eq!(r_fused.completed, 6);
+        assert_eq!(r_legacy.gen_tokens, r_fused.gen_tokens);
+        assert!(
+            r_fused.total_seconds < r_legacy.total_seconds,
+            "fused {} !< alternation {}",
+            r_fused.total_seconds,
+            r_legacy.total_seconds
+        );
     }
 }

@@ -5,7 +5,9 @@
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::batcher::{BatcherConfig, ContinuousBatcher, ServeReport};
 use crate::coordinator::breakdown::Breakdown;
-use crate::coordinator::schedule::{block_cost_batched, model_cost, model_cost_batched};
+use crate::coordinator::schedule::{
+    model_cost, model_cost_batched, model_total_mixed, LayerCostCache,
+};
 use crate::coordinator::workload::Workload;
 use crate::energy;
 use crate::metrics;
@@ -164,11 +166,21 @@ impl InferenceEngine {
         let mut total = prefill;
         let mut decode = KernelCost::default();
         let mut first_step_cycles = 0;
+        // The decode loop re-prices near-identical steps `gen_tokens`
+        // times; the memo turns all but the distinct-KV-length ones into
+        // lookups (bit-identical costs — a uniform mixed decode pass is
+        // exactly the batched AR block expansion).
+        let mut costs = LayerCostCache::new(&self.platform);
         for t in 0..gen_tokens {
             let kv = prompt_len + t;
-            let step = block_cost_batched(cfg, Mode::Ar, b, 1, kv, fmt, &self.platform)
-                .total
-                .repeat(cfg.blocks);
+            let step = model_total_mixed(
+                &mut costs,
+                cfg,
+                &[],
+                &vec![kv; b as usize],
+                fmt,
+                &self.platform,
+            );
             if t == 0 {
                 first_step_cycles = step.cycles;
             }
@@ -202,8 +214,9 @@ impl InferenceEngine {
     }
 
     /// Serve a multi-request workload with continuous batching and the
-    /// default scheduler policy (paged KV, monolithic prefill, single
-    /// priority class). `max_batch` caps concurrent resident requests.
+    /// default scheduler policy (paged KV with prefix caching, monolithic
+    /// prefill, single priority class). `max_batch` caps concurrent
+    /// resident requests.
     pub fn serve(
         &self,
         cfg: &ModelConfig,
@@ -351,6 +364,28 @@ mod tests {
         assert!(sixteen.fpu_utilization > 4.0 * one.fpu_utilization);
         assert!(sixteen.throughput > 4.0 * one.throughput);
         assert!(sixteen.batch == 16 && one.batch == 1);
+    }
+
+    #[test]
+    fn memoized_generation_matches_uncached_pricing() {
+        // The run_batch decode loop now prices through the layer memo;
+        // the trace cost must stay bit-identical to the uncached per-step
+        // composition it replaced.
+        use crate::coordinator::schedule::block_cost_batched;
+        let e = engine();
+        let cfg = ModelConfig::tiny();
+        let fmt = FpFormat::Fp32;
+        let r = e.run_batch(&cfg, 3, 32, 6, fmt);
+        let mut total =
+            model_cost_batched(&cfg, Mode::Nar, 3, 32, fmt, &e.platform).total;
+        for t in 0..6u64 {
+            let step =
+                block_cost_batched(&cfg, Mode::Ar, 3, 1, 32 + t, fmt, &e.platform)
+                    .total
+                    .repeat(cfg.blocks);
+            total = total.then(step);
+        }
+        assert_eq!(r.cycles, total.cycles);
     }
 
     #[test]

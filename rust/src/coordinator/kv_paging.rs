@@ -1,4 +1,5 @@
-//! Paged KV-cache allocation (vLLM-style PagedAttention bookkeeping).
+//! Paged KV-cache allocation (vLLM-style PagedAttention bookkeeping) with
+//! ref-counted page sharing and a content-addressed prefix cache.
 //!
 //! The PR-1 batcher reserved every request's *full-length* KV cache
 //! (prompt + all tokens it may ever generate) at admission, so the HBM
@@ -9,10 +10,27 @@
 //! on demand one decode token at a time, and returns every page on
 //! retirement (or preemption).
 //!
+//! On top of the pages sits *prefix caching*: every page is ref-counted,
+//! so requests whose prompts share a content-identical prefix (system
+//! prompt templates, shared few-shot preambles) map the **same physical
+//! pages** instead of re-materializing — and, more importantly for the
+//! serving numbers, skip the prefill passes for those tokens entirely.
+//! The [`PrefixCache`] keys pages by a chained prompt-content hash at
+//! page granularity and keeps its own reference on each cached page, so
+//! a prefix outlives the request that built it; eviction is ref-count-
+//! aware LRU (only pages no request maps anymore are reclaimed — evicting
+//! a page something still references would free nothing). Writes never
+//! land on a shared page by construction (shared pages are always full
+//! prompt pages, appends go past them); [`PagedKvAllocator::ensure_private_tail`]
+//! enforces that invariant locally with a copy-on-write fork.
+//!
 //! The allocator is pure bookkeeping — the timing model prices KV traffic
 //! through the kernel costs — but its invariants are the serving
-//! scheduler's safety argument: pages are never double-allocated, bytes
-//! in use never exceed the budget, and a drained allocator is whole again.
+//! scheduler's safety argument: a page is never freed while referenced,
+//! bytes in use never exceed the budget, and a drained allocator is
+//! whole again.
+
+use std::collections::{BTreeMap, HashMap};
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::kv_cache::KvCache;
@@ -68,7 +86,8 @@ impl KvGeometry {
 
 /// Per-request mapping from KV positions to allocated pages. Page `i`
 /// holds tokens `[i * page_tokens, (i + 1) * page_tokens)` of the
-/// request's cache.
+/// request's cache. With prefix sharing, leading pages may be mapped by
+/// several tables at once (and by the [`PrefixCache`]).
 #[derive(Debug, Clone, Default)]
 pub struct PageTable {
     pages: Vec<u32>,
@@ -98,18 +117,25 @@ impl PageTable {
     }
 }
 
-/// Fixed-pool page allocator over the HBM KV budget.
+/// Fixed-pool page allocator over the HBM KV budget, with per-page
+/// reference counts.
 ///
 /// Pages are identified by dense `u32` ids; a never-yet-used id is handed
-/// out from a cursor, retired pages go to a recycle stack. A page id is
-/// therefore owned by at most one [`PageTable`] at any time (the no-double-
-/// allocation invariant the property tests check from the outside).
+/// out from a cursor, pages whose last reference drops go to a recycle
+/// stack. A freshly grown page is owned by exactly one [`PageTable`];
+/// [`Self::share`] maps an existing page into another table and
+/// [`Self::retain`] adds a table-less reference (the prefix cache's hold).
+/// `in_use` counts *distinct* live pages, so shared pages bill the budget
+/// once — the whole point of prefix dedup.
 #[derive(Debug, Clone)]
 pub struct PagedKvAllocator {
     geom: KvGeometry,
     total_pages: u64,
     next_fresh: u32,
     recycled: Vec<u32>,
+    /// Reference count per page id (index). 0 = free/recycled.
+    refs: Vec<u32>,
+    /// Distinct pages with at least one reference.
     in_use: u64,
     peak_in_use: u64,
 }
@@ -124,6 +150,7 @@ impl PagedKvAllocator {
             total_pages,
             next_fresh: 0,
             recycled: Vec::new(),
+            refs: Vec::new(),
             in_use: 0,
             peak_in_use: 0,
         }
@@ -146,6 +173,7 @@ impl PagedKvAllocator {
     }
 
     /// Bytes currently mapped (always <= the budget by construction).
+    /// Shared pages count once.
     pub fn bytes_in_use(&self) -> u64 {
         self.in_use * self.geom.page_bytes()
     }
@@ -155,10 +183,39 @@ impl PagedKvAllocator {
         self.peak_in_use * self.geom.page_bytes()
     }
 
+    /// References currently held on `page` (0 = free).
+    pub fn ref_count(&self, page: u32) -> u32 {
+        self.refs.get(page as usize).copied().unwrap_or(0)
+    }
+
     /// Whether a request that will cache `tokens` tokens can *ever* be
     /// served from this pool (upfront-rejection check).
     pub fn fits_pool(&self, tokens: u64) -> bool {
         self.geom.pages_for(tokens) <= self.total_pages
+    }
+
+    /// Hand out one free page with an initial reference. `None` when the
+    /// pool is exhausted.
+    fn alloc_page(&mut self) -> Option<u32> {
+        if self.free_pages() == 0 {
+            return None;
+        }
+        let id = match self.recycled.pop() {
+            Some(id) => id,
+            None => {
+                let id = self.next_fresh;
+                self.next_fresh += 1;
+                id
+            }
+        };
+        if self.refs.len() <= id as usize {
+            self.refs.resize(id as usize + 1, 0);
+        }
+        debug_assert_eq!(self.refs[id as usize], 0, "recycled page still referenced");
+        self.refs[id as usize] = 1;
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Some(id)
     }
 
     /// Grow `table` until it holds at least `tokens` tokens. All-or-
@@ -169,30 +226,202 @@ impl PagedKvAllocator {
         if want <= have {
             return true;
         }
-        let need = want - have;
-        if need > self.free_pages() {
+        if want - have > self.free_pages() {
             return false;
         }
-        for _ in 0..need {
-            let id = match self.recycled.pop() {
-                Some(id) => id,
-                None => {
-                    let id = self.next_fresh;
-                    self.next_fresh += 1;
-                    id
-                }
-            };
+        for _ in have..want {
+            let id = self.alloc_page().expect("free-page check above");
             table.pages.push(id);
         }
-        self.in_use += need;
-        self.peak_in_use = self.peak_in_use.max(self.in_use);
         true
     }
 
-    /// Return every page of `table` to the pool (retirement/preemption).
+    /// Map an existing live page into `table` (prefix hit): the page gains
+    /// a reference and bills the budget nothing new.
+    pub fn share(&mut self, table: &mut PageTable, page: u32) {
+        debug_assert!(self.ref_count(page) >= 1, "sharing a free page");
+        self.refs[page as usize] += 1;
+        table.pages.push(page);
+    }
+
+    /// Add a table-less reference to a live page (the prefix cache's hold
+    /// on a registered prefix page).
+    pub fn retain(&mut self, page: u32) {
+        debug_assert!(self.ref_count(page) >= 1, "retaining a free page");
+        self.refs[page as usize] += 1;
+    }
+
+    /// Drop one reference to `page`; the last reference frees it back to
+    /// the pool.
+    pub fn release_page(&mut self, page: u32) {
+        let r = &mut self.refs[page as usize];
+        debug_assert!(*r >= 1, "releasing a free page");
+        *r -= 1;
+        if *r == 0 {
+            self.recycled.push(page);
+            self.in_use -= 1;
+        }
+    }
+
+    /// Drop `table`'s reference to every page it maps (retirement /
+    /// preemption). Pages other tables or the prefix cache still reference
+    /// stay live.
     pub fn release(&mut self, table: &mut PageTable) {
-        self.in_use -= table.pages.len() as u64;
-        self.recycled.append(&mut table.pages);
+        for page in std::mem::take(&mut table.pages) {
+            self.release_page(page);
+        }
+    }
+
+    /// Copy-on-write guard before appending tokens into `table`'s last
+    /// page: if that page is shared (another table or the prefix cache
+    /// also maps it), fork it — allocate a private copy, drop the shared
+    /// reference. Returns `false` (table unchanged) when a fork is needed
+    /// but the pool has no free page. A no-op for empty tables and
+    /// exclusively-owned tails, which is the only case the scheduler ever
+    /// produces (shared pages are full prompt pages; appends land past
+    /// them) — the fork keeps that a local invariant instead of a global
+    /// argument.
+    pub fn ensure_private_tail(&mut self, table: &mut PageTable) -> bool {
+        let Some(&last) = table.pages.last() else { return true };
+        if self.ref_count(last) == 1 {
+            return true;
+        }
+        let Some(fresh) = self.alloc_page() else { return false };
+        *table.pages.last_mut().expect("non-empty") = fresh;
+        self.release_page(last);
+        true
+    }
+}
+
+/// Content-addressed index of cached prompt-prefix pages.
+///
+/// Maps a chained page-content hash (see `Request::prompt_page_hashes`)
+/// to the physical page holding that content. The cache holds its own
+/// reference on every entry, so prefixes survive the requests that built
+/// them; [`Self::evict_lru`] reclaims least-recently-used entries, but
+/// only those whose page no request maps anymore (ref count 1 = cache
+/// only) — evicting a still-mapped page would free no memory, so such
+/// entries are treated as freshly used instead.
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    /// hash -> (page id, LRU tick of last use).
+    by_hash: HashMap<u64, (u32, u64)>,
+    /// LRU index: tick -> hash (ticks are unique).
+    lru: BTreeMap<u64, u64>,
+    tick: u64,
+}
+
+impl PrefixCache {
+    pub fn new() -> PrefixCache {
+        PrefixCache::default()
+    }
+
+    /// Cached prefix pages currently indexed.
+    pub fn len(&self) -> usize {
+        self.by_hash.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_hash.is_empty()
+    }
+
+    fn touch(&mut self, hash: u64) {
+        if let Some((_, tick)) = self.by_hash.get_mut(&hash) {
+            self.lru.remove(tick);
+            self.tick += 1;
+            *tick = self.tick;
+            self.lru.insert(self.tick, hash);
+        }
+    }
+
+    /// How many leading entries of `hashes` are cached (consecutive from
+    /// the chain start; a chained hash can only match if every earlier
+    /// page matched too). Read-only — admission uses it to size the page
+    /// ask before committing.
+    pub fn probe(&self, hashes: &[u64]) -> u64 {
+        hashes.iter().take_while(|&&h| self.by_hash.contains_key(&h)).count() as u64
+    }
+
+    /// Attach the longest cached prefix of `hashes` to `table` by sharing
+    /// the cached pages (in chain order). Returns the number of pages
+    /// attached; the caller skips `attached * page_tokens` tokens of
+    /// prefill.
+    pub fn attach_prefix(
+        &mut self,
+        alloc: &mut PagedKvAllocator,
+        table: &mut PageTable,
+        hashes: &[u64],
+    ) -> u64 {
+        debug_assert!(table.is_empty(), "prefix attaches at the chain start");
+        let mut attached = 0;
+        for &h in hashes {
+            let Some(&(page, _)) = self.by_hash.get(&h) else { break };
+            alloc.share(table, page);
+            self.touch(h);
+            attached += 1;
+        }
+        attached
+    }
+
+    /// Register `page` as the cached copy of content `hash`. The cache
+    /// takes its own reference. A duplicate registration (two requests
+    /// prefilled the same content concurrently) keeps the existing entry
+    /// and leaves the caller's copy private — later requests converge on
+    /// the first copy.
+    pub fn insert(&mut self, alloc: &mut PagedKvAllocator, hash: u64, page: u32) {
+        if self.by_hash.contains_key(&hash) {
+            self.touch(hash);
+            return;
+        }
+        alloc.retain(page);
+        self.tick += 1;
+        self.by_hash.insert(hash, (page, self.tick));
+        self.lru.insert(self.tick, hash);
+    }
+
+    /// Pages that evicting the whole cache would free right now (entries
+    /// whose page the cache alone references). O(entries) — meant for
+    /// cold paths deciding whether an eviction is worth its cost, not for
+    /// per-token bookkeeping.
+    pub fn reclaimable(&self, alloc: &PagedKvAllocator) -> u64 {
+        self.by_hash.values().filter(|&&(p, _)| alloc.ref_count(p) == 1).count() as u64
+    }
+
+    /// Evict up to `want` *reclaimable* entries, LRU first, and return how
+    /// many pages were actually freed. An entry is reclaimable when the
+    /// cache holds the only reference to its page; entries whose page is
+    /// still mapped by a request are bumped to most-recently-used instead
+    /// (they are, after all, in active use).
+    pub fn evict_lru(&mut self, alloc: &mut PagedKvAllocator, want: u64) -> u64 {
+        let mut freed = 0;
+        let mut scanned = 0;
+        let limit = self.lru.len();
+        while freed < want && scanned < limit {
+            let Some((_, hash)) = self.lru.pop_first() else { break };
+            scanned += 1;
+            let (page, _) = self.by_hash[&hash];
+            if alloc.ref_count(page) == 1 {
+                self.by_hash.remove(&hash);
+                alloc.release_page(page);
+                freed += 1;
+            } else {
+                // Still mapped by a request: freeing the entry reclaims
+                // nothing. Re-file as recently used.
+                self.tick += 1;
+                self.by_hash.insert(hash, (page, self.tick));
+                self.lru.insert(self.tick, hash);
+            }
+        }
+        freed
+    }
+
+    /// Drop every entry (and the cache's references). Pages still mapped
+    /// by requests stay live.
+    pub fn clear(&mut self, alloc: &mut PagedKvAllocator) {
+        for (_, (page, _)) in self.by_hash.drain() {
+            alloc.release_page(page);
+        }
+        self.lru.clear();
     }
 }
 
@@ -265,5 +494,122 @@ mod tests {
         let a = PagedKvAllocator::new(4 * 16 * 1024, geom());
         assert!(a.fits_pool(64));
         assert!(!a.fits_pool(65));
+    }
+
+    #[test]
+    fn shared_pages_bill_once_and_survive_one_release() {
+        let mut a = PagedKvAllocator::new(4 * 16 * 1024, geom());
+        let mut t1 = PageTable::new();
+        assert!(a.try_grow(&mut t1, 32)); // 2 pages
+        let mut t2 = PageTable::new();
+        a.share(&mut t2, t1.pages()[0]);
+        a.share(&mut t2, t1.pages()[1]);
+        assert_eq!(t2.len(), 2);
+        // Dedup: two tables, two distinct pages, half the pool free.
+        assert_eq!(a.used_pages(), 2);
+        assert_eq!(a.bytes_in_use(), 2 * 16 * 1024);
+        assert_eq!(a.ref_count(t1.pages()[0]), 2);
+        // Releasing one owner keeps the pages live for the other.
+        a.release(&mut t1);
+        assert_eq!(a.used_pages(), 2);
+        assert_eq!(a.ref_count(t2.pages()[0]), 1);
+        // A fresh grow must not hand out the still-referenced pages.
+        let mut t3 = PageTable::new();
+        assert!(a.try_grow(&mut t3, 32));
+        for p in t3.pages() {
+            assert!(!t2.pages().contains(p), "live page re-allocated");
+        }
+        a.release(&mut t2);
+        a.release(&mut t3);
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn cow_fork_makes_tail_private() {
+        let mut a = PagedKvAllocator::new(4 * 16 * 1024, geom());
+        let mut t1 = PageTable::new();
+        assert!(a.try_grow(&mut t1, 16));
+        let shared = t1.pages()[0];
+        let mut t2 = PageTable::new();
+        a.share(&mut t2, shared);
+        assert_eq!(a.ref_count(shared), 2);
+        // t2's tail is shared: the fork must swap in a private page.
+        assert!(a.ensure_private_tail(&mut t2));
+        assert_ne!(t2.pages()[0], shared);
+        assert_eq!(a.ref_count(shared), 1);
+        assert_eq!(a.ref_count(t2.pages()[0]), 1);
+        assert_eq!(a.used_pages(), 2, "fork allocates exactly one page");
+        // Exclusive tails are a no-op.
+        let before = t1.pages().to_vec();
+        assert!(a.ensure_private_tail(&mut t1));
+        assert_eq!(t1.pages(), &before[..]);
+    }
+
+    #[test]
+    fn cow_fork_fails_cleanly_when_pool_dry() {
+        let mut a = PagedKvAllocator::new(16 * 1024, geom()); // 1 page
+        let mut t1 = PageTable::new();
+        assert!(a.try_grow(&mut t1, 16));
+        let mut t2 = PageTable::new();
+        a.share(&mut t2, t1.pages()[0]);
+        assert!(!a.ensure_private_tail(&mut t2), "no free page to fork into");
+        assert_eq!(t2.pages(), t1.pages(), "failed fork must not mutate");
+        assert_eq!(a.ref_count(t1.pages()[0]), 2);
+    }
+
+    #[test]
+    fn prefix_cache_attach_insert_and_lru_eviction() {
+        let mut a = PagedKvAllocator::new(4 * 16 * 1024, geom());
+        let mut cache = PrefixCache::new();
+        // Build two prefix pages and register them.
+        let mut owner = PageTable::new();
+        assert!(a.try_grow(&mut owner, 32));
+        cache.insert(&mut a, 100, owner.pages()[0]);
+        cache.insert(&mut a, 101, owner.pages()[1]);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(a.ref_count(owner.pages()[0]), 2); // owner + cache
+        // Owner retires; the prefix survives on the cache's references.
+        let kept: Vec<u32> = owner.pages().to_vec();
+        a.release(&mut owner);
+        assert_eq!(a.used_pages(), 2);
+        assert_eq!(cache.reclaimable(&a), 2, "cache-only pages are reclaimable");
+        // A new request hits the full chain, a diverging one only page 0.
+        assert_eq!(cache.probe(&[100, 101]), 2);
+        assert_eq!(cache.probe(&[100, 999]), 1);
+        assert_eq!(cache.probe(&[999, 101]), 0, "chain must match from the start");
+        let mut t = PageTable::new();
+        assert_eq!(cache.attach_prefix(&mut a, &mut t, &[100, 101]), 2);
+        assert_eq!(t.pages(), &kept[..]);
+        assert_eq!(cache.reclaimable(&a), 0, "mapped pages free nothing");
+        // Eviction skips the still-mapped pages (freeing them reclaims
+        // nothing) ...
+        assert_eq!(cache.evict_lru(&mut a, 2), 0);
+        assert_eq!(cache.len(), 2);
+        // ... and reclaims them LRU-first once the mapper is gone.
+        a.release(&mut t);
+        assert_eq!(cache.evict_lru(&mut a, 1), 1);
+        assert_eq!(cache.len(), 1);
+        // attach touched 100 before 101, so 100 was least recently used.
+        assert_eq!(cache.probe(&[101]), 1);
+        assert_eq!(cache.probe(&[100, 101]), 0);
+        assert_eq!(a.used_pages(), 1);
+        assert_eq!(cache.evict_lru(&mut a, 1), 1);
+        assert_eq!(a.used_pages(), 0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn duplicate_registration_keeps_first_copy() {
+        let mut a = PagedKvAllocator::new(4 * 16 * 1024, geom());
+        let mut cache = PrefixCache::new();
+        let mut t1 = PageTable::new();
+        let mut t2 = PageTable::new();
+        assert!(a.try_grow(&mut t1, 16));
+        assert!(a.try_grow(&mut t2, 16));
+        cache.insert(&mut a, 7, t1.pages()[0]);
+        cache.insert(&mut a, 7, t2.pages()[0]); // concurrent duplicate
+        assert_eq!(cache.len(), 1);
+        assert_eq!(a.ref_count(t1.pages()[0]), 2, "first copy cached");
+        assert_eq!(a.ref_count(t2.pages()[0]), 1, "duplicate stays private");
     }
 }

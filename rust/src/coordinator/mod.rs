@@ -21,9 +21,12 @@ pub use batcher::{BatcherConfig, ClassStats, ContinuousBatcher, RequestStats, Se
 pub use breakdown::{Breakdown, KernelClassShare};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;
-pub use kv_paging::{platform_kv_budget_bytes, KvGeometry, PagedKvAllocator, PageTable};
+pub use kv_paging::{
+    platform_kv_budget_bytes, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
+};
 pub use schedule::{
     block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,
-    model_cost_decode, ModelCost,
+    model_cost_decode, model_cost_mixed, model_total_mixed, platform_fingerprint,
+    LayerCostCache, ModelCost,
 };
-pub use workload::{Arrival, Request, Workload};
+pub use workload::{Arrival, Request, SharedPrefix, Workload};

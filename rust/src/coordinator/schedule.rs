@@ -12,12 +12,14 @@
 //! utilization — grows with the batch.
 
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 
 use crate::arch::{FpFormat, MemLevel, PlatformConfig};
 use crate::kernels;
 use crate::kernels::gemm::OperandHome;
 use crate::model::{
-    block_layers_batched, block_layers_decode, Layer, LayerKind, Mode, ModelConfig,
+    block_layers_batched, block_layers_decode, block_layers_mixed, Layer, LayerKind,
+    Mode, ModelConfig,
 };
 use crate::sim::KernelCost;
 
@@ -99,6 +101,140 @@ pub fn layer_cost(layer: &Layer, fmt: FpFormat, platform: &PlatformConfig) -> Ke
         LayerKind::Gelu => {
             kernels::gelu_cost(rows, layer.k, fmt, layer.fused_input, platform)
         }
+    }
+}
+
+/// Fingerprint of a platform configuration, used to tag [`LayerCostCache`]
+/// instances with the platform *generation* they were priced against. The
+/// canonical `Debug` rendering covers every field that can influence a
+/// kernel cost (cluster geometry, interconnect, feature flags, clock), so
+/// any change to the platform changes the tag.
+pub fn platform_fingerprint(platform: &PlatformConfig) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    format!("{platform:?}").hash(&mut h);
+    h.finish()
+}
+
+/// Interned pricing signature of a layer: exactly the [`Layer`] fields
+/// [`layer_cost`] reads (the display label is excluded) plus the serving
+/// precision. Two layers with equal signatures price identically on a
+/// fixed platform, which is what makes the memo below sound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct LayerSig {
+    kind: LayerKind,
+    b: u64,
+    m: u64,
+    k: u64,
+    n: u64,
+    skv: u64,
+    heads: u64,
+    p: u64,
+    causal: bool,
+    fused_input: bool,
+    fmt: FpFormat,
+}
+
+impl LayerSig {
+    fn of(layer: &Layer, fmt: FpFormat) -> LayerSig {
+        LayerSig {
+            kind: layer.kind,
+            b: layer.b,
+            m: layer.m,
+            k: layer.k,
+            n: layer.n,
+            skv: layer.skv,
+            heads: layer.heads,
+            p: layer.p,
+            causal: layer.causal,
+            fused_input: layer.fused_input,
+            fmt,
+        }
+    }
+}
+
+/// Memo over [`layer_cost`]: signature -> [`KernelCost`], tagged with the
+/// platform generation it was priced against.
+///
+/// A serve trace calls `layer_cost` with a small set of distinct
+/// signatures millions of times (every decode step re-prices the same
+/// projections and MLP layers; attention signatures recur per KV length),
+/// but each uncached call re-runs the tile-plan search. The memo makes
+/// the pricing hot path a hash lookup — the difference between 50k-request
+/// traces being tractable or not — and is *transparent*: the cached cost
+/// is bit-identical to the uncached path (property-tested in
+/// `proptest_invariants.rs`).
+#[derive(Debug)]
+pub struct LayerCostCache {
+    platform_tag: u64,
+    map: HashMap<LayerSig, KernelCost>,
+    hits: u64,
+    misses: u64,
+}
+
+impl LayerCostCache {
+    /// An empty cache bound to `platform`'s generation.
+    pub fn new(platform: &PlatformConfig) -> LayerCostCache {
+        LayerCostCache {
+            platform_tag: platform_fingerprint(platform),
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Debug-build check that the cache is not reused across platform
+    /// generations (which would silently serve stale prices). Called once
+    /// per model-level pricing, not per layer, to keep the hot path flat.
+    fn check_platform(&self, platform: &PlatformConfig) {
+        debug_assert_eq!(
+            self.platform_tag,
+            platform_fingerprint(platform),
+            "LayerCostCache used across platform generations"
+        );
+    }
+
+    /// Memoized [`layer_cost`].
+    pub fn layer_cost(
+        &mut self,
+        layer: &Layer,
+        fmt: FpFormat,
+        platform: &PlatformConfig,
+    ) -> KernelCost {
+        let sig = LayerSig::of(layer, fmt);
+        if let Some(c) = self.map.get(&sig) {
+            self.hits += 1;
+            return *c;
+        }
+        let c = layer_cost(layer, fmt, platform);
+        self.map.insert(sig, c);
+        self.misses += 1;
+        c
+    }
+
+    /// Distinct signatures priced so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Fraction of lookups served from the memo.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
     }
 }
 
@@ -243,6 +379,55 @@ pub fn model_cost_decode(
     let layers = block_layers_decode(cfg, kv_lens);
     let one = price_layers(&layers, kv_lens.len() as u64, fmt, platform);
     repeat_blocks(&one, cfg.blocks, kv_lens.len() as u64)
+}
+
+/// Cost of one *mixed* iteration over the whole model: `prefills` chunk
+/// continuations (each `(s, kv_len)`) plus one decode token per entry of
+/// `decode_kv`, fused into a single pass (see
+/// [`crate::model::block_layers_mixed`]). The by-kind/by-label breakdown
+/// variant of [`model_total_mixed`]; the serving hot path uses the cached
+/// total instead.
+pub fn model_cost_mixed(
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> ModelCost {
+    let batch = prefills.iter().filter(|&&(s, _)| s > 0).count() + decode_kv.len();
+    if batch == 0 {
+        return ModelCost::default();
+    }
+    let layers = block_layers_mixed(cfg, prefills, decode_kv);
+    let one = price_layers(&layers, batch as u64, fmt, platform);
+    repeat_blocks(&one, cfg.blocks, batch as u64)
+}
+
+/// Total cost of one mixed iteration over the whole model, priced through
+/// the memo. This is the serving scheduler's single pricing entry point:
+/// a lone prefill chunk (`prefills = [(s, kv)]`, no decode) prices
+/// bit-identically to `block_cost_batched(cfg, Nar, 1, s, kv)` repeated
+/// over the blocks, a decode-only call prices bit-identically to
+/// [`model_cost_decode`], and a genuinely mixed call prices the fused
+/// Sarathi-style pass. Transparent with respect to the uncached
+/// [`model_cost_mixed`] (bit-identical totals).
+pub fn model_total_mixed(
+    costs: &mut LayerCostCache,
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    if prefills.iter().all(|&(s, _)| s == 0) && decode_kv.is_empty() {
+        return KernelCost::default();
+    }
+    costs.check_platform(platform);
+    let mut one = KernelCost::default();
+    for layer in &block_layers_mixed(cfg, prefills, decode_kv) {
+        one = one.then(costs.layer_cost(layer, fmt, platform));
+    }
+    one.repeat(cfg.blocks)
 }
 
 #[cfg(test)]
@@ -441,6 +626,89 @@ mod tests {
             (chunked as f64) < 2.0 * whole as f64,
             "chunk overhead out of band: {chunked} vs {whole}"
         );
+    }
+
+    #[test]
+    fn mixed_degenerates_to_prefill_and_decode_paths() {
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let fmt = FpFormat::Fp32;
+        // A lone prefill chunk == the chunked-prefill NAR pass.
+        let mixed = model_cost_mixed(&cfg, &[(128, 512)], &[], fmt, &p);
+        let nar = block_cost_batched(&cfg, Mode::Nar, 1, 128, 512, fmt, &p)
+            .total
+            .repeat(cfg.blocks);
+        assert_eq!(mixed.total, nar);
+        // Decode-only == the ragged decode path (same groups, rows stacked
+        // the same way).
+        let lens = [64u64, 256, 1024, 1024];
+        let mixed = model_cost_mixed(&cfg, &[], &lens, fmt, &p);
+        let decode = model_cost_decode(&cfg, &lens, fmt, &p);
+        assert_eq!(mixed.total, decode.total);
+        // Empty forms are zero.
+        assert_eq!(model_cost_mixed(&cfg, &[(0, 64)], &[], fmt, &p).cycles, 0);
+    }
+
+    #[test]
+    fn fused_mixed_pass_undercuts_separate_passes() {
+        // The Sarathi claim: one fused prefill+decode pass streams the
+        // weights once, so it must beat the chunk pass plus the decode
+        // pass run back to back.
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let fmt = FpFormat::Fp32;
+        let lens = [512u64, 700, 900, 1024];
+        let fused = model_cost_mixed(&cfg, &[(256, 256)], &lens, fmt, &p);
+        let chunk = block_cost_batched(&cfg, Mode::Nar, 1, 256, 256, fmt, &p)
+            .total
+            .repeat(cfg.blocks);
+        let decode = model_cost_decode(&cfg, &lens, fmt, &p);
+        assert!(
+            fused.cycles < chunk.cycles + decode.total.cycles,
+            "fused {} !< separate {}",
+            fused.cycles,
+            chunk.cycles + decode.total.cycles
+        );
+        // FLOPs are conserved: fusion removes overhead, not work.
+        assert_eq!(fused.total.flops, chunk.flops + decode.total.flops);
+    }
+
+    #[test]
+    fn layer_cost_cache_is_transparent_and_hits() {
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let fmt = FpFormat::Fp8;
+        let mut cache = LayerCostCache::new(&p);
+        let layers = block_layers_batched(&cfg, Mode::Nar, 2, 64, 128);
+        for layer in &layers {
+            let cached = cache.layer_cost(layer, fmt, &p);
+            assert_eq!(cached, layer_cost(layer, fmt, &p), "{}", layer.label);
+        }
+        let misses = cache.misses();
+        assert!(misses >= 1);
+        // Second pass over the same layers is all hits, same numbers.
+        for layer in &layers {
+            assert_eq!(cache.layer_cost(layer, fmt, &p), layer_cost(layer, fmt, &p));
+        }
+        assert_eq!(cache.misses(), misses, "re-pricing must not miss");
+        assert!(cache.hits() >= layers.len() as u64);
+        assert!(cache.hit_rate() > 0.0);
+        // The memoized model total equals the uncached one bit-for-bit.
+        let lens = [64u64, 64, 512];
+        let total = model_total_mixed(&mut cache, &cfg, &[(32, 96)], &lens, fmt, &p);
+        assert_eq!(total, model_cost_mixed(&cfg, &[(32, 96)], &lens, fmt, &p).total);
+    }
+
+    #[test]
+    fn platform_fingerprint_tracks_generation() {
+        let a = platform_fingerprint(&occ());
+        assert_eq!(a, platform_fingerprint(&occ()), "deterministic");
+        let mut other = occ();
+        other.cluster.compute_efficiency = 0.5;
+        assert_ne!(a, platform_fingerprint(&other));
+        let mut feats = occ();
+        feats.features = crate::arch::Features::baseline();
+        assert_ne!(a, platform_fingerprint(&feats));
     }
 
     #[test]

@@ -27,12 +27,39 @@ pub struct Request {
     /// Priority class: 0 is most urgent, larger is more patient. The
     /// scheduler ages waiting requests toward class 0 so no class starves.
     pub class: u8,
+    /// Leading prompt tokens drawn from a shared content template (a
+    /// system prompt / few-shot preamble); 0 = fully unique content.
+    /// Requests with the same `prefix_seed` have content-identical
+    /// prompts over `min(prefix_len)` leading tokens, which is what the
+    /// prefix cache deduplicates.
+    pub prefix_len: u64,
+    /// Content identity of the shared template (only meaningful when
+    /// `prefix_len > 0`).
+    pub prefix_seed: u64,
+}
+
+/// SplitMix64 finalizer: the content/identity mixer behind the modeled
+/// prompt tokens and the page-hash chains (the simulator stores no real
+/// token ids — serving only needs content *identity* for prefix dedup).
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 impl Request {
-    /// A class-0 request arriving at t=0.
+    /// A class-0 request arriving at t=0 with unique prompt content.
     pub fn new(id: usize, prompt_len: u64, gen_tokens: u64) -> Request {
-        Request { id, prompt_len, gen_tokens, arrival_ns: 0, class: 0 }
+        Request {
+            id,
+            prompt_len,
+            gen_tokens,
+            arrival_ns: 0,
+            class: 0,
+            prefix_len: 0,
+            prefix_seed: 0,
+        }
     }
 
     pub fn with_class(mut self, class: u8) -> Request {
@@ -43,6 +70,46 @@ impl Request {
     pub fn with_arrival_ns(mut self, arrival_ns: u64) -> Request {
         self.arrival_ns = arrival_ns;
         self
+    }
+
+    /// Mark the first `prefix_len` prompt tokens as drawn from the shared
+    /// template `prefix_seed` (content-identical across requests with the
+    /// same seed).
+    pub fn with_prefix(mut self, prefix_seed: u64, prefix_len: u64) -> Request {
+        self.prefix_seed = prefix_seed;
+        self.prefix_len = prefix_len.min(self.prompt_len);
+        self
+    }
+
+    /// Modeled content id of prompt token `t`: template-derived inside the
+    /// shared prefix, request-unique past it.
+    pub fn prompt_token_id(&self, t: u64) -> u64 {
+        let seed = if t < self.prefix_len {
+            self.prefix_seed
+        } else {
+            splitmix(self.id as u64 ^ 0xC0FF_EE00_D15C_0DE5)
+        };
+        splitmix(seed ^ splitmix(t.wrapping_add(1)))
+    }
+
+    /// Chained content hashes of the prompt's *full* pages at `page_tokens`
+    /// granularity: hash `k` commits to every prompt token in pages
+    /// `0..=k`, so two requests share hash `k` exactly when their prompts
+    /// agree on the first `(k+1) * page_tokens` tokens (vLLM-style block
+    /// hashing). The trailing partial page (if any) is excluded — it is
+    /// not content-addressable and is where generated tokens land.
+    pub fn prompt_page_hashes(&self, page_tokens: u64) -> Vec<u64> {
+        let pt = page_tokens.max(1);
+        let full = self.prompt_len / pt;
+        let mut out = Vec::with_capacity(full as usize);
+        let mut h: u64 = 0x243F_6A88_85A3_08D3;
+        for page in 0..full {
+            for t in page * pt..(page + 1) * pt {
+                h = splitmix(h ^ self.prompt_token_id(t));
+            }
+            out.push(h);
+        }
+        out
     }
 
     /// KV slots this request needs at its longest (prompt + generation).
@@ -147,6 +214,25 @@ impl Workload {
         self
     }
 
+    /// Prepend a shared system-prompt template to every request's prompt:
+    /// groups of `fanout` consecutive requests (by id) share one
+    /// `prefix_tokens`-token template, each group drawing a distinct
+    /// template. Models the dominant real-world sharing pattern — many
+    /// user turns behind a handful of system prompts — the prefix cache
+    /// exists to exploit. A no-op when either argument is 0.
+    pub fn with_shared_prefix(mut self, prefix_tokens: u64, fanout: usize) -> Workload {
+        if prefix_tokens == 0 || fanout == 0 {
+            return self;
+        }
+        for r in &mut self.requests {
+            let group = (r.id / fanout) as u64;
+            r.prompt_len += prefix_tokens;
+            r.prefix_len = prefix_tokens;
+            r.prefix_seed = splitmix(0x5EED_0F5E_ED0F_5EED ^ group);
+        }
+        self
+    }
+
     /// Assign `classes` priority classes round-robin by id (class 0 = most
     /// urgent). A no-op for `classes <= 1`.
     pub fn with_priority_classes(mut self, classes: u8) -> Workload {
@@ -195,6 +281,26 @@ impl Arrival {
         }
         let rate = s.strip_prefix("poisson:")?.parse::<f64>().ok()?;
         (rate > 0.0 && rate.is_finite()).then_some(Arrival::Poisson { rate_per_s: rate })
+    }
+}
+
+/// Shared-prefix scenario selector (the `serve --shared-prefix` flag):
+/// `<tokens>x<fanout>` — groups of `fanout` requests share a
+/// `tokens`-token system-prompt template (see
+/// [`Workload::with_shared_prefix`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedPrefix {
+    pub tokens: u64,
+    pub fanout: usize,
+}
+
+impl SharedPrefix {
+    /// Parse `<tokens>x<fanout>`, e.g. `2048x8`.
+    pub fn parse(s: &str) -> Option<SharedPrefix> {
+        let (t, f) = s.split_once('x')?;
+        let tokens = t.parse::<u64>().ok()?;
+        let fanout = f.parse::<usize>().ok()?;
+        (tokens > 0 && fanout > 0).then_some(SharedPrefix { tokens, fanout })
     }
 }
 
@@ -267,6 +373,57 @@ mod tests {
         assert_eq!(Arrival::parse("poisson:0"), None);
         assert_eq!(Arrival::parse("poisson:"), None);
         assert_eq!(Arrival::parse("uniform"), None);
+    }
+
+    #[test]
+    fn shared_prefix_extends_prompts_and_groups_content() {
+        let w = Workload::uniform(6, 64, 16).with_shared_prefix(32, 3);
+        for r in &w.requests {
+            assert_eq!(r.prompt_len, 96);
+            assert_eq!(r.prefix_len, 32);
+        }
+        // Same group -> same template; different groups diverge.
+        assert_eq!(w.requests[0].prefix_seed, w.requests[2].prefix_seed);
+        assert_ne!(w.requests[0].prefix_seed, w.requests[3].prefix_seed);
+        // No-op forms.
+        let w0 = Workload::uniform(2, 64, 16).with_shared_prefix(0, 3);
+        assert_eq!(w0.requests[0].prefix_len, 0);
+        assert_eq!(w0.requests[0].prompt_len, 64);
+    }
+
+    #[test]
+    fn page_hashes_share_exactly_the_common_prefix() {
+        let w = Workload::uniform(4, 64, 16).with_shared_prefix(32, 2);
+        let pt = 16;
+        let a = w.requests[0].prompt_page_hashes(pt);
+        let b = w.requests[1].prompt_page_hashes(pt);
+        let c = w.requests[2].prompt_page_hashes(pt);
+        // 96-token prompts -> 6 full pages; the 32-token template covers
+        // the first two.
+        assert_eq!(a.len(), 6);
+        assert_eq!(a[..2], b[..2], "template pages identical within a group");
+        assert_ne!(a[2], b[2], "user-suffix pages diverge");
+        assert_ne!(a[0], c[0], "different templates never match");
+        // Chained: even identical suffix content cannot re-align after a
+        // divergence (hash k commits to pages 0..=k).
+        assert_ne!(a[3], b[3]);
+        // Deterministic.
+        assert_eq!(a, w.requests[0].prompt_page_hashes(pt));
+        // Partial tail pages are excluded.
+        let r = Request::new(0, 60, 8);
+        assert_eq!(r.prompt_page_hashes(16).len(), 3);
+    }
+
+    #[test]
+    fn shared_prefix_parse() {
+        assert_eq!(
+            SharedPrefix::parse("2048x8"),
+            Some(SharedPrefix { tokens: 2048, fanout: 8 })
+        );
+        assert_eq!(SharedPrefix::parse("0x8"), None);
+        assert_eq!(SharedPrefix::parse("64x0"), None);
+        assert_eq!(SharedPrefix::parse("64"), None);
+        assert_eq!(SharedPrefix::parse("x"), None);
     }
 
     #[test]

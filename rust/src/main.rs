@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
-use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, Workload};
+use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, SharedPrefix, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
@@ -31,11 +31,17 @@ COMMANDS:
              --model NAME --mode nar|ar --format FMT --seq N
   compare    SoA comparison --exp table4|h100|academic|fig1
   serve      Multi-request serving simulation: continuous batching with
-             paged KV, chunked prefill, priority admission
+             paged KV, prefix caching, chunked prefill, token-budget
+             mixed passes, priority admission
              --model NAME --requests N --batch N --format FMT
              --prompt N --gen N --seed N --clusters N
              --kv-page-tokens N (default 16)
              --prefill-chunk N (0 = monolithic prefill)
+             --token-budget N (per-iteration prefill+decode token budget
+               priced as one fused pass; 0 = pass alternation)
+             --shared-prefix TOKENSxFANOUT (groups of FANOUT requests
+               share a TOKENS-token system prompt)
+             --no-prefix-cache (disable shared-prefix page dedup)
              --arrival batch|poisson:<rate-per-s>
              --priorities N (round-robin classes, aged FCFS)
              --aging S (seconds of wait per class promotion; 0 = off)
@@ -68,7 +74,7 @@ const FLAGS: &[&str] = &[
     "model", "mode", "format", "seq", "clusters", "baseline", "config", "csv",
     "exp", "artifacts", "requests", "batch", "prompt", "gen", "seed",
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
-    "aging", "json",
+    "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
 ];
 
 fn main() -> Result<()> {
@@ -276,8 +282,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
     let format = parse_format(args.get_or("format", "fp8"))?;
-    let requests = args.get_u64("requests", 32)? as usize;
-    let batch = args.get_u64("batch", 8)? as usize;
+    let requests = args.get_usize("requests", 32)?;
+    let batch = args.get_usize("batch", 8)?;
     let prompt = default_seq(&cfg, args.get_u64("prompt", 0)?);
     let gen = args.get_u64("gen", 64)?;
     let seed = args.get_u64("seed", 0)?;
@@ -307,6 +313,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ((gen / 2).max(1), gen.max(2) * 2),
         )
     };
+    if let Some(spec) = args.get("shared-prefix") {
+        let sp = SharedPrefix::parse(spec).ok_or_else(|| {
+            anyhow::anyhow!("--shared-prefix {spec:?}: expected <tokens>x<fanout>")
+        })?;
+        workload = workload.with_shared_prefix(sp.tokens, sp.fanout);
+    }
     let classes = args.get_u64("priorities", 1)?;
     anyhow::ensure!((1..=255).contains(&classes), "--priorities must be 1..=255");
     workload = workload.with_priority_classes(classes as u8);
@@ -322,7 +334,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut opts = BatcherConfig::new(batch, 0);
     opts.page_tokens = args.get_u64("kv-page-tokens", 16)?.max(1);
     opts.prefill_chunk = args.get_u64("prefill-chunk", 0)?;
+    opts.token_budget = args.get_u64("token-budget", 0)?;
     opts.reserve_full = args.get_bool("reserve-full");
+    opts.prefix_cache = !args.get_bool("no-prefix-cache");
     opts.aging_promote_s = args.get_f64("aging", opts.aging_promote_s)?;
     anyhow::ensure!(opts.aging_promote_s >= 0.0, "--aging must be >= 0");
     let report = engine.serve_with(&cfg, &workload, opts, format);

@@ -51,16 +51,51 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Nearest-rank percentile (`q` in 0..=100); 0 for an empty slice. The
-/// serving report's p50/p99 latency and TTFT come from here.
-pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+/// A sample vector sorted once, answering any number of nearest-rank
+/// percentile queries in O(1) each. The serving report reads four-plus
+/// percentiles per metric (and per priority class) from the same data;
+/// the free-function [`percentile`] re-sorted the samples on every call,
+/// which dominated `ServeReport` construction on large traces.
+#[derive(Debug, Clone)]
+pub struct Percentiles {
+    sorted: Vec<f64>,
+}
+
+impl Percentiles {
+    /// Take ownership of the samples and sort them once.
+    pub fn new(mut xs: Vec<f64>) -> Percentiles {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Percentiles { sorted: xs }
     }
-    let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Nearest-rank percentile (`q` in 0..=100); 0 for an empty sample.
+    pub fn p(&self, q: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let rank = (q / 100.0 * self.sorted.len() as f64).ceil() as usize;
+        self.sorted[rank.clamp(1, self.sorted.len()) - 1]
+    }
+
+    /// Arithmetic mean; 0 for an empty sample.
+    pub fn mean(&self) -> f64 {
+        mean(&self.sorted)
+    }
+}
+
+/// Nearest-rank percentile (`q` in 0..=100); 0 for an empty slice.
+/// One-shot convenience over [`Percentiles`] — sorts per call, so batch
+/// queries over the same data should build a `Percentiles` instead.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    Percentiles::new(xs.to_vec()).p(q)
 }
 
 /// Effective HBM bandwidth in GB/s over the run.
@@ -157,6 +192,21 @@ mod tests {
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_struct_matches_free_function() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0, 9.5, 0.25];
+        let p = Percentiles::new(xs.to_vec());
+        assert_eq!(p.len(), xs.len());
+        for q in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(p.p(q), percentile(&xs, q), "q={q}");
+        }
+        assert_eq!(p.mean(), mean(&xs));
+        let empty = Percentiles::new(Vec::new());
+        assert!(empty.is_empty());
+        assert_eq!(empty.p(50.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
     }
 
     #[test]

@@ -178,6 +178,61 @@ pub fn block_layers_decode(cfg: &ModelConfig, kv_lens: &[u64]) -> Vec<Layer> {
     layers
 }
 
+/// Expand one *mixed* scheduler iteration into a single fused kernel
+/// sequence (Sarathi-style piggybacking): `prefills` chunk continuations
+/// — each `(s, kv_len)` is `s` new prompt tokens attending to `kv_len`
+/// already-cached ones — plus one decode token for every entry of
+/// `decode_kv` (per-request cached lengths, excluding the token being
+/// decoded).
+///
+/// Weight-bound layers (projections, MLP, norms) stack *every* query
+/// token of the iteration — `sum(s_i) + decode_kv.len()` rows against one
+/// weight stream — which is exactly why a fused mixed pass undercuts
+/// running the prefill passes and the decode pass back to back.
+/// Attention stays per-instance: one causal FA layer per prefill chunk
+/// (each request attends only to its own history) and one single-query FA
+/// group per distinct decode KV length ([`block_layers_decode`]'s
+/// grouping). The degenerate forms price bit-identically to the
+/// specialized expansions: only-decode matches `block_layers_decode`, and
+/// a single prefill with no decode matches `block_layers_batched` at
+/// `b = 1`.
+pub fn block_layers_mixed(
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+) -> Vec<Layer> {
+    let q_total: u64 =
+        prefills.iter().map(|&(s, _)| s).sum::<u64>() + decode_kv.len() as u64;
+    assert!(q_total > 0, "mixed pass needs at least one query token");
+    let mut layers = block_layers_batched(cfg, Mode::Nar, 1, q_total, 0);
+    let at = layers
+        .iter()
+        .position(|l| l.kind == LayerKind::FlashAttention)
+        .expect("block has an attention layer");
+    let template = layers[at].clone();
+    let mut fa: Vec<Layer> = Vec::new();
+    for &(s, kv) in prefills {
+        if s == 0 {
+            continue;
+        }
+        fa.push(Layer { n: s, skv: kv + s, ..template.clone() });
+    }
+    let mut sorted = decode_kv.to_vec();
+    sorted.sort_unstable();
+    let mut i = 0;
+    while i < sorted.len() {
+        let kv = sorted[i];
+        let mut count = 0u64;
+        while i < sorted.len() && sorted[i] == kv {
+            count += 1;
+            i += 1;
+        }
+        fa.push(Layer { b: count, n: 1, skv: kv + 1, ..template.clone() });
+    }
+    layers.splice(at..=at, fa);
+    layers
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +332,38 @@ mod tests {
         let ragged = block_layers_decode(&cfg, &[256, 256, 256, 256]);
         let batched = block_layers_batched(&cfg, Mode::Ar, 4, 1, 256);
         assert_eq!(ragged, batched);
+    }
+
+    #[test]
+    fn mixed_single_prefill_matches_batched_expansion() {
+        let cfg = ModelConfig::gpt_j();
+        let mixed = block_layers_mixed(&cfg, &[(128, 512)], &[]);
+        let batched = block_layers_batched(&cfg, Mode::Nar, 1, 128, 512);
+        assert_eq!(mixed, batched);
+    }
+
+    #[test]
+    fn mixed_pass_stacks_all_query_tokens() {
+        let cfg = ModelConfig::gpt_j();
+        // Two prefill chunks (64 + 32 tokens) + 3 decode tokens.
+        let ls = block_layers_mixed(&cfg, &[(64, 0), (32, 128)], &[512, 64, 512]);
+        let q = ls.iter().find(|l| l.label == "q-proj").unwrap();
+        assert_eq!(q.batch_rows(), 64 + 32 + 3);
+        let fas: Vec<&Layer> =
+            ls.iter().filter(|l| l.kind == LayerKind::FlashAttention).collect();
+        // 2 prefill instances + 2 distinct decode KV lengths.
+        assert_eq!(fas.len(), 4);
+        assert_eq!((fas[0].b, fas[0].n, fas[0].skv), (1, 64, 64));
+        assert_eq!((fas[1].b, fas[1].n, fas[1].skv), (1, 32, 160));
+        assert_eq!((fas[2].b, fas[2].n, fas[2].skv), (1, 1, 65));
+        assert_eq!((fas[3].b, fas[3].n, fas[3].skv), (2, 1, 513));
+        assert!(fas.iter().all(|l| l.causal));
+        // Zero-token prefill entries are dropped.
+        let ls = block_layers_mixed(&cfg, &[(0, 64), (16, 0)], &[]);
+        assert_eq!(
+            ls.iter().filter(|l| l.kind == LayerKind::FlashAttention).count(),
+            1
+        );
     }
 
     #[test]

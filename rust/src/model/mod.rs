@@ -6,7 +6,10 @@
 
 pub mod graph;
 
-pub use graph::{block_layers, block_layers_batched, block_layers_decode, Layer, LayerKind};
+pub use graph::{
+    block_layers, block_layers_batched, block_layers_decode, block_layers_mixed, Layer,
+    LayerKind,
+};
 
 use crate::arch::FpFormat;
 

@@ -138,6 +138,22 @@ pub fn serve_table(r: &ServeReport) -> String {
     );
     let _ = writeln!(
         s,
+        "  prefix cache: {}  hit {} tokens ({:.1}%)  pricing-memo hit {:.1}%",
+        if r.prefix_cache { "on" } else { "off" },
+        r.prefix_hit_tokens,
+        r.prefix_hit_rate * 100.0,
+        r.pricing_cache_hit_rate * 100.0,
+    );
+    if r.token_budget > 0 {
+        let _ = writeln!(
+            s,
+            "  token budget: {} / iteration, {:.1}% filled",
+            r.token_budget,
+            r.budget_utilization * 100.0,
+        );
+    }
+    let _ = writeln!(
+        s,
         "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB",
         r.fpu_utilization * 100.0,
         r.power_w,
@@ -170,7 +186,9 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"avg_batch_occupancy\":{},\"ttft_mean_s\":{},\"ttft_p50_s\":{},\
          \"ttft_p99_s\":{},\"latency_p50_s\":{},\"latency_p99_s\":{},\
          \"queue_mean_s\":{},\"queue_p99_s\":{},\"fpu_utilization\":{},\
-         \"power_w\":{},\"per_class\":[{}]}}",
+         \"power_w\":{},\"prefix_cache\":{},\"prefix_hit_tokens\":{},\
+         \"prefix_hit_rate\":{},\"token_budget\":{},\"budget_utilization\":{},\
+         \"pricing_cache_hit_rate\":{},\"per_class\":[{}]}}",
         r.model,
         r.format,
         r.requests,
@@ -198,6 +216,12 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.queue_p99_s,
         r.fpu_utilization,
         r.power_w,
+        r.prefix_cache,
+        r.prefix_hit_tokens,
+        r.prefix_hit_rate,
+        r.token_budget,
+        r.budget_utilization,
+        r.pricing_cache_hit_rate,
         classes.join(",")
     )
 }
@@ -329,6 +353,27 @@ mod tests {
         assert_eq!(v.req("completed").unwrap().as_u64(), Some(4));
         assert_eq!(v.req("per_class").unwrap().as_arr().unwrap().len(), 2);
         assert!(v.req("ttft_p99_s").unwrap().as_f64().unwrap() > 0.0);
+        // PR-3 keys are appended, earlier keys untouched.
+        assert_eq!(
+            v.req("prefix_cache").unwrap(),
+            &crate::util::json::Value::Bool(true)
+        );
+        assert_eq!(v.req("prefix_hit_tokens").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("token_budget").unwrap().as_u64(), Some(0));
+        assert!(v.req("pricing_cache_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.req("budget_utilization").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn serve_table_shows_prefix_and_budget_counters() {
+        let e = InferenceEngine::new(PlatformConfig::occamy());
+        let w = crate::coordinator::Workload::uniform(4, 16, 8);
+        let mut opts = crate::coordinator::BatcherConfig::new(2, 0);
+        opts.token_budget = 32;
+        let r = e.serve_with(&ModelConfig::tiny(), &w, opts, FpFormat::Fp32);
+        let t = serve_table(&r);
+        assert!(t.contains("prefix cache: on"));
+        assert!(t.contains("token budget: 32"));
     }
 
     #[test]

@@ -70,6 +70,13 @@ impl Args {
         Ok(self.get_u64(key, default as u64)? as u32)
     }
 
+    /// `get_u64` narrowed to the platform's `usize` with an explicit
+    /// range error instead of a silent `as` truncation.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        let v = self.get_u64(key, default as u64)?;
+        usize::try_from(v).map_err(|_| anyhow::anyhow!("--{key} {v} out of range"))
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -117,6 +124,14 @@ mod tests {
     fn bad_number_errors() {
         let a = parse("run --seq abc", &["seq"]).unwrap();
         assert!(a.get_u64("seq", 0).is_err());
+    }
+
+    #[test]
+    fn usize_flag() {
+        let a = parse("serve --requests 50000", &["requests"]).unwrap();
+        assert_eq!(a.get_usize("requests", 32).unwrap(), 50_000);
+        let b = parse("serve", &["requests"]).unwrap();
+        assert_eq!(b.get_usize("requests", 32).unwrap(), 32);
     }
 
     #[test]

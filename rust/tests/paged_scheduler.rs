@@ -195,6 +195,79 @@ fn chunked_prefill_cuts_p99_ttft_on_mixed_trace() {
 }
 
 #[test]
+fn followers_hit_pages_registered_mid_prefill() {
+    // Prefix pages are registered chunk by chunk as a leader prefills, so
+    // a follower admitted mid-prefill attaches the pages registered so
+    // far — a partial hit, but still a skip, and still token-conserving.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let mut w = Workload::uniform(2, 32, 4).with_shared_prefix(96, 2);
+    // The follower arrives 1 ns in: admitted right after the leader's
+    // first 16-token chunk, when exactly one template page is registered.
+    w.requests[1].arrival_ns = 1;
+    let budget = Request::new(0, 128, 4).kv_bytes(&cfg) * 8;
+    let mut opts = BatcherConfig::new(4, budget);
+    opts.prefill_chunk = 16;
+    let r = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts).run(&w);
+    assert_eq!(r.completed, 2);
+    assert!(
+        (16..96).contains(&r.prefix_hit_tokens),
+        "partial hit expected, got {}",
+        r.prefix_hit_tokens
+    );
+    // Every prompt token of both requests is covered exactly once.
+    assert_eq!(r.prefill_tokens + r.prefix_hit_tokens, 2 * 128);
+    assert_eq!(r.gen_tokens, 2 * 4);
+}
+
+#[test]
+fn token_budget_open_loop_trace_completes_and_fills_budget() {
+    // Sarathi-style mixed passes under the full feature stack: priority
+    // classes, shared prefixes, open-loop arrivals, chunk cap.
+    let cfg = ModelConfig::tiny();
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let w = Workload::synthetic(7, 24, (8, 64), (2, 12))
+        .with_priority_classes(3)
+        .with_shared_prefix(32, 4)
+        .with_poisson_arrivals(9, 500.0);
+    let mut opts = BatcherConfig::new(8, 0);
+    opts.token_budget = 48;
+    opts.prefill_chunk = 16;
+    let r = e.serve_with(&cfg, &w, opts, FpFormat::Fp32);
+    assert_eq!(r.completed, 24);
+    assert_eq!(r.gen_tokens, w.total_gen_tokens());
+    assert_eq!(r.prefill_tokens + r.prefix_hit_tokens, w.total_prompt_tokens());
+    assert!(
+        r.budget_utilization > 0.0 && r.budget_utilization <= 1.0,
+        "{}",
+        r.budget_utilization
+    );
+    assert!(r.peak_kv_bytes <= e.kv_budget_bytes(&cfg, FpFormat::Fp32));
+}
+
+#[test]
+fn no_prefix_cache_path_is_deterministic_and_hit_free() {
+    // The `--no-prefix-cache --prefill-chunk` configuration is the PR-2
+    // code path: no hits, no sharing, and exactly reproducible.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = Workload::synthetic(11, 12, (8, 96), (2, 10))
+        .with_poisson_arrivals(4, 200.0);
+    let mut opts = BatcherConfig::new(4, 0);
+    opts.prefill_chunk = 32;
+    opts.prefix_cache = false;
+    let a = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts).run(&w);
+    let b = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts).run(&w);
+    assert!(!a.prefix_cache);
+    assert_eq!(a.prefix_hit_tokens, 0);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.ttft_p99_s, b.ttft_p99_s);
+    assert_eq!(a.latency_p99_s, b.latency_p99_s);
+    assert_eq!(a.prefill_chunks, b.prefill_chunks);
+    assert_eq!(a.tokens_per_s, b.tokens_per_s);
+}
+
+#[test]
 fn serve_with_peak_kv_within_engine_budget() {
     let e = InferenceEngine::new(PlatformConfig::occamy());
     let cfg = ModelConfig::tiny();

@@ -9,10 +9,13 @@ mod common;
 use common::Rng;
 use snitch_fm::arch::{Features, FpFormat, MemLevel, PlatformConfig};
 use snitch_fm::coordinator::schedule::{block_cost, model_cost};
-use snitch_fm::coordinator::KvCache;
+use snitch_fm::coordinator::{
+    layer_cost, BatcherConfig, ContinuousBatcher, KvCache, KvGeometry, LayerCostCache,
+    PageTable, PagedKvAllocator, PrefixCache, Workload,
+};
 use snitch_fm::kernels::{flash_attention_cost, gemm_cost, layernorm_cost};
 use snitch_fm::kernels::gemm::OperandHome;
-use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::model::{Layer, LayerKind, Mode, ModelConfig};
 use snitch_fm::sim::noc;
 use snitch_fm::tiling::{plan_flash_attention, plan_gemm, plan_gemm_wide};
 
@@ -244,6 +247,174 @@ fn kv_cache_prefill_then_steps_random() {
         }
         assert_eq!(cache.len(), cap);
         assert_eq!(cache.remaining(), 0);
+    }
+}
+
+#[test]
+fn refcounted_allocator_sharing_invariants() {
+    // Random interleavings of grow / release / share (prefix hit) /
+    // cache-register / LRU-evict / CoW-fork. After every operation:
+    // a page referenced by any table is live, ref counts cover table
+    // occupancy, distinct-page accounting matches bytes_in_use, and the
+    // budget holds. Draining tables + cache makes the pool whole.
+    use std::collections::HashMap;
+    let mut rng = Rng(0x5A5A);
+    for case in 0..40 {
+        let page_tokens = rng.next(1, 32);
+        let geom = KvGeometry { token_bytes: rng.next(1, 2048), page_tokens };
+        let total_pages = rng.next(2, 48);
+        let mut alloc = PagedKvAllocator::new(total_pages * geom.page_bytes(), geom);
+        let mut cache = PrefixCache::new();
+        let mut tables: Vec<PageTable> =
+            (0..rng.next(2, 6)).map(|_| PageTable::new()).collect();
+        let mut next_hash = 0u64;
+        for _ in 0..300 {
+            let i = rng.next(0, tables.len() as u64 - 1) as usize;
+            match rng.next(0, 5) {
+                0 => {
+                    let want = rng.next(0, total_pages * page_tokens);
+                    let _ = alloc.try_grow(&mut tables[i], want);
+                }
+                1 => alloc.release(&mut tables[i]),
+                2 => {
+                    // Prefix hit: map another table's page here too (the
+                    // page id is copied out before the mutable share).
+                    let j = rng.next(0, tables.len() as u64 - 1) as usize;
+                    if i != j && !tables[j].is_empty() {
+                        let p = tables[j].pages()
+                            [rng.next(0, tables[j].len() as u64 - 1) as usize];
+                        alloc.share(&mut tables[i], p);
+                    }
+                }
+                3 => {
+                    // Register a page in the prefix cache.
+                    if !tables[i].is_empty() {
+                        next_hash += 1;
+                        let p = tables[i].pages()
+                            [rng.next(0, tables[i].len() as u64 - 1) as usize];
+                        cache.insert(&mut alloc, next_hash, p);
+                    }
+                }
+                4 => {
+                    let _ = cache.evict_lru(&mut alloc, rng.next(1, 4));
+                }
+                _ => {
+                    let _ = alloc.ensure_private_tail(&mut tables[i]);
+                }
+            }
+            let mut occupancy: HashMap<u32, u32> = HashMap::new();
+            for t in &tables {
+                for &p in t.pages() {
+                    assert!(
+                        alloc.ref_count(p) >= 1,
+                        "case {case}: page {p} freed while a table references it"
+                    );
+                    *occupancy.entry(p).or_default() += 1;
+                }
+            }
+            for (&p, &n) in &occupancy {
+                assert!(
+                    alloc.ref_count(p) >= n,
+                    "case {case}: page {p} ref count {} below occupancy {n}",
+                    alloc.ref_count(p)
+                );
+            }
+            assert!(occupancy.len() as u64 <= alloc.used_pages(), "case {case}");
+            assert!(alloc.used_pages() <= total_pages, "case {case}: over budget");
+            assert_eq!(
+                alloc.bytes_in_use(),
+                alloc.used_pages() * geom.page_bytes(),
+                "case {case}: dedup bytes accounting drifted"
+            );
+            assert_eq!(alloc.free_pages() + alloc.used_pages(), alloc.total_pages());
+        }
+        for t in &mut tables {
+            alloc.release(t);
+        }
+        cache.clear(&mut alloc);
+        assert_eq!(alloc.used_pages(), 0, "case {case}: drained pool must be whole");
+        assert_eq!(alloc.free_pages(), alloc.total_pages());
+    }
+}
+
+#[test]
+fn layer_cost_memo_bit_identical_to_uncached() {
+    // Transparency: the memoized pricing path must return the exact
+    // KernelCost of the uncached path for arbitrary layer signatures,
+    // on the first (miss) and second (hit) lookup alike.
+    let p = PlatformConfig::occamy();
+    let mut cache = LayerCostCache::new(&p);
+    let mut rng = Rng(0x3E30);
+    for _ in 0..150 {
+        let kind = match rng.next(0, 4) {
+            0 => LayerKind::Gemm,
+            1 => LayerKind::FlashAttention,
+            2 => LayerKind::FusedConcatLinear,
+            3 => LayerKind::Layernorm,
+            _ => LayerKind::Gelu,
+        };
+        let layer = Layer {
+            kind,
+            label: "prop",
+            b: rng.next(1, 8),
+            m: rng.next(1, 512),
+            k: rng.next(1, 2048),
+            n: rng.next(1, 2048),
+            skv: rng.next(1, 2048),
+            heads: rng.next(1, 16),
+            p: rng.pick(&[32u64, 64, 128]),
+            causal: rng.next(0, 1) == 1,
+            fused_input: rng.next(0, 1) == 1,
+        };
+        let fmt = rng.pick(&FpFormat::ALL);
+        for pass in 0..2 {
+            assert_eq!(
+                cache.layer_cost(&layer, fmt, &p),
+                layer_cost(&layer, fmt, &p),
+                "pass {pass}: {layer:?} {fmt}"
+            );
+        }
+    }
+    assert!(cache.hits() >= 150, "every second lookup must hit");
+}
+
+#[test]
+fn prefix_hits_conserve_tokens_end_to_end() {
+    // With an ample page pool (no preemption), every prompt token is
+    // accounted exactly once: either prefilled or served from the prefix
+    // cache — across chunk sizes, page sizes, token budgets and fanouts.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let mut rng = Rng(0xBEEF);
+    for case in 0..15 {
+        let n = rng.next(4, 16) as usize;
+        let w = Workload::synthetic(rng.next(1, 1 << 20), n, (4, 48), (1, 8))
+            .with_shared_prefix(rng.next(0, 64), rng.next(1, 4) as usize)
+            .with_poisson_arrivals(rng.next(1, 1 << 20), 1000.0);
+        let page_tokens = rng.next(1, 24);
+        let geom = KvGeometry::new(&cfg, FpFormat::Fp32, page_tokens);
+        let budget = w
+            .requests
+            .iter()
+            .map(|r| geom.pages_for(r.kv_capacity()) * geom.page_bytes())
+            .sum::<u64>()
+            * 2;
+        let mut opts = BatcherConfig::new(rng.next(1, 6) as usize, budget);
+        opts.page_tokens = page_tokens;
+        opts.prefill_chunk = rng.next(0, 24);
+        if rng.next(0, 1) == 1 {
+            opts.token_budget = rng.next(8, 64);
+        }
+        let r = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts).run(&w);
+        assert_eq!(r.completed, n, "case {case}");
+        assert_eq!(r.preemptions, 0, "case {case}");
+        assert_eq!(
+            r.prefill_tokens + r.prefix_hit_tokens,
+            w.total_prompt_tokens(),
+            "case {case}: token conservation with prefix hits ({opts:?})"
+        );
+        assert_eq!(r.gen_tokens, w.total_gen_tokens(), "case {case}");
+        assert!(r.peak_kv_bytes <= budget, "case {case}");
     }
 }
 

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Compare the current run's BENCH_*.json artifacts against the previous
+CI run's and flag perf regressions.
+
+Usage: bench_trend.py <previous-artifact-dir> <current-dir>
+
+Both directories are searched recursively for BENCH_*.json files
+(downloaded artifacts nest under per-artifact subdirectories). For every
+JSON object that carries serving metrics, the script compares:
+
+  * tokens_per_s            — lower is worse (regression if -10%)
+  * ttft_p99_s              — higher is worse (regression if +10%)
+
+Regressions are emitted as GitHub Actions ::warning annotations
+(advisory: the exit code is 0 unless BENCH_TREND_STRICT=1), improvements
+and unchanged metrics as plain log lines. Entries are keyed by
+(file name, json path), so sweep configurations line up by label across
+runs; keys present on only one side are reported informationally.
+"""
+
+import json
+import os
+import sys
+from pathlib import Path
+
+THRESHOLD = 0.10
+# metric name -> True when larger values are better
+METRICS = {"tokens_per_s": True, "ttft_p99_s": False}
+
+
+def find_bench_files(root):
+    """Map file name -> path for every BENCH_*.json under root."""
+    out = {}
+    for path in sorted(Path(root).rglob("BENCH_*.json")):
+        out.setdefault(path.name, path)
+    return out
+
+
+def extract_metrics(node, path, out):
+    """Collect (json-path, metric, value) triples from nested JSON."""
+    if isinstance(node, dict):
+        label = node.get("config")
+        prefix = f"{path}/{label}" if isinstance(label, str) else path
+        for key, val in node.items():
+            if key in METRICS and isinstance(val, (int, float)):
+                out[(prefix, key)] = float(val)
+            else:
+                extract_metrics(val, f"{prefix}/{key}", out)
+    elif isinstance(node, list):
+        for i, item in enumerate(node):
+            # Lists of {"config": ...} entries key by label, not index.
+            sub = path if isinstance(item, dict) and "config" in item else f"{path}[{i}]"
+            extract_metrics(item, sub, out)
+
+
+def load_metrics(path):
+    try:
+        doc = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::warning::bench-trend: unreadable {path}: {e}")
+        return {}
+    out = {}
+    extract_metrics(doc, "", out)
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    prev_dir, cur_dir = sys.argv[1], sys.argv[2]
+    prev_files = find_bench_files(prev_dir) if os.path.isdir(prev_dir) else {}
+    cur_files = find_bench_files(cur_dir)
+    if not prev_files:
+        print("bench-trend: no previous artifacts — skipping (first run?)")
+        return
+    if not cur_files:
+        print("::warning::bench-trend: no current BENCH_*.json files found")
+        return
+
+    regressions = []
+    for name, cur_path in sorted(cur_files.items()):
+        prev_path = prev_files.get(name)
+        if prev_path is None:
+            print(f"bench-trend: {name}: new benchmark, no history yet")
+            continue
+        prev = load_metrics(prev_path)
+        cur = load_metrics(cur_path)
+        for key in sorted(cur):
+            if key not in prev:
+                print(f"bench-trend: {name}{key[0]}: new metric {key[1]}")
+                continue
+            where, metric = key
+            old, new = prev[key], cur[key]
+            if old <= 0:
+                continue
+            change = (new - old) / old
+            worse = -change if METRICS[metric] else change
+            arrow = f"{old:.4g} -> {new:.4g} ({change:+.1%})"
+            if worse > THRESHOLD:
+                regressions.append((name, where, metric, arrow))
+                print(f"::warning file={name}::bench-trend regression: "
+                      f"{name}{where} {metric} {arrow}")
+            else:
+                print(f"bench-trend: {name}{where} {metric} {arrow}")
+
+    if regressions:
+        print(f"bench-trend: {len(regressions)} regression(s) > "
+              f"{THRESHOLD:.0%} vs previous run")
+        if os.environ.get("BENCH_TREND_STRICT") == "1":
+            sys.exit(1)
+    else:
+        print("bench-trend: no regressions vs previous run")
+
+
+if __name__ == "__main__":
+    main()
