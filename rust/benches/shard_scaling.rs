@@ -1,0 +1,203 @@
+//! Multi-die sharding bench — the parallelism-subsystem acceptance sweep.
+//!
+//! Four claims defended here:
+//!
+//! 1. Collective pricing is sane: the ring all-reduce undercuts the
+//!    binary tree on large payloads (bandwidth-bound) and loses on small
+//!    ones (latency-bound); `Auto` always picks the winner.
+//! 2. The planner's two objectives pull apart: latency picks a
+//!    tensor-parallel plan (the decode weight stream splits across
+//!    dies), throughput picks full data parallelism (replica scaling
+//!    pays no collective tax) — and both beat the single-engine plan on
+//!    their own metric.
+//! 3. On a heavy open-loop Poisson trace, serving the planner-selected
+//!    throughput plan through the replica router achieves strictly
+//!    higher aggregate tokens/s than the single-engine baseline.
+//! 4. On a shared-prefix trace, prefix-affinity routing beats
+//!    join-shortest-queue on prefix-cache hit rate (JSQ splits template
+//!    groups across dies; affinity keeps them on their home replica).
+//!
+//! `BENCH_SMOKE=1` shrinks the traces; with `BENCH_JSON_DIR` set the
+//! results land in `BENCH_shard_scaling.json` for the CI trend
+//! comparison.
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Workload};
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::parallel::{
+    all_reduce_cost, best_plans, Algorithm, Objective, RoutePolicy, ShardPlan,
+};
+use snitch_fm::report;
+
+fn main() {
+    let gpt = ModelConfig::gpt_j();
+    let fmt = FpFormat::Fp8;
+    let n = if common::smoke() { 16 } else { 40 };
+    let mut json = Vec::new();
+
+    // ---- Claim 1: ring vs tree collective pricing across die counts.
+    common::header("collectives", "GPT-J all-reduce, ring vs tree, d2d links");
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>8}",
+        "dies", "payload", "ring cyc", "tree cyc", "auto"
+    );
+    for dies in [2u32, 4, 8] {
+        let p = PlatformConfig::with_dies(dies);
+        let ranks: Vec<u32> = (0..dies).collect();
+        // Decode activation (b=8 x E, latency-bound) and prefill
+        // activation (512 x E, bandwidth-bound).
+        for payload in [8 * gpt.e * fmt.bytes(), 512 * gpt.e * fmt.bytes()] {
+            let ring = all_reduce_cost(payload, &ranks, Algorithm::Ring, fmt, &p);
+            let tree = all_reduce_cost(payload, &ranks, Algorithm::Tree, fmt, &p);
+            let auto = all_reduce_cost(payload, &ranks, Algorithm::Auto, fmt, &p);
+            assert_eq!(auto.cycles, ring.cycles.min(tree.cycles), "auto picks the winner");
+            println!(
+                "{:<8} {:>10} {:>12} {:>12} {:>8}",
+                dies,
+                payload,
+                ring.cycles,
+                tree.cycles,
+                if auto.cycles == ring.cycles { "ring" } else { "tree" }
+            );
+        }
+    }
+    let p8 = PlatformConfig::with_dies(8);
+    let ranks8: Vec<u32> = (0..8).collect();
+    let big = 512 * gpt.e * fmt.bytes();
+    let ring = all_reduce_cost(big, &ranks8, Algorithm::Ring, fmt, &p8);
+    let tree = all_reduce_cost(big, &ranks8, Algorithm::Tree, fmt, &p8);
+    assert!(ring.cycles < tree.cycles, "large payloads are bandwidth-bound");
+
+    // ---- Claim 2: planner objectives on 4 dies.
+    let dies = 4u32;
+    let platform = PlatformConfig::with_dies(dies);
+    let (t_plan, by_thr) = common::time_median(3, || {
+        best_plans(&gpt, fmt, &platform, Mode::Ar, 8, 1024, Objective::Throughput)
+    });
+    let by_lat = best_plans(&gpt, fmt, &platform, Mode::Ar, 8, 1024, Objective::Latency);
+    common::header("planner", "GPT-J FP8 AR b=8 S=1024 on 4 dies");
+    print!("{}", report::shard_table("by throughput:", &by_thr[..by_thr.len().min(5)]));
+    print!("{}", report::shard_table("by latency:", &by_lat[..by_lat.len().min(5)]));
+    common::report_timing("plan-enumeration", t_plan);
+    let single_thr = by_thr
+        .iter()
+        .find(|r| r.plan == ShardPlan::single())
+        .expect("single plan enumerated");
+    assert_eq!(by_thr[0].plan, ShardPlan { tp: 1, pp: 1, replicas: 4 });
+    assert!(by_thr[0].cost.tokens_per_s > single_thr.cost.tokens_per_s);
+    assert!(by_lat[0].plan.tp > 1, "latency plan must shard the weight stream");
+
+    // ---- Claim 3: router throughput on a heavy open-loop trace.
+    let e = InferenceEngine::new(platform.clone());
+    let heavy = Workload::synthetic(11, n, (48, 160), (8, 24))
+        .with_poisson_arrivals(13, 20.0);
+    let opts = BatcherConfig::new(8, 0);
+    let single = e.serve_with(&gpt, &heavy, opts, fmt);
+    let replicas = by_thr[0].plan.replicas as usize;
+    let fleet = e.serve_replicated(
+        &gpt,
+        &heavy,
+        opts,
+        fmt,
+        replicas,
+        RoutePolicy::JoinShortestQueue,
+    );
+    common::header(
+        "router",
+        "GPT-J FP8, heavy poisson 20/s trace, single engine vs planner plan",
+    );
+    println!(
+        "{:<16} {:>10} {:>10} {:>10}",
+        "config", "tokens/s", "ttftP99", "seconds"
+    );
+    for (label, tok, ttft, secs) in [
+        ("single", single.tokens_per_s, single.ttft_p99_s, single.total_seconds),
+        (
+            "router-jsq-4x",
+            fleet.merged.tokens_per_s,
+            fleet.merged.ttft_p99_s,
+            fleet.merged.total_seconds,
+        ),
+    ] {
+        println!("{label:<16} {tok:>10.2} {ttft:>10.3} {secs:>10.3}");
+    }
+    assert_eq!(single.completed, n);
+    assert_eq!(fleet.merged.completed, n);
+    assert_eq!(fleet.merged.gen_tokens, single.gen_tokens, "same service delivered");
+    assert!(
+        fleet.merged.tokens_per_s > single.tokens_per_s,
+        "the planner-selected plan must beat the single engine on aggregate \
+         tokens/s: {} !> {}",
+        fleet.merged.tokens_per_s,
+        single.tokens_per_s
+    );
+    json.push(format!(
+        "{{\"config\":\"single-engine\",\"report\":{}}}",
+        report::serve_json(&single)
+    ));
+    json.push(format!(
+        "{{\"config\":\"router-jsq-{replicas}x\",\"report\":{}}}",
+        report::serve_json(&fleet.merged)
+    ));
+
+    // ---- Claim 4: prefix-affinity routing on a shared-prefix trace.
+    // Fanout 4 on 4 dies: each group's members arrive back to back, so
+    // JSQ deals them one per replica (no sharing anywhere) while
+    // affinity keeps every group on its template's home replica.
+    let shared = Workload::synthetic(11, n, (48, 160), (8, 24))
+        .with_shared_prefix(1024, 4)
+        .with_poisson_arrivals(13, 2.0);
+    let jsq = e.serve_replicated(
+        &gpt,
+        &shared,
+        opts,
+        fmt,
+        replicas,
+        RoutePolicy::JoinShortestQueue,
+    );
+    let aff = e.serve_replicated(
+        &gpt,
+        &shared,
+        opts,
+        fmt,
+        replicas,
+        RoutePolicy::PrefixAffinity,
+    );
+    common::header(
+        "affinity",
+        "GPT-J FP8, 1024-token shared prefixes x4, jsq vs prefix-affinity",
+    );
+    println!(
+        "{:<12} {:>10} {:>10} {:>12} {:>10}",
+        "policy", "tokens/s", "hit rate", "late hits", "ttftP99"
+    );
+    for (label, r) in [("jsq", &jsq.merged), ("affinity", &aff.merged)] {
+        println!(
+            "{label:<12} {:>10.2} {:>9.1}% {:>12} {:>10.3}",
+            r.tokens_per_s,
+            r.prefix_hit_rate * 100.0,
+            r.prefix_late_hits,
+            r.ttft_p99_s,
+        );
+    }
+    assert_eq!(jsq.merged.completed, n);
+    assert_eq!(aff.merged.completed, n);
+    assert!(
+        aff.merged.prefix_hit_rate > jsq.merged.prefix_hit_rate,
+        "prefix-affinity must beat JSQ on hit rate: {} !> {}",
+        aff.merged.prefix_hit_rate,
+        jsq.merged.prefix_hit_rate
+    );
+    json.push(format!(
+        "{{\"config\":\"shared-prefix-jsq\",\"report\":{}}}",
+        report::serve_json(&jsq.merged)
+    ));
+    json.push(format!(
+        "{{\"config\":\"shared-prefix-affinity\",\"report\":{}}}",
+        report::serve_json(&aff.merged)
+    ));
+
+    common::write_bench_json("shard_scaling", &format!("[{}]", json.join(",")));
+}

@@ -11,7 +11,7 @@ mod platform;
 
 pub use format::FpFormat;
 pub use platform::{
-    ClusterConfig, Features, InterconnectConfig, MemLevel, PlatformConfig,
+    ClusterConfig, DieLinkConfig, Features, InterconnectConfig, MemLevel, PlatformConfig,
 };
 
 #[cfg(test)]

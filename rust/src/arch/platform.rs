@@ -176,6 +176,39 @@ impl InterconnectConfig {
     }
 }
 
+/// Die-to-die interconnect of a multi-die package (paper Sec. IV-B: the
+/// hierarchical interconnect's top level — "wide" links with dedicated
+/// DMA engines bridging dies). One die is the full G x C cluster platform
+/// below; the parallelism subsystem (`crate::parallel`) prices tensor/
+/// pipeline/data-parallel shard plans across `dies` of them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DieLinkConfig {
+    /// Dies in the package (1 = the single-die silicon; collectives and
+    /// shard plans degenerate to no-ops).
+    pub dies: u32,
+    /// Per-direction die-to-die link bandwidth, GB/s. Modeled after the
+    /// Occamy wide link: on the order of the inter-group crossbar.
+    pub link_gbps: f64,
+    /// Die-to-die hop latency, ns (serdes + channel, longer than the 88 ns
+    /// on-die HBM round trip).
+    pub latency_ns: f64,
+    /// Dedicated die-to-die DMA engines per die. Concurrent transfers a
+    /// die drives beyond this share the link bandwidth (the contention
+    /// model of `parallel::collectives`).
+    pub dma_engines: u64,
+}
+
+impl Default for DieLinkConfig {
+    fn default() -> Self {
+        DieLinkConfig {
+            dies: 1,
+            link_gbps: 64.0,
+            latency_ns: 150.0,
+            dma_engines: 2,
+        }
+    }
+}
+
 /// Memory hierarchy level a transfer source/destination lives in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemLevel {
@@ -200,6 +233,8 @@ pub struct PlatformConfig {
     pub freq_ghz: f64,
     pub cluster: ClusterConfig,
     pub interconnect: InterconnectConfig,
+    /// Die-to-die package topology (dies = 1 on the single-die silicon).
+    pub die: DieLinkConfig,
     pub features: Features,
 }
 
@@ -213,7 +248,20 @@ impl PlatformConfig {
             freq_ghz: 1.0,
             cluster: ClusterConfig::default(),
             interconnect: InterconnectConfig::default(),
+            die: DieLinkConfig::default(),
             features: Features::all(),
+        }
+    }
+
+    /// A multi-die package of `dies` Occamy dies (each the full 16-cluster
+    /// silicon) joined by the wide die-to-die links. The per-die compute
+    /// and memory model is unchanged; `crate::parallel` maps shard plans
+    /// onto the dies.
+    pub fn with_dies(dies: u32) -> PlatformConfig {
+        assert!(dies > 0, "need at least one die");
+        PlatformConfig {
+            die: DieLinkConfig { dies, ..DieLinkConfig::default() },
+            ..PlatformConfig::occamy()
         }
     }
 
@@ -321,5 +369,21 @@ mod tests {
     fn hbm_capacity_is_32_gib() {
         let p = PlatformConfig::occamy();
         assert_eq!(p.interconnect.hbm_capacity_bytes, 32 * (1u64 << 30));
+    }
+
+    #[test]
+    fn single_die_by_default_and_with_dies_scales() {
+        assert_eq!(PlatformConfig::occamy().die.dies, 1);
+        let p = PlatformConfig::with_dies(4);
+        assert_eq!(p.die.dies, 4);
+        // The per-die platform below is unchanged.
+        assert_eq!(p.total_clusters(), 16);
+        assert_eq!(p.total_cores(), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_dies_panics() {
+        PlatformConfig::with_dies(0);
     }
 }

@@ -23,9 +23,17 @@
 //!   `token_budget > 0`, each iteration fills one budget with decode
 //!   tokens first and prefill-chunk tokens after, priced as a *single
 //!   fused pass* ([`model_total_mixed`]) that streams the weights once,
-//!   killing the prefill/decode pass-alternation overhead.
+//!   killing the prefill/decode pass-alternation overhead. A pass that
+//!   completes a prompt's prefill also *emits the first token* (the last
+//!   prompt position's output), cutting budget-mode TTFT by one
+//!   iteration at zero extra cost (`fused_first_tokens`).
 //!   `token_budget = 0` keeps the legacy one-chunk-per-resident
 //!   alternation.
+//! * **Mid-prefill prefix re-probing** — a resident request re-checks
+//!   the prefix cache at chunk boundaries for pages registered *after*
+//!   its admission and attaches every contiguously cached one instead of
+//!   prefilling it (counter `prefix_late_hits`), so concurrent requests
+//!   behind one template materialize it exactly once between them.
 //! * **Memoized layer pricing** ([`LayerCostCache`]) — every pricing call
 //!   goes through an interned signature -> `KernelCost` memo (platform-
 //!   generation tagged), making long open-loop traces tractable; the memo
@@ -185,6 +193,12 @@ pub struct ServeReport {
     /// shares its passes with prefill chunks, so the denominator covers
     /// every pass that advanced at least one decode token.
     pub decode_tokens_per_s: f64,
+    /// Raw counters behind `decode_tokens_per_s` / `avg_batch_occupancy`:
+    /// decode tokens advanced, cycles of decode-carrying passes, and
+    /// decode-carrying passes run (the replica router merges them).
+    pub decode_tokens: u64,
+    pub decode_cycles: u64,
+    pub decode_steps: u64,
     /// Mean decode batch occupancy (decode tokens per decode-carrying
     /// pass).
     pub avg_batch_occupancy: f64,
@@ -198,16 +212,68 @@ pub struct ServeReport {
     /// prefix_hit_tokens / (prefix_hit_tokens + prefill_tokens): the
     /// fraction of required prompt work the cache absorbed.
     pub prefix_hit_rate: f64,
+    /// Prompt tokens attached from the prefix cache *after* admission —
+    /// a resident request re-probing at chunk boundaries for pages
+    /// registered since (subset of `prefix_hit_tokens`).
+    pub prefix_late_hits: u64,
     /// Per-iteration token budget (0 = legacy alternation).
     pub token_budget: u64,
     /// Mean fraction of the token budget filled per mixed iteration
     /// (0 when the budget mode is off).
     pub budget_utilization: f64,
+    /// First tokens emitted by the same fused pass that completed a
+    /// prompt's prefill (token-budget mode): the last prompt position's
+    /// output IS the first generated token, so no extra pass — or budget
+    /// token — is spent, and TTFT drops by one iteration.
+    pub fused_first_tokens: u64,
     /// Fraction of layer-pricing lookups served by the memo.
     pub pricing_cache_hit_rate: f64,
     /// Per-priority-class percentiles (one entry per class present).
     pub per_class: Vec<ClassStats>,
     pub per_request: Vec<RequestStats>,
+}
+
+/// TTFT / latency / queue-wait percentile sets plus the per-class
+/// breakdown over a set of per-request outcomes. TTFT is defined over
+/// generated tokens: prefill-only requests (`gen_tokens == 0`) never
+/// produce one, so they are excluded from the TTFT aggregates (their
+/// per-request `ttft_s` equals prefill completion). Shared by the
+/// single-engine [`ContinuousBatcher`] report and the replica router's
+/// merged fleet view, so the two can never drift apart.
+pub(crate) fn latency_aggregates(
+    done: &[RequestStats],
+) -> (Percentiles, Percentiles, Percentiles, Vec<ClassStats>) {
+    let ttft = Percentiles::new(
+        done.iter().filter(|r| r.gen_tokens > 0).map(|r| r.ttft_s).collect(),
+    );
+    let lat = Percentiles::new(done.iter().map(|r| r.latency_s).collect());
+    let queue = Percentiles::new(done.iter().map(|r| r.admitted_s).collect());
+    let mut classes: Vec<u8> = done.iter().map(|r| r.class).collect();
+    classes.sort_unstable();
+    classes.dedup();
+    let per_class = classes
+        .into_iter()
+        .map(|class| {
+            let t = Percentiles::new(
+                done.iter()
+                    .filter(|r| r.class == class && r.gen_tokens > 0)
+                    .map(|r| r.ttft_s)
+                    .collect(),
+            );
+            let l = Percentiles::new(
+                done.iter().filter(|r| r.class == class).map(|r| r.latency_s).collect(),
+            );
+            ClassStats {
+                class,
+                completed: l.len(),
+                ttft_p50_s: t.p(50.0),
+                ttft_p99_s: t.p(99.0),
+                latency_p50_s: l.p(50.0),
+                latency_p99_s: l.p(99.0),
+            }
+        })
+        .collect();
+    (ttft, lat, queue, per_class)
 }
 
 /// A request's scheduler-side state that survives preemption.
@@ -273,6 +339,11 @@ struct RunCounters {
     prefill_chunks: u64,
     preemptions: u64,
     prefix_hit_tokens: u64,
+    /// Prompt tokens attached by mid-prefill re-probes (also counted in
+    /// `prefix_hit_tokens`).
+    prefix_late_hits: u64,
+    /// First tokens emitted from prefill-completing fused passes.
+    fused_first_tokens: u64,
     /// Tokens claimed / iterations run in token-budget mode.
     budget_tokens: u64,
     budget_iterations: u64,
@@ -617,6 +688,47 @@ impl<'a> ContinuousBatcher<'a> {
         }
     }
 
+    /// Mid-prefill prefix re-probe (a ROADMAP follow-on, now closed): at
+    /// a chunk boundary, a resident request re-checks the cache for its
+    /// upcoming prompt pages — pages another request registered *after*
+    /// this one was admitted — and attaches every contiguously cached one,
+    /// skipping their prefill. Returns the tokens attached. Only fires at
+    /// exact page boundaries (where the chain stays aligned); a no-op
+    /// when prefix caching is off, so the PR-2/PR-3 paths are unchanged.
+    fn late_prefix_attach(&self, st: &mut RunState, i: usize) -> u64 {
+        if !self.prefix_caching() {
+            return 0;
+        }
+        let RunState { active, alloc, cache, c, .. } = &mut *st;
+        let a = &mut active[i];
+        let pt = alloc.geometry().page_tokens;
+        if a.prefill_done % pt != 0 || a.table.len() as u64 != a.prefill_done / pt {
+            return 0;
+        }
+        let mut tokens = 0;
+        while a.prefill_done < a.job.prefill_target {
+            let idx = (a.prefill_done / pt) as usize;
+            // Chain alignment: every earlier prompt page must already be
+            // registered/attached for hash `idx` to be meaningful.
+            if idx >= a.page_hashes.len() || a.registered as usize != idx {
+                break;
+            }
+            if !cache.attach_next(alloc, &mut a.table, a.page_hashes[idx]) {
+                break;
+            }
+            a.registered += 1;
+            a.prefill_done += pt;
+            a.kv_len = a.prefill_done;
+            tokens += pt;
+        }
+        if tokens > 0 {
+            a.job.prefix_hit_tokens += tokens;
+            c.prefix_hit_tokens += tokens;
+            c.prefix_late_hits += tokens;
+        }
+        tokens
+    }
+
     /// Advance every prefilling job by one chunk (shared priority order).
     /// Returns whether any prefill work ran. Legacy (non-budget) path:
     /// each chunk is its own NAR pass.
@@ -626,6 +738,11 @@ impl<'a> ContinuousBatcher<'a> {
             let Some(i) = st.active.iter().position(|a| a.job.req.id == id) else {
                 continue;
             };
+            if !st.active[i].prefilling() {
+                continue;
+            }
+            // Pages registered since admission are attached, not redone.
+            ran |= self.late_prefix_attach(st, i) > 0;
             if !st.active[i].prefilling() {
                 continue;
             }
@@ -773,7 +890,10 @@ impl<'a> ContinuousBatcher<'a> {
         decode_ids.retain(|id| st.active.iter().any(|a| a.job.req.id == *id));
         left = budget - decode_ids.len() as u64;
 
-        // Phase 2: prefill chunks from the remaining budget.
+        // Phase 2: prefill chunks from the remaining budget. Pages
+        // registered since admission are attached instead of prefilled
+        // (free: attaches consume no budget tokens).
+        let mut late_attached = 0u64;
         let mut prefill_claims: Vec<(usize, u64, u64)> = Vec::new(); // (id, quantum, kv)
         for &id in order {
             if left == 0 {
@@ -782,6 +902,10 @@ impl<'a> ContinuousBatcher<'a> {
             let Some(i) = st.active.iter().position(|a| a.job.req.id == id) else {
                 continue;
             };
+            if !st.active[i].prefilling() {
+                continue;
+            }
+            late_attached += self.late_prefix_attach(st, i);
             if !st.active[i].prefilling() {
                 continue;
             }
@@ -810,7 +934,9 @@ impl<'a> ContinuousBatcher<'a> {
         }
 
         if decode_ids.is_empty() && prefill_claims.is_empty() {
-            return false;
+            // Attach-only iterations still made progress (prefill skipped
+            // forward); there is just nothing to price.
+            return late_attached > 0;
         }
 
         let kv_lens: Vec<u64> = decode_ids
@@ -847,8 +973,28 @@ impl<'a> ContinuousBatcher<'a> {
             let a = &mut st.active[i];
             a.prefill_done += quantum;
             a.kv_len = a.prefill_done;
+            // A pass that completes a prompt's prefill computed the last
+            // prompt position's output — which IS the next generated
+            // token. Emit it from this same fused pass (no extra compute,
+            // no budget token; ROADMAP follow-on, now closed): TTFT for
+            // budget-mode runs drops by one iteration. The counter only
+            // tracks genuine *first* tokens — a preempted request's
+            // recompute completion emits too, but its first token was
+            // already delivered before the preemption.
+            let emit = a.prefill_done >= a.job.prefill_target
+                && a.job.produced < a.job.req.gen_tokens;
+            let first_emit = emit && a.job.ttft_cycle.is_none();
+            if emit {
+                a.job.produced += 1;
+            }
+            if first_emit {
+                a.job.ttft_cycle = Some(st.time);
+            }
             st.c.prefill_tokens += quantum;
             st.c.prefill_chunks += 1;
+            if first_emit {
+                st.c.fused_first_tokens += 1;
+            }
             Self::register_prompt_pages(st, i);
         }
         self.apply_decode(st, &decode_ids);
@@ -905,49 +1051,13 @@ impl<'a> ContinuousBatcher<'a> {
     fn report(&self, workload: &Workload, st: RunState) -> ServeReport {
         let RunState { mut done, rejected, alloc, costs, c, time, .. } = st;
         done.sort_by_key(|r| r.id);
-        // TTFT is defined over generated tokens: prefill-only requests
-        // (gen_tokens == 0) never produce one, so they are excluded from
-        // the TTFT aggregates (their per-request ttft_s equals prefill
-        // completion). Each sample vector is sorted once; every
+        // Each sample vector inside the aggregates is sorted once; every
         // percentile after that is an index.
-        let ttft = Percentiles::new(
-            done.iter().filter(|r| r.gen_tokens > 0).map(|r| r.ttft_s).collect(),
-        );
-        let lat = Percentiles::new(done.iter().map(|r| r.latency_s).collect());
-        let queue = Percentiles::new(done.iter().map(|r| r.admitted_s).collect());
+        let (ttft, lat, queue, per_class) = latency_aggregates(&done);
         let total_seconds = self.platform.cycles_to_seconds(time);
         let decode_seconds = self.platform.cycles_to_seconds(c.decode_cycles);
         let gen_tokens: u64 = done.iter().map(|r| r.gen_tokens).sum();
         let power = energy::power_report(&c.total, self.fmt, self.platform);
-
-        let mut classes: Vec<u8> = done.iter().map(|r| r.class).collect();
-        classes.sort_unstable();
-        classes.dedup();
-        let per_class = classes
-            .into_iter()
-            .map(|class| {
-                let t = Percentiles::new(
-                    done.iter()
-                        .filter(|r| r.class == class && r.gen_tokens > 0)
-                        .map(|r| r.ttft_s)
-                        .collect(),
-                );
-                let l = Percentiles::new(
-                    done.iter()
-                        .filter(|r| r.class == class)
-                        .map(|r| r.latency_s)
-                        .collect(),
-                );
-                ClassStats {
-                    class,
-                    completed: l.len(),
-                    ttft_p50_s: t.p(50.0),
-                    ttft_p99_s: t.p(99.0),
-                    latency_p50_s: l.p(50.0),
-                    latency_p99_s: l.p(99.0),
-                }
-            })
-            .collect();
 
         let per_s = |tokens: u64, seconds: f64| {
             if seconds > 0.0 {
@@ -984,6 +1094,9 @@ impl<'a> ContinuousBatcher<'a> {
             queue_p99_s: queue.p(99.0),
             tokens_per_s: per_s(gen_tokens, total_seconds),
             decode_tokens_per_s: per_s(c.decode_tokens, decode_seconds),
+            decode_tokens: c.decode_tokens,
+            decode_cycles: c.decode_cycles,
+            decode_steps: c.decode_steps,
             avg_batch_occupancy: if c.decode_steps > 0 {
                 c.decode_tokens as f64 / c.decode_steps as f64
             } else {
@@ -999,6 +1112,7 @@ impl<'a> ContinuousBatcher<'a> {
             } else {
                 0.0
             },
+            prefix_late_hits: c.prefix_late_hits,
             token_budget: self.opts.token_budget,
             budget_utilization: if c.budget_iterations > 0 {
                 c.budget_tokens as f64
@@ -1006,6 +1120,7 @@ impl<'a> ContinuousBatcher<'a> {
             } else {
                 0.0
             },
+            fused_first_tokens: c.fused_first_tokens,
             pricing_cache_hit_rate: costs.hit_rate(),
             per_class,
             per_request: done,
@@ -1380,6 +1495,59 @@ mod tests {
             r.budget_utilization
         );
         assert!(r.tokens_per_s > 0.0);
+    }
+
+    #[test]
+    fn budget_mode_emits_first_token_from_prefill_completing_pass() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let w = Workload::uniform(1, 48, 4);
+        let budget = Request::new(0, 48, 4).kv_bytes(&cfg) * 4;
+        let mut opts = BatcherConfig::new(2, budget);
+        opts.token_budget = 64; // the whole prompt fits one fused pass
+        let r = run_cfg(&cfg, &p, &w, opts);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.fused_first_tokens, 1);
+        // The first token rides the prefill-completing pass itself, so
+        // TTFT equals exactly that one pass — no extra decode iteration.
+        let mut costs = LayerCostCache::new(&p);
+        let prefill =
+            model_total_mixed(&mut costs, &cfg, &[(48, 0)], &[], FpFormat::Fp32, &p);
+        let expect = p.cycles_to_seconds(prefill.cycles);
+        let ttft = r.per_request[0].ttft_s;
+        assert!((ttft - expect).abs() < 1e-12, "ttft {ttft} != prefill pass {expect}");
+        // One fewer decode pass: 4 tokens, the first one free.
+        assert_eq!(r.decode_tokens, 3);
+        assert_eq!(r.gen_tokens, 4);
+    }
+
+    #[test]
+    fn mid_prefill_reprobe_attaches_late_registered_pages() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        // Two requests share a 64-token template and are admitted in the
+        // same instant, so the admission probe misses for BOTH (nothing
+        // registered yet). The chunk-boundary re-probe then lets each
+        // pick up the template pages the other registered mid-prefill.
+        let w = Workload::uniform(2, 32, 4).with_shared_prefix(64, 2);
+        let budget = Request::new(0, 96, 4).kv_bytes(&cfg) * 8;
+        let mut opts = BatcherConfig::new(2, budget);
+        opts.prefill_chunk = 16;
+        let r = run_cfg(&cfg, &p, &w, opts);
+        assert_eq!(r.completed, 2);
+        assert!(r.prefix_late_hits > 0, "re-probe must attach late pages");
+        assert!(r.prefix_hit_tokens >= r.prefix_late_hits);
+        // The template is materialized exactly once across the pair.
+        assert_eq!(r.prefix_hit_tokens, 64);
+        assert_eq!(r.prefill_tokens + r.prefix_hit_tokens, 2 * 96);
+        // Without the cache nothing is shared — and the shared run can
+        // only finish sooner (it prefills strictly fewer tokens).
+        let mut off = opts;
+        off.prefix_cache = false;
+        let r_off = run_cfg(&cfg, &p, &w, off);
+        assert_eq!(r_off.prefix_late_hits, 0);
+        assert_eq!(r_off.prefill_tokens, 2 * 96);
+        assert!(r.total_seconds <= r_off.total_seconds);
     }
 
     #[test]

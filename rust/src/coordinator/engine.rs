@@ -242,6 +242,30 @@ impl InferenceEngine {
         ContinuousBatcher::new(cfg, &self.platform, fmt, opts).run(workload)
     }
 
+    /// Serve across `replicas` data-parallel engine replicas, each
+    /// running the continuous batcher against its own KV budget, with
+    /// the given routing policy ([`crate::parallel::router`]).
+    /// `replicas = 1` is bit-identical to [`Self::serve_with`].
+    pub fn serve_replicated(
+        &self,
+        cfg: &ModelConfig,
+        workload: &Workload,
+        opts: BatcherConfig,
+        fmt: FpFormat,
+        replicas: usize,
+        policy: crate::parallel::RoutePolicy,
+    ) -> crate::parallel::RouterReport {
+        crate::parallel::router::serve_replicated(
+            cfg,
+            &self.platform,
+            fmt,
+            opts,
+            workload,
+            replicas,
+            policy,
+        )
+    }
+
     /// HBM bytes left for KV caches once the model weights are resident
     /// at serving precision. Zero when the weights alone exceed capacity
     /// (the serve path then rejects everything rather than pretending).

@@ -342,6 +342,24 @@ impl PrefixCache {
         hashes.iter().take_while(|&&h| self.by_hash.contains_key(&h)).count() as u64
     }
 
+    /// Attach the cached page for `hash` (if any) to the end of `table`.
+    /// The caller is responsible for chain alignment: `table` must
+    /// already cover exactly the pages before `hash`'s position (true at
+    /// admission, where the table is empty, and at mid-prefill chunk
+    /// boundaries, where the table covers the materialized prefix).
+    /// Returns whether a page was attached.
+    pub fn attach_next(
+        &mut self,
+        alloc: &mut PagedKvAllocator,
+        table: &mut PageTable,
+        hash: u64,
+    ) -> bool {
+        let Some(&(page, _)) = self.by_hash.get(&hash) else { return false };
+        alloc.share(table, page);
+        self.touch(hash);
+        true
+    }
+
     /// Attach the longest cached prefix of `hashes` to `table` by sharing
     /// the cached pages (in chain order). Returns the number of pages
     /// attached; the caller skips `attached * page_tokens` tokens of
@@ -355,9 +373,9 @@ impl PrefixCache {
         debug_assert!(table.is_empty(), "prefix attaches at the chain start");
         let mut attached = 0;
         for &h in hashes {
-            let Some(&(page, _)) = self.by_hash.get(&h) else { break };
-            alloc.share(table, page);
-            self.touch(h);
+            if !self.attach_next(alloc, table, h) {
+                break;
+            }
             attached += 1;
         }
         attached

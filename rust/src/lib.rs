@@ -23,6 +23,7 @@ pub mod energy;
 pub mod kernels;
 pub mod metrics;
 pub mod model;
+pub mod parallel;
 pub mod report;
 pub mod runtime;
 pub mod sim;

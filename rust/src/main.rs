@@ -11,6 +11,7 @@ use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
 use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, SharedPrefix, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::parallel::{best_plans, Objective, RoutePolicy};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
 use snitch_fm::soa;
@@ -46,7 +47,13 @@ COMMANDS:
              --priorities N (round-robin classes, aged FCFS)
              --aging S (seconds of wait per class promotion; 0 = off)
              --reserve-full (legacy full-length KV reservation)
+             --replicas N (data-parallel engine replicas, one die each)
+             --route jsq|affinity (replica routing policy; affinity keeps
+               shared-prefix groups on their template's home replica)
              --json (machine-readable report)
+  shard      Enumerate and rank multi-die shard plans {tp, pp, replicas}
+             --model NAME --format FMT --dies N --batch N --seq N
+             --mode nar|ar --objective latency|throughput --json
   validate   Execute AOT artifacts via PJRT, verify golden numerics
              --artifacts DIR
   help       Show this message
@@ -75,6 +82,7 @@ const FLAGS: &[&str] = &[
     "exp", "artifacts", "requests", "batch", "prompt", "gen", "seed",
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
+    "replicas", "route", "dies", "objective",
 ];
 
 fn main() -> Result<()> {
@@ -85,6 +93,7 @@ fn main() -> Result<()> {
         Some("breakdown") => cmd_breakdown(&args),
         Some("compare") => cmd_compare(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
         Some("validate") => cmd_validate(&args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -287,7 +296,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompt = default_seq(&cfg, args.get_u64("prompt", 0)?);
     let gen = args.get_u64("gen", 64)?;
     let seed = args.get_u64("seed", 0)?;
-    let platform = PlatformConfig::with_clusters(args.get_u32("clusters", 16)?);
+    let replicas = args.get_usize("replicas", 1)?;
+    anyhow::ensure!(replicas > 0, "--replicas must be > 0");
+    let route = match args.get("route") {
+        None => RoutePolicy::JoinShortestQueue,
+        Some(s) => RoutePolicy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--route {s:?}: expected jsq or affinity"))?,
+    };
+    let mut platform = PlatformConfig::with_clusters(args.get_u32("clusters", 16)?);
+    // Each data-parallel replica occupies one die of the package.
+    platform.die.dies = platform.die.dies.max(replicas as u32);
     let engine = InferenceEngine::new(platform);
     anyhow::ensure!(requests > 0, "--requests must be > 0");
     anyhow::ensure!(batch > 0, "--batch must be > 0");
@@ -339,12 +357,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.prefix_cache = !args.get_bool("no-prefix-cache");
     opts.aging_promote_s = args.get_f64("aging", opts.aging_promote_s)?;
     anyhow::ensure!(opts.aging_promote_s >= 0.0, "--aging must be >= 0");
+    if replicas > 1 {
+        let r = engine.serve_replicated(&cfg, &workload, opts, format, replicas, route);
+        if args.get_bool("json") {
+            println!("{}", report::router_json(&r));
+        } else {
+            print!("{}", report::router_table(&r));
+        }
+        return Ok(());
+    }
     let report = engine.serve_with(&cfg, &workload, opts, format);
     if args.get_bool("json") {
         println!("{}", report::serve_json(&report));
     } else {
         print!("{}", report::serve_table(&report));
     }
+    Ok(())
+}
+
+fn cmd_shard(args: &Args) -> Result<()> {
+    let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
+    let format = parse_format(args.get_or("format", "fp8"))?;
+    let dies = args.get_u32("dies", 2)?;
+    anyhow::ensure!(dies > 0, "--dies must be > 0");
+    let batch = args.get_u64("batch", 8)?.max(1);
+    let mode = parse_mode(args.get_or("mode", "ar"))?;
+    let seq = default_seq(&cfg, args.get_u64("seq", 0)?);
+    let objective = match args.get("objective") {
+        None => Objective::Throughput,
+        Some(s) => Objective::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("--objective {s:?}: expected latency or throughput")
+        })?,
+    };
+    let platform = PlatformConfig::with_dies(dies);
+    let ranked = best_plans(&cfg, format, &platform, mode, batch, seq, objective);
+    anyhow::ensure!(!ranked.is_empty(), "no legal shard plan for this model/die count");
+    if args.get_bool("json") {
+        println!("{}", report::shard_json(&ranked));
+        return Ok(());
+    }
+    let mode_name = match mode {
+        Mode::Nar => "nar",
+        Mode::Ar => "ar",
+    };
+    print!(
+        "{}",
+        report::shard_table(
+            &format!(
+                "shard plans — {} {} {} S={seq} b={batch} on {dies} dies, by {}",
+                cfg.name,
+                mode_name,
+                format.name(),
+                objective.name()
+            ),
+            &ranked
+        )
+    );
+    let best = &ranked[0];
+    println!(
+        "chosen: tp={} pp={} replicas={} ({:.1} tokens/s aggregate, {:.3} Mcycles/token)",
+        best.plan.tp,
+        best.plan.pp,
+        best.plan.replicas,
+        best.cost.tokens_per_s,
+        best.cost.token_latency_cycles as f64 / 1e6,
+    );
     Ok(())
 }
 

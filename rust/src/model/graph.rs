@@ -138,6 +138,89 @@ pub fn block_layers_batched(
     ]
 }
 
+/// One transformer block lowered onto a single tensor-parallel rank.
+///
+/// `layers` is the rank's *local* kernel sequence; `allreduce_elems`
+/// lists the element counts of the partial activations the block's
+/// induced all-reduces combine across the `tp` ranks (one after the
+/// row-split out-projection, one after the row-split mlp-down — the
+/// Megatron-style schedule). Empty at `tp = 1`, where `layers` is
+/// bit-identical to [`block_layers_batched`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedBlock {
+    pub layers: Vec<Layer>,
+    /// Elements (not bytes) of each all-reduced partial, in block order.
+    pub allreduce_elems: Vec<u64>,
+}
+
+/// Expand one transformer block as seen by ONE of `tp` tensor-parallel
+/// ranks (Megatron-style): the Q/K/V projections and mlp-up are
+/// column-split (each rank owns `hp/tp` resp. `ff/tp` output columns),
+/// attention keeps `heads/tp` KV heads per rank (each rank's paged-KV
+/// pool shrinks accordingly — see `parallel::ShardPlan`), and the
+/// out-projection and mlp-down are row-split, leaving each rank with a
+/// partial `b*s x E` activation that the induced all-reduce combines.
+/// LayerNorms are replicated (every rank needs the full activation).
+///
+/// `tp` must divide `heads` and `ff` (checked); `tp = 1` returns the
+/// unsharded [`block_layers_batched`] expansion bit-identically.
+pub fn block_layers_sharded(
+    cfg: &ModelConfig,
+    mode: Mode,
+    b: u64,
+    s: u64,
+    kv_len: u64,
+    tp: u64,
+) -> ShardedBlock {
+    let tp = tp.max(1);
+    if tp == 1 {
+        return ShardedBlock {
+            layers: block_layers_batched(cfg, mode, b, s, kv_len),
+            allreduce_elems: Vec::new(),
+        };
+    }
+    assert!(
+        cfg.heads % tp == 0 && cfg.ff % tp == 0,
+        "tp={tp} must divide heads={} and ff={}",
+        cfg.heads,
+        cfg.ff
+    );
+    let causal = cfg.family == Family::Gpt;
+    let (sq, skv) = match mode {
+        Mode::Nar => (s, kv_len + s),
+        Mode::Ar => (1, kv_len + 1),
+    };
+    let heads_t = cfg.heads / tp;
+    let hp_t = heads_t * cfg.p;
+    let ff_t = cfg.ff / tp;
+    let layer = |kind, label, m, k, n, skv, causal, fused_input| Layer {
+        kind,
+        label,
+        b,
+        m,
+        k,
+        n,
+        skv,
+        heads: heads_t,
+        p: cfg.p,
+        causal,
+        fused_input,
+    };
+    let layers = vec![
+        layer(LayerKind::Layernorm, "ln1", sq, cfg.e, cfg.e, 0, false, false),
+        layer(LayerKind::Gemm, "q-proj", sq, cfg.e, hp_t, 0, false, false),
+        layer(LayerKind::Gemm, "k-proj", sq, cfg.e, hp_t, 0, false, false),
+        layer(LayerKind::Gemm, "v-proj", sq, cfg.e, hp_t, 0, false, false),
+        layer(LayerKind::FlashAttention, "attention", heads_t, cfg.p, sq, skv, causal, false),
+        layer(LayerKind::FusedConcatLinear, "out-proj", sq, hp_t, cfg.e, 0, false, true),
+        layer(LayerKind::Layernorm, "ln2", sq, cfg.e, cfg.e, 0, false, false),
+        layer(LayerKind::Gemm, "mlp-up", sq, cfg.e, ff_t, 0, false, false),
+        layer(LayerKind::Gelu, "gelu", sq, ff_t, ff_t, 0, false, true),
+        layer(LayerKind::Gemm, "mlp-down", sq, ff_t, cfg.e, 0, false, true),
+    ];
+    ShardedBlock { layers, allreduce_elems: vec![b * sq * cfg.e, b * sq * cfg.e] }
+}
+
 /// Expand one decode step for `b = kv_lens.len()` concurrent requests
 /// with *per-request* KV lengths (each entry is one request's cached
 /// tokens, excluding the token being decoded).
@@ -364,6 +447,46 @@ mod tests {
             ls.iter().filter(|l| l.kind == LayerKind::FlashAttention).count(),
             1
         );
+    }
+
+    #[test]
+    fn sharded_tp1_is_bit_identical_to_batched() {
+        let cfg = ModelConfig::gpt_j();
+        for (mode, s, kv) in [(Mode::Nar, 256, 0), (Mode::Nar, 64, 512), (Mode::Ar, 1, 1024)]
+        {
+            let sb = block_layers_sharded(&cfg, mode, 3, s, kv, 1);
+            assert_eq!(sb.layers, block_layers_batched(&cfg, mode, 3, s, kv));
+            assert!(sb.allreduce_elems.is_empty());
+        }
+    }
+
+    #[test]
+    fn sharded_block_splits_columns_heads_and_rows() {
+        let cfg = ModelConfig::gpt_j(); // 16 heads, p=256, e=4096, ff=16384
+        let tp = 4;
+        let sb = block_layers_sharded(&cfg, Mode::Nar, 2, 128, 0, tp);
+        assert_eq!(sb.layers.len(), 10);
+        let by = |l: &str| sb.layers.iter().find(|x| x.label == l).unwrap().clone();
+        // Column splits: each rank owns 1/tp of the projection outputs.
+        assert_eq!(by("q-proj").n, cfg.hp() / tp);
+        assert_eq!(by("mlp-up").n, cfg.ff / tp);
+        // KV heads split across ranks.
+        let att = by("attention");
+        assert_eq!(att.heads, cfg.heads / tp);
+        assert_eq!(att.batch_heads(), 2 * cfg.heads / tp);
+        // Row splits feed the partial-sum all-reduces.
+        assert_eq!(by("out-proj").k, cfg.hp() / tp);
+        assert_eq!(by("mlp-down").k, cfg.ff / tp);
+        assert_eq!(sb.allreduce_elems, vec![2 * 128 * cfg.e, 2 * 128 * cfg.e]);
+        // LayerNorms are replicated at full width.
+        assert_eq!(by("ln1").k, cfg.e);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_block_rejects_indivisible_tp() {
+        // ViT-B has 12 heads: tp = 8 cannot split them.
+        block_layers_sharded(&ModelConfig::vit_b(), Mode::Nar, 1, 197, 0, 8);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 pub mod graph;
 
 pub use graph::{
-    block_layers, block_layers_batched, block_layers_decode, block_layers_mixed, Layer,
-    LayerKind,
+    block_layers, block_layers_batched, block_layers_decode, block_layers_mixed,
+    block_layers_sharded, Layer, LayerKind, ShardedBlock,
 };
 
 use crate::arch::FpFormat;

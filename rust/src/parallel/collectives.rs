@@ -1,0 +1,331 @@
+//! Collective-communication pricing over the die-to-die interconnect.
+//!
+//! Ranks are dies: each participant is one full G x C cluster die
+//! ([`crate::arch::DieLinkConfig`] describes the links joining them).
+//! Two algorithm families are priced:
+//!
+//! * **Ring** — the bandwidth-optimal schedule: an all-reduce moves
+//!   `2 * (n-1)/n * payload` bytes per die in `2*(n-1)` steps of
+//!   `payload/n` each (reduce-scatter then all-gather).
+//! * **Binary tree** — the latency-optimal schedule for small payloads,
+//!   running the Sec. V-B reduction tree ([`noc::pair_schedule`]) over
+//!   dies instead of clusters: `ceil(log2 n)` levels up (reduce), the
+//!   same levels down (broadcast), full payload per hop.
+//!
+//! Contention: a die drives concurrent die-to-die transfers with its
+//! dedicated DMA engines (`DieLinkConfig::dma_engines`); transfers beyond
+//! that share the link bandwidth, which is what makes a ring step (one
+//! send + one receive in flight per die) slower on a single-engine die.
+//! Reduction arithmetic is priced with the cluster core model spread over
+//! the whole die, accumulating in FP32 like the Sec. V-B tree.
+//!
+//! All costs depend on the rank *count* only — every die pair rides the
+//! same link class — so collective pricing is symmetric in rank order by
+//! construction (property-tested in `tests/parallel_plans.rs`).
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::sim::core::{opcost, CoreModel};
+use crate::sim::noc;
+use crate::sim::KernelCost;
+
+/// Synchronization cost charged once per collective step/level (matches
+/// the cluster-level barrier the multi-cluster engine charges).
+const SYNC_CYCLES: u64 = 50;
+
+/// Collective algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Bandwidth-optimal ring schedule.
+    Ring,
+    /// Latency-optimal binary tree (the Sec. V-B schedule over dies).
+    Tree,
+    /// Price both and take the cheaper (what the shard pricing uses).
+    Auto,
+}
+
+/// Die-to-die link timing derived from the platform's `DieLinkConfig`.
+struct DieLink<'a> {
+    p: &'a PlatformConfig,
+}
+
+impl DieLink<'_> {
+    fn bytes_per_cycle(&self) -> f64 {
+        (self.p.die.link_gbps / self.p.freq_ghz).max(1e-9)
+    }
+
+    /// Static cycles before a die-to-die payload streams: DMA setup plus
+    /// the package-level hop latency.
+    fn static_cycles(&self) -> u64 {
+        self.p
+            .ns_to_cycles(self.p.interconnect.dma_setup_ns + self.p.die.latency_ns)
+    }
+
+    /// Cycles for one transfer while the die drives `concurrent`
+    /// transfers at once: transfers beyond the dedicated DMA engines
+    /// share the link bandwidth.
+    fn transfer_cycles(&self, bytes: u64, concurrent: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let engines = self.p.die.dma_engines.max(1);
+        let sharers = concurrent.max(1).div_ceil(engines).max(1);
+        let bpc = self.bytes_per_cycle() / sharers as f64;
+        self.static_cycles() + (bytes as f64 / bpc).ceil() as u64
+    }
+}
+
+/// Cycles one die needs to elementwise-add `elems` partial elements,
+/// spread over all its compute cores (FP32 accumulation, as in the
+/// Sec. V-B tree reduction).
+fn add_cycles(elems: u64, platform: &PlatformConfig) -> u64 {
+    if elems == 0 {
+        return 0;
+    }
+    let core = CoreModel::new(platform.cluster, platform.features);
+    core.elementwise_cycles(
+        elems.div_ceil(platform.total_cores()),
+        opcost::SIMPLE,
+        FpFormat::Fp32,
+        true,
+    )
+}
+
+fn elems_of(bytes: u64, fmt: FpFormat) -> u64 {
+    bytes.div_ceil(fmt.bytes().max(1))
+}
+
+fn check_ranks(ranks: &[u32], platform: &PlatformConfig) {
+    debug_assert!(
+        ranks.iter().all(|&r| r < platform.die.dies),
+        "rank ids {ranks:?} exceed the package's {} dies",
+        platform.die.dies
+    );
+    #[cfg(debug_assertions)]
+    {
+        let mut seen = ranks.to_vec();
+        seen.sort_unstable();
+        seen.dedup();
+        debug_assert_eq!(seen.len(), ranks.len(), "duplicate rank ids {ranks:?}");
+    }
+}
+
+/// Ring all-reduce: reduce-scatter then all-gather, `payload/n` bytes per
+/// step, every die sending and receiving concurrently.
+fn ring_all_reduce(bytes: u64, n: u64, fmt: FpFormat, p: &PlatformConfig) -> KernelCost {
+    let link = DieLink { p };
+    let chunk = bytes.div_ceil(n);
+    let chunk_elems = elems_of(chunk, fmt);
+    let xfer = link.transfer_cycles(chunk, 2);
+    let rs = (n - 1) * (xfer + add_cycles(chunk_elems, p) + SYNC_CYCLES);
+    let ag = (n - 1) * (xfer + SYNC_CYCLES);
+    KernelCost {
+        cycles: rs + ag,
+        flops: n * (n - 1) * chunk_elems,
+        d2d_bytes: n * 2 * (n - 1) * chunk,
+        dma_transfers: n * 2 * (n - 1),
+        ..Default::default()
+    }
+}
+
+/// Binary-tree all-reduce: the Sec. V-B pair schedule over dies (reduce
+/// up), then the mirrored broadcast (down), full payload per hop.
+fn tree_all_reduce(bytes: u64, n: u64, fmt: FpFormat, p: &PlatformConfig) -> KernelCost {
+    let link = DieLink { p };
+    let elems = elems_of(bytes, fmt);
+    let levels = noc::pair_schedule(n as u32);
+    let mut c = KernelCost::default();
+    for level in &levels {
+        if level.is_empty() {
+            continue;
+        }
+        // All of a level's sends ride disjoint die pairs in parallel.
+        c.cycles += link.transfer_cycles(bytes, 1) + add_cycles(elems, p) + SYNC_CYCLES;
+        c.flops += elems * level.len() as u64;
+        c.d2d_bytes += bytes * level.len() as u64;
+        c.dma_transfers += level.len() as u64;
+    }
+    for level in levels.iter().rev() {
+        if level.is_empty() {
+            continue;
+        }
+        c.cycles += link.transfer_cycles(bytes, 1) + SYNC_CYCLES;
+        c.d2d_bytes += bytes * level.len() as u64;
+        c.dma_transfers += level.len() as u64;
+    }
+    c
+}
+
+/// Price an all-reduce of `bytes` across `ranks` dies. Zero-cost for a
+/// single rank or an empty payload. Cost depends only on the rank count
+/// (all die pairs are equidistant), so it is symmetric in rank order.
+pub fn all_reduce_cost(
+    bytes: u64,
+    ranks: &[u32],
+    alg: Algorithm,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    check_ranks(ranks, platform);
+    let n = ranks.len() as u64;
+    if n <= 1 || bytes == 0 {
+        return KernelCost::default();
+    }
+    match alg {
+        Algorithm::Ring => ring_all_reduce(bytes, n, fmt, platform),
+        Algorithm::Tree => tree_all_reduce(bytes, n, fmt, platform),
+        Algorithm::Auto => {
+            let ring = ring_all_reduce(bytes, n, fmt, platform);
+            let tree = tree_all_reduce(bytes, n, fmt, platform);
+            if tree.cycles < ring.cycles {
+                tree
+            } else {
+                ring
+            }
+        }
+    }
+}
+
+/// Ring reduce-scatter: each die ends with the reduced `payload/n` shard.
+pub fn reduce_scatter_cost(
+    bytes: u64,
+    ranks: &[u32],
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    check_ranks(ranks, platform);
+    let n = ranks.len() as u64;
+    if n <= 1 || bytes == 0 {
+        return KernelCost::default();
+    }
+    let link = DieLink { p: platform };
+    let chunk = bytes.div_ceil(n);
+    let chunk_elems = elems_of(chunk, fmt);
+    let xfer = link.transfer_cycles(chunk, 2);
+    KernelCost {
+        cycles: (n - 1) * (xfer + add_cycles(chunk_elems, platform) + SYNC_CYCLES),
+        flops: n * (n - 1) * chunk_elems,
+        d2d_bytes: n * (n - 1) * chunk,
+        dma_transfers: n * (n - 1),
+        ..Default::default()
+    }
+}
+
+/// Ring all-gather: each die starts with a `payload/n` shard and ends
+/// with the full payload.
+pub fn all_gather_cost(bytes: u64, ranks: &[u32], platform: &PlatformConfig) -> KernelCost {
+    check_ranks(ranks, platform);
+    let n = ranks.len() as u64;
+    if n <= 1 || bytes == 0 {
+        return KernelCost::default();
+    }
+    let link = DieLink { p: platform };
+    let chunk = bytes.div_ceil(n);
+    let xfer = link.transfer_cycles(chunk, 2);
+    KernelCost {
+        cycles: (n - 1) * (xfer + SYNC_CYCLES),
+        d2d_bytes: n * (n - 1) * chunk,
+        dma_transfers: n * (n - 1),
+        ..Default::default()
+    }
+}
+
+/// Point-to-point die-to-die send (a pipeline stage shipping its output
+/// activations to the next stage's die).
+pub fn p2p_cost(bytes: u64, platform: &PlatformConfig) -> KernelCost {
+    if bytes == 0 {
+        return KernelCost::default();
+    }
+    let link = DieLink { p: platform };
+    KernelCost {
+        cycles: link.transfer_cycles(bytes, 1),
+        d2d_bytes: bytes,
+        dma_transfers: 1,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dies(n: u32) -> PlatformConfig {
+        PlatformConfig::with_dies(n)
+    }
+
+    fn ranks(n: u32) -> Vec<u32> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn degenerate_forms_are_free() {
+        let p = dies(4);
+        let f = FpFormat::Fp16;
+        assert_eq!(all_reduce_cost(1 << 20, &ranks(1), Algorithm::Auto, f, &p).cycles, 0);
+        assert_eq!(all_reduce_cost(0, &ranks(4), Algorithm::Ring, f, &p).cycles, 0);
+        assert_eq!(reduce_scatter_cost(0, &ranks(4), f, &p).cycles, 0);
+        assert_eq!(all_gather_cost(1 << 20, &ranks(1), &p).cycles, 0);
+        assert_eq!(p2p_cost(0, &p).cycles, 0);
+    }
+
+    #[test]
+    fn ring_beats_tree_on_large_payloads_and_loses_on_small() {
+        let p = dies(8);
+        let f = FpFormat::Fp32;
+        let big = 64 << 20;
+        let ring = all_reduce_cost(big, &ranks(8), Algorithm::Ring, f, &p);
+        let tree = all_reduce_cost(big, &ranks(8), Algorithm::Tree, f, &p);
+        assert!(ring.cycles < tree.cycles, "ring {} vs tree {}", ring.cycles, tree.cycles);
+        // A tiny payload is latency-bound: fewer hops win.
+        let small = 256;
+        let ring = all_reduce_cost(small, &ranks(8), Algorithm::Ring, f, &p);
+        let tree = all_reduce_cost(small, &ranks(8), Algorithm::Tree, f, &p);
+        assert!(tree.cycles < ring.cycles, "tree {} vs ring {}", tree.cycles, ring.cycles);
+        // Auto picks the winner on both.
+        for bytes in [small, big] {
+            let auto = all_reduce_cost(bytes, &ranks(8), Algorithm::Auto, f, &p);
+            let best = all_reduce_cost(bytes, &ranks(8), Algorithm::Ring, f, &p)
+                .cycles
+                .min(all_reduce_cost(bytes, &ranks(8), Algorithm::Tree, f, &p).cycles);
+            assert_eq!(auto.cycles, best);
+        }
+    }
+
+    #[test]
+    fn all_reduce_composes_reduce_scatter_and_all_gather() {
+        let p = dies(4);
+        let f = FpFormat::Fp32;
+        let bytes = 1 << 20;
+        let ar = all_reduce_cost(bytes, &ranks(4), Algorithm::Ring, f, &p);
+        let rs = reduce_scatter_cost(bytes, &ranks(4), f, &p);
+        let ag = all_gather_cost(bytes, &ranks(4), &p);
+        assert_eq!(ar.cycles, rs.cycles + ag.cycles);
+        assert_eq!(ar.d2d_bytes, rs.d2d_bytes + ag.d2d_bytes);
+        assert_eq!(ar.flops, rs.flops);
+    }
+
+    #[test]
+    fn single_engine_die_pays_ring_contention() {
+        let mut one = dies(4);
+        one.die.dma_engines = 1;
+        let two = dies(4);
+        let f = FpFormat::Fp32;
+        let a = all_reduce_cost(8 << 20, &ranks(4), Algorithm::Ring, f, &one);
+        let b = all_reduce_cost(8 << 20, &ranks(4), Algorithm::Ring, f, &two);
+        assert!(
+            a.cycles > b.cycles,
+            "send+receive on one DMA engine must halve the ring bandwidth: {} !> {}",
+            a.cycles,
+            b.cycles
+        );
+    }
+
+    #[test]
+    fn p2p_scales_with_bytes_and_counts_traffic() {
+        let p = dies(2);
+        let small = p2p_cost(4 << 10, &p);
+        let large = p2p_cost(4 << 20, &p);
+        assert!(large.cycles > small.cycles);
+        assert_eq!(large.d2d_bytes, 4 << 20);
+        assert_eq!(large.hbm_read_bytes + large.hbm_write_bytes, 0);
+    }
+}

@@ -1,0 +1,41 @@
+//! Multi-die parallelism subsystem.
+//!
+//! The paper's platform is explicitly hierarchical — clusters, groups and
+//! a die-to-die "wide" interconnect with dedicated DMA engines (Sec.
+//! IV-B) — but everything below this module prices a model onto ONE die.
+//! This subsystem makes parallelism across dies a first-class citizen:
+//!
+//! * [`collectives`] — prices all-reduce / reduce-scatter / all-gather /
+//!   point-to-point pipeline sends over the die-to-die links, with ring
+//!   and binary-tree algorithms (the tree reuses the Sec. V-B reduction
+//!   schedule via [`crate::sim::noc::pair_schedule`]) and a
+//!   DMA-engine-contention model.
+//! * [`shard`] — [`shard::ShardPlan`]`{ tp, pp, replicas }` and the
+//!   sharded block/model pricing built on
+//!   [`crate::model::block_layers_sharded`]: column/row-split GEMMs with
+//!   the induced all-reduce per block, per-stage pipeline cuts with
+//!   activation-send costs, and the per-replica KV budget shrink from
+//!   splitting KV heads across TP ranks.
+//! * [`planner`] — enumerates the legal plans for a platform's die count
+//!   and ranks them by modeled per-token latency or aggregate tokens/s
+//!   (the `snitch-fm shard` subcommand).
+//! * [`router`] — a data-parallel serving router: N engine replicas each
+//!   running the existing continuous batcher against its own KV budget,
+//!   with join-shortest-queue and prefix-affinity request routing and a
+//!   merged [`crate::coordinator::ServeReport`].
+//!
+//! The degenerate plan `tp = 1, pp = 1, replicas = 1` prices and
+//! schedules bit-identically to the single-engine paths, so the whole
+//! subsystem is testable against the existing baselines.
+
+pub mod collectives;
+pub mod planner;
+pub mod router;
+pub mod shard;
+
+pub use collectives::{
+    all_gather_cost, all_reduce_cost, p2p_cost, reduce_scatter_cost, Algorithm,
+};
+pub use planner::{best_plans, enumerate_plans, Objective, RankedPlan};
+pub use router::{serve_replicated, RoutePolicy, RouterReport};
+pub use shard::{plan_cost, sharded_block_cost, PlanCost, ShardPlan};

@@ -1,0 +1,178 @@
+//! Shard-plan enumeration and selection.
+//!
+//! Enumerates every legal `{tp, pp, replicas}` assignment for the
+//! platform's die count, prices each with [`shard::plan_cost`], and ranks
+//! them by the chosen objective:
+//!
+//! * [`Objective::Latency`] — minimize the modeled per-token latency
+//!   through the pipe (interactive serving; favors TP, then PP).
+//! * [`Objective::Throughput`] — maximize aggregate tokens/s at the
+//!   priced batch (batch serving; favors replicas, whose scaling pays no
+//!   collective tax).
+//!
+//! Ties break toward fewer dies, then lexicographic `(tp, pp, replicas)`
+//! so the ranking is fully deterministic.
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::model::{Mode, ModelConfig};
+use crate::parallel::shard::{plan_cost, PlanCost, ShardPlan};
+
+/// What the planner optimizes for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Cheapest modeled per-token latency.
+    Latency,
+    /// Highest aggregate tokens/s across replicas.
+    Throughput,
+}
+
+impl Objective {
+    /// Parse `latency` | `throughput`.
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s {
+            "latency" => Some(Objective::Latency),
+            "throughput" => Some(Objective::Throughput),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Throughput => "throughput",
+        }
+    }
+}
+
+/// One plan with its priced pass and per-replica KV budget.
+#[derive(Debug, Clone)]
+pub struct RankedPlan {
+    pub plan: ShardPlan,
+    pub cost: PlanCost,
+    /// KV budget one replica offers the serving scheduler (whole-model
+    /// token bytes; see [`ShardPlan::replica_kv_budget_bytes`]).
+    pub kv_budget_bytes: u64,
+}
+
+/// Every legal plan for `cfg` on the platform's dies, unranked.
+pub fn enumerate_plans(cfg: &ModelConfig, platform: &PlatformConfig) -> Vec<ShardPlan> {
+    let dies = platform.die.dies.max(1);
+    let mut out = Vec::new();
+    for tp in 1..=dies {
+        for pp in 1..=dies {
+            for replicas in 1..=dies {
+                let plan = ShardPlan { tp, pp, replicas };
+                if plan.dies() <= dies && plan.is_legal(cfg, platform) {
+                    out.push(plan);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Price every legal plan for a decode step at KV length `s` and batch
+/// `b`, ranked best-first by `objective`.
+pub fn best_plans(
+    cfg: &ModelConfig,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+    mode: Mode,
+    b: u64,
+    s: u64,
+    objective: Objective,
+) -> Vec<RankedPlan> {
+    let mut ranked: Vec<RankedPlan> = enumerate_plans(cfg, platform)
+        .into_iter()
+        .map(|plan| RankedPlan {
+            plan,
+            cost: plan_cost(cfg, plan, mode, b, s, fmt, platform),
+            kv_budget_bytes: plan.replica_kv_budget_bytes(cfg, fmt, platform),
+        })
+        .collect();
+    let tie = |p: &ShardPlan| (p.dies(), p.tp, p.pp, p.replicas);
+    match objective {
+        Objective::Latency => {
+            ranked.sort_by_key(|r| (r.cost.token_latency_cycles, tie(&r.plan)));
+        }
+        Objective::Throughput => {
+            ranked.sort_by(|a, b| {
+                b.cost
+                    .tokens_per_s
+                    .partial_cmp(&a.cost.tokens_per_s)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| tie(&a.plan).cmp(&tie(&b.plan)))
+            });
+        }
+    }
+    ranked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse() {
+        assert_eq!(Objective::parse("latency"), Some(Objective::Latency));
+        assert_eq!(Objective::parse("throughput"), Some(Objective::Throughput));
+        assert_eq!(Objective::parse("nope"), None);
+    }
+
+    #[test]
+    fn single_die_has_exactly_the_degenerate_plan() {
+        let cfg = ModelConfig::gpt_j();
+        let plans = enumerate_plans(&cfg, &PlatformConfig::occamy());
+        assert_eq!(plans, vec![ShardPlan::single()]);
+    }
+
+    #[test]
+    fn enumeration_is_bounded_and_legal() {
+        let cfg = ModelConfig::gpt_j(); // 16 heads: tp in {1,2,4} on 4 dies
+        let p = PlatformConfig::with_dies(4);
+        let plans = enumerate_plans(&cfg, &p);
+        assert!(plans.contains(&ShardPlan::single()));
+        assert!(plans.contains(&ShardPlan { tp: 2, pp: 2, replicas: 1 }));
+        assert!(plans.contains(&ShardPlan { tp: 1, pp: 1, replicas: 4 }));
+        for plan in &plans {
+            assert!(plan.dies() <= 4, "{plan:?}");
+            assert!(plan.is_legal(&cfg, &p), "{plan:?}");
+        }
+        // tp=3 never divides 16 heads.
+        assert!(!plans.iter().any(|p| p.tp == 3));
+    }
+
+    #[test]
+    fn throughput_objective_picks_full_data_parallelism() {
+        // Replica scaling pays no collective tax, so at a fixed per-engine
+        // batch the throughput-optimal plan uses every die as a replica.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(4);
+        let fmt = FpFormat::Fp8;
+        let ranked = best_plans(&cfg, fmt, &p, Mode::Ar, 8, 1024, Objective::Throughput);
+        let best = &ranked[0];
+        assert_eq!(best.plan, ShardPlan { tp: 1, pp: 1, replicas: 4 });
+        let single = ranked
+            .iter()
+            .find(|r| r.plan == ShardPlan::single())
+            .expect("single plan enumerated");
+        assert!(best.cost.tokens_per_s > single.cost.tokens_per_s);
+    }
+
+    #[test]
+    fn latency_objective_picks_a_sharded_plan() {
+        // Decode is weight-streaming-bound: splitting the stream across
+        // dies must beat the single engine on per-token latency.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(4);
+        let fmt = FpFormat::Fp8;
+        let ranked = best_plans(&cfg, fmt, &p, Mode::Ar, 8, 1024, Objective::Latency);
+        let best = &ranked[0];
+        assert!(best.plan.tp > 1, "latency plan must shard: {:?}", best.plan);
+        let single = ranked
+            .iter()
+            .find(|r| r.plan == ShardPlan::single())
+            .expect("single plan enumerated");
+        assert!(best.cost.token_latency_cycles < single.cost.token_latency_cycles);
+    }
+}

@@ -1,0 +1,379 @@
+//! Data-parallel serving router: N engine replicas, each running the
+//! existing continuous batcher against its own KV budget.
+//!
+//! The router assigns arriving requests to replicas with a deterministic
+//! backlog model (virtual finish times over modeled per-token service
+//! cost), runs each replica's [`ContinuousBatcher`] on its share, and
+//! merges the per-replica [`ServeReport`]s into one fleet view:
+//!
+//! * [`RoutePolicy::JoinShortestQueue`] — each request joins the replica
+//!   whose modeled backlog clears first.
+//! * [`RoutePolicy::PrefixAffinity`] — requests carrying a shared prompt
+//!   template (`Request::prefix_seed`) prefer the replica whose
+//!   `PrefixCache` already holds their pages (the template's home,
+//!   pinned on first sight), falling back to join-shortest-queue when
+//!   the home replica's backlog runs too far ahead — so one hot template
+//!   cannot melt a single die.
+//!
+//! `replicas = 1` returns the single batcher's report unchanged
+//! (bit-identical to `InferenceEngine::serve_with`, asserted in
+//! `tests/parallel_plans.rs`).
+
+use std::collections::HashMap;
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::batcher::{BatcherConfig, ContinuousBatcher, ServeReport};
+use crate::coordinator::schedule::model_cost_batched;
+use crate::coordinator::workload::Workload;
+use crate::model::{Mode, ModelConfig};
+
+/// How the router spreads requests over replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Least modeled backlog at arrival.
+    JoinShortestQueue,
+    /// Shared-prefix requests chase their template's home replica.
+    PrefixAffinity,
+}
+
+impl RoutePolicy {
+    /// Parse `jsq` | `affinity`.
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "jsq" => Some(RoutePolicy::JoinShortestQueue),
+            "affinity" => Some(RoutePolicy::PrefixAffinity),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::JoinShortestQueue => "jsq",
+            RoutePolicy::PrefixAffinity => "affinity",
+        }
+    }
+}
+
+/// The fleet-level serving outcome.
+#[derive(Debug, Clone)]
+pub struct RouterReport {
+    pub replicas: usize,
+    pub policy: &'static str,
+    /// Requests routed to each replica.
+    pub assigned: Vec<usize>,
+    /// The merged fleet view (see [`merge_reports`] for the semantics of
+    /// each aggregated field).
+    pub merged: ServeReport,
+    pub per_replica: Vec<ServeReport>,
+}
+
+/// Modeled service cost (cycles) of one request: prefill priced per
+/// prompt token, decode per generated token at the workload's mean
+/// context. Only *relative* weights matter to the routing decisions.
+struct ServiceModel {
+    prefill_per_token: f64,
+    decode_per_token: f64,
+    freq_ghz: f64,
+}
+
+impl ServiceModel {
+    fn new(
+        cfg: &ModelConfig,
+        fmt: FpFormat,
+        platform: &PlatformConfig,
+        workload: &Workload,
+        max_batch: usize,
+    ) -> ServiceModel {
+        let n = workload.len().max(1) as u64;
+        let mean_prompt = (workload.total_prompt_tokens() / n).max(1);
+        let mean_ctx = mean_prompt + (workload.total_gen_tokens() / n).max(1);
+        let b = max_batch.max(1) as u64;
+        let prefill =
+            model_cost_batched(cfg, Mode::Nar, 1, mean_prompt, fmt, platform).cycles;
+        let decode =
+            model_cost_batched(cfg, Mode::Ar, b, mean_ctx, fmt, platform).cycles;
+        ServiceModel {
+            prefill_per_token: prefill as f64 / mean_prompt as f64,
+            decode_per_token: decode as f64 / b as f64,
+            freq_ghz: platform.freq_ghz,
+        }
+    }
+
+    fn work_cycles(&self, prompt: u64, gen: u64) -> f64 {
+        prompt as f64 * self.prefill_per_token + gen as f64 * self.decode_per_token
+    }
+
+    fn arrival_cycles(&self, arrival_ns: u64) -> f64 {
+        arrival_ns as f64 * self.freq_ghz
+    }
+}
+
+/// Split `workload` over `replicas` sub-workloads (requests keep their
+/// ids). Deterministic: requests are routed in arrival order against
+/// virtual per-replica finish times under the service model.
+fn route_workload(
+    workload: &Workload,
+    replicas: usize,
+    policy: RoutePolicy,
+    model: &ServiceModel,
+) -> Vec<Workload> {
+    let mut shards: Vec<Workload> = (0..replicas).map(|_| Workload::default()).collect();
+    let mut ready_at = vec![0.0f64; replicas];
+    let mut home: HashMap<u64, usize> = HashMap::new();
+
+    let mut order: Vec<usize> = (0..workload.requests.len()).collect();
+    order.sort_by_key(|&i| (workload.requests[i].arrival_ns, workload.requests[i].id));
+
+    for i in order {
+        let r = &workload.requests[i];
+        let now = model.arrival_cycles(r.arrival_ns);
+        let backlog = |j: usize| (ready_at[j] - now).max(0.0);
+        let jsq = (0..replicas)
+            .min_by(|&a, &b| backlog(a).partial_cmp(&backlog(b)).unwrap())
+            .unwrap_or(0);
+        let work = model.work_cycles(r.prompt_len, r.gen_tokens);
+        let target = match policy {
+            RoutePolicy::JoinShortestQueue => jsq,
+            RoutePolicy::PrefixAffinity if r.prefix_len > 0 => {
+                match home.get(&r.prefix_seed).copied() {
+                    // Spill guard: chase the cached prefix only while the
+                    // home replica's backlog is within a few requests of
+                    // the shortest queue.
+                    Some(h) if backlog(h) <= backlog(jsq) + 4.0 * work => h,
+                    Some(_) => jsq,
+                    None => {
+                        home.insert(r.prefix_seed, jsq);
+                        jsq
+                    }
+                }
+            }
+            RoutePolicy::PrefixAffinity => jsq,
+        };
+        ready_at[target] = ready_at[target].max(now) + work;
+        shards[target].requests.push(r.clone());
+    }
+    shards
+}
+
+/// Mean of `f` over the replicas, weighted by each replica's wall-clock
+/// cycles (a replica that ran longer dominates the fleet-level rate).
+fn cycle_weighted(per: &[ServeReport], f: impl Fn(&ServeReport) -> f64) -> f64 {
+    let denom: f64 = per.iter().map(|r| r.total_cycles as f64).sum();
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    per.iter().map(|r| f(r) * r.total_cycles as f64).sum::<f64>() / denom
+}
+
+/// Merge per-replica reports into one fleet view. Wall-clock-like fields
+/// take the slowest replica (the fleet runs in parallel), counters sum,
+/// latency/TTFT/queue percentiles are recomputed over the union of
+/// per-request stats, and rate-like fields are rebuilt from the merged
+/// counters (utilization/power/budget-fill are cycle-weighted means).
+fn merge_reports(per: &[ServeReport], platform: &PlatformConfig) -> ServeReport {
+    assert!(!per.is_empty(), "merge needs at least one replica report");
+    if per.len() == 1 {
+        return per[0].clone();
+    }
+    let first = &per[0];
+    let mut merged = first.clone();
+
+    let mut per_request: Vec<_> =
+        per.iter().flat_map(|r| r.per_request.iter().cloned()).collect();
+    per_request.sort_by_key(|s| s.id);
+    let mut rejected: Vec<usize> =
+        per.iter().flat_map(|r| r.rejected.iter().copied()).collect();
+    rejected.sort_unstable();
+
+    let total_cycles: u64 = per.iter().map(|r| r.total_cycles).max().unwrap_or(0);
+
+    merged.requests = per.iter().map(|r| r.requests).sum();
+    merged.completed = per.iter().map(|r| r.completed).sum();
+    merged.rejected = rejected;
+    merged.kv_budget_bytes = per.iter().map(|r| r.kv_budget_bytes).sum();
+    merged.total_pages = per.iter().map(|r| r.total_pages).sum();
+    merged.peak_kv_bytes = per.iter().map(|r| r.peak_kv_bytes).sum();
+    merged.total_cycles = total_cycles;
+    merged.total_seconds = platform.cycles_to_seconds(total_cycles);
+    merged.prefill_tokens = per.iter().map(|r| r.prefill_tokens).sum();
+    merged.prefill_chunks = per.iter().map(|r| r.prefill_chunks).sum();
+    merged.gen_tokens = per.iter().map(|r| r.gen_tokens).sum();
+    merged.preemptions = per.iter().map(|r| r.preemptions).sum();
+    merged.prefix_hit_tokens = per.iter().map(|r| r.prefix_hit_tokens).sum();
+    merged.prefix_late_hits = per.iter().map(|r| r.prefix_late_hits).sum();
+    merged.fused_first_tokens = per.iter().map(|r| r.fused_first_tokens).sum();
+    merged.decode_tokens = per.iter().map(|r| r.decode_tokens).sum();
+    merged.decode_cycles = per.iter().map(|r| r.decode_cycles).max().unwrap_or(0);
+
+    // The exact aggregation the single-engine report runs (TTFT over
+    // generating requests only, per-class breakdown), over the union.
+    let (ttft, lat, queue, per_class) =
+        crate::coordinator::batcher::latency_aggregates(&per_request);
+    merged.ttft_mean_s = ttft.mean();
+    merged.ttft_p50_s = ttft.p(50.0);
+    merged.ttft_p99_s = ttft.p(99.0);
+    merged.latency_mean_s = lat.mean();
+    merged.latency_p50_s = lat.p(50.0);
+    merged.latency_p99_s = lat.p(99.0);
+    merged.queue_mean_s = queue.mean();
+    merged.queue_p99_s = queue.p(99.0);
+    merged.per_class = per_class;
+
+    merged.tokens_per_s = if merged.total_seconds > 0.0 {
+        merged.gen_tokens as f64 / merged.total_seconds
+    } else {
+        0.0
+    };
+    let decode_seconds = platform.cycles_to_seconds(merged.decode_cycles);
+    merged.decode_tokens_per_s = if decode_seconds > 0.0 {
+        merged.decode_tokens as f64 / decode_seconds
+    } else {
+        0.0
+    };
+    // Occupancy: decode steps recovered per replica from its counters.
+    let steps: u64 = per.iter().map(|r| r.decode_steps).sum();
+    merged.avg_batch_occupancy = if steps > 0 {
+        merged.decode_tokens as f64 / steps as f64
+    } else {
+        0.0
+    };
+    merged.decode_steps = steps;
+    let hit_denom = merged.prefix_hit_tokens + merged.prefill_tokens;
+    merged.prefix_hit_rate = if hit_denom > 0 {
+        merged.prefix_hit_tokens as f64 / hit_denom as f64
+    } else {
+        0.0
+    };
+    merged.fpu_utilization = cycle_weighted(per, |r| r.fpu_utilization);
+    merged.power_w = cycle_weighted(per, |r| r.power_w);
+    merged.budget_utilization = cycle_weighted(per, |r| r.budget_utilization);
+    merged.pricing_cache_hit_rate = cycle_weighted(per, |r| r.pricing_cache_hit_rate);
+    merged.hbm_gb = per.iter().map(|r| r.hbm_gb).sum();
+    merged.per_request = per_request;
+    merged
+}
+
+/// Serve `workload` on `replicas` independent engine replicas (each the
+/// existing continuous batcher with its own KV budget from `opts`),
+/// routing requests by `policy`. `replicas = 1` is bit-identical to
+/// running the single batcher.
+pub fn serve_replicated(
+    cfg: &ModelConfig,
+    platform: &PlatformConfig,
+    fmt: FpFormat,
+    opts: BatcherConfig,
+    workload: &Workload,
+    replicas: usize,
+    policy: RoutePolicy,
+) -> RouterReport {
+    let replicas = replicas.max(1);
+    if replicas == 1 {
+        let r = ContinuousBatcher::new(cfg, platform, fmt, opts).run(workload);
+        return RouterReport {
+            replicas: 1,
+            policy: policy.name(),
+            assigned: vec![workload.len()],
+            merged: r.clone(),
+            per_replica: vec![r],
+        };
+    }
+    let model = ServiceModel::new(cfg, fmt, platform, workload, opts.max_batch);
+    let shards = route_workload(workload, replicas, policy, &model);
+    let assigned: Vec<usize> = shards.iter().map(|w| w.len()).collect();
+    let per: Vec<ServeReport> = shards
+        .iter()
+        .map(|w| ContinuousBatcher::new(cfg, platform, fmt, opts).run(w))
+        .collect();
+    let merged = merge_reports(&per, platform);
+    RouterReport {
+        replicas,
+        policy: policy.name(),
+        assigned,
+        merged,
+        per_replica: per,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::workload::Request;
+
+    fn service() -> ServiceModel {
+        ServiceModel {
+            prefill_per_token: 1.0,
+            decode_per_token: 10.0,
+            freq_ghz: 1.0,
+        }
+    }
+
+    #[test]
+    fn route_policy_parse() {
+        assert_eq!(RoutePolicy::parse("jsq"), Some(RoutePolicy::JoinShortestQueue));
+        assert_eq!(RoutePolicy::parse("affinity"), Some(RoutePolicy::PrefixAffinity));
+        assert_eq!(RoutePolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn jsq_balances_identical_requests() {
+        let w = Workload::uniform(8, 64, 16);
+        let shards = route_workload(&w, 4, RoutePolicy::JoinShortestQueue, &service());
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 2, 2]);
+        // Every request routed exactly once, ids preserved.
+        let mut ids: Vec<usize> =
+            shards.iter().flat_map(|s| s.requests.iter().map(|r| r.id)).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn affinity_keeps_template_groups_together() {
+        // 4 groups of 4 requests behind shared templates: affinity pins
+        // each group to one replica, so no group is split.
+        let w = Workload::uniform(16, 32, 8).with_shared_prefix(64, 4);
+        let shards = route_workload(&w, 4, RoutePolicy::PrefixAffinity, &service());
+        for shard in &shards {
+            let mut seeds: Vec<u64> = shard.requests.iter().map(|r| r.prefix_seed).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            assert!(seeds.len() <= 1, "one template home per replica here: {seeds:?}");
+        }
+        assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn affinity_spills_when_home_overloads() {
+        // One giant template group: the spill guard must eventually move
+        // requests off the home replica instead of queueing forever.
+        let mut w = Workload::uniform(32, 32, 8).with_shared_prefix(64, 32);
+        for r in &mut w.requests {
+            r.arrival_ns = 0; // all at once: backlog builds immediately
+        }
+        let shards = route_workload(&w, 4, RoutePolicy::PrefixAffinity, &service());
+        let home_size = shards.iter().map(|s| s.len()).max().unwrap();
+        assert!(home_size < 32, "spill guard must cap the home replica");
+    }
+
+    #[test]
+    fn unshared_requests_fall_back_to_jsq_under_affinity() {
+        let w = Workload::uniform(8, 64, 16); // prefix_len = 0 everywhere
+        let a = route_workload(&w, 4, RoutePolicy::PrefixAffinity, &service());
+        let b = route_workload(&w, 4, RoutePolicy::JoinShortestQueue, &service());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.requests, y.requests);
+        }
+    }
+
+    #[test]
+    fn later_arrivals_see_drained_backlogs() {
+        // Two requests long apart: the second must land on the same
+        // replica-0 (its backlog has drained), not ping-pong.
+        let mut w = Workload::default();
+        w.requests.push(Request::new(0, 16, 1));
+        w.requests.push(Request::new(1, 16, 1).with_arrival_ns(1 << 30));
+        let shards = route_workload(&w, 2, RoutePolicy::JoinShortestQueue, &service());
+        assert_eq!(shards[0].len(), 2);
+        assert_eq!(shards[1].len(), 0);
+    }
+}

@@ -1,0 +1,402 @@
+//! Shard plans: tensor / pipeline / data parallelism across dies, and
+//! the sharded pricing built on them.
+//!
+//! A [`ShardPlan`] maps a model onto `tp * pp * replicas` dies:
+//!
+//! * `tp` — tensor-parallel ranks per pipeline stage. Each block's
+//!   projections are column/row-split Megatron-style
+//!   ([`crate::model::block_layers_sharded`]); the row-split halves leave
+//!   partial activations that cost one all-reduce each per block. KV
+//!   heads split with the attention heads, so each rank stores `1/tp` of
+//!   every request's KV pages — the per-replica paged-KV pool grows
+//!   accordingly ([`ShardPlan::replica_kv_budget_bytes`]).
+//! * `pp` — pipeline stages. Blocks are cut into `pp` contiguous runs;
+//!   each stage boundary ships the `rows x E` activations to the next
+//!   stage's die ([`collectives::p2p_cost`]).
+//! * `replicas` — data-parallel engine replicas, each a full `tp x pp`
+//!   instance served by the replica router ([`super::router`]).
+//!
+//! The degenerate plan `tp = 1, pp = 1, replicas = 1` prices
+//! bit-identically to [`block_cost_batched`] / the single-engine serve
+//! path (asserted in `tests/parallel_plans.rs`).
+
+use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::kv_paging::KvGeometry;
+use crate::coordinator::schedule::layer_cost;
+use crate::model::{block_layers_sharded, Mode, ModelConfig};
+use crate::parallel::collectives::{self, Algorithm};
+use crate::sim::KernelCost;
+
+/// One way to spread a model over the package's dies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Tensor-parallel ranks per pipeline stage.
+    pub tp: u32,
+    /// Pipeline stages.
+    pub pp: u32,
+    /// Data-parallel engine replicas.
+    pub replicas: u32,
+}
+
+impl ShardPlan {
+    /// The degenerate single-engine plan (bit-identical to today's
+    /// pricing and scheduling).
+    pub fn single() -> ShardPlan {
+        ShardPlan { tp: 1, pp: 1, replicas: 1 }
+    }
+
+    /// Dies the plan occupies.
+    pub fn dies(&self) -> u32 {
+        self.tp * self.pp * self.replicas
+    }
+
+    /// Why this plan cannot run `cfg` on `platform`, or `None` if legal:
+    /// every factor >= 1, the dies fit the package, `tp` divides the
+    /// head and MLP dimensions (column/row splits must be exact), and
+    /// `pp` does not exceed the block count.
+    pub fn legality_error(&self, cfg: &ModelConfig, platform: &PlatformConfig) -> Option<String> {
+        if self.tp == 0 || self.pp == 0 || self.replicas == 0 {
+            return Some("tp/pp/replicas must all be >= 1".into());
+        }
+        if self.dies() > platform.die.dies {
+            return Some(format!(
+                "plan needs {} dies, package has {}",
+                self.dies(),
+                platform.die.dies
+            ));
+        }
+        if cfg.heads % self.tp as u64 != 0 {
+            return Some(format!("tp={} does not divide heads={}", self.tp, cfg.heads));
+        }
+        if cfg.ff % self.tp as u64 != 0 {
+            return Some(format!("tp={} does not divide ff={}", self.tp, cfg.ff));
+        }
+        if self.pp as u64 > cfg.blocks {
+            return Some(format!("pp={} exceeds blocks={}", self.pp, cfg.blocks));
+        }
+        None
+    }
+
+    pub fn is_legal(&self, cfg: &ModelConfig, platform: &PlatformConfig) -> bool {
+        self.legality_error(cfg, platform).is_none()
+    }
+
+    /// Blocks per pipeline stage (earlier stages take the remainder).
+    pub fn stage_blocks(&self, cfg: &ModelConfig) -> Vec<u64> {
+        let pp = self.pp.max(1) as u64;
+        let base = cfg.blocks / pp;
+        let extra = cfg.blocks % pp;
+        (0..pp).map(|i| base + u64::from(i < extra)).collect()
+    }
+
+    /// The KV budget ONE replica of this plan offers the serving
+    /// scheduler, expressed in whole-model token bytes (what the
+    /// batcher's [`KvGeometry`] accounts in).
+    ///
+    /// Each die holds its `1/(tp*pp)` weight shard, leaving
+    /// `hbm_capacity - weights/(tp*pp)` bytes for KV. A cached token
+    /// costs a die only its share — `token_bytes * stage_share / tp`
+    /// (KV heads split across TP ranks, blocks across stages) — so the
+    /// replica's capacity in tokens is bounded by its most loaded stage,
+    /// and that capacity is handed back in full-token bytes. The single
+    /// plan reproduces `platform_kv_budget_bytes` exactly.
+    pub fn replica_kv_budget_bytes(
+        &self,
+        cfg: &ModelConfig,
+        fmt: FpFormat,
+        platform: &PlatformConfig,
+    ) -> u64 {
+        if self.tp <= 1 && self.pp <= 1 {
+            // Exactly the single-engine budget formula, bit-for-bit.
+            return platform
+                .interconnect
+                .hbm_capacity_bytes
+                .saturating_sub(cfg.weight_bytes(fmt));
+        }
+        let shards = self.tp as u64 * self.pp as u64;
+        let per_die_weights = cfg.weight_bytes(fmt) / shards.max(1);
+        let per_die_free = platform
+            .interconnect
+            .hbm_capacity_bytes
+            .saturating_sub(per_die_weights);
+        let token_bytes = KvGeometry::new(cfg, fmt, 1).token_bytes.max(1);
+        let max_stage = self.stage_blocks(cfg).into_iter().max().unwrap_or(cfg.blocks);
+        // A die on the most loaded stage stores this much of each token.
+        let per_die_token = (token_bytes * max_stage)
+            .div_ceil(cfg.blocks.max(1))
+            .div_ceil((self.tp as u64).max(1))
+            .max(1);
+        (per_die_free / per_die_token) * token_bytes
+    }
+}
+
+/// Cost of one transformer block on ONE TP rank, including the induced
+/// all-reduces (cheapest of ring/tree per payload). At `tp = 1` this is
+/// bit-identical to `block_cost_batched(...).total`: same layers, same
+/// pricing order, no collective.
+#[allow(clippy::too_many_arguments)]
+pub fn sharded_block_cost(
+    cfg: &ModelConfig,
+    tp: u32,
+    mode: Mode,
+    b: u64,
+    s: u64,
+    kv_len: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    let sb = block_layers_sharded(cfg, mode, b.max(1), s, kv_len, tp.max(1) as u64);
+    let mut total = KernelCost::default();
+    for layer in &sb.layers {
+        total = total.then(layer_cost(layer, fmt, platform));
+    }
+    let ranks: Vec<u32> = (0..tp.max(1)).collect();
+    for &elems in &sb.allreduce_elems {
+        total = total.then(collectives::all_reduce_cost(
+            elems * fmt.bytes(),
+            &ranks,
+            Algorithm::Auto,
+            fmt,
+            platform,
+        ));
+    }
+    total
+}
+
+/// A plan priced on a concrete model pass.
+#[derive(Debug, Clone)]
+pub struct PlanCost {
+    pub plan: ShardPlan,
+    /// Per-stage cycles of one pass (blocks share + TP collectives).
+    pub stage_cycles: Vec<u64>,
+    /// One token (AR) / one pass (NAR) through the whole pipe: the sum of
+    /// the stages plus the inter-stage activation sends.
+    pub token_latency_cycles: u64,
+    /// Steady-state step cycles with the pipe full (the slowest stage
+    /// plus its outbound send) — the per-replica throughput bound.
+    pub steady_cycles: u64,
+    /// Aggregate resources of one pass across all of one replica's dies.
+    pub total: KernelCost,
+    /// Aggregate tokens/s across all replicas at the priced batch.
+    pub tokens_per_s: f64,
+}
+
+/// Price one model pass under `plan`: per-stage sharded block costs, the
+/// pipeline's activation sends, pipe latency and steady-state rate, and
+/// the aggregate tokens/s `replicas` such engines deliver.
+///
+/// In AR mode `s` is the KV length and each pass advances `b` tokens per
+/// replica; in NAR mode each pass produces `b * s` tokens. Pipeline
+/// stages are assumed kept full by independent requests (the serving
+/// router's job), so the steady rate is bounded by the slowest stage.
+pub fn plan_cost(
+    cfg: &ModelConfig,
+    plan: ShardPlan,
+    mode: Mode,
+    b: u64,
+    s: u64,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> PlanCost {
+    let plan = ShardPlan {
+        tp: plan.tp.max(1),
+        pp: plan.pp.max(1),
+        replicas: plan.replicas.max(1),
+    };
+    let b = b.max(1);
+    let (bs, kv) = match mode {
+        Mode::Nar => (s, 0),
+        Mode::Ar => (1, s),
+    };
+    let one = sharded_block_cost(cfg, plan.tp, mode, b, bs, kv, fmt, platform);
+    let stage_blocks = plan.stage_blocks(cfg);
+    let stage_cycles: Vec<u64> =
+        stage_blocks.iter().map(|&blocks| one.cycles * blocks).collect();
+
+    // Each boundary ships the b*rows x E activations; the tp ranks of a
+    // stage each send their row shard to the peer rank in parallel.
+    let rows = b * bs;
+    let send_bytes = (rows * cfg.e * fmt.bytes()).div_ceil(plan.tp as u64);
+    let send = if plan.pp > 1 {
+        collectives::p2p_cost(send_bytes, platform)
+    } else {
+        KernelCost::default()
+    };
+
+    let mut total = KernelCost::default();
+    for &blocks in &stage_blocks {
+        total = total.then(one.repeat(blocks));
+    }
+    for _ in 1..plan.pp {
+        total = total.then(send);
+    }
+
+    let token_latency_cycles = stage_cycles.iter().sum::<u64>()
+        + (plan.pp as u64 - 1) * send.cycles;
+    let steady_cycles = stage_cycles
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| c + if i + 1 < plan.pp as usize { send.cycles } else { 0 })
+        .max()
+        .unwrap_or(0);
+
+    let tokens_per_pass = match mode {
+        Mode::Nar => b * s,
+        Mode::Ar => b,
+    };
+    let steady_s = platform.cycles_to_seconds(steady_cycles.max(1));
+    let tokens_per_s = plan.replicas as f64 * tokens_per_pass as f64 / steady_s;
+
+    PlanCost {
+        plan,
+        stage_cycles,
+        token_latency_cycles,
+        steady_cycles,
+        total,
+        tokens_per_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::schedule::block_cost_batched;
+
+    #[test]
+    fn stage_blocks_cover_all_blocks() {
+        let cfg = ModelConfig::gpt_j(); // 28 blocks
+        for pp in [1u32, 2, 3, 4, 7] {
+            let plan = ShardPlan { tp: 1, pp, replicas: 1 };
+            let stages = plan.stage_blocks(&cfg);
+            assert_eq!(stages.len(), pp as usize);
+            assert_eq!(stages.iter().sum::<u64>(), cfg.blocks);
+            assert!(stages.iter().max().unwrap() - stages.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn legality_rules() {
+        let cfg = ModelConfig::gpt_j(); // 16 heads
+        let p = PlatformConfig::with_dies(4);
+        assert!(ShardPlan::single().is_legal(&cfg, &p));
+        assert!(ShardPlan { tp: 2, pp: 2, replicas: 1 }.is_legal(&cfg, &p));
+        // Too many dies.
+        assert!(!ShardPlan { tp: 4, pp: 2, replicas: 1 }.is_legal(&cfg, &p));
+        // tp must divide heads (ViT-B has 12).
+        let vit = ModelConfig::vit_b();
+        assert!(!ShardPlan { tp: 8, pp: 1, replicas: 1 }
+            .is_legal(&vit, &PlatformConfig::with_dies(8)));
+        assert!(ShardPlan { tp: 4, pp: 1, replicas: 1 }
+            .is_legal(&vit, &PlatformConfig::with_dies(8)));
+        // pp bounded by blocks.
+        let tiny = ModelConfig::tiny(); // 2 blocks
+        assert!(!ShardPlan { tp: 1, pp: 3, replicas: 1 }
+            .is_legal(&tiny, &PlatformConfig::with_dies(8)));
+    }
+
+    #[test]
+    fn single_plan_budget_matches_platform_budget() {
+        use crate::coordinator::kv_paging::platform_kv_budget_bytes;
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::occamy();
+        for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+            let single = ShardPlan::single().replica_kv_budget_bytes(&cfg, fmt, &p);
+            assert_eq!(single, platform_kv_budget_bytes(&cfg, fmt, &p));
+        }
+    }
+
+    #[test]
+    fn tp_sharding_grows_the_replica_kv_pool() {
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(4);
+        let fmt = FpFormat::Fp8;
+        let single = ShardPlan::single().replica_kv_budget_bytes(&cfg, fmt, &p);
+        let tp2 = ShardPlan { tp: 2, pp: 1, replicas: 1 }
+            .replica_kv_budget_bytes(&cfg, fmt, &p);
+        // Two dies hold half the weights each and split every token's KV
+        // heads: the replica fits strictly more tokens.
+        assert!(tp2 > single, "tp2 {tp2} !> single {single}");
+    }
+
+    #[test]
+    fn sharded_tp1_block_cost_bit_identical() {
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::occamy();
+        for (mode, b, s, kv) in
+            [(Mode::Nar, 1, 256, 0), (Mode::Nar, 4, 64, 512), (Mode::Ar, 8, 1, 1024)]
+        {
+            for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+                let sharded = sharded_block_cost(&cfg, 1, mode, b, s, kv, fmt, &p);
+                let batched = block_cost_batched(&cfg, mode, b, s, kv, fmt, &p).total;
+                assert_eq!(sharded, batched, "{mode:?} b={b} s={s} {fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tp_sharding_cuts_decode_step_latency() {
+        // GPT-J decode is weight-streaming-bound: halving each rank's
+        // weight stream must beat the (activation-sized) all-reduce.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(4);
+        let fmt = FpFormat::Fp8;
+        let one = plan_cost(&cfg, ShardPlan::single(), Mode::Ar, 4, 1024, fmt, &p);
+        let tp2 = plan_cost(
+            &cfg,
+            ShardPlan { tp: 2, pp: 1, replicas: 1 },
+            Mode::Ar,
+            4,
+            1024,
+            fmt,
+            &p,
+        );
+        assert!(
+            tp2.token_latency_cycles < one.token_latency_cycles,
+            "tp2 {} !< single {}",
+            tp2.token_latency_cycles,
+            one.token_latency_cycles
+        );
+        assert!(tp2.total.d2d_bytes > 0, "the all-reduce must show up as d2d traffic");
+    }
+
+    #[test]
+    fn pipeline_raises_steady_rate_but_not_latency() {
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(4);
+        let fmt = FpFormat::Fp8;
+        let one = plan_cost(&cfg, ShardPlan::single(), Mode::Ar, 4, 1024, fmt, &p);
+        let pp4 = plan_cost(
+            &cfg,
+            ShardPlan { tp: 1, pp: 4, replicas: 1 },
+            Mode::Ar,
+            4,
+            1024,
+            fmt,
+            &p,
+        );
+        // A 4-stage pipe steps ~4x faster once full...
+        assert!(pp4.steady_cycles < one.steady_cycles / 2);
+        assert!(pp4.tokens_per_s > one.tokens_per_s);
+        // ...but a single token still traverses every block plus sends.
+        assert!(pp4.token_latency_cycles >= one.token_latency_cycles);
+    }
+
+    #[test]
+    fn replicas_multiply_throughput_only() {
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(4);
+        let fmt = FpFormat::Fp8;
+        let one = plan_cost(&cfg, ShardPlan::single(), Mode::Ar, 4, 1024, fmt, &p);
+        let dp4 = plan_cost(
+            &cfg,
+            ShardPlan { tp: 1, pp: 1, replicas: 4 },
+            Mode::Ar,
+            4,
+            1024,
+            fmt,
+            &p,
+        );
+        assert_eq!(dp4.token_latency_cycles, one.token_latency_cycles);
+        assert!((dp4.tokens_per_s - 4.0 * one.tokens_per_s).abs() < 1e-6);
+    }
+}

@@ -3,6 +3,14 @@
 use std::fmt::Write as _;
 
 use crate::coordinator::{Breakdown, RunReport, ServeReport};
+use crate::parallel::{RankedPlan, RouterReport};
+
+/// Version of the serve/router JSON schema. Bumped whenever keys are
+/// added or change meaning, so trend tooling can evolve its key set
+/// without silently comparing incompatible artifacts. Version 2 = the
+/// parallelism-subsystem PR (prefix_late_hits, fused_first_tokens,
+/// decode counters, router reports).
+pub const SERVE_SCHEMA_VERSION: u32 = 2;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -138,18 +146,20 @@ pub fn serve_table(r: &ServeReport) -> String {
     );
     let _ = writeln!(
         s,
-        "  prefix cache: {}  hit {} tokens ({:.1}%)  pricing-memo hit {:.1}%",
+        "  prefix cache: {}  hit {} tokens ({:.1}%, {} mid-prefill)  pricing-memo hit {:.1}%",
         if r.prefix_cache { "on" } else { "off" },
         r.prefix_hit_tokens,
         r.prefix_hit_rate * 100.0,
+        r.prefix_late_hits,
         r.pricing_cache_hit_rate * 100.0,
     );
     if r.token_budget > 0 {
         let _ = writeln!(
             s,
-            "  token budget: {} / iteration, {:.1}% filled",
+            "  token budget: {} / iteration, {:.1}% filled, {} first tokens fused",
             r.token_budget,
             r.budget_utilization * 100.0,
+            r.fused_first_tokens,
         );
     }
     let _ = writeln!(
@@ -178,7 +188,8 @@ pub fn serve_json(r: &ServeReport) -> String {
         })
         .collect();
     format!(
-        "{{\"model\":\"{}\",\"format\":\"{}\",\"requests\":{},\"completed\":{},\
+        "{{\"schema_version\":{SERVE_SCHEMA_VERSION},\
+         \"model\":\"{}\",\"format\":\"{}\",\"requests\":{},\"completed\":{},\
          \"rejected\":{},\"max_batch\":{},\"page_tokens\":{},\"total_pages\":{},\
          \"peak_kv_bytes\":{},\"kv_budget_bytes\":{},\"total_seconds\":{},\
          \"prefill_tokens\":{},\"prefill_chunks\":{},\"gen_tokens\":{},\
@@ -187,7 +198,8 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"ttft_p99_s\":{},\"latency_p50_s\":{},\"latency_p99_s\":{},\
          \"queue_mean_s\":{},\"queue_p99_s\":{},\"fpu_utilization\":{},\
          \"power_w\":{},\"prefix_cache\":{},\"prefix_hit_tokens\":{},\
-         \"prefix_hit_rate\":{},\"token_budget\":{},\"budget_utilization\":{},\
+         \"prefix_hit_rate\":{},\"prefix_late_hits\":{},\"token_budget\":{},\
+         \"budget_utilization\":{},\"fused_first_tokens\":{},\
          \"pricing_cache_hit_rate\":{},\"per_class\":[{}]}}",
         r.model,
         r.format,
@@ -219,10 +231,106 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.prefix_cache,
         r.prefix_hit_tokens,
         r.prefix_hit_rate,
+        r.prefix_late_hits,
         r.token_budget,
         r.budget_utilization,
+        r.fused_first_tokens,
         r.pricing_cache_hit_rate,
         classes.join(",")
+    )
+}
+
+/// Render a replica-router report: the routing summary, the merged fleet
+/// view, and one line per replica.
+pub fn router_table(r: &RouterReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "replica router: {} replicas, policy {}, assignment {:?}",
+        r.replicas, r.policy, r.assigned
+    );
+    s.push_str(&serve_table(&r.merged));
+    for (i, rep) in r.per_replica.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "  replica {i}: {} done in {:.3} s  {:.1} tokens/s  hit {:.1}%  p99 TTFT {:.4}",
+            rep.completed,
+            rep.total_seconds,
+            rep.tokens_per_s,
+            rep.prefix_hit_rate * 100.0,
+            rep.ttft_p99_s,
+        );
+    }
+    s
+}
+
+/// JSON export of a replica-router report (merged fleet view plus the
+/// full per-replica reports).
+pub fn router_json(r: &RouterReport) -> String {
+    let per: Vec<String> = r.per_replica.iter().map(serve_json).collect();
+    let assigned: Vec<String> = r.assigned.iter().map(|a| a.to_string()).collect();
+    format!(
+        "{{\"schema_version\":{SERVE_SCHEMA_VERSION},\"replicas\":{},\
+         \"policy\":\"{}\",\"assigned\":[{}],\"merged\":{},\"per_replica\":[{}]}}",
+        r.replicas,
+        r.policy,
+        assigned.join(","),
+        serve_json(&r.merged),
+        per.join(",")
+    )
+}
+
+/// Render ranked shard plans (the `shard` subcommand): one row per plan,
+/// best first.
+pub fn shard_table(title: &str, rows: &[RankedPlan]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{title}");
+    let _ = writeln!(
+        s,
+        "{:>4} {:>4} {:>4} {:>5} {:>14} {:>14} {:>12} {:>10}",
+        "tp", "pp", "rep", "dies", "Mcyc/token", "tokens/s", "d2d MB/pass", "KV GB"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:>4} {:>4} {:>4} {:>5} {:>14.3} {:>14.1} {:>12.3} {:>10.2}",
+            r.plan.tp,
+            r.plan.pp,
+            r.plan.replicas,
+            r.plan.dies(),
+            r.cost.token_latency_cycles as f64 / 1e6,
+            r.cost.tokens_per_s,
+            r.cost.total.d2d_bytes as f64 / 1e6,
+            r.kv_budget_bytes as f64 / 1e9,
+        );
+    }
+    s
+}
+
+/// JSON export of ranked shard plans.
+pub fn shard_json(rows: &[RankedPlan]) -> String {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"tp\":{},\"pp\":{},\"replicas\":{},\"dies\":{},\
+                 \"token_latency_cycles\":{},\"steady_cycles\":{},\
+                 \"tokens_per_s\":{},\"d2d_bytes\":{},\"kv_budget_bytes\":{}}}",
+                r.plan.tp,
+                r.plan.pp,
+                r.plan.replicas,
+                r.plan.dies(),
+                r.cost.token_latency_cycles,
+                r.cost.steady_cycles,
+                r.cost.tokens_per_s,
+                r.cost.total.d2d_bytes,
+                r.kv_budget_bytes
+            )
+        })
+        .collect();
+    format!(
+        "{{\"schema_version\":{SERVE_SCHEMA_VERSION},\"plans\":[{}]}}",
+        items.join(",")
     )
 }
 
@@ -374,6 +482,71 @@ mod tests {
         let t = serve_table(&r);
         assert!(t.contains("prefix cache: on"));
         assert!(t.contains("token budget: 32"));
+    }
+
+    #[test]
+    fn serve_json_has_schema_version_and_new_counters() {
+        let e = InferenceEngine::new(PlatformConfig::occamy());
+        let w = crate::coordinator::Workload::uniform(4, 16, 8);
+        let r = e.serve(&ModelConfig::tiny(), &w, 2, FpFormat::Fp32);
+        let v = crate::util::json::parse(&serve_json(&r)).expect("valid JSON");
+        assert_eq!(
+            v.req("schema_version").unwrap().as_u64(),
+            Some(SERVE_SCHEMA_VERSION as u64)
+        );
+        assert_eq!(v.req("prefix_late_hits").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("fused_first_tokens").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn router_json_and_table_render() {
+        use crate::parallel::RoutePolicy;
+        let e = InferenceEngine::new(PlatformConfig::with_dies(2));
+        let w = crate::coordinator::Workload::uniform(6, 16, 8);
+        let opts = crate::coordinator::BatcherConfig::new(2, 0);
+        let r = e.serve_replicated(
+            &ModelConfig::tiny(),
+            &w,
+            opts,
+            FpFormat::Fp32,
+            2,
+            RoutePolicy::JoinShortestQueue,
+        );
+        let t = router_table(&r);
+        assert!(t.contains("replica router: 2 replicas"));
+        assert!(t.contains("replica 0:"));
+        assert!(t.contains("replica 1:"));
+        let v = crate::util::json::parse(&router_json(&r)).expect("valid JSON");
+        assert_eq!(v.req("replicas").unwrap().as_u64(), Some(2));
+        assert_eq!(v.req("policy").unwrap().as_str(), Some("jsq"));
+        assert_eq!(v.req("per_replica").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            v.req("merged").unwrap().req("completed").unwrap().as_u64(),
+            Some(6)
+        );
+    }
+
+    #[test]
+    fn shard_table_and_json_render() {
+        use crate::model::Mode;
+        use crate::parallel::{best_plans, Objective};
+        let ranked = best_plans(
+            &ModelConfig::gpt_j(),
+            FpFormat::Fp8,
+            &PlatformConfig::with_dies(2),
+            Mode::Ar,
+            4,
+            1024,
+            Objective::Latency,
+        );
+        let t = shard_table("plans", &ranked);
+        assert!(t.contains("tokens/s"));
+        assert!(t.lines().count() >= 2 + ranked.len());
+        let v = crate::util::json::parse(&shard_json(&ranked)).expect("valid JSON");
+        assert_eq!(
+            v.req("plans").unwrap().as_arr().unwrap().len(),
+            ranked.len()
+        );
     }
 
     #[test]

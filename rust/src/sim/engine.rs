@@ -46,6 +46,7 @@ impl MultiClusterSim {
             total.hbm_read_bytes += c.hbm_read_bytes;
             total.hbm_write_bytes += c.hbm_write_bytes;
             total.c2c_bytes += c.c2c_bytes;
+            total.d2d_bytes += c.d2d_bytes;
             total.dma_transfers += c.dma_transfers;
             if c.cycles > crit.cycles {
                 crit = *c;

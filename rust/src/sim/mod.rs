@@ -43,6 +43,9 @@ pub struct KernelCost {
     pub hbm_write_bytes: u64,
     /// Bytes moved cluster-to-cluster (all clusters).
     pub c2c_bytes: u64,
+    /// Bytes moved over the die-to-die links (all dies; collectives and
+    /// pipeline sends of the parallelism subsystem).
+    pub d2d_bytes: u64,
     /// Number of DMA transfers issued (for static-overhead accounting).
     pub dma_transfers: u64,
 }
@@ -58,6 +61,7 @@ impl KernelCost {
             hbm_read_bytes: self.hbm_read_bytes + other.hbm_read_bytes,
             hbm_write_bytes: self.hbm_write_bytes + other.hbm_write_bytes,
             c2c_bytes: self.c2c_bytes + other.c2c_bytes,
+            d2d_bytes: self.d2d_bytes + other.d2d_bytes,
             dma_transfers: self.dma_transfers + other.dma_transfers,
         }
     }
@@ -72,6 +76,7 @@ impl KernelCost {
             hbm_read_bytes: self.hbm_read_bytes * n,
             hbm_write_bytes: self.hbm_write_bytes * n,
             c2c_bytes: self.c2c_bytes * n,
+            d2d_bytes: self.d2d_bytes * n,
             dma_transfers: self.dma_transfers * n,
         }
     }

@@ -56,12 +56,13 @@ pub fn tree_depth(n: u32) -> u32 {
     }
 }
 
-/// All sends of the binary reduction tree over the platform's clusters,
-/// grouped by level. Clusters are numbered so that same-group pairs reduce
-/// first (level 0..log2(C)) and cross-group reductions happen last —
-/// "first among clusters in a group and then among groups" (Sec. V-B).
-pub fn reduction_schedule(p: &PlatformConfig) -> Vec<Vec<ReductionStep>> {
-    let n = p.total_clusters();
+/// The Sec. V-B binary reduction tree over `n` abstract participants,
+/// grouped by level: at level `d`, participant `i` sends its partial to
+/// `i - 2^d` when `i mod 2^(d+1) == 2^d`. Returned as `(src, dst)` pairs
+/// per level. The cluster-level [`reduction_schedule`] annotates these
+/// pairs with interconnect links; the die-level collectives
+/// (`crate::parallel::collectives`) run the same schedule over dies.
+pub fn pair_schedule(n: u32) -> Vec<Vec<(u32, u32)>> {
     let depth = tree_depth(n);
     let mut levels = Vec::with_capacity(depth as usize);
     for d in 0..depth {
@@ -69,19 +70,37 @@ pub fn reduction_schedule(p: &PlatformConfig) -> Vec<Vec<ReductionStep>> {
         let mut steps = Vec::new();
         let mut i = stride;
         while i < n {
-            let src = ClusterId::from_flat(i, p);
-            let dst = ClusterId::from_flat(i - stride, p);
-            steps.push(ReductionStep {
-                level: d,
-                src: i,
-                dst: i - stride,
-                link: path_level(src, dst),
-            });
+            steps.push((i, i - stride));
             i += stride * 2;
         }
         levels.push(steps);
     }
     levels
+}
+
+/// All sends of the binary reduction tree over the platform's clusters,
+/// grouped by level. Clusters are numbered so that same-group pairs reduce
+/// first (level 0..log2(C)) and cross-group reductions happen last —
+/// "first among clusters in a group and then among groups" (Sec. V-B).
+pub fn reduction_schedule(p: &PlatformConfig) -> Vec<Vec<ReductionStep>> {
+    pair_schedule(p.total_clusters())
+        .into_iter()
+        .enumerate()
+        .map(|(d, pairs)| {
+            pairs
+                .into_iter()
+                .map(|(src, dst)| ReductionStep {
+                    level: d as u32,
+                    src,
+                    dst,
+                    link: path_level(
+                        ClusterId::from_flat(src, p),
+                        ClusterId::from_flat(dst, p),
+                    ),
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -133,6 +152,24 @@ mod tests {
         assert_eq!(sched[1].len(), 4);
         assert_eq!(sched[2].len(), 2);
         assert_eq!(sched[3].len(), 1);
+    }
+
+    #[test]
+    fn pair_schedule_matches_cluster_schedule() {
+        let p = PlatformConfig::occamy();
+        let pairs = pair_schedule(p.total_clusters());
+        let sched = reduction_schedule(&p);
+        assert_eq!(pairs.len(), sched.len());
+        for (lvl, steps) in pairs.iter().zip(&sched) {
+            let got: Vec<(u32, u32)> = steps.iter().map(|s| (s.src, s.dst)).collect();
+            assert_eq!(lvl, &got);
+        }
+        // Non-power-of-two participant counts still deliver every partial
+        // exactly once.
+        let mut senders: Vec<u32> =
+            pair_schedule(6).into_iter().flatten().map(|(s, _)| s).collect();
+        senders.sort_unstable();
+        assert_eq!(senders, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

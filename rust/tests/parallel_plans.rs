@@ -1,0 +1,289 @@
+//! Integration and property tests for the multi-die parallelism
+//! subsystem: collective-pricing invariants (symmetry, monotonicity),
+//! shard-plan degeneracy (the single plan is bit-identical to the
+//! single-engine paths), planner selection, and the replica router.
+
+mod common;
+
+use common::Rng;
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::schedule::block_cost_batched;
+use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Workload};
+use snitch_fm::model::{Mode, ModelConfig};
+use snitch_fm::parallel::{
+    all_gather_cost, all_reduce_cost, best_plans, p2p_cost, reduce_scatter_cost,
+    serve_replicated, sharded_block_cost, Algorithm, Objective, RoutePolicy, ShardPlan,
+};
+
+const CASES: usize = 100;
+
+#[test]
+fn ring_all_reduce_symmetric_in_rank_order() {
+    // The collective's cost may depend on the rank COUNT only: any
+    // permutation (and any choice) of die ids prices identically.
+    let p = PlatformConfig::with_dies(8);
+    let mut rng = Rng(0xD1E5);
+    for _ in 0..CASES {
+        let n = rng.next(2, 8) as u32;
+        let bytes = rng.next(1, 1 << 22);
+        let fmt = rng.pick(&[FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8]);
+        let forward: Vec<u32> = (0..n).collect();
+        let mut reversed = forward.clone();
+        reversed.reverse();
+        // A rotated id window exercises non-zero-based rank sets.
+        let shifted: Vec<u32> = (0..n).map(|i| (i + 8 - n) % 8).collect();
+        for alg in [Algorithm::Ring, Algorithm::Tree, Algorithm::Auto] {
+            let a = all_reduce_cost(bytes, &forward, alg, fmt, &p);
+            assert_eq!(a, all_reduce_cost(bytes, &reversed, alg, fmt, &p));
+            assert_eq!(a, all_reduce_cost(bytes, &shifted, alg, fmt, &p));
+        }
+    }
+}
+
+#[test]
+fn collective_cost_monotone_in_payload() {
+    let p = PlatformConfig::with_dies(8);
+    let mut rng = Rng(0xB17E5);
+    for _ in 0..CASES {
+        let n = rng.next(2, 8) as u32;
+        let ranks: Vec<u32> = (0..n).collect();
+        let small = rng.next(1, 1 << 20);
+        let big = small + rng.next(1 << 12, 1 << 22);
+        let fmt = rng.pick(&[FpFormat::Fp32, FpFormat::Fp8]);
+        for alg in [Algorithm::Ring, Algorithm::Tree] {
+            let a = all_reduce_cost(small, &ranks, alg, fmt, &p);
+            let b = all_reduce_cost(big, &ranks, alg, fmt, &p);
+            assert!(a.cycles <= b.cycles, "{alg:?} n={n} {small} vs {big}");
+            assert!(a.d2d_bytes < b.d2d_bytes);
+        }
+        assert!(
+            reduce_scatter_cost(small, &ranks, fmt, &p).cycles
+                <= reduce_scatter_cost(big, &ranks, fmt, &p).cycles
+        );
+        assert!(
+            all_gather_cost(small, &ranks, &p).cycles
+                <= all_gather_cost(big, &ranks, &p).cycles
+        );
+        assert!(p2p_cost(small, &p).cycles <= p2p_cost(big, &p).cycles);
+    }
+}
+
+#[test]
+fn ring_all_reduce_monotone_in_rank_count() {
+    // More ranks move more total bytes per die (2B(n-1)/n) and pay more
+    // per-step latency, so the ring cost grows strictly with the count.
+    let p = PlatformConfig::with_dies(16);
+    let mut rng = Rng(0x4A11);
+    for _ in 0..CASES {
+        let bytes = rng.next(1, 1 << 22);
+        let fmt = rng.pick(&[FpFormat::Fp32, FpFormat::Fp8]);
+        let mut prev = 0u64;
+        for n in 2..=16u32 {
+            let ranks: Vec<u32> = (0..n).collect();
+            let c = all_reduce_cost(bytes, &ranks, Algorithm::Ring, fmt, &p);
+            assert!(
+                c.cycles > prev,
+                "ring n={n} bytes={bytes}: {} !> {prev}",
+                c.cycles
+            );
+            prev = c.cycles;
+        }
+        // The tree grows with its level count (non-strict within a level
+        // plateau: 5..=8 ranks share ceil(log2 n) = 3).
+        let mut prev = 0u64;
+        for n in 2..=16u32 {
+            let ranks: Vec<u32> = (0..n).collect();
+            let c = all_reduce_cost(bytes, &ranks, Algorithm::Tree, fmt, &p);
+            assert!(c.cycles >= prev, "tree n={n} bytes={bytes}");
+            prev = c.cycles;
+        }
+    }
+}
+
+#[test]
+fn sharded_tp1_pricing_bit_identical_to_block_cost_batched() {
+    // The acceptance property: the degenerate shard plan reproduces the
+    // existing pricing exactly, across modes, shapes, and precisions.
+    let p = PlatformConfig::occamy();
+    let mut rng = Rng(0x5EED);
+    for model in [ModelConfig::tiny(), ModelConfig::gpt_j(), ModelConfig::vit_b()] {
+        for _ in 0..20 {
+            let b = rng.next(1, 8);
+            let s = rng.next(1, 512);
+            let kv = rng.next(0, 1024);
+            let fmt = rng.pick(&[FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8]);
+            for (mode, s, kv) in [(Mode::Nar, s, kv), (Mode::Ar, 1, kv)] {
+                let sharded = sharded_block_cost(&model, 1, mode, b, s, kv, fmt, &p);
+                let batched = block_cost_batched(&model, mode, b, s, kv, fmt, &p).total;
+                assert_eq!(sharded, batched, "{} {mode:?} b={b} s={s} kv={kv}", model.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_objectives_disagree_and_both_beat_single() {
+    let cfg = ModelConfig::gpt_j();
+    let p = PlatformConfig::with_dies(4);
+    let fmt = FpFormat::Fp8;
+    let by_tp = best_plans(&cfg, fmt, &p, Mode::Ar, 8, 1024, Objective::Latency);
+    let by_thr = best_plans(&cfg, fmt, &p, Mode::Ar, 8, 1024, Objective::Throughput);
+    let single_lat = by_tp
+        .iter()
+        .find(|r| r.plan == ShardPlan::single())
+        .unwrap()
+        .cost
+        .token_latency_cycles;
+    let single_thr = by_thr
+        .iter()
+        .find(|r| r.plan == ShardPlan::single())
+        .unwrap()
+        .cost
+        .tokens_per_s;
+    assert!(by_tp[0].cost.token_latency_cycles < single_lat);
+    assert!(by_thr[0].cost.tokens_per_s > single_thr);
+    // Latency shards the weight stream; throughput replicates engines.
+    assert!(by_tp[0].plan.tp > 1);
+    assert_eq!(by_thr[0].plan.replicas, 4);
+}
+
+#[test]
+fn router_single_replica_bit_identical_to_serve_with() {
+    // Acceptance: ShardPlan { tp: 1, pp: 1, replicas: 1 } through the
+    // router reproduces today's serve metrics bit-for-bit.
+    let cfg = ModelConfig::tiny();
+    let e = InferenceEngine::new(PlatformConfig::occamy());
+    let w = Workload::synthetic(7, 16, (8, 64), (2, 12))
+        .with_shared_prefix(32, 4)
+        .with_poisson_arrivals(9, 500.0);
+    let mut opts = BatcherConfig::new(4, 0);
+    opts.prefill_chunk = 16;
+    let direct = e.serve_with(&cfg, &w, opts, FpFormat::Fp32);
+    let routed = e.serve_replicated(
+        &cfg,
+        &w,
+        opts,
+        FpFormat::Fp32,
+        1,
+        RoutePolicy::PrefixAffinity,
+    );
+    assert_eq!(routed.replicas, 1);
+    assert_eq!(routed.assigned, vec![16]);
+    let m = &routed.merged;
+    assert_eq!(m.total_cycles, direct.total_cycles);
+    assert_eq!(m.completed, direct.completed);
+    assert_eq!(m.tokens_per_s, direct.tokens_per_s);
+    assert_eq!(m.decode_tokens_per_s, direct.decode_tokens_per_s);
+    assert_eq!(m.ttft_p50_s, direct.ttft_p50_s);
+    assert_eq!(m.ttft_p99_s, direct.ttft_p99_s);
+    assert_eq!(m.latency_p99_s, direct.latency_p99_s);
+    assert_eq!(m.prefill_tokens, direct.prefill_tokens);
+    assert_eq!(m.prefix_hit_tokens, direct.prefix_hit_tokens);
+    assert_eq!(m.peak_kv_bytes, direct.peak_kv_bytes);
+    assert_eq!(m.preemptions, direct.preemptions);
+    assert_eq!(m.per_request.len(), direct.per_request.len());
+}
+
+#[test]
+fn router_replicas_serve_everything_and_cut_wall_clock() {
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::with_dies(4);
+    let e = InferenceEngine::new(p);
+    // Closed-loop heavy load: a single engine serializes, replicas split.
+    let w = Workload::synthetic(3, 32, (16, 96), (4, 16));
+    let opts = BatcherConfig::new(4, 0);
+    let single = e.serve_with(&cfg, &w, opts, FpFormat::Fp32);
+    let fleet = e.serve_replicated(
+        &cfg,
+        &w,
+        opts,
+        FpFormat::Fp32,
+        4,
+        RoutePolicy::JoinShortestQueue,
+    );
+    assert_eq!(fleet.merged.completed, 32);
+    assert_eq!(fleet.merged.gen_tokens, w.total_gen_tokens());
+    assert_eq!(fleet.assigned.iter().sum::<usize>(), 32);
+    assert!(fleet.per_replica.iter().all(|r| !r.per_request.is_empty()));
+    assert!(
+        fleet.merged.total_seconds < single.total_seconds,
+        "4 replicas must finish sooner: {} !< {}",
+        fleet.merged.total_seconds,
+        single.total_seconds
+    );
+    assert!(fleet.merged.tokens_per_s > single.tokens_per_s);
+    // Budget accounting spans the fleet.
+    assert_eq!(
+        fleet.merged.kv_budget_bytes,
+        fleet.per_replica.iter().map(|r| r.kv_budget_bytes).sum::<u64>()
+    );
+}
+
+#[test]
+fn prefix_affinity_beats_jsq_hit_rate_on_shared_prefix_trace() {
+    let cfg = ModelConfig::tiny();
+    let e = InferenceEngine::new(PlatformConfig::with_dies(4));
+    // 8 templates x 4 requests each, all offered at once (heavy load):
+    // JSQ round-robins and splits every group across the dies (zero
+    // sharing within any replica), while affinity keeps each group on
+    // its template's home replica, where the admission probe and the
+    // mid-prefill re-probe deduplicate the template.
+    let w = Workload::uniform(32, 24, 6).with_shared_prefix(64, 4);
+    let opts = BatcherConfig::new(4, 0);
+    let jsq = e.serve_replicated(
+        &cfg,
+        &w,
+        opts,
+        FpFormat::Fp32,
+        4,
+        RoutePolicy::JoinShortestQueue,
+    );
+    let aff = e.serve_replicated(
+        &cfg,
+        &w,
+        opts,
+        FpFormat::Fp32,
+        4,
+        RoutePolicy::PrefixAffinity,
+    );
+    assert_eq!(jsq.merged.completed, 32);
+    assert_eq!(aff.merged.completed, 32);
+    assert!(
+        aff.merged.prefix_hit_rate > jsq.merged.prefix_hit_rate,
+        "affinity routing must beat JSQ on hit rate: {} !> {}",
+        aff.merged.prefix_hit_rate,
+        jsq.merged.prefix_hit_rate
+    );
+    // Both serve the same tokens; conservation holds fleet-wide.
+    assert_eq!(aff.merged.gen_tokens, jsq.merged.gen_tokens);
+    assert_eq!(
+        aff.merged.prefill_tokens + aff.merged.prefix_hit_tokens,
+        w.total_prompt_tokens()
+    );
+}
+
+#[test]
+fn replica_kv_budgets_are_independent() {
+    // Each replica prices against its own die's budget: a pool sized for
+    // ~2 requests per replica still serves 4x that across the fleet
+    // without the budget ever being exceeded on any die.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::with_dies(2);
+    let w = Workload::uniform(8, 16, 8);
+    let one = w.requests[0].kv_bytes(&cfg);
+    let opts = BatcherConfig::new(4, 2 * one);
+    let fleet = serve_replicated(
+        &cfg,
+        &p,
+        FpFormat::Fp32,
+        opts,
+        &w,
+        2,
+        RoutePolicy::JoinShortestQueue,
+    );
+    assert_eq!(fleet.merged.completed, 8);
+    for r in &fleet.per_replica {
+        assert!(r.peak_kv_bytes <= 2 * one, "per-die budget respected");
+    }
+    assert!(fleet.merged.peak_kv_bytes <= 4 * one, "fleet peak sums the dies");
+}

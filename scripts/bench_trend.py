@@ -16,6 +16,13 @@ Regressions are emitted as GitHub Actions ::warning annotations
 and unchanged metrics as plain log lines. Entries are keyed by
 (file name, json path), so sweep configurations line up by label across
 runs; keys present on only one side are reported informationally.
+
+First run (no previous artifacts anywhere): the script reports that the
+current run seeds the baseline and exits 0 — no warnings, even under
+BENCH_TREND_STRICT, since there is nothing to compare against yet.
+Unreadable *previous* artifacts are downgraded to informational notes
+(stale or partial downloads should not spam warnings); unreadable
+*current* artifacts still warn.
 """
 
 import json
@@ -53,11 +60,15 @@ def extract_metrics(node, path, out):
             extract_metrics(item, sub, out)
 
 
-def load_metrics(path):
+def load_metrics(path, warn=True):
     try:
         doc = json.loads(Path(path).read_text())
     except (OSError, json.JSONDecodeError) as e:
-        print(f"::warning::bench-trend: unreadable {path}: {e}")
+        if warn:
+            print(f"::warning::bench-trend: unreadable {path}: {e}")
+        else:
+            print(f"bench-trend: previous artifact {path} unreadable ({e}); "
+                  f"treating its metrics as absent")
         return {}
     out = {}
     extract_metrics(doc, "", out)
@@ -71,7 +82,12 @@ def main():
     prev_files = find_bench_files(prev_dir) if os.path.isdir(prev_dir) else {}
     cur_files = find_bench_files(cur_dir)
     if not prev_files:
-        print("bench-trend: no previous artifacts — skipping (first run?)")
+        # First run of the trajectory: nothing to diff. The fresh
+        # BENCH_*.json files uploaded by this run become the baseline the
+        # next run compares against. Always exit 0 here — a missing
+        # history is not a regression, strict mode or not.
+        print(f"bench-trend: no previous artifacts under {prev_dir!r} — "
+              f"{len(cur_files)} current artifact(s) seed the baseline")
         return
     if not cur_files:
         print("::warning::bench-trend: no current BENCH_*.json files found")
@@ -83,7 +99,7 @@ def main():
         if prev_path is None:
             print(f"bench-trend: {name}: new benchmark, no history yet")
             continue
-        prev = load_metrics(prev_path)
+        prev = load_metrics(prev_path, warn=False)
         cur = load_metrics(cur_path)
         for key in sorted(cur):
             if key not in prev:
