@@ -16,10 +16,17 @@
 //! 4. On a shared-prefix trace, prefix-affinity routing beats
 //!    join-shortest-queue on prefix-cache hit rate (JSQ splits template
 //!    groups across dies; affinity keeps them on their home replica).
+//! 5. Shard plans now EXECUTE through the batcher: on the same two dies,
+//!    a served tp=2 engine pays a visible collective tax (nonzero
+//!    d2d/collective cycles in its report) but cuts per-token decode
+//!    latency, while two data-parallel replicas buy aggregate tokens/s —
+//!    the serving-level version of the planner's latency/throughput
+//!    split, emitted as `BENCH_shard_serving.json`.
 //!
 //! `BENCH_SMOKE=1` shrinks the traces; with `BENCH_JSON_DIR` set the
-//! results land in `BENCH_shard_scaling.json` for the CI trend
-//! comparison.
+//! results land in `BENCH_shard_scaling.json` / `BENCH_shard_serving.json`
+//! for the CI trend comparison (`scripts/bench_trend.py` seeds the
+//! baseline on the first run).
 
 mod common;
 
@@ -200,4 +207,62 @@ fn main() {
     ));
 
     common::write_bench_json("shard_scaling", &format!("[{}]", json.join(",")));
+
+    // ---- Claim 5: served TP vs replication on the same two dies.
+    let p2 = PlatformConfig::with_dies(2);
+    let e2 = InferenceEngine::new(p2);
+    let trace = Workload::synthetic(17, n, (48, 160), (8, 24))
+        .with_poisson_arrivals(19, 10.0);
+    let single = e2.serve_with(&gpt, &trace, opts, fmt);
+    let mut tp_opts = opts;
+    tp_opts.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+    let served_tp = e2.serve_with(&gpt, &trace, tp_opts, fmt);
+    let replicated =
+        e2.serve_replicated(&gpt, &trace, opts, fmt, 2, RoutePolicy::JoinShortestQueue);
+    common::header(
+        "shard-serving",
+        "GPT-J FP8, poisson 10/s trace: 1 die vs served tp=2 vs 2 replicas",
+    );
+    println!(
+        "{:<14} {:>10} {:>10} {:>12} {:>12}",
+        "config", "tokens/s", "ttftP99", "coll Mcyc", "d2d GB"
+    );
+    for (label, r) in [
+        ("single-die", &single),
+        ("served-tp2", &served_tp),
+        ("replicas-2x", &replicated.merged),
+    ] {
+        println!(
+            "{label:<14} {:>10.2} {:>10.3} {:>12.3} {:>12.3}",
+            r.tokens_per_s,
+            r.ttft_p99_s,
+            r.collective_cycles as f64 / 1e6,
+            r.d2d_bytes as f64 / 1e9,
+        );
+    }
+    assert_eq!(single.completed, n);
+    assert_eq!(served_tp.completed, n);
+    assert_eq!(replicated.merged.completed, n);
+    assert_eq!(served_tp.gen_tokens, single.gen_tokens, "same service delivered");
+    assert!(
+        served_tp.collective_cycles > 0 && served_tp.d2d_bytes > 0,
+        "executed TP must charge its all-reduces"
+    );
+    assert_eq!(single.collective_cycles, 0, "the single die pays no TP tax");
+    assert!(
+        served_tp.decode_tokens_per_s > single.decode_tokens_per_s,
+        "splitting the decode weight stream must outrun the collective tax: \
+         {} !> {}",
+        served_tp.decode_tokens_per_s,
+        single.decode_tokens_per_s
+    );
+    let serving_json = format!(
+        "[{{\"config\":\"single-die\",\"report\":{}}},\
+         {{\"config\":\"served-tp2\",\"report\":{}}},\
+         {{\"config\":\"replicas-2x\",\"report\":{}}}]",
+        report::serve_json(&single),
+        report::serve_json(&served_tp),
+        report::serve_json(&replicated.merged)
+    );
+    common::write_bench_json("shard_serving", &serving_json);
 }

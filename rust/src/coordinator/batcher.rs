@@ -22,7 +22,8 @@
 //! * **Token-budget mixed iterations** (Sarathi-style) — with
 //!   `token_budget > 0`, each iteration fills one budget with decode
 //!   tokens first and prefill-chunk tokens after, priced as a *single
-//!   fused pass* ([`model_total_mixed`]) that streams the weights once,
+//!   fused pass* ([`crate::coordinator::schedule::model_total_mixed`])
+//!   that streams the weights once,
 //!   killing the prefill/decode pass-alternation overhead. A pass that
 //!   completes a prompt's prefill also *emits the first token* (the last
 //!   prompt position's output), cutting budget-mode TTFT by one
@@ -52,11 +53,12 @@ use std::collections::VecDeque;
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::kv_paging::{KvGeometry, PagedKvAllocator, PageTable, PrefixCache};
-use crate::coordinator::schedule::{model_total_mixed, LayerCostCache};
+use crate::coordinator::schedule::LayerCostCache;
 use crate::coordinator::workload::{Request, Workload};
 use crate::energy;
 use crate::metrics::Percentiles;
 use crate::model::ModelConfig;
+use crate::parallel::shard::{plan_pass_cost, ShardPlan};
 use crate::sim::KernelCost;
 
 /// Scheduling policy knobs for the serving loop.
@@ -92,6 +94,15 @@ pub struct BatcherConfig {
     /// decode tokens, priced as one fused mixed pass (Sarathi-style);
     /// 0 = legacy prefill/decode pass alternation.
     pub token_budget: u64,
+    /// Shard plan ONE engine executes: with `tp > 1` every pass prices
+    /// through the TP-rank-local layers plus the per-block all-reduces,
+    /// with `pp > 1` each pass crosses the pipeline stages and their
+    /// activation sends, and a zero `kv_budget_bytes` resolves to
+    /// [`ShardPlan::replica_kv_budget_bytes`]. The `replicas` field is
+    /// ignored here — data parallelism is the router's job
+    /// ([`crate::parallel::router`]). The default single plan is
+    /// bit-identical to the unsharded engine.
+    pub plan: ShardPlan,
 }
 
 impl BatcherConfig {
@@ -109,6 +120,7 @@ impl BatcherConfig {
             aging_promote_s: 5.0,
             prefix_cache: true,
             token_budget: 0,
+            plan: ShardPlan::single(),
         }
     }
 }
@@ -228,6 +240,29 @@ pub struct ServeReport {
     pub fused_first_tokens: u64,
     /// Fraction of layer-pricing lookups served by the memo.
     pub pricing_cache_hit_rate: f64,
+    /// Raw memo counters behind `pricing_cache_hit_rate` (the router
+    /// recomputes the fleet rate from these, never from the rates).
+    pub pricing_cache_hits: u64,
+    pub pricing_cache_misses: u64,
+    /// Raw counters behind `budget_utilization`: tokens claimed /
+    /// budgeted iterations run in token-budget mode.
+    pub budget_tokens: u64,
+    pub budget_iterations: u64,
+    /// Shard plan this engine executed (`tp = pp = 1` is the single-die
+    /// engine, whose report is bit-identical to before shard plans
+    /// existed).
+    pub tp: u32,
+    pub pp: u32,
+    /// Cycles inside TP all-reduces and PP activation sends across the
+    /// whole trace (0 on the single-die engine) — the communication share
+    /// of `total_cycles`.
+    pub collective_cycles: u64,
+    /// Bytes the trace moved over the die-to-die links.
+    pub d2d_bytes: u64,
+    /// Aggregate kernel resources of every priced pass. Rate-like report
+    /// fields (FPU utilization, power) derive from this, and the router
+    /// merges it to recompute fleet rates from raw counters.
+    pub work: KernelCost,
     /// Per-priority-class percentiles (one entry per class present).
     pub per_class: Vec<ClassStats>,
     pub per_request: Vec<RequestStats>,
@@ -342,6 +377,8 @@ struct RunCounters {
     /// Prompt tokens attached by mid-prefill re-probes (also counted in
     /// `prefix_hit_tokens`).
     prefix_late_hits: u64,
+    /// Cycles inside TP all-reduces / PP sends (sharded plans only).
+    collective_cycles: u64,
     /// First tokens emitted from prefill-completing fused passes.
     fused_first_tokens: u64,
     /// Tokens claimed / iterations run in token-budget mode.
@@ -365,21 +402,53 @@ struct RunState {
 }
 
 impl<'a> ContinuousBatcher<'a> {
-    /// `opts.kv_budget_bytes = 0` resolves to the platform budget: HBM
-    /// capacity minus the resident weights at the serving precision
-    /// (zero when the weights alone overflow — everything then rejects
-    /// rather than pretending).
+    /// `opts.kv_budget_bytes = 0` resolves to the engine's shard-plan
+    /// budget ([`ShardPlan::replica_kv_budget_bytes`]): for the single
+    /// plan that is exactly the platform budget — HBM capacity minus the
+    /// resident weights at the serving precision (zero when the weights
+    /// alone overflow — everything then rejects rather than pretending) —
+    /// and for a sharded plan the per-die weight shards and split KV
+    /// heads grow what one replica can cache.
     pub fn new(
         cfg: &'a ModelConfig,
         platform: &'a PlatformConfig,
         fmt: FpFormat,
         mut opts: BatcherConfig,
     ) -> ContinuousBatcher<'a> {
+        assert!(
+            opts.plan.tp.max(1) * opts.plan.pp.max(1) <= platform.die.dies.max(1),
+            "shard plan tp={} x pp={} exceeds the package's {} dies",
+            opts.plan.tp.max(1),
+            opts.plan.pp.max(1),
+            platform.die.dies
+        );
         if opts.kv_budget_bytes == 0 {
-            opts.kv_budget_bytes =
-                super::kv_paging::platform_kv_budget_bytes(cfg, fmt, platform);
+            opts.kv_budget_bytes = opts.plan.replica_kv_budget_bytes(cfg, fmt, platform);
         }
         ContinuousBatcher { cfg, platform, fmt, opts }
+    }
+
+    /// Price one iteration's fused pass under the engine's shard plan
+    /// (bit-identical to [`crate::coordinator::schedule::model_total_mixed`]
+    /// on the single plan), crediting the TP/PP communication share to
+    /// the collective counter.
+    fn price_pass(
+        &self,
+        st: &mut RunState,
+        prefills: &[(u64, u64)],
+        decode_kv: &[u64],
+    ) -> KernelCost {
+        let pass = plan_pass_cost(
+            &mut st.costs,
+            self.cfg,
+            self.opts.plan,
+            prefills,
+            decode_kv,
+            self.fmt,
+            self.platform,
+        );
+        st.c.collective_cycles += pass.collective_cycles;
+        pass.total
     }
 
     /// Whether this run deduplicates shared prompt prefixes. Off under
@@ -765,14 +834,8 @@ impl<'a> ContinuousBatcher<'a> {
             if !grown {
                 continue; // wait for pages; decode/retirements will free some
             }
-            let cost = model_total_mixed(
-                &mut st.costs,
-                self.cfg,
-                &[(quantum, st.active[i].prefill_done)],
-                &[],
-                self.fmt,
-                self.platform,
-            );
+            let chunk = [(quantum, st.active[i].prefill_done)];
+            let cost = self.price_pass(st, &chunk, &[]);
             st.time += cost.cycles;
             st.c.total = st.c.total.then(cost);
             let a = &mut st.active[i];
@@ -826,14 +889,7 @@ impl<'a> ContinuousBatcher<'a> {
             .iter()
             .map(|id| st.active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len)
             .collect();
-        let cost = model_total_mixed(
-            &mut st.costs,
-            self.cfg,
-            &[],
-            &kv_lens,
-            self.fmt,
-            self.platform,
-        );
+        let cost = self.price_pass(st, &[], &kv_lens);
         st.time += cost.cycles;
         st.c.total = st.c.total.then(cost);
         st.c.decode_cycles += cost.cycles;
@@ -945,14 +1001,7 @@ impl<'a> ContinuousBatcher<'a> {
             .collect();
         let prefills: Vec<(u64, u64)> =
             prefill_claims.iter().map(|&(_, q, kv)| (q, kv)).collect();
-        let cost = model_total_mixed(
-            &mut st.costs,
-            self.cfg,
-            &prefills,
-            &kv_lens,
-            self.fmt,
-            self.platform,
-        );
+        let cost = self.price_pass(st, &prefills, &kv_lens);
         st.time += cost.cycles;
         st.c.total = st.c.total.then(cost);
         let prefill_claimed: u64 = prefills.iter().map(|&(s, _)| s).sum();
@@ -1122,6 +1171,15 @@ impl<'a> ContinuousBatcher<'a> {
             },
             fused_first_tokens: c.fused_first_tokens,
             pricing_cache_hit_rate: costs.hit_rate(),
+            pricing_cache_hits: costs.hits(),
+            pricing_cache_misses: costs.misses(),
+            budget_tokens: c.budget_tokens,
+            budget_iterations: c.budget_iterations,
+            tp: self.opts.plan.tp.max(1),
+            pp: self.opts.plan.pp.max(1),
+            collective_cycles: c.collective_cycles,
+            d2d_bytes: c.total.d2d_bytes,
+            work: c.total,
             per_class,
             per_request: done,
         }
@@ -1510,6 +1568,7 @@ mod tests {
         assert_eq!(r.fused_first_tokens, 1);
         // The first token rides the prefill-completing pass itself, so
         // TTFT equals exactly that one pass — no extra decode iteration.
+        use crate::coordinator::schedule::model_total_mixed;
         let mut costs = LayerCostCache::new(&p);
         let prefill =
             model_total_mixed(&mut costs, &cfg, &[(48, 0)], &[], FpFormat::Fp32, &p);
@@ -1548,6 +1607,56 @@ mod tests {
         assert_eq!(r_off.prefix_late_hits, 0);
         assert_eq!(r_off.prefill_tokens, 2 * 96);
         assert!(r.total_seconds <= r_off.total_seconds);
+    }
+
+    #[test]
+    fn sharded_engine_charges_collectives_and_completes() {
+        // tiny has 4 heads / ff 128, so tp=2 splits exactly. The sharded
+        // engine must serve the same trace to completion while pricing
+        // every pass's all-reduces: nonzero collective cycles and d2d
+        // traffic, both accounted inside the wall clock / work totals.
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(2);
+        let w = Workload::uniform(6, 32, 8);
+        let budget = Request::new(0, 32, 8).kv_bytes(&cfg) * 8;
+        let single = run_cfg(&cfg, &p, &w, BatcherConfig::new(4, budget));
+        let mut opts = BatcherConfig::new(4, budget);
+        opts.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+        let sharded = run_cfg(&cfg, &p, &w, opts);
+        assert_eq!(sharded.completed, 6);
+        assert_eq!(sharded.gen_tokens, single.gen_tokens);
+        assert_eq!((sharded.tp, sharded.pp), (2, 1));
+        assert!(sharded.collective_cycles > 0, "TP must charge all-reduces");
+        assert!(sharded.d2d_bytes > 0);
+        assert_eq!(sharded.d2d_bytes, sharded.work.d2d_bytes);
+        assert!(sharded.collective_cycles < sharded.total_cycles);
+        // The single-die run stays collective-free.
+        assert_eq!((single.tp, single.pp), (1, 1));
+        assert_eq!(single.collective_cycles, 0);
+        assert_eq!(single.d2d_bytes, 0);
+    }
+
+    #[test]
+    fn sharded_plan_resolves_its_own_kv_budget() {
+        // A zero budget resolves to the plan's per-replica budget — the
+        // platform budget on the single plan (bit-identical), the larger
+        // sharded pool under TP.
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(2);
+        let fmt = FpFormat::Fp32;
+        let single = ContinuousBatcher::new(&cfg, &p, fmt, BatcherConfig::new(4, 0));
+        assert_eq!(
+            single.opts.kv_budget_bytes,
+            crate::coordinator::kv_paging::platform_kv_budget_bytes(&cfg, fmt, &p)
+        );
+        let mut opts = BatcherConfig::new(4, 0);
+        opts.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+        let sharded = ContinuousBatcher::new(&cfg, &p, fmt, opts);
+        assert_eq!(
+            sharded.opts.kv_budget_bytes,
+            opts.plan.replica_kv_budget_bytes(&cfg, fmt, &p)
+        );
+        assert!(sharded.opts.kv_budget_bytes > single.opts.kv_budget_bytes);
     }
 
     #[test]

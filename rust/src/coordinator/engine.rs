@@ -228,10 +228,14 @@ impl InferenceEngine {
     }
 
     /// Serve with explicit scheduler policy (page size, prefill chunking,
-    /// full-reservation baseline, aging). A zero `kv_budget_bytes` in
-    /// `opts` resolves to the platform's budget (HBM capacity minus
-    /// resident weights at the serving precision; see
-    /// [`ContinuousBatcher::new`]).
+    /// full-reservation baseline, aging) and shard plan: with
+    /// `opts.plan.tp > 1` / `pp > 1` the engine executes the plan
+    /// end-to-end — every pass prices through the TP-rank-local layers
+    /// plus the per-iteration all-reduces and pipeline sends, and the
+    /// report carries the collective-cycles / d2d-bytes breakdown. A zero
+    /// `kv_budget_bytes` in `opts` resolves to the plan's per-replica
+    /// budget (for the single plan: HBM capacity minus resident weights
+    /// at the serving precision; see [`ContinuousBatcher::new`]).
     pub fn serve_with(
         &self,
         cfg: &ModelConfig,
@@ -242,9 +246,10 @@ impl InferenceEngine {
         ContinuousBatcher::new(cfg, &self.platform, fmt, opts).run(workload)
     }
 
-    /// Serve across `replicas` data-parallel engine replicas, each
-    /// running the continuous batcher against its own KV budget, with
-    /// the given routing policy ([`crate::parallel::router`]).
+    /// Serve across `replicas` data-parallel replica groups — single-die
+    /// engines, or `tp x pp` sharded groups when `opts.plan` says so —
+    /// each running the continuous batcher against its own KV budget,
+    /// with the given routing policy ([`crate::parallel::router`]).
     /// `replicas = 1` is bit-identical to [`Self::serve_with`].
     pub fn serve_replicated(
         &self,

@@ -169,6 +169,7 @@ pub struct LayerCostCache {
     map: HashMap<LayerSig, KernelCost>,
     hits: u64,
     misses: u64,
+    generation_flushes: u64,
 }
 
 impl LayerCostCache {
@@ -179,18 +180,25 @@ impl LayerCostCache {
             map: HashMap::new(),
             hits: 0,
             misses: 0,
+            generation_flushes: 0,
         }
     }
 
-    /// Debug-build check that the cache is not reused across platform
-    /// generations (which would silently serve stale prices). Called once
-    /// per model-level pricing, not per layer, to keep the hot path flat.
-    fn check_platform(&self, platform: &PlatformConfig) {
-        debug_assert_eq!(
-            self.platform_tag,
-            platform_fingerprint(platform),
-            "LayerCostCache used across platform generations"
-        );
+    /// Re-key the memo to `platform`'s generation: when the cache was
+    /// priced against a different platform, every memoized price is stale,
+    /// so the map is flushed and re-tagged (counted in
+    /// [`Self::generation_flushes`]). Unconditional in every build — a
+    /// release-build cache reused across platform generations used to
+    /// silently serve the old generation's prices (the check was a
+    /// `debug_assert`). Called once per model-level pricing, not per
+    /// layer, to keep the per-layer hot path a plain hash lookup.
+    pub fn ensure_platform(&mut self, platform: &PlatformConfig) {
+        let tag = platform_fingerprint(platform);
+        if tag != self.platform_tag {
+            self.map.clear();
+            self.platform_tag = tag;
+            self.generation_flushes += 1;
+        }
     }
 
     /// Memoized [`layer_cost`].
@@ -226,6 +234,12 @@ impl LayerCostCache {
 
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Times the memo was flushed because it was presented a different
+    /// platform generation (see [`Self::ensure_platform`]).
+    pub fn generation_flushes(&self) -> u64 {
+        self.generation_flushes
     }
 
     /// Fraction of lookups served from the memo.
@@ -422,7 +436,7 @@ pub fn model_total_mixed(
     if prefills.iter().all(|&(s, _)| s == 0) && decode_kv.is_empty() {
         return KernelCost::default();
     }
-    costs.check_platform(platform);
+    costs.ensure_platform(platform);
     let mut one = KernelCost::default();
     for layer in &block_layers_mixed(cfg, prefills, decode_kv) {
         one = one.then(costs.layer_cost(layer, fmt, platform));
@@ -697,6 +711,83 @@ mod tests {
         let lens = [64u64, 64, 512];
         let total = model_total_mixed(&mut cache, &cfg, &[(32, 96)], &lens, fmt, &p);
         assert_eq!(total, model_cost_mixed(&cfg, &[(32, 96)], &lens, fmt, &p).total);
+    }
+
+    #[test]
+    fn memo_rekeys_across_platform_generations() {
+        // Regression: the generation check was a `debug_assert`, so a
+        // release-build cache reused across platforms silently served the
+        // old generation's prices (and a debug build panicked instead of
+        // recovering). The check is now unconditional and re-keys: the
+        // same cache priced against a second platform must flush and
+        // return the second platform's exact prices.
+        let cfg = ModelConfig::gpt_j();
+        let fmt = FpFormat::Fp32;
+        let a = occ();
+        let mut b = occ();
+        b.cluster.compute_efficiency = 0.5;
+        let mut cache = LayerCostCache::new(&a);
+        let prefills = [(64u64, 0u64)];
+        let lens = [128u64, 256];
+        let on_a = model_total_mixed(&mut cache, &cfg, &prefills, &lens, fmt, &a);
+        assert_eq!(on_a, model_cost_mixed(&cfg, &prefills, &lens, fmt, &a).total);
+        assert_eq!(cache.generation_flushes(), 0);
+        let on_b = model_total_mixed(&mut cache, &cfg, &prefills, &lens, fmt, &b);
+        assert_eq!(
+            on_b,
+            model_cost_mixed(&cfg, &prefills, &lens, fmt, &b).total,
+            "stale generation-A prices must not survive the platform swap"
+        );
+        assert_ne!(on_a, on_b, "the two generations genuinely price apart");
+        assert_eq!(cache.generation_flushes(), 1);
+        // Swapping back re-keys again (no resurrection of the old map).
+        let back = model_total_mixed(&mut cache, &cfg, &prefills, &lens, fmt, &a);
+        assert_eq!(back, on_a);
+        assert_eq!(cache.generation_flushes(), 2);
+    }
+
+    #[test]
+    fn sharded_rank_local_layers_never_collide_with_unsharded_twins() {
+        // With sharded pricing sharing the memo, a TP rank's column/row-
+        // split layers must never alias their unsharded twins' signatures:
+        // prime the cache with the unsharded block, then price the
+        // rank-local block through the SAME cache and demand the uncached
+        // prices bit-for-bit (an aliased signature would hand back the
+        // full-width price).
+        use crate::model::block_layers_sharded;
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let fmt = FpFormat::Fp8;
+        for (mode, b, s, kv) in [(Mode::Nar, 2, 128, 0), (Mode::Ar, 4, 1, 512)] {
+            let mut cache = LayerCostCache::new(&p);
+            for layer in &block_layers_batched(&cfg, mode, b, s, kv) {
+                cache.layer_cost(layer, fmt, &p);
+            }
+            for tp in [2u64, 4] {
+                let sb = block_layers_sharded(&cfg, mode, b, s, kv, tp);
+                for layer in &sb.layers {
+                    let cached = cache.layer_cost(layer, fmt, &p);
+                    assert_eq!(
+                        cached,
+                        layer_cost(layer, fmt, &p),
+                        "tp={tp} {} {mode:?}",
+                        layer.label
+                    );
+                }
+            }
+            // And the split layers genuinely price below full width, so a
+            // collision would have been observable above.
+            let sb = block_layers_sharded(&cfg, mode, b, s, kv, 4);
+            let whole = block_layers_batched(&cfg, mode, b, s, kv);
+            for label in ["q-proj", "mlp-up", "mlp-down"] {
+                let sharded = sb.layers.iter().find(|l| l.label == label).unwrap();
+                let full = whole.iter().find(|l| l.label == label).unwrap();
+                assert!(
+                    layer_cost(sharded, fmt, &p).cycles < layer_cost(full, fmt, &p).cycles,
+                    "{label}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@ use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
 use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, SharedPrefix, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
-use snitch_fm::parallel::{best_plans, Objective, RoutePolicy};
+use snitch_fm::parallel::{best_plans, Objective, RoutePolicy, ShardPlan};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
 use snitch_fm::soa;
@@ -47,7 +47,16 @@ COMMANDS:
              --priorities N (round-robin classes, aged FCFS)
              --aging S (seconds of wait per class promotion; 0 = off)
              --reserve-full (legacy full-length KV reservation)
-             --replicas N (data-parallel engine replicas, one die each)
+             --tp N --pp N (execute every replica as a tensor-parallel x
+               pipeline-parallel shard group: passes price through the
+               rank-local layers plus the per-iteration all-reduces and
+               activation sends; default 1 1 = single-die engine)
+             --plan auto (take the planner's best {tp, pp, replicas} for
+               --dies N dies and --objective latency|throughput instead
+               of explicit --tp/--pp/--replicas)
+             --dies N (dies in the package; default: just enough for
+               tp * pp * replicas)
+             --replicas N (data-parallel replica groups)
              --route jsq|affinity (replica routing policy; affinity keeps
                shared-prefix groups on their template's home replica)
              --json (machine-readable report)
@@ -82,7 +91,7 @@ const FLAGS: &[&str] = &[
     "exp", "artifacts", "requests", "batch", "prompt", "gen", "seed",
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
-    "replicas", "route", "dies", "objective",
+    "replicas", "route", "dies", "objective", "tp", "pp", "plan",
 ];
 
 fn main() -> Result<()> {
@@ -296,23 +305,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompt = default_seq(&cfg, args.get_u64("prompt", 0)?);
     let gen = args.get_u64("gen", 64)?;
     let seed = args.get_u64("seed", 0)?;
-    let replicas = args.get_usize("replicas", 1)?;
-    anyhow::ensure!(replicas > 0, "--replicas must be > 0");
+    anyhow::ensure!(requests > 0, "--requests must be > 0");
+    anyhow::ensure!(batch > 0, "--batch must be > 0");
     let route = match args.get("route") {
         None => RoutePolicy::JoinShortestQueue,
         Some(s) => RoutePolicy::parse(s)
             .ok_or_else(|| anyhow::anyhow!("--route {s:?}: expected jsq or affinity"))?,
     };
-    let mut platform = PlatformConfig::with_clusters(args.get_u32("clusters", 16)?);
-    // Each data-parallel replica occupies one die of the package.
-    platform.die.dies = platform.die.dies.max(replicas as u32);
+    let clusters = args.get_u32("clusters", 16)?;
+    // The shard configuration every replica group executes: explicit
+    // --tp/--pp/--replicas, or the planner's pick under --plan auto.
+    let (tp, pp, replicas) = match args.get("plan") {
+        None => {
+            let replicas = args.get_usize("replicas", 1)?;
+            anyhow::ensure!(replicas > 0, "--replicas must be > 0");
+            (args.get_u32("tp", 1)?, args.get_u32("pp", 1)?, replicas)
+        }
+        Some("auto") => {
+            let dies = args.get_u32("dies", 2)?;
+            anyhow::ensure!(dies > 0, "--dies must be > 0");
+            let objective = match args.get("objective") {
+                None => Objective::Throughput,
+                Some(s) => Objective::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("--objective {s:?}: expected latency or throughput")
+                })?,
+            };
+            // Rank on the same per-die platform the engine will serve on
+            // (a non-default --clusters shifts the compute/communication
+            // balance the objectives trade off).
+            let mut planner_platform = PlatformConfig::with_clusters(clusters);
+            planner_platform.die.dies = dies;
+            let ranked = best_plans(
+                &cfg,
+                format,
+                &planner_platform,
+                Mode::Ar,
+                batch as u64,
+                prompt,
+                objective,
+            );
+            let best = ranked
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("no legal shard plan for {dies} dies"))?
+                .plan;
+            // stderr: `--json` consumers must see nothing but the report.
+            eprintln!(
+                "plan auto ({}, {dies} dies): tp={} pp={} replicas={}",
+                objective.name(),
+                best.tp,
+                best.pp,
+                best.replicas
+            );
+            (best.tp, best.pp, best.replicas as usize)
+        }
+        Some(other) => anyhow::bail!("--plan {other:?}: expected auto"),
+    };
+    anyhow::ensure!(tp > 0 && pp > 0, "--tp/--pp must be > 0");
+    let mut platform = PlatformConfig::with_clusters(clusters);
+    // The package needs a die per rank of every replica group.
+    platform.die.dies = platform
+        .die
+        .dies
+        .max(args.get_u32("dies", 0)?)
+        .max(tp * pp * replicas as u32);
+    let engine_plan = ShardPlan { tp, pp, replicas: 1 };
+    if let Some(err) = (ShardPlan { tp, pp, replicas: replicas as u32 })
+        .legality_error(&cfg, &platform)
+    {
+        anyhow::bail!("illegal shard configuration: {err}");
+    }
     let engine = InferenceEngine::new(platform);
-    anyhow::ensure!(requests > 0, "--requests must be > 0");
-    anyhow::ensure!(batch > 0, "--batch must be > 0");
-    if engine.kv_budget_bytes(&cfg, format) == 0 {
+    if engine_plan.replica_kv_budget_bytes(&cfg, format, &engine.platform) == 0 {
         anyhow::bail!(
-            "{} weights at {} ({:.1} GB) exceed the {:.1} GB HBM capacity; \
-             try a lower precision (--format fp8)",
+            "{} weights at {} ({:.1} GB) exceed the {:.1} GB per-die HBM capacity \
+             under tp={tp} pp={pp}; try a lower precision (--format fp8) or more dies",
             cfg.name,
             format.name(),
             cfg.weight_bytes(format) as f64 / 1e9,
@@ -357,6 +423,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.prefix_cache = !args.get_bool("no-prefix-cache");
     opts.aging_promote_s = args.get_f64("aging", opts.aging_promote_s)?;
     anyhow::ensure!(opts.aging_promote_s >= 0.0, "--aging must be >= 0");
+    opts.plan = engine_plan;
     if replicas > 1 {
         let r = engine.serve_replicated(&cfg, &workload, opts, format, replicas, route);
         if args.get_bool("json") {

@@ -288,6 +288,16 @@ pub fn block_layers_mixed(
         prefills.iter().map(|&(s, _)| s).sum::<u64>() + decode_kv.len() as u64;
     assert!(q_total > 0, "mixed pass needs at least one query token");
     let mut layers = block_layers_batched(cfg, Mode::Nar, 1, q_total, 0);
+    splice_mixed_attention(&mut layers, prefills, decode_kv);
+    layers
+}
+
+/// Replace the single NAR attention layer of a mixed-pass expansion with
+/// one causal FA instance per prefill chunk plus one single-query FA
+/// group per distinct decode KV length (the [`block_layers_decode`]
+/// grouping). The template layer's head geometry is preserved, so the
+/// same splice serves the unsharded and TP-rank-local expansions.
+fn splice_mixed_attention(layers: &mut Vec<Layer>, prefills: &[(u64, u64)], decode_kv: &[u64]) {
     let at = layers
         .iter()
         .position(|l| l.kind == LayerKind::FlashAttention)
@@ -313,7 +323,39 @@ pub fn block_layers_mixed(
         fa.push(Layer { b: count, n: 1, skv: kv + 1, ..template.clone() });
     }
     layers.splice(at..=at, fa);
-    layers
+}
+
+/// Expand one *mixed* scheduler iteration as seen by ONE of `tp`
+/// tensor-parallel ranks: the rank-local column/row-split layer list of
+/// [`block_layers_sharded`] with the mixed-pass attention splice of
+/// [`block_layers_mixed`] applied on top (per-chunk causal FA instances
+/// and per-distinct-KV-length decode groups, each over `heads/tp` local
+/// heads). `allreduce_elems` carries the two per-block partial-activation
+/// payloads (`q_total x E` each, where `q_total` stacks every query token
+/// of the iteration).
+///
+/// `tp = 1` returns exactly [`block_layers_mixed`]'s list with no
+/// collectives, so the serving scheduler's degenerate path is
+/// bit-identical to the single-die expansion.
+pub fn block_layers_mixed_sharded(
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    tp: u64,
+) -> ShardedBlock {
+    let tp = tp.max(1);
+    if tp == 1 {
+        return ShardedBlock {
+            layers: block_layers_mixed(cfg, prefills, decode_kv),
+            allreduce_elems: Vec::new(),
+        };
+    }
+    let q_total: u64 =
+        prefills.iter().map(|&(s, _)| s).sum::<u64>() + decode_kv.len() as u64;
+    assert!(q_total > 0, "mixed pass needs at least one query token");
+    let mut sb = block_layers_sharded(cfg, Mode::Nar, 1, q_total, 0, tp);
+    splice_mixed_attention(&mut sb.layers, prefills, decode_kv);
+    sb
 }
 
 #[cfg(test)]
@@ -480,6 +522,58 @@ mod tests {
         assert_eq!(sb.allreduce_elems, vec![2 * 128 * cfg.e, 2 * 128 * cfg.e]);
         // LayerNorms are replicated at full width.
         assert_eq!(by("ln1").k, cfg.e);
+    }
+
+    #[test]
+    fn mixed_sharded_tp1_is_bit_identical_to_mixed() {
+        let cfg = ModelConfig::gpt_j();
+        let prefills = [(64, 0), (32, 128)];
+        let decode = [512, 64, 512];
+        let sb = block_layers_mixed_sharded(&cfg, &prefills, &decode, 1);
+        assert_eq!(sb.layers, block_layers_mixed(&cfg, &prefills, &decode));
+        assert!(sb.allreduce_elems.is_empty());
+    }
+
+    #[test]
+    fn mixed_sharded_single_prefill_matches_sharded_nar_expansion() {
+        // A lone prefill chunk on a TP rank is exactly the sharded NAR
+        // chunk pass — same layers, same all-reduce payloads — so the
+        // serving scheduler's chunk passes price like `plan_cost`'s.
+        let cfg = ModelConfig::gpt_j();
+        let tp = 4;
+        let mixed = block_layers_mixed_sharded(&cfg, &[(128, 512)], &[], tp);
+        let nar = block_layers_sharded(&cfg, Mode::Nar, 1, 128, 512, tp);
+        assert_eq!(mixed, nar);
+    }
+
+    #[test]
+    fn mixed_sharded_uniform_decode_matches_sharded_ar_expansion_cost_shape() {
+        // A uniform decode-only mixed pass stacks the same rows and head
+        // instances as the sharded AR expansion: the (b, m) split differs
+        // (b=1,m=4 vs b=4,m=1) but every priced dimension — stacked rows,
+        // head instances, KV length, split widths — is identical.
+        let cfg = ModelConfig::gpt_j();
+        let tp = 2;
+        let mixed = block_layers_mixed_sharded(&cfg, &[], &[256; 4], tp);
+        let ar = block_layers_sharded(&cfg, Mode::Ar, 4, 1, 256, tp);
+        assert_eq!(mixed.allreduce_elems, vec![4 * cfg.e, 4 * cfg.e]);
+        assert_eq!(mixed.allreduce_elems, ar.allreduce_elems);
+        assert_eq!(mixed.layers.len(), ar.layers.len());
+        for (a, b) in mixed.layers.iter().zip(&ar.layers) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.batch_rows(), b.batch_rows(), "{}", a.label);
+            assert_eq!((a.k, a.n, a.skv), (b.k, b.n, b.skv), "{}", a.label);
+            if a.kind == LayerKind::FlashAttention {
+                // The decode FA group is identical in every dimension.
+                assert_eq!(a, b);
+            }
+        }
+        // TP splits the mixed pass's projections exactly as the sharded
+        // NAR/AR expansions do.
+        let q = mixed.layers.iter().find(|l| l.label == "q-proj").unwrap();
+        assert_eq!(q.n, cfg.hp() / tp);
+        let att = mixed.layers.iter().find(|l| l.kind == LayerKind::FlashAttention).unwrap();
+        assert_eq!(att.heads, cfg.heads / tp);
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod graph;
 
 pub use graph::{
     block_layers, block_layers_batched, block_layers_decode, block_layers_mixed,
-    block_layers_sharded, Layer, LayerKind, ShardedBlock,
+    block_layers_mixed_sharded, block_layers_sharded, Layer, LayerKind, ShardedBlock,
 };
 
 use crate::arch::FpFormat;

@@ -38,4 +38,4 @@ pub use collectives::{
 };
 pub use planner::{best_plans, enumerate_plans, Objective, RankedPlan};
 pub use router::{serve_replicated, RoutePolicy, RouterReport};
-pub use shard::{plan_cost, sharded_block_cost, PlanCost, ShardPlan};
+pub use shard::{plan_cost, plan_pass_cost, sharded_block_cost, PlanCost, ShardPlan, ShardedPass};

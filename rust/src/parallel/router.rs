@@ -1,5 +1,6 @@
-//! Data-parallel serving router: N engine replicas, each running the
-//! existing continuous batcher against its own KV budget.
+//! Data-parallel serving router: N engine replicas — single-die engines
+//! or `tp x pp` sharded replica groups, per the batcher options' shard
+//! plan — each running the continuous batcher against its own KV budget.
 //!
 //! The router assigns arriving requests to replicas with a deterministic
 //! backlog model (virtual finish times over modeled per-token service
@@ -25,6 +26,7 @@ use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::batcher::{BatcherConfig, ContinuousBatcher, ServeReport};
 use crate::coordinator::schedule::model_cost_batched;
 use crate::coordinator::workload::Workload;
+use crate::energy;
 use crate::model::{Mode, ModelConfig};
 
 /// How the router spreads requests over replicas.
@@ -69,7 +71,9 @@ pub struct RouterReport {
 
 /// Modeled service cost (cycles) of one request: prefill priced per
 /// prompt token, decode per generated token at the workload's mean
-/// context. Only *relative* weights matter to the routing decisions.
+/// context. Only *relative* weights matter to the routing decisions, so
+/// the unsharded pricing serves sharded replica groups too (TP scales
+/// both terms by roughly the same factor).
 struct ServiceModel {
     prefill_per_token: f64,
     decode_per_token: f64,
@@ -155,22 +159,15 @@ fn route_workload(
     shards
 }
 
-/// Mean of `f` over the replicas, weighted by each replica's wall-clock
-/// cycles (a replica that ran longer dominates the fleet-level rate).
-fn cycle_weighted(per: &[ServeReport], f: impl Fn(&ServeReport) -> f64) -> f64 {
-    let denom: f64 = per.iter().map(|r| r.total_cycles as f64).sum();
-    if denom <= 0.0 {
-        return 0.0;
-    }
-    per.iter().map(|r| f(r) * r.total_cycles as f64).sum::<f64>() / denom
-}
-
 /// Merge per-replica reports into one fleet view. Wall-clock-like fields
 /// take the slowest replica (the fleet runs in parallel), counters sum,
 /// latency/TTFT/queue percentiles are recomputed over the union of
-/// per-request stats, and rate-like fields are rebuilt from the merged
-/// counters (utilization/power/budget-fill are cycle-weighted means).
-fn merge_reports(per: &[ServeReport], platform: &PlatformConfig) -> ServeReport {
+/// per-request stats, and EVERY derived rate — aggregate and decode
+/// tokens/s, occupancy, hit rates, FPU utilization, power, budget fill —
+/// is rebuilt from the merged *raw* counters over the merged clock.
+/// (They used to be cycle-weighted means of the per-replica rates, which
+/// drifts from the counter-true value whenever replicas are uneven.)
+fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) -> ServeReport {
     assert!(!per.is_empty(), "merge needs at least one replica report");
     if per.len() == 1 {
         return per[0].clone();
@@ -204,6 +201,15 @@ fn merge_reports(per: &[ServeReport], platform: &PlatformConfig) -> ServeReport 
     merged.fused_first_tokens = per.iter().map(|r| r.fused_first_tokens).sum();
     merged.decode_tokens = per.iter().map(|r| r.decode_tokens).sum();
     merged.decode_cycles = per.iter().map(|r| r.decode_cycles).max().unwrap_or(0);
+    merged.collective_cycles = per.iter().map(|r| r.collective_cycles).sum();
+    merged.d2d_bytes = per.iter().map(|r| r.d2d_bytes).sum();
+    merged.budget_tokens = per.iter().map(|r| r.budget_tokens).sum();
+    merged.budget_iterations = per.iter().map(|r| r.budget_iterations).sum();
+    merged.pricing_cache_hits = per.iter().map(|r| r.pricing_cache_hits).sum();
+    merged.pricing_cache_misses = per.iter().map(|r| r.pricing_cache_misses).sum();
+    merged.work = per
+        .iter()
+        .fold(crate::sim::KernelCost::default(), |acc, r| acc.then(r.work));
 
     // The exact aggregation the single-engine report runs (TTFT over
     // generating requests only, per-class breakdown), over the union.
@@ -244,17 +250,35 @@ fn merge_reports(per: &[ServeReport], platform: &PlatformConfig) -> ServeReport 
     } else {
         0.0
     };
-    merged.fpu_utilization = cycle_weighted(per, |r| r.fpu_utilization);
-    merged.power_w = cycle_weighted(per, |r| r.power_w);
-    merged.budget_utilization = cycle_weighted(per, |r| r.budget_utilization);
-    merged.pricing_cache_hit_rate = cycle_weighted(per, |r| r.pricing_cache_hit_rate);
-    merged.hbm_gb = per.iter().map(|r| r.hbm_gb).sum();
+    // Rate-like fields from the merged raw counters — the exact formulas
+    // the single-engine report applies to its own counters, so a fleet of
+    // one can never drift and uneven fleets stay counter-true.
+    let power = energy::power_report(&merged.work, fmt, platform);
+    merged.fpu_utilization = power.fpu_utilization;
+    merged.power_w = power.power_w;
+    merged.budget_utilization = if merged.budget_iterations > 0 {
+        merged.budget_tokens as f64
+            / (merged.budget_iterations * merged.token_budget.max(1)) as f64
+    } else {
+        0.0
+    };
+    let lookups = merged.pricing_cache_hits + merged.pricing_cache_misses;
+    merged.pricing_cache_hit_rate = if lookups > 0 {
+        merged.pricing_cache_hits as f64 / lookups as f64
+    } else {
+        0.0
+    };
+    merged.hbm_gb = merged.work.hbm_bytes() as f64 / 1e9;
     merged.per_request = per_request;
     merged
 }
 
-/// Serve `workload` on `replicas` independent engine replicas (each the
-/// existing continuous batcher with its own KV budget from `opts`),
+/// Serve `workload` on `replicas` independent engine replicas, each the
+/// continuous batcher configured by `opts` — including its shard plan, so
+/// with `opts.plan.tp > 1` (or `pp > 1`) the fleet is N *sharded* replica
+/// groups of `tp * pp` dies each, every group pricing its passes through
+/// the rank-local layers and per-iteration collectives against its own
+/// [`crate::parallel::ShardPlan::replica_kv_budget_bytes`] KV budget —
 /// routing requests by `policy`. `replicas = 1` is bit-identical to
 /// running the single batcher.
 pub fn serve_replicated(
@@ -267,6 +291,18 @@ pub fn serve_replicated(
     policy: RoutePolicy,
 ) -> RouterReport {
     let replicas = replicas.max(1);
+    // Unconditional: a release build silently modeling more dies than the
+    // package has would report optimistic fleet numbers (the CLI path
+    // additionally runs the full `ShardPlan::legality_error` check).
+    assert!(
+        opts.plan.tp.max(1) * opts.plan.pp.max(1) * replicas as u32
+            <= platform.die.dies.max(1),
+        "{} replica groups of tp={} x pp={} exceed the package's {} dies",
+        replicas,
+        opts.plan.tp.max(1),
+        opts.plan.pp.max(1),
+        platform.die.dies
+    );
     if replicas == 1 {
         let r = ContinuousBatcher::new(cfg, platform, fmt, opts).run(workload);
         return RouterReport {
@@ -284,7 +320,7 @@ pub fn serve_replicated(
         .iter()
         .map(|w| ContinuousBatcher::new(cfg, platform, fmt, opts).run(w))
         .collect();
-    let merged = merge_reports(&per, platform);
+    let merged = merge_reports(&per, fmt, platform);
     RouterReport {
         replicas,
         policy: policy.name(),

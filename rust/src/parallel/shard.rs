@@ -22,8 +22,8 @@
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::kv_paging::KvGeometry;
-use crate::coordinator::schedule::layer_cost;
-use crate::model::{block_layers_sharded, Mode, ModelConfig};
+use crate::coordinator::schedule::{layer_cost, model_total_mixed, LayerCostCache};
+use crate::model::{block_layers_mixed_sharded, block_layers_sharded, Mode, ModelConfig};
 use crate::parallel::collectives::{self, Algorithm};
 use crate::sim::KernelCost;
 
@@ -89,17 +89,60 @@ impl ShardPlan {
         (0..pp).map(|i| base + u64::from(i < extra)).collect()
     }
 
+    /// Split `total` bytes over the plan's `tp * pp` dies proportionally
+    /// to each stage's block count, stage-major (stage 0's ranks first).
+    /// The shares telescope — stage boundaries are cumulative-exact, and
+    /// within a stage the remainder is spread one byte at a time — so
+    /// they sum EXACTLY to `total` for every (possibly uneven) `tp`/`pp`.
+    fn split_by_stage(&self, total: u64, cfg: &ModelConfig) -> Vec<u64> {
+        let tp = self.tp.max(1) as u64;
+        let blocks = cfg.blocks.max(1);
+        let mut out = Vec::with_capacity((tp * self.pp.max(1) as u64) as usize);
+        let mut cum_blocks = 0u64;
+        let mut cum_bytes = 0u64;
+        for stage in self.stage_blocks(cfg) {
+            cum_blocks += stage;
+            let next = total * cum_blocks / blocks;
+            let stage_bytes = next - cum_bytes;
+            cum_bytes = next;
+            let base = stage_bytes / tp;
+            let extra = stage_bytes % tp;
+            out.extend((0..tp).map(|r| base + u64::from(r < extra)));
+        }
+        out
+    }
+
+    /// Weight bytes resident on each of the plan's `tp * pp` dies
+    /// (stage-major): a stage holds its `stage_blocks` blocks' weights,
+    /// split across its `tp` ranks. The shares sum exactly to
+    /// `cfg.weight_bytes(fmt)` — the old uniform `weights / (tp*pp)`
+    /// split both dropped the remainder and, worse, ignored that uneven
+    /// pipeline stages hold whole extra blocks, understating the most
+    /// loaded die by up to a block's weights.
+    pub fn rank_weight_bytes(&self, cfg: &ModelConfig, fmt: FpFormat) -> Vec<u64> {
+        self.split_by_stage(cfg.weight_bytes(fmt), cfg)
+    }
+
+    /// KV bytes ONE cached token costs each of the plan's `tp * pp` dies
+    /// (stage-major): a die stores its stage's blocks' KV for its `1/tp`
+    /// share of the heads. The shares sum exactly to the whole-model
+    /// `KvGeometry::token_bytes`.
+    pub fn rank_token_bytes(&self, cfg: &ModelConfig, fmt: FpFormat) -> Vec<u64> {
+        self.split_by_stage(KvGeometry::new(cfg, fmt, 1).token_bytes, cfg)
+    }
+
     /// The KV budget ONE replica of this plan offers the serving
     /// scheduler, expressed in whole-model token bytes (what the
     /// batcher's [`KvGeometry`] accounts in).
     ///
-    /// Each die holds its `1/(tp*pp)` weight shard, leaving
-    /// `hbm_capacity - weights/(tp*pp)` bytes for KV. A cached token
-    /// costs a die only its share — `token_bytes * stage_share / tp`
-    /// (KV heads split across TP ranks, blocks across stages) — so the
-    /// replica's capacity in tokens is bounded by its most loaded stage,
-    /// and that capacity is handed back in full-token bytes. The single
-    /// plan reproduces `platform_kv_budget_bytes` exactly.
+    /// Each die holds its exact weight shard ([`Self::rank_weight_bytes`])
+    /// and pays its exact per-token KV share ([`Self::rank_token_bytes`]);
+    /// the replica's capacity in tokens is bounded by its most loaded die
+    /// (the one whose free HBM runs out of token shares first), and that
+    /// capacity is handed back in full-token bytes. Every die can hold its
+    /// share of the returned budget — the old truncating splits let the
+    /// most loaded die of an uneven-`pp` plan overcommit. The single plan
+    /// reproduces `platform_kv_budget_bytes` exactly.
     pub fn replica_kv_budget_bytes(
         &self,
         cfg: &ModelConfig,
@@ -113,20 +156,16 @@ impl ShardPlan {
                 .hbm_capacity_bytes
                 .saturating_sub(cfg.weight_bytes(fmt));
         }
-        let shards = self.tp as u64 * self.pp as u64;
-        let per_die_weights = cfg.weight_bytes(fmt) / shards.max(1);
-        let per_die_free = platform
-            .interconnect
-            .hbm_capacity_bytes
-            .saturating_sub(per_die_weights);
+        let hbm = platform.interconnect.hbm_capacity_bytes;
         let token_bytes = KvGeometry::new(cfg, fmt, 1).token_bytes.max(1);
-        let max_stage = self.stage_blocks(cfg).into_iter().max().unwrap_or(cfg.blocks);
-        // A die on the most loaded stage stores this much of each token.
-        let per_die_token = (token_bytes * max_stage)
-            .div_ceil(cfg.blocks.max(1))
-            .div_ceil((self.tp as u64).max(1))
-            .max(1);
-        (per_die_free / per_die_token) * token_bytes
+        let capacity_tokens = self
+            .rank_weight_bytes(cfg, fmt)
+            .iter()
+            .zip(&self.rank_token_bytes(cfg, fmt))
+            .map(|(&w, &t)| hbm.saturating_sub(w) / t.max(1))
+            .min()
+            .unwrap_or(0);
+        capacity_tokens * token_bytes
     }
 }
 
@@ -161,6 +200,81 @@ pub fn sharded_block_cost(
         ));
     }
     total
+}
+
+/// One serving iteration priced under a shard plan.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardedPass {
+    /// Wall-clock and resources of the pass through the whole pipe (one
+    /// rank's compute per block, like [`plan_cost`], plus the
+    /// collectives' full cross-die accounting).
+    pub total: KernelCost,
+    /// Cycles inside the TP all-reduces and PP activation sends — the
+    /// communication share of `total.cycles` (the "TP tax" the serve
+    /// report surfaces).
+    pub collective_cycles: u64,
+}
+
+/// Price ONE mixed serving iteration (`prefills` chunk continuations plus
+/// one decode token per `decode_kv` entry, the
+/// [`crate::model::block_layers_mixed`] shapes) executed under `plan`:
+/// the rank-local layers of [`block_layers_mixed_sharded`] go through the
+/// pricing memo, each block charges its two TP all-reduces (cheapest of
+/// ring/tree), and each pipeline boundary ships the stacked `rows x E`
+/// activations ([`collectives::p2p_cost`]; the pipe runs without
+/// inter-iteration overlap, so the pass crosses every stage in sequence
+/// exactly as [`plan_cost`]'s `token_latency_cycles` does).
+///
+/// The degenerate plan delegates to [`model_total_mixed`] — bit-identical
+/// to the single-die serving path, zero collective cycles.
+pub fn plan_pass_cost(
+    costs: &mut LayerCostCache,
+    cfg: &ModelConfig,
+    plan: ShardPlan,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> ShardedPass {
+    if plan.tp <= 1 && plan.pp <= 1 {
+        return ShardedPass {
+            total: model_total_mixed(costs, cfg, prefills, decode_kv, fmt, platform),
+            collective_cycles: 0,
+        };
+    }
+    let rows: u64 =
+        prefills.iter().map(|&(s, _)| s).sum::<u64>() + decode_kv.len() as u64;
+    if rows == 0 {
+        return ShardedPass::default();
+    }
+    costs.ensure_platform(platform);
+    let sb = block_layers_mixed_sharded(cfg, prefills, decode_kv, plan.tp as u64);
+    let mut one = KernelCost::default();
+    for layer in &sb.layers {
+        one = one.then(costs.layer_cost(layer, fmt, platform));
+    }
+    let ranks: Vec<u32> = (0..plan.tp.max(1)).collect();
+    let mut block_coll = KernelCost::default();
+    for &elems in &sb.allreduce_elems {
+        block_coll = block_coll.then(collectives::all_reduce_cost(
+            elems * fmt.bytes(),
+            &ranks,
+            Algorithm::Auto,
+            fmt,
+            platform,
+        ));
+    }
+    let mut total = one.then(block_coll).repeat(cfg.blocks);
+    let mut collective_cycles = block_coll.cycles * cfg.blocks;
+    if plan.pp > 1 {
+        let send_bytes = (rows * cfg.e * fmt.bytes()).div_ceil(plan.tp.max(1) as u64);
+        let send = collectives::p2p_cost(send_bytes, platform);
+        for _ in 1..plan.pp {
+            total = total.then(send);
+        }
+        collective_cycles += (plan.pp as u64 - 1) * send.cycles;
+    }
+    ShardedPass { total, collective_cycles }
 }
 
 /// A plan priced on a concrete model pass.
@@ -319,6 +433,74 @@ mod tests {
     }
 
     #[test]
+    fn rank_splits_sum_exactly_across_uneven_tp_pp() {
+        // The rounding property the budget rests on: per-die weight and
+        // per-token KV shares sum EXACTLY to the single-die values, for
+        // every legal (and deliberately uneven) tp/pp combination.
+        let p = PlatformConfig::with_dies(16);
+        for cfg in [ModelConfig::tiny(), ModelConfig::gpt_j(), ModelConfig::vit_b()] {
+            for tp in [1u32, 2, 4] {
+                for pp in [1u32, 2, 3, 5, 7] {
+                    let plan = ShardPlan { tp, pp, replicas: 1 };
+                    if !plan.is_legal(&cfg, &p) {
+                        continue;
+                    }
+                    for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+                        let w = plan.rank_weight_bytes(&cfg, fmt);
+                        let t = plan.rank_token_bytes(&cfg, fmt);
+                        assert_eq!(w.len(), (tp * pp) as usize);
+                        assert_eq!(t.len(), (tp * pp) as usize);
+                        assert_eq!(
+                            w.iter().sum::<u64>(),
+                            cfg.weight_bytes(fmt),
+                            "{} tp={tp} pp={pp} {fmt:?}: weight shares must conserve",
+                            cfg.name
+                        );
+                        assert_eq!(
+                            t.iter().sum::<u64>(),
+                            KvGeometry::new(&cfg, fmt, 1).token_bytes,
+                            "{} tp={tp} pp={pp} {fmt:?}: token shares must conserve",
+                            cfg.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_budget_never_overcommits_any_die() {
+        // Regression: the old budget split weights uniformly over tp*pp
+        // dies, so with uneven pipeline stages (28 blocks over pp=3 ->
+        // 10/9/9) the most loaded die's weights were understated by a
+        // third of a block and the returned budget did not actually fit
+        // on that die. Every die must be able to hold its weight shard
+        // plus its token share of the full budget.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(16);
+        for (tp, pp) in [(1u32, 3u32), (2, 3), (1, 5), (2, 5), (4, 3)] {
+            let plan = ShardPlan { tp, pp, replicas: 1 };
+            assert!(plan.is_legal(&cfg, &p), "tp={tp} pp={pp}");
+            for fmt in [FpFormat::Fp32, FpFormat::Fp8] {
+                let token_bytes = KvGeometry::new(&cfg, fmt, 1).token_bytes;
+                let budget = plan.replica_kv_budget_bytes(&cfg, fmt, &p);
+                assert!(budget > 0, "tp={tp} pp={pp} {fmt:?}");
+                let tokens = budget / token_bytes;
+                let weights = plan.rank_weight_bytes(&cfg, fmt);
+                let shares = plan.rank_token_bytes(&cfg, fmt);
+                for (die, (&w, &t)) in weights.iter().zip(&shares).enumerate() {
+                    assert!(
+                        w + tokens * t <= p.interconnect.hbm_capacity_bytes,
+                        "tp={tp} pp={pp} {fmt:?}: die {die} overcommitted \
+                         ({w} weights + {tokens} x {t} KV > {} HBM)",
+                        p.interconnect.hbm_capacity_bytes
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn sharded_tp1_block_cost_bit_identical() {
         let cfg = ModelConfig::gpt_j();
         let p = PlatformConfig::occamy();
@@ -329,6 +511,66 @@ mod tests {
                 let sharded = sharded_block_cost(&cfg, 1, mode, b, s, kv, fmt, &p);
                 let batched = block_cost_batched(&cfg, mode, b, s, kv, fmt, &p).total;
                 assert_eq!(sharded, batched, "{mode:?} b={b} s={s} {fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_pass_degenerate_is_bit_identical_to_mixed_total() {
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::occamy();
+        let fmt = FpFormat::Fp8;
+        let prefills = [(64, 128)];
+        let lens = [256u64, 256, 512];
+        let mut costs = LayerCostCache::new(&p);
+        let pass =
+            plan_pass_cost(&mut costs, &cfg, ShardPlan::single(), &prefills, &lens, fmt, &p);
+        let mut fresh = LayerCostCache::new(&p);
+        assert_eq!(
+            pass.total,
+            model_total_mixed(&mut fresh, &cfg, &prefills, &lens, fmt, &p)
+        );
+        assert_eq!(pass.collective_cycles, 0);
+        assert_eq!(pass.total.d2d_bytes, 0);
+        // Empty iterations are free under any plan.
+        let empty = plan_pass_cost(
+            &mut costs,
+            &cfg,
+            ShardPlan { tp: 2, pp: 2, replicas: 1 },
+            &[(0, 64)],
+            &[],
+            fmt,
+            &p,
+        );
+        assert_eq!(empty.total, KernelCost::default());
+    }
+
+    #[test]
+    fn plan_pass_uniform_pass_matches_plan_cost_analytics() {
+        // The serving iteration and the offline ranker price the same
+        // pass through different expansions; on a uniform batch they must
+        // agree bit-for-bit — decode and monolithic prefill alike —
+        // including the d2d traffic of the all-reduces and sends.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(8);
+        let fmt = FpFormat::Fp8;
+        for plan in [
+            ShardPlan { tp: 2, pp: 1, replicas: 1 },
+            ShardPlan { tp: 2, pp: 2, replicas: 1 },
+            ShardPlan { tp: 1, pp: 4, replicas: 1 },
+        ] {
+            let mut costs = LayerCostCache::new(&p);
+            let (b, kv) = (4u64, 512u64);
+            let decode: Vec<u64> = vec![kv; b as usize];
+            let pass = plan_pass_cost(&mut costs, &cfg, plan, &[], &decode, fmt, &p);
+            let analytic = plan_cost(&cfg, plan, Mode::Ar, b, kv, fmt, &p);
+            assert_eq!(pass.total, analytic.total, "{plan:?} decode");
+            let pass = plan_pass_cost(&mut costs, &cfg, plan, &[(256, 0)], &[], fmt, &p);
+            let analytic = plan_cost(&cfg, plan, Mode::Nar, 1, 256, fmt, &p);
+            assert_eq!(pass.total, analytic.total, "{plan:?} prefill");
+            if plan.tp > 1 {
+                assert!(pass.collective_cycles > 0, "{plan:?}");
+                assert!(pass.total.d2d_bytes > 0, "{plan:?}");
             }
         }
     }

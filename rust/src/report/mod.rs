@@ -9,8 +9,9 @@ use crate::parallel::{RankedPlan, RouterReport};
 /// added or change meaning, so trend tooling can evolve its key set
 /// without silently comparing incompatible artifacts. Version 2 = the
 /// parallelism-subsystem PR (prefix_late_hits, fused_first_tokens,
-/// decode counters, router reports).
-pub const SERVE_SCHEMA_VERSION: u32 = 2;
+/// decode counters, router reports). Version 3 = executed shard plans
+/// (tp/pp, collective_cycles, d2d_bytes — the serving TP tax).
+pub const SERVE_SCHEMA_VERSION: u32 = 3;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -162,6 +163,23 @@ pub fn serve_table(r: &ServeReport) -> String {
             r.fused_first_tokens,
         );
     }
+    if r.tp > 1 || r.pp > 1 {
+        let coll_pct = if r.total_cycles > 0 {
+            r.collective_cycles as f64 / r.total_cycles as f64 * 100.0
+        } else {
+            0.0
+        };
+        let _ = writeln!(
+            s,
+            "  shard: tp={} pp={}  collectives {:.3} Mcycles ({:.1}% of wall)  \
+             d2d {:.2} GB",
+            r.tp,
+            r.pp,
+            r.collective_cycles as f64 / 1e6,
+            coll_pct,
+            r.d2d_bytes as f64 / 1e9,
+        );
+    }
     let _ = writeln!(
         s,
         "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB",
@@ -200,7 +218,8 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"power_w\":{},\"prefix_cache\":{},\"prefix_hit_tokens\":{},\
          \"prefix_hit_rate\":{},\"prefix_late_hits\":{},\"token_budget\":{},\
          \"budget_utilization\":{},\"fused_first_tokens\":{},\
-         \"pricing_cache_hit_rate\":{},\"per_class\":[{}]}}",
+         \"pricing_cache_hit_rate\":{},\"tp\":{},\"pp\":{},\
+         \"collective_cycles\":{},\"d2d_bytes\":{},\"per_class\":[{}]}}",
         r.model,
         r.format,
         r.requests,
@@ -236,6 +255,10 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.budget_utilization,
         r.fused_first_tokens,
         r.pricing_cache_hit_rate,
+        r.tp,
+        r.pp,
+        r.collective_cycles,
+        r.d2d_bytes,
         classes.join(",")
     )
 }
@@ -496,6 +519,30 @@ mod tests {
         );
         assert_eq!(v.req("prefix_late_hits").unwrap().as_u64(), Some(0));
         assert_eq!(v.req("fused_first_tokens").unwrap().as_u64(), Some(0));
+        // v3: executed-shard-plan keys, zero on the single-die engine.
+        assert_eq!(v.req("tp").unwrap().as_u64(), Some(1));
+        assert_eq!(v.req("pp").unwrap().as_u64(), Some(1));
+        assert_eq!(v.req("collective_cycles").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("d2d_bytes").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn serve_table_and_json_surface_the_tp_tax() {
+        use crate::parallel::ShardPlan;
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(2);
+        let w = crate::coordinator::Workload::uniform(4, 16, 8);
+        let mut opts = crate::coordinator::BatcherConfig::new(2, 0);
+        opts.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+        let e = InferenceEngine::new(p);
+        let r = e.serve_with(&cfg, &w, opts, FpFormat::Fp32);
+        let t = serve_table(&r);
+        assert!(t.contains("shard: tp=2 pp=1"), "{t}");
+        assert!(t.contains("d2d"), "{t}");
+        let v = crate::util::json::parse(&serve_json(&r)).expect("valid JSON");
+        assert_eq!(v.req("tp").unwrap().as_u64(), Some(2));
+        assert!(v.req("collective_cycles").unwrap().as_u64().unwrap() > 0);
+        assert!(v.req("d2d_bytes").unwrap().as_u64().unwrap() > 0);
     }
 
     #[test]

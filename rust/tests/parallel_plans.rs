@@ -8,11 +8,12 @@ mod common;
 use common::Rng;
 use snitch_fm::arch::{FpFormat, PlatformConfig};
 use snitch_fm::coordinator::schedule::block_cost_batched;
-use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Workload};
+use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Request, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::parallel::{
-    all_gather_cost, all_reduce_cost, best_plans, p2p_cost, reduce_scatter_cost,
-    serve_replicated, sharded_block_cost, Algorithm, Objective, RoutePolicy, ShardPlan,
+    all_gather_cost, all_reduce_cost, best_plans, p2p_cost, plan_cost,
+    reduce_scatter_cost, serve_replicated, sharded_block_cost, Algorithm, Objective,
+    RoutePolicy, ShardPlan,
 };
 
 const CASES: usize = 100;
@@ -259,6 +260,179 @@ fn prefix_affinity_beats_jsq_hit_rate_on_shared_prefix_trace() {
     assert_eq!(
         aff.merged.prefill_tokens + aff.merged.prefix_hit_tokens,
         w.total_prompt_tokens()
+    );
+}
+
+#[test]
+fn serve_single_plan_bit_identical_across_die_counts() {
+    // The serving parity anchor: growing the package's die count and
+    // threading the (degenerate) shard plan through the batcher must not
+    // move a single bit of the single-engine serve report — `serve --tp 1
+    // --pp 1` (and omitted flags) IS today's report.
+    let cfg = ModelConfig::tiny();
+    let w = Workload::synthetic(5, 12, (8, 64), (2, 10))
+        .with_shared_prefix(32, 3)
+        .with_poisson_arrivals(7, 200.0);
+    let mut opts = BatcherConfig::new(4, 0);
+    opts.prefill_chunk = 16;
+    opts.token_budget = 24;
+    let single_die = InferenceEngine::new(PlatformConfig::occamy())
+        .serve_with(&cfg, &w, opts, FpFormat::Fp32);
+    let mut explicit = opts;
+    explicit.plan = ShardPlan { tp: 1, pp: 1, replicas: 1 };
+    let multi_die = InferenceEngine::new(PlatformConfig::with_dies(4))
+        .serve_with(&cfg, &w, explicit, FpFormat::Fp32);
+    assert_eq!(multi_die.total_cycles, single_die.total_cycles);
+    assert_eq!(multi_die.completed, single_die.completed);
+    assert_eq!(multi_die.kv_budget_bytes, single_die.kv_budget_bytes);
+    assert_eq!(multi_die.peak_kv_bytes, single_die.peak_kv_bytes);
+    assert_eq!(multi_die.prefill_tokens, single_die.prefill_tokens);
+    assert_eq!(multi_die.prefix_hit_tokens, single_die.prefix_hit_tokens);
+    assert_eq!(multi_die.gen_tokens, single_die.gen_tokens);
+    assert_eq!(multi_die.tokens_per_s, single_die.tokens_per_s);
+    assert_eq!(multi_die.decode_tokens_per_s, single_die.decode_tokens_per_s);
+    assert_eq!(multi_die.ttft_p50_s, single_die.ttft_p50_s);
+    assert_eq!(multi_die.ttft_p99_s, single_die.ttft_p99_s);
+    assert_eq!(multi_die.latency_p99_s, single_die.latency_p99_s);
+    assert_eq!(multi_die.budget_utilization, single_die.budget_utilization);
+    assert_eq!(multi_die.fused_first_tokens, single_die.fused_first_tokens);
+    assert_eq!(multi_die.work, single_die.work);
+    assert_eq!((multi_die.tp, multi_die.pp), (1, 1));
+    assert_eq!(multi_die.collective_cycles, 0);
+    assert_eq!(multi_die.d2d_bytes, 0);
+    for (a, b) in multi_die.per_request.iter().zip(&single_die.per_request) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.ttft_s, b.ttft_s);
+        assert_eq!(a.latency_s, b.latency_s);
+    }
+}
+
+#[test]
+fn sharded_serve_collectives_match_the_analytic_count() {
+    // A fully uniform closed-loop trace makes every serve pass
+    // predictable: 4 monolithic 64-token prefill passes, then 8 lockstep
+    // decode steps of 4 rows each. The serve report's collective cycles
+    // and d2d bytes must equal the analytic per-pass collective prices —
+    // the same numbers `plan_cost` charges.
+    let cfg = ModelConfig::tiny(); // 4 heads, ff=128: tp=2 splits exactly
+    let p = PlatformConfig::with_dies(2);
+    let fmt = FpFormat::Fp32;
+    let plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+    let w = Workload::uniform(4, 64, 8);
+    let budget = Request::new(0, 64, 8).kv_bytes(&cfg) * 8;
+    let mut opts = BatcherConfig::new(4, budget);
+    opts.plan = plan;
+    let r = InferenceEngine::new(p.clone()).serve_with(&cfg, &w, opts, fmt);
+    assert_eq!(r.completed, 4);
+    assert_eq!(r.prefill_chunks, 4, "monolithic prefill: one pass per prompt");
+    assert_eq!(r.decode_steps, 8, "lockstep decode: one step per generated token");
+    let ranks = [0u32, 1];
+    let ar = |rows: u64| {
+        all_reduce_cost(rows * cfg.e * fmt.bytes(), &ranks, Algorithm::Auto, fmt, &p)
+    };
+    // Two all-reduces per block, every block, every pass.
+    let expected_cycles = 4 * cfg.blocks * 2 * ar(64).cycles
+        + 8 * cfg.blocks * 2 * ar(4).cycles;
+    assert_eq!(r.collective_cycles, expected_cycles);
+    // plan_cost's analytic d2d for the same passes (its layers move no
+    // d2d traffic, so the total IS the collective count).
+    let prefill_d2d = plan_cost(&cfg, plan, Mode::Nar, 1, 64, fmt, &p).total.d2d_bytes;
+    let decode_d2d = plan_cost(&cfg, plan, Mode::Ar, 4, 64, fmt, &p).total.d2d_bytes;
+    assert_eq!(r.d2d_bytes, 4 * prefill_d2d + 8 * decode_d2d);
+    assert!(r.collective_cycles > 0 && r.collective_cycles < r.total_cycles);
+}
+
+#[test]
+fn sharded_fleet_routes_replica_groups_end_to_end() {
+    // Two tp=2 replica groups on a 4-die package: the router splits the
+    // trace, every group executes its shard plan (nonzero collectives on
+    // each), and the merged fleet view sums the raw collective counters.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::with_dies(4);
+    let e = InferenceEngine::new(p);
+    let w = Workload::synthetic(3, 24, (16, 96), (4, 16));
+    let mut opts = BatcherConfig::new(4, 0);
+    opts.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+    let fleet = e.serve_replicated(
+        &cfg,
+        &w,
+        opts,
+        FpFormat::Fp32,
+        2,
+        RoutePolicy::JoinShortestQueue,
+    );
+    assert_eq!(fleet.merged.completed, 24);
+    assert_eq!(fleet.merged.gen_tokens, w.total_gen_tokens());
+    assert_eq!((fleet.merged.tp, fleet.merged.pp), (2, 1));
+    for rep in &fleet.per_replica {
+        assert!(rep.collective_cycles > 0, "every group pays the TP tax");
+        assert!(rep.d2d_bytes > 0);
+    }
+    assert_eq!(
+        fleet.merged.collective_cycles,
+        fleet.per_replica.iter().map(|r| r.collective_cycles).sum::<u64>()
+    );
+    assert_eq!(
+        fleet.merged.d2d_bytes,
+        fleet.per_replica.iter().map(|r| r.d2d_bytes).sum::<u64>()
+    );
+}
+
+#[test]
+fn merged_rates_recomputed_from_raw_counters() {
+    // Regression for the router-merge audit: derived fleet rates used to
+    // be cycle-weighted means of per-replica *rates*, which drifts from
+    // the counter-true value whenever replicas are uneven. Every rate
+    // must now equal the exact recompute from the merged raw counters.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::with_dies(3);
+    let e = InferenceEngine::new(p.clone());
+    // Deliberately lopsided trace: wide prompt/gen spread so the three
+    // replicas end up with different budget fills and memo hit rates.
+    let w = Workload::synthetic(9, 21, (8, 160), (2, 24)).with_poisson_arrivals(4, 80.0);
+    let mut opts = BatcherConfig::new(3, 0);
+    opts.prefill_chunk = 16;
+    opts.token_budget = 24;
+    let fleet =
+        e.serve_replicated(&cfg, &w, opts, FpFormat::Fp32, 3, RoutePolicy::JoinShortestQueue);
+    let m = &fleet.merged;
+    // Conservation: splitting one trace across replicas loses nothing.
+    assert_eq!(m.requests, w.len());
+    assert_eq!(m.completed, w.len());
+    assert_eq!(m.gen_tokens, w.total_gen_tokens());
+    assert_eq!(m.prefill_tokens + m.prefix_hit_tokens, w.total_prompt_tokens());
+    for (field, total) in [
+        (m.budget_tokens, fleet.per_replica.iter().map(|r| r.budget_tokens).sum::<u64>()),
+        (m.decode_tokens, fleet.per_replica.iter().map(|r| r.decode_tokens).sum()),
+        (m.pricing_cache_hits, fleet.per_replica.iter().map(|r| r.pricing_cache_hits).sum()),
+    ] {
+        assert_eq!(field, total);
+    }
+    // Exact recomputes from merged raw counters (never averaged rates).
+    assert_eq!(
+        m.budget_utilization,
+        m.budget_tokens as f64 / (m.budget_iterations * m.token_budget) as f64
+    );
+    assert_eq!(
+        m.pricing_cache_hit_rate,
+        m.pricing_cache_hits as f64 / (m.pricing_cache_hits + m.pricing_cache_misses) as f64
+    );
+    assert_eq!(
+        m.avg_batch_occupancy,
+        m.decode_tokens as f64 / m.decode_steps as f64
+    );
+    assert_eq!(
+        m.fpu_utilization,
+        snitch_fm::metrics::fpu_utilization(&m.work, FpFormat::Fp32, &p)
+    );
+    assert_eq!(m.hbm_gb, m.work.hbm_bytes() as f64 / 1e9);
+    // The replicas genuinely disagree on at least one rate, so a weighted
+    // mean of rates could not have produced the counter-true value.
+    let utils: Vec<f64> =
+        fleet.per_replica.iter().map(|r| r.budget_utilization).collect();
+    assert!(
+        utils.iter().any(|u| (u - utils[0]).abs() > 1e-9),
+        "trace must load the replicas unevenly: {utils:?}"
     );
 }
 
