@@ -1,0 +1,173 @@
+//! Fleet-scale serving: the event-driven core at 1M requests.
+//!
+//! Two claims this bench defends:
+//!
+//! 1. **Event core speedup.** On a sparse-arrival trace (every request
+//!    served long before the next lands) the event-heap run loop with
+//!    pass-shape memoization beats the legacy per-iteration loop by
+//!    >= 10x wall-clock — while producing a bit-identical report
+//!    (asserted via `ServeReport::same_outcome`). The pair runs on a
+//!    tp=2 shard group, where every legacy pass re-prices rank-local
+//!    layers plus collectives; the memo replaces all of it with one
+//!    hash-map hit per repeated pass shape.
+//!
+//! 2. **1M-request fleet trace.** 64 replica engines on OS threads, each
+//!    consuming its own seeded lazy diurnal arrival stream
+//!    (`Workload::stream_diurnal` — requests are generated as they
+//!    arrive, never materialized), merged into one fleet view whose
+//!    percentiles come from spilled streaming sketches. Single-digit
+//!    CI minutes.
+//!
+//! Short mode (`BENCH_SMOKE=1`) runs 100k fleet requests instead of 1M;
+//! with `BENCH_JSON_DIR` set the results land in `BENCH_fleet.json`
+//! (tokens_per_s / ttft_p99_s are trend-tracked).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, ContinuousBatcher, EngineMode, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::parallel::{merge_reports, replica_seed, ShardPlan};
+
+const SEED: u64 = 0xF1EE7;
+const REPLICAS: usize = 64;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let fmt = FpFormat::Fp8;
+
+    // ---- Part 1: event vs legacy core on a sparse-arrival trace ----
+    let p2 = PlatformConfig::with_dies(2);
+    let n_sparse = if common::smoke() { 1_500 } else { 8_000 };
+    let sparse = Workload::stream_poisson(SEED, 200.0, n_sparse, 64, 32).materialize();
+    let mut ev_opts = BatcherConfig::new(8, 0);
+    ev_opts.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+    ev_opts.engine = EngineMode::Event;
+    let mut it_opts = ev_opts;
+    it_opts.engine = EngineMode::Iteration;
+
+    let (t_event, ev) = common::time_median(3, || {
+        ContinuousBatcher::new(&cfg, &p2, fmt, ev_opts).run(&sparse)
+    });
+    let (t_iter, it) = common::time_median(3, || {
+        ContinuousBatcher::new(&cfg, &p2, fmt, it_opts).run(&sparse)
+    });
+    assert!(
+        ev.same_outcome(&it),
+        "event core must reproduce the legacy loop bit-for-bit"
+    );
+    assert_eq!(ev.completed, n_sparse);
+    let memo_lookups = ev.pass_cache_hits + ev.pass_cache_misses;
+    let hit_rate = ev.pass_cache_hits as f64 / memo_lookups.max(1) as f64;
+    let speedup = t_iter / t_event;
+
+    common::header(
+        "event core",
+        "sparse poisson trace, tp=2 shard group: event heap + pass memo vs legacy loop",
+    );
+    println!(
+        "{n_sparse} requests, {} passes, pass-memo hit rate {:.1}%",
+        ev.pass_events,
+        hit_rate * 100.0
+    );
+    println!(
+        "legacy {:.1} ms, event {:.1} ms -> {speedup:.1}x",
+        t_iter * 1e3,
+        t_event * 1e3
+    );
+    common::report_timing("fleet-core-event", t_event);
+    common::report_timing("fleet-core-iter", t_iter);
+    assert!(
+        speedup >= 10.0,
+        "event core must be >= 10x the legacy loop on sparse arrivals, got {speedup:.2}x \
+         (legacy {:.3}s vs event {:.3}s)",
+        t_iter,
+        t_event
+    );
+
+    // ---- Part 2: 1M-request diurnal trace over 64 threaded replicas ----
+    let p1 = PlatformConfig::occamy();
+    let per_replica = (if common::smoke() { 100_000 } else { 1_000_000 }) / REPLICAS;
+    let total = per_replica * REPLICAS;
+    let opts = BatcherConfig::new(8, 0);
+
+    let t0 = std::time::Instant::now();
+    let per: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..REPLICAS)
+            .map(|r| {
+                let (cfg, p1) = (&cfg, &p1);
+                s.spawn(move || {
+                    let arrivals = Workload::stream_diurnal(
+                        replica_seed(SEED, r),
+                        300.0,
+                        1_200.0,
+                        30.0,
+                        per_replica,
+                        32,
+                        16,
+                    )
+                    .with_priority_classes(2);
+                    ContinuousBatcher::new(cfg, p1, fmt, opts).serve_stream(arrivals)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica engine panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let merged = merge_reports(&per, fmt, &p1);
+
+    assert_eq!(merged.requests, total);
+    assert_eq!(merged.completed, total, "every request fits and must finish");
+    assert_eq!(merged.arrival_events, total as u64);
+    assert!(
+        !merged.latency_sketch.is_exact(),
+        "a {total}-sample latency population must have spilled to histogram mode"
+    );
+    assert!(merged.tokens_per_s > 0.0);
+    assert!(merged.ttft_p99_s > 0.0);
+    assert_eq!(merged.per_class.len(), 2);
+
+    common::header(
+        "fleet trace",
+        "64 threaded replicas, seeded lazy diurnal arrival streams, sketch-merged view",
+    );
+    println!(
+        "{total} requests ({per_replica}/replica), {} gen tokens, {:.1} simulated s",
+        merged.gen_tokens, merged.total_seconds
+    );
+    let fleet_hit_rate = merged.pass_cache_hits as f64
+        / (merged.pass_cache_hits + merged.pass_cache_misses).max(1) as f64;
+    println!(
+        "fleet {:.1} tokens/s  TTFT p50 {:.4} p99 {:.4}  latency p99 {:.4}  \
+         pass-memo hit {:.1}%",
+        merged.tokens_per_s,
+        merged.ttft_p50_s,
+        merged.ttft_p99_s,
+        merged.latency_p99_s,
+        fleet_hit_rate * 100.0
+    );
+    println!("wall clock {wall_s:.1} s for {} pass events", merged.pass_events);
+    common::report_timing("fleet-1m-trace", wall_s);
+
+    common::write_bench_json(
+        "fleet",
+        &format!(
+            "{{\"fleet\":{{\"requests\":{},\"replicas\":{REPLICAS},\"completed\":{},\
+             \"tokens_per_s\":{},\"ttft_p99_s\":{},\"latency_p99_s\":{},\
+             \"pass_events\":{},\"pass_memo_hit_rate\":{},\"wall_s\":{}}},\
+             \"event_core\":{{\"requests\":{n_sparse},\"iter_s\":{t_iter},\
+             \"event_s\":{t_event},\"speedup\":{speedup}}}}}",
+            merged.requests,
+            merged.completed,
+            merged.tokens_per_s,
+            merged.ttft_p99_s,
+            merged.latency_p99_s,
+            merged.pass_events,
+            fleet_hit_rate,
+            wall_s,
+        ),
+    );
+}

@@ -49,17 +49,51 @@
 //!   pricing** — unchanged from PR 2; the per-iteration priority order is
 //!   now computed once and shared by every stage of the iteration.
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::kv_paging::{KvGeometry, PagedKvAllocator, PageTable, PrefixCache};
 use crate::coordinator::schedule::LayerCostCache;
 use crate::coordinator::workload::{Request, Workload};
 use crate::energy;
-use crate::metrics::Percentiles;
+use crate::metrics::sketch::StreamSketch;
 use crate::model::ModelConfig;
 use crate::parallel::shard::{plan_pass_cost, ShardPlan};
 use crate::sim::KernelCost;
+
+/// Which serving core prices the trace. Both produce bit-identical
+/// schedules and reports (`ServeReport::same_outcome`, asserted by the
+/// equivalence suite); they differ only in how much work the run loop
+/// performs per scheduling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Event-heap core with pass-shape memoized pricing (default): idle
+    /// wall-clock between arrivals costs zero work, and repeated pass
+    /// shapes skip layer assembly and platform fingerprinting entirely.
+    Event,
+    /// Per-iteration scanning loop (PR 2-5 behavior), kept as the oracle
+    /// the event core is asserted against and for `serve --engine iter`.
+    Iteration,
+}
+
+impl EngineMode {
+    /// Parse `event` or `iter` (the `serve --engine` flag).
+    pub fn parse(s: &str) -> Option<EngineMode> {
+        match s {
+            "event" => Some(EngineMode::Event),
+            "iter" => Some(EngineMode::Iteration),
+            _ => None,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            EngineMode::Event => "event",
+            EngineMode::Iteration => "iter",
+        }
+    }
+}
 
 /// Scheduling policy knobs for the serving loop.
 #[derive(Debug, Clone, Copy)]
@@ -103,6 +137,9 @@ pub struct BatcherConfig {
     /// ([`crate::parallel::router`]). The default single plan is
     /// bit-identical to the unsharded engine.
     pub plan: ShardPlan,
+    /// Serving core (see [`EngineMode`]); reports are bit-identical
+    /// either way, so this is purely a simulator-performance knob.
+    pub engine: EngineMode,
 }
 
 impl BatcherConfig {
@@ -121,6 +158,7 @@ impl BatcherConfig {
             prefix_cache: true,
             token_budget: 0,
             plan: ShardPlan::single(),
+            engine: EngineMode::Event,
         }
     }
 }
@@ -128,7 +166,7 @@ impl BatcherConfig {
 /// Per-request serving outcome. Latency-like fields are relative to the
 /// request's arrival (for t=0 closed-loop traces they coincide with
 /// absolute trace time, PR 1's convention).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RequestStats {
     pub id: usize,
     pub class: u8,
@@ -149,7 +187,7 @@ pub struct RequestStats {
 }
 
 /// Latency percentiles of one priority class.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClassStats {
     pub class: u8,
     pub completed: usize,
@@ -157,10 +195,15 @@ pub struct ClassStats {
     pub ttft_p99_s: f64,
     pub latency_p50_s: f64,
     pub latency_p99_s: f64,
+    /// Streaming sample sketches behind the scalar percentiles; the
+    /// replica router merges these instead of re-walking the union of
+    /// per-request stats.
+    pub ttft: StreamSketch,
+    pub latency: StreamSketch,
 }
 
 /// Everything the serving run reports.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
     pub model: String,
     pub format: &'static str,
@@ -263,9 +306,41 @@ pub struct ServeReport {
     /// fields (FPU utilization, power) derive from this, and the router
     /// merges it to recompute fleet rates from raw counters.
     pub work: KernelCost,
+    /// Serving core that produced this report (`"event"` / `"iter"`).
+    pub engine: &'static str,
+    /// Arrival events fired (admissible requests entering the ready
+    /// queue); identical across engines by construction.
+    pub arrival_events: u64,
+    /// Priced passes completed (prefill chunks, decode steps, and fused
+    /// mixed iterations all count once); identical across engines.
+    pub pass_events: u64,
+    /// Pass-shape memo hits/misses (event core only; 0/0 on the
+    /// iteration core, which prices every pass through the layer memo).
+    pub pass_cache_hits: u64,
+    pub pass_cache_misses: u64,
+    /// Streaming sketches behind the TTFT / latency / queue percentile
+    /// scalars: exact below [`crate::metrics::sketch::EXACT_LIMIT`]
+    /// samples, ~1% relative error above, mergeable across replicas.
+    pub ttft_sketch: StreamSketch,
+    pub latency_sketch: StreamSketch,
+    pub queue_sketch: StreamSketch,
     /// Per-priority-class percentiles (one entry per class present).
     pub per_class: Vec<ClassStats>,
     pub per_request: Vec<RequestStats>,
+}
+
+impl ServeReport {
+    /// Whether two reports describe the same served schedule bit-for-bit
+    /// — counters, work, per-request stats, percentiles — ignoring only
+    /// the engine-identity fields (`engine`, pass-memo counters) that
+    /// legitimately differ between the event-driven and iteration cores.
+    pub fn same_outcome(&self, other: &ServeReport) -> bool {
+        let mut a = self.clone();
+        a.engine = other.engine;
+        a.pass_cache_hits = other.pass_cache_hits;
+        a.pass_cache_misses = other.pass_cache_misses;
+        a == *other
+    }
 }
 
 /// TTFT / latency / queue-wait percentile sets plus the per-class
@@ -277,34 +352,40 @@ pub struct ServeReport {
 /// merged fleet view, so the two can never drift apart.
 pub(crate) fn latency_aggregates(
     done: &[RequestStats],
-) -> (Percentiles, Percentiles, Percentiles, Vec<ClassStats>) {
-    let ttft = Percentiles::new(
-        done.iter().filter(|r| r.gen_tokens > 0).map(|r| r.ttft_s).collect(),
-    );
-    let lat = Percentiles::new(done.iter().map(|r| r.latency_s).collect());
-    let queue = Percentiles::new(done.iter().map(|r| r.admitted_s).collect());
+) -> (StreamSketch, StreamSketch, StreamSketch, Vec<ClassStats>) {
+    let mut ttft = StreamSketch::new();
+    let mut lat = StreamSketch::new();
+    let mut queue = StreamSketch::new();
+    for r in done {
+        if r.gen_tokens > 0 {
+            ttft.push(r.ttft_s);
+        }
+        lat.push(r.latency_s);
+        queue.push(r.admitted_s);
+    }
     let mut classes: Vec<u8> = done.iter().map(|r| r.class).collect();
     classes.sort_unstable();
     classes.dedup();
     let per_class = classes
         .into_iter()
         .map(|class| {
-            let t = Percentiles::new(
-                done.iter()
-                    .filter(|r| r.class == class && r.gen_tokens > 0)
-                    .map(|r| r.ttft_s)
-                    .collect(),
-            );
-            let l = Percentiles::new(
-                done.iter().filter(|r| r.class == class).map(|r| r.latency_s).collect(),
-            );
+            let mut t = StreamSketch::new();
+            let mut l = StreamSketch::new();
+            for r in done.iter().filter(|r| r.class == class) {
+                if r.gen_tokens > 0 {
+                    t.push(r.ttft_s);
+                }
+                l.push(r.latency_s);
+            }
             ClassStats {
                 class,
-                completed: l.len(),
+                completed: l.count() as usize,
                 ttft_p50_s: t.p(50.0),
                 ttft_p99_s: t.p(99.0),
                 latency_p50_s: l.p(50.0),
                 latency_p99_s: l.p(99.0),
+                ttft: t,
+                latency: l,
             }
         })
         .collect();
@@ -363,6 +444,195 @@ pub struct ContinuousBatcher<'a> {
     pub opts: BatcherConfig,
 }
 
+/// Shape of one priced pass: prefill (tokens, kv-context) pairs plus the
+/// ragged decode kv lengths, in scheduler order. Two passes with equal
+/// keys price identically (the layer list is a pure function of the
+/// shape, and the platform never changes mid-run), which is what makes
+/// the pass memo bit-transparent.
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
+struct PassKey {
+    prefills: Vec<(u64, u64)>,
+    decode_kv: Vec<u64>,
+}
+
+/// Memoized outcome of a pass shape, plus how many layer-memo lookups
+/// pricing it performed. On a hit those lookups are replayed as credits
+/// into [`LayerCostCache::add_hits`] so `pricing_cache_hits/misses` stay
+/// identical to the uncached path (every replayed lookup would have been
+/// a guaranteed hit).
+struct PassCost {
+    total: KernelCost,
+    collective_cycles: u64,
+    lookups: u64,
+}
+
+/// Pass-shape -> priced-cost memo (event core only). Long traces repeat
+/// a small set of shapes (every decode step of a given ragged batch,
+/// every like-sized prefill chunk), so after warmup the per-pass cost
+/// drops from layer assembly + platform fingerprint + ~10 layer-memo
+/// probes to one hash lookup against the reused `key` scratch.
+#[derive(Default)]
+struct PassMemo {
+    map: HashMap<PassKey, PassCost>,
+    /// Reused lookup key: the hit path allocates nothing.
+    key: PassKey,
+    hits: u64,
+    misses: u64,
+}
+
+/// Discrete events the event core schedules through its heap. Arrivals
+/// carry the job; the other kinds are completion markers the iteration
+/// body records when it applies the corresponding state change, so the
+/// whole schedule flows through — and is ordered by — the one heap.
+#[derive(Debug)]
+enum EventKind {
+    Arrival(Job),
+    PassComplete,
+    Retire,
+    Preemption,
+}
+
+#[derive(Debug)]
+struct Event {
+    cycle: u64,
+    /// Push order; ties on `cycle` fire in insertion order, making the
+    /// pop sequence fully deterministic.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.cycle == other.cycle && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    /// Reversed, so `BinaryHeap` (a max-heap) pops the earliest event
+    /// first.
+    fn cmp(&self, other: &Event) -> Ordering {
+        (other.cycle, other.seq).cmp(&(self.cycle, self.seq))
+    }
+}
+
+/// Where the event core's arrivals come from.
+enum ArrivalSource<'w> {
+    /// Materialized workload, pre-sorted by (arrival_cycle, id).
+    Queue(VecDeque<Job>),
+    /// Lazy seeded generator in non-decreasing arrival order
+    /// ([`Workload::stream_poisson`] and friends): million-request traces
+    /// cost O(resident set) memory, not O(trace).
+    Stream(Box<dyn Iterator<Item = Request> + 'w>),
+}
+
+/// The event core's heap plus its lazy arrival source. Invariants:
+/// at most one arrival event is resident at a time (the source is pulled
+/// as each one fires); completion markers are pushed at the advancing
+/// clock, so pops are non-decreasing in `cycle` (debug-asserted); ties
+/// fire in push order via `seq`.
+struct EventQueue<'w> {
+    heap: BinaryHeap<Event>,
+    source: ArrivalSource<'w>,
+    seq: u64,
+    last_fired: u64,
+    /// Requests pulled from a streamed source (rejected or queued); the
+    /// materialized path counts offered requests upfront instead.
+    offered: usize,
+}
+
+impl<'w> EventQueue<'w> {
+    fn new(
+        source: ArrivalSource<'w>,
+        b: &ContinuousBatcher,
+        st: &mut RunState,
+    ) -> EventQueue<'w> {
+        let mut q = EventQueue {
+            heap: BinaryHeap::new(),
+            source,
+            seq: 0,
+            last_fired: 0,
+            offered: 0,
+        };
+        q.pull_arrival(b, st);
+        q
+    }
+
+    fn push(&mut self, cycle: u64, kind: EventKind) {
+        self.heap.push(Event { cycle, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    /// Move the source's next admissible job into the heap. Streamed
+    /// requests that can never fit the page pool are rejected here,
+    /// exactly like the legacy loop's upfront scan.
+    fn pull_arrival(&mut self, b: &ContinuousBatcher, st: &mut RunState) {
+        match &mut self.source {
+            ArrivalSource::Queue(jobs) => {
+                if let Some(j) = jobs.pop_front() {
+                    self.push(j.arrival_cycle, EventKind::Arrival(j));
+                }
+            }
+            ArrivalSource::Stream(it) => {
+                for r in it.by_ref() {
+                    self.offered += 1;
+                    if !st.alloc.fits_pool(r.kv_capacity()) {
+                        st.rejected.push(r.id);
+                        continue;
+                    }
+                    let j = b.job_of(r);
+                    debug_assert!(
+                        j.arrival_cycle >= self.last_fired,
+                        "streamed arrivals must be in non-decreasing time order"
+                    );
+                    self.push(j.arrival_cycle, EventKind::Arrival(j));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Fire every event due at the current clock: arrivals enqueue their
+    /// job (and pull the next one from the source); completion markers
+    /// are popped and checked against the monotone-pop invariant — their
+    /// state change already happened synchronously when the iteration
+    /// body recorded them.
+    fn fire_due(&mut self, b: &ContinuousBatcher, st: &mut RunState) {
+        while self.heap.peek().is_some_and(|e| e.cycle <= st.time) {
+            let e = self.heap.pop().unwrap();
+            debug_assert!(
+                e.cycle >= self.last_fired,
+                "event heap must pop in non-decreasing cycle order"
+            );
+            self.last_fired = e.cycle;
+            match e.kind {
+                EventKind::Arrival(job) => {
+                    st.ready.push(job);
+                    st.c.arrival_events += 1;
+                    self.pull_arrival(b, st);
+                }
+                EventKind::PassComplete | EventKind::Retire | EventKind::Preemption => {}
+            }
+        }
+    }
+
+    /// Cycle of the next scheduled arrival, if any. After `fire_due`
+    /// every remaining event is a strictly-future arrival (markers always
+    /// fire on the turn after they are pushed).
+    fn next_arrival_cycle(&self) -> Option<u64> {
+        let e = self.heap.peek()?;
+        debug_assert!(matches!(e.kind, EventKind::Arrival(_)));
+        Some(e.cycle)
+    }
+}
+
 /// Counters threaded through one run.
 #[derive(Default)]
 struct RunCounters {
@@ -384,6 +654,11 @@ struct RunCounters {
     /// Tokens claimed / iterations run in token-budget mode.
     budget_tokens: u64,
     budget_iterations: u64,
+    /// Arrival events fired (jobs entering the ready queue from the
+    /// arrival source; preemption re-queues do not count).
+    arrival_events: u64,
+    /// Priced passes completed.
+    pass_events: u64,
 }
 
 /// Mutable state of one serving run, threaded through the per-iteration
@@ -399,6 +674,15 @@ struct RunState {
     costs: LayerCostCache,
     c: RunCounters,
     time: u64,
+    /// Pass-shape memo (event core only; `None` keeps the iteration core
+    /// pricing every pass through the layer memo, bit-identically).
+    pass_memo: Option<PassMemo>,
+    /// Reused per-iteration buffers — the event core's hot loop allocates
+    /// nothing on a memoized decode step. Shared by both engines, so the
+    /// reuse cannot change behavior.
+    order_buf: Vec<usize>,
+    stepped_buf: Vec<usize>,
+    kv_buf: Vec<u64>,
 }
 
 impl<'a> ContinuousBatcher<'a> {
@@ -432,14 +716,56 @@ impl<'a> ContinuousBatcher<'a> {
     /// (bit-identical to [`crate::coordinator::schedule::model_total_mixed`]
     /// on the single plan), crediting the TP/PP communication share to
     /// the collective counter.
+    ///
+    /// With the pass memo armed (event core), a repeated pass shape is
+    /// served from one hash lookup — same total, same collective cycles,
+    /// and the layer-memo lookups the uncached pricing would have made
+    /// are replayed as hits, so every counter in the report stays
+    /// bit-identical to the iteration core.
     fn price_pass(
         &self,
         st: &mut RunState,
         prefills: &[(u64, u64)],
         decode_kv: &[u64],
     ) -> KernelCost {
+        st.c.pass_events += 1;
+        let RunState { pass_memo, costs, c, .. } = st;
+        if let Some(memo) = pass_memo.as_mut() {
+            memo.key.prefills.clear();
+            memo.key.prefills.extend_from_slice(prefills);
+            memo.key.decode_kv.clear();
+            memo.key.decode_kv.extend_from_slice(decode_kv);
+            if let Some(pc) = memo.map.get(&memo.key) {
+                memo.hits += 1;
+                costs.add_hits(pc.lookups);
+                c.collective_cycles += pc.collective_cycles;
+                return pc.total;
+            }
+            let before = costs.hits() + costs.misses();
+            let pass = plan_pass_cost(
+                costs,
+                self.cfg,
+                self.opts.plan,
+                prefills,
+                decode_kv,
+                self.fmt,
+                self.platform,
+            );
+            let lookups = costs.hits() + costs.misses() - before;
+            memo.misses += 1;
+            memo.map.insert(
+                memo.key.clone(),
+                PassCost {
+                    total: pass.total,
+                    collective_cycles: pass.collective_cycles,
+                    lookups,
+                },
+            );
+            c.collective_cycles += pass.collective_cycles;
+            return pass.total;
+        }
         let pass = plan_pass_cost(
-            &mut st.costs,
+            costs,
             self.cfg,
             self.opts.plan,
             prefills,
@@ -447,7 +773,7 @@ impl<'a> ContinuousBatcher<'a> {
             self.fmt,
             self.platform,
         );
-        st.c.collective_cycles += pass.collective_cycles;
+        c.collective_cycles += pass.collective_cycles;
         pass.total
     }
 
@@ -493,10 +819,9 @@ impl<'a> ContinuousBatcher<'a> {
         }
     }
 
-    /// Run the whole workload to completion and return the priced report.
-    pub fn run(&self, workload: &Workload) -> ServeReport {
+    fn fresh_state(&self) -> RunState {
         let geom = KvGeometry::new(self.cfg, self.fmt, self.opts.page_tokens);
-        let mut st = RunState {
+        RunState {
             ready: Vec::new(),
             active: Vec::new(),
             done: Vec::new(),
@@ -506,35 +831,83 @@ impl<'a> ContinuousBatcher<'a> {
             costs: LayerCostCache::new(self.platform),
             c: RunCounters::default(),
             time: 0,
-        };
-        let aging_cycles = self.aging_cycles();
-
-        let mut arrivals: VecDeque<Job> = VecDeque::new();
-        {
-            let mut jobs: Vec<Job> = Vec::new();
-            for r in &workload.requests {
-                if !st.alloc.fits_pool(r.kv_capacity()) {
-                    st.rejected.push(r.id);
-                    continue;
-                }
-                jobs.push(Job {
-                    arrival_cycle: self.platform.ns_to_cycles(r.arrival_ns as f64),
-                    prefill_target: r.prompt_len,
-                    produced: 0,
-                    preemptions: 0,
-                    prefix_hit_tokens: 0,
-                    first_admitted_cycle: None,
-                    ttft_cycle: None,
-                    req: r.clone(),
-                });
-            }
-            jobs.sort_by_key(|j| (j.arrival_cycle, j.req.id));
-            arrivals.extend(jobs);
+            pass_memo: None,
+            order_buf: Vec::new(),
+            stepped_buf: Vec::new(),
+            kv_buf: Vec::new(),
         }
+    }
+
+    /// A fresh scheduler-side job for `r`.
+    fn job_of(&self, r: Request) -> Job {
+        Job {
+            arrival_cycle: self.platform.ns_to_cycles(r.arrival_ns as f64),
+            prefill_target: r.prompt_len,
+            produced: 0,
+            preemptions: 0,
+            prefix_hit_tokens: 0,
+            first_admitted_cycle: None,
+            ttft_cycle: None,
+            req: r,
+        }
+    }
+
+    /// Upfront admission-feasibility scan + arrival sort, shared by both
+    /// engines so rejected ids appear in identical (workload) order.
+    fn materialized_jobs(&self, workload: &Workload, st: &mut RunState) -> VecDeque<Job> {
+        let mut jobs: Vec<Job> = Vec::new();
+        for r in &workload.requests {
+            if !st.alloc.fits_pool(r.kv_capacity()) {
+                st.rejected.push(r.id);
+                continue;
+            }
+            jobs.push(self.job_of(r.clone()));
+        }
+        jobs.sort_by_key(|j| (j.arrival_cycle, j.req.id));
+        jobs.into()
+    }
+
+    /// Run the whole workload to completion and return the priced report.
+    /// Dispatches on [`BatcherConfig::engine`]; the two cores produce
+    /// bit-identical reports ([`ServeReport::same_outcome`]).
+    pub fn run(&self, workload: &Workload) -> ServeReport {
+        match self.opts.engine {
+            EngineMode::Iteration => self.run_iteration(workload),
+            EngineMode::Event => {
+                let mut st = self.fresh_state();
+                let jobs = self.materialized_jobs(workload, &mut st);
+                self.run_event(&mut st, ArrivalSource::Queue(jobs));
+                self.report(workload.len(), st)
+            }
+        }
+    }
+
+    /// Serve a lazy arrival stream (e.g. [`Workload::stream_poisson`])
+    /// through the event core without materializing the trace: memory is
+    /// O(resident set + completed stats), so million-request fleet shards
+    /// are cheap. The stream must yield non-decreasing arrival times
+    /// (debug-asserted), which every seeded generator does.
+    pub fn serve_stream<I>(&self, arrivals: I) -> ServeReport
+    where
+        I: Iterator<Item = Request>,
+    {
+        let mut st = self.fresh_state();
+        let offered = self.run_event(&mut st, ArrivalSource::Stream(Box::new(arrivals)));
+        self.report(offered, st)
+    }
+
+    /// The legacy per-iteration loop (PR 2-5), kept verbatim as the
+    /// oracle the event core is asserted against. Every scheduling stage
+    /// it calls is shared with [`Self::run_event`].
+    fn run_iteration(&self, workload: &Workload) -> ServeReport {
+        let mut st = self.fresh_state();
+        let aging_cycles = self.aging_cycles();
+        let mut arrivals = self.materialized_jobs(workload, &mut st);
 
         loop {
             while arrivals.front().is_some_and(|j| j.arrival_cycle <= st.time) {
                 st.ready.push(arrivals.pop_front().unwrap());
+                st.c.arrival_events += 1;
             }
 
             self.admit(&mut st, aging_cycles);
@@ -557,7 +930,8 @@ impl<'a> ContinuousBatcher<'a> {
 
             // One priority order per iteration, shared by every stage
             // (ids, so stages survive `active` reshuffles).
-            let order = self.iteration_order(&st, aging_cycles);
+            let mut order = std::mem::take(&mut st.order_buf);
+            self.iteration_order_into(&st, aging_cycles, &mut order);
             let progressed = if self.opts.token_budget > 0 {
                 let p = self.mixed_iteration(&mut st, &order);
                 self.retire_finished(&mut st);
@@ -568,6 +942,7 @@ impl<'a> ContinuousBatcher<'a> {
                 p |= self.decode_step(&mut st, &order);
                 p
             };
+            st.order_buf = order;
 
             if !progressed {
                 // Every resident job is stalled on pages. Reclaim idle
@@ -592,7 +967,97 @@ impl<'a> ContinuousBatcher<'a> {
             }
         }
 
-        self.report(workload, st)
+        self.report(workload.len(), st)
+    }
+
+    /// The event-driven core. Control flow is owned by the event heap:
+    /// arrivals stream in lazily (one resident event at a time), the
+    /// iteration body records pass-completion / retirement / preemption
+    /// markers at the advanced clock, and idle gaps cost exactly one
+    /// heap peek — the clock jumps straight to the next arrival.
+    ///
+    /// Decision points coincide with the iteration core's loop exactly:
+    /// events ≤ now fire, admission runs, then either the clock jumps to
+    /// the next arrival (nothing resident) or one iteration of the
+    /// *shared* scheduling stages runs. With the pass memo arming
+    /// [`Self::price_pass`], the only differences are loop bookkeeping —
+    /// which is why reports are bit-identical (asserted by the
+    /// equivalence suite).
+    ///
+    /// Returns the number of requests the arrival source offered.
+    fn run_event(&self, st: &mut RunState, source: ArrivalSource<'_>) -> usize {
+        let aging_cycles = self.aging_cycles();
+        st.pass_memo = Some(PassMemo::default());
+        let mut q = EventQueue::new(source, self, st);
+
+        loop {
+            q.fire_due(self, st);
+
+            self.admit(st, aging_cycles);
+
+            if st.active.is_empty() {
+                debug_assert!(
+                    st.ready.is_empty(),
+                    "admission must drain the queue when the pool is free"
+                );
+                match q.next_arrival_cycle() {
+                    Some(next) if st.ready.is_empty() => {
+                        // System idle: jump to the next arrival.
+                        st.time = st.time.max(next);
+                        continue;
+                    }
+                    None if st.ready.is_empty() => break,
+                    _ => break, // wedged-queue guard (reject-on-pull covers this)
+                }
+            }
+
+            let mut order = std::mem::take(&mut st.order_buf);
+            self.iteration_order_into(st, aging_cycles, &mut order);
+            let time_before = st.time;
+            let retired_before = st.done.len();
+            let progressed = if self.opts.token_budget > 0 {
+                let p = self.mixed_iteration(st, &order);
+                self.retire_finished(st);
+                p
+            } else {
+                let mut p = self.prefill_quanta(st, &order);
+                self.retire_finished(st);
+                p |= self.decode_step(st, &order);
+                p
+            };
+            st.order_buf = order;
+
+            // Record the iteration's outcome on the heap: its priced
+            // passes completed at the advanced clock, retirements at the
+            // same instant. They fire — and check the monotone-pop
+            // invariant — on the next turn.
+            if st.time > time_before {
+                q.push(st.time, EventKind::PassComplete);
+            }
+            for _ in retired_before..st.done.len() {
+                q.push(st.time, EventKind::Retire);
+            }
+
+            if !progressed {
+                if st.cache.evict_lru(&mut st.alloc, 1) > 0 {
+                    continue;
+                }
+                if st.active.len() > 1 {
+                    if let Some(v) = Self::victim_index(&st.active, None) {
+                        Self::preempt(st, v);
+                        q.push(st.time, EventKind::Preemption);
+                    }
+                } else {
+                    debug_assert!(false, "lone resident job stalled");
+                    if let Some(mut a) = st.active.pop() {
+                        st.alloc.release(&mut a.table);
+                        st.rejected.push(a.job.req.id);
+                    }
+                }
+            }
+        }
+
+        q.offered
     }
 
     /// The iteration's scheduling order: every resident job's id, most
@@ -606,10 +1071,16 @@ impl<'a> ContinuousBatcher<'a> {
     /// atomic with respect to aging. On traces where no promotion falls
     /// inside an iteration (aging off, or any bounded trace with the
     /// defaults), scheduling is identical to PR 2.
-    fn iteration_order(&self, st: &RunState, aging_cycles: u64) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..st.active.len()).collect();
-        idx.sort_by_key(|&i| Self::sched_key(&st.active[i].job, st.time, aging_cycles));
-        idx.into_iter().map(|i| st.active[i].job.req.id).collect()
+    /// Fills the caller's reused buffer (taken out of `RunState` for the
+    /// duration of the iteration) instead of allocating: indices are
+    /// sorted by the scheduling key, then rewritten to ids in place.
+    fn iteration_order_into(&self, st: &RunState, aging_cycles: u64, order: &mut Vec<usize>) {
+        order.clear();
+        order.extend(0..st.active.len());
+        order.sort_by_key(|&i| Self::sched_key(&st.active[i].job, st.time, aging_cycles));
+        for slot in order.iter_mut() {
+            *slot = st.active[*slot].job.req.id;
+        }
     }
 
     /// Admit ready jobs by effective priority while slots and pages allow,
@@ -871,7 +1342,8 @@ impl<'a> ContinuousBatcher<'a> {
     /// job (shared priority order), growing pages on demand. Returns
     /// whether a step ran. Legacy (non-budget) path.
     fn decode_step(&self, st: &mut RunState, order: &[usize]) -> bool {
-        let mut stepped: Vec<usize> = Vec::new();
+        let mut stepped = std::mem::take(&mut st.stepped_buf);
+        stepped.clear();
         for &id in order {
             let eligible = st.active.iter().any(|a| a.job.req.id == id && a.decodable());
             if eligible && self.grow_for_decode(st, id) {
@@ -882,13 +1354,17 @@ impl<'a> ContinuousBatcher<'a> {
         // grow; only still-resident jobs take part in the step.
         stepped.retain(|id| st.active.iter().any(|a| a.job.req.id == *id));
         if stepped.is_empty() {
+            st.stepped_buf = stepped;
             return false;
         }
 
-        let kv_lens: Vec<u64> = stepped
-            .iter()
-            .map(|id| st.active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len)
-            .collect();
+        let mut kv_lens = std::mem::take(&mut st.kv_buf);
+        kv_lens.clear();
+        kv_lens.extend(
+            stepped
+                .iter()
+                .map(|id| st.active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len),
+        );
         let cost = self.price_pass(st, &[], &kv_lens);
         st.time += cost.cycles;
         st.c.total = st.c.total.then(cost);
@@ -897,6 +1373,8 @@ impl<'a> ContinuousBatcher<'a> {
         st.c.decode_steps += 1;
 
         self.apply_decode(st, &stepped);
+        st.stepped_buf = stepped;
+        st.kv_buf = kv_lens;
         true
     }
 
@@ -1097,11 +1575,12 @@ impl<'a> ContinuousBatcher<'a> {
         }
     }
 
-    fn report(&self, workload: &Workload, st: RunState) -> ServeReport {
-        let RunState { mut done, rejected, alloc, costs, c, time, .. } = st;
+    fn report(&self, offered: usize, st: RunState) -> ServeReport {
+        let RunState { mut done, rejected, alloc, costs, c, time, pass_memo, .. } = st;
         done.sort_by_key(|r| r.id);
-        // Each sample vector inside the aggregates is sorted once; every
-        // percentile after that is an index.
+        // Sketch-backed aggregates: exact (bit-identical to the sorted
+        // sample vectors of PR 3-5) below the sketch's reservoir limit,
+        // ~1%-error log-histograms above it.
         let (ttft, lat, queue, per_class) = latency_aggregates(&done);
         let total_seconds = self.platform.cycles_to_seconds(time);
         let decode_seconds = self.platform.cycles_to_seconds(c.decode_cycles);
@@ -1119,7 +1598,7 @@ impl<'a> ContinuousBatcher<'a> {
         ServeReport {
             model: self.cfg.name.clone(),
             format: self.fmt.name(),
-            requests: workload.len(),
+            requests: offered,
             completed: done.len(),
             rejected,
             max_batch: self.opts.max_batch.max(1),
@@ -1180,6 +1659,14 @@ impl<'a> ContinuousBatcher<'a> {
             collective_cycles: c.collective_cycles,
             d2d_bytes: c.total.d2d_bytes,
             work: c.total,
+            engine: self.opts.engine.name(),
+            arrival_events: c.arrival_events,
+            pass_events: c.pass_events,
+            pass_cache_hits: pass_memo.as_ref().map_or(0, |m| m.hits),
+            pass_cache_misses: pass_memo.as_ref().map_or(0, |m| m.misses),
+            ttft_sketch: ttft,
+            latency_sketch: lat,
+            queue_sketch: queue,
             per_class,
             per_request: done,
         }

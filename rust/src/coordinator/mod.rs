@@ -17,7 +17,9 @@ pub mod kv_paging;
 pub mod schedule;
 pub mod workload;
 
-pub use batcher::{BatcherConfig, ClassStats, ContinuousBatcher, RequestStats, ServeReport};
+pub use batcher::{
+    BatcherConfig, ClassStats, ContinuousBatcher, EngineMode, RequestStats, ServeReport,
+};
 pub use breakdown::{Breakdown, KernelClassShare};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;
@@ -29,4 +31,4 @@ pub use schedule::{
     model_cost_decode, model_cost_mixed, model_total_mixed, platform_fingerprint,
     LayerCostCache, ModelCost,
 };
-pub use workload::{Arrival, Request, SharedPrefix, Workload};
+pub use workload::{Arrival, ArrivalStream, Request, SharedPrefix, Workload};

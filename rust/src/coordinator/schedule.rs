@@ -236,6 +236,16 @@ impl LayerCostCache {
         self.misses
     }
 
+    /// Credit `n` memo hits without touching the map. Higher-level memos
+    /// (the batcher's pass-shape cache) replay the per-layer lookups a
+    /// cached pass would have performed — each one a guaranteed hit,
+    /// since the pass was priced through this memo the first time — so
+    /// hit/miss accounting stays identical whether or not the pass shape
+    /// repeated.
+    pub fn add_hits(&mut self, n: u64) {
+        self.hits += n;
+    }
+
     /// Times the memo was flushed because it was presented a different
     /// platform generation (see [`Self::ensure_platform`]).
     pub fn generation_flushes(&self) -> u64 {

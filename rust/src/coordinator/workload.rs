@@ -139,6 +139,7 @@ impl Request {
 }
 
 /// Deterministic 64-bit LCG shared by the synthetic generators.
+#[derive(Debug, Clone)]
 struct Lcg(u64);
 
 impl Lcg {
@@ -262,6 +263,154 @@ impl Workload {
     pub fn total_prompt_tokens(&self) -> u64 {
         self.requests.iter().map(|r| r.prompt_len).sum()
     }
+
+    /// Lazy Poisson trace: yields the *same* request stream as
+    /// `Workload::uniform(n, ..).with_poisson_arrivals(seed, rate)` (same
+    /// seeded LCG, same gap arithmetic — asserted in a test) without
+    /// materializing `n` `Request`s up front. Million-request traces cost
+    /// O(1) memory on the generator side; the event-driven batcher pulls
+    /// one arrival at a time.
+    pub fn stream_poisson(
+        seed: u64,
+        rate_per_s: f64,
+        n: usize,
+        prompt_len: u64,
+        gen_tokens: u64,
+    ) -> ArrivalStream {
+        assert!(rate_per_s > 0.0, "arrival rate must be positive");
+        ArrivalStream::new(seed, n, prompt_len, gen_tokens, RateShape::Constant(rate_per_s))
+    }
+
+    /// Lazy diurnal trace: an inhomogeneous Poisson process whose rate
+    /// swings sinusoidally between `base_per_s` (trough, at t = 0) and
+    /// `peak_per_s` over each `period_s`-second "day". Each inter-arrival
+    /// gap is drawn exponentially at the instantaneous rate — a standard
+    /// piecewise approximation that keeps the generator O(1) per request
+    /// and exactly reproducible from the seed.
+    pub fn stream_diurnal(
+        seed: u64,
+        base_per_s: f64,
+        peak_per_s: f64,
+        period_s: f64,
+        n: usize,
+        prompt_len: u64,
+        gen_tokens: u64,
+    ) -> ArrivalStream {
+        assert!(base_per_s > 0.0, "trough arrival rate must be positive");
+        assert!(peak_per_s >= base_per_s, "peak rate must be >= base rate");
+        assert!(period_s > 0.0, "diurnal period must be positive");
+        ArrivalStream::new(
+            seed,
+            n,
+            prompt_len,
+            gen_tokens,
+            RateShape::Diurnal { base_per_s, peak_per_s, period_s },
+        )
+    }
+}
+
+/// Rate shape of a streamed arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum RateShape {
+    Constant(f64),
+    Diurnal { base_per_s: f64, peak_per_s: f64, period_s: f64 },
+}
+
+impl RateShape {
+    fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            RateShape::Constant(r) => r,
+            RateShape::Diurnal { base_per_s, peak_per_s, period_s } => {
+                let phase = 2.0 * std::f64::consts::PI * (t_s / period_s);
+                base_per_s + (peak_per_s - base_per_s) * 0.5 * (1.0 - phase.cos())
+            }
+        }
+    }
+}
+
+/// Seeded lazy arrival generator (see [`Workload::stream_poisson`] /
+/// [`Workload::stream_diurnal`]): an iterator of `Request`s in
+/// non-decreasing arrival order with ascending ids. Cloning snapshots the
+/// generator state, so the same trace can be replayed (e.g. once through
+/// the event core and once materialized through the legacy loop).
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    rng: Lcg,
+    t_ns: u64,
+    next_id: usize,
+    n: usize,
+    prompt_len: u64,
+    gen_tokens: u64,
+    classes: u8,
+    shape: RateShape,
+}
+
+impl ArrivalStream {
+    fn new(
+        seed: u64,
+        n: usize,
+        prompt_len: u64,
+        gen_tokens: u64,
+        shape: RateShape,
+    ) -> ArrivalStream {
+        ArrivalStream {
+            // Same derived seed as `with_poisson_arrivals`, so the
+            // constant-rate stream is draw-for-draw identical to the
+            // materialized stamping.
+            rng: Lcg::new(seed ^ 0xA1217),
+            t_ns: 0,
+            next_id: 0,
+            n,
+            prompt_len,
+            gen_tokens,
+            classes: 1,
+            shape,
+        }
+    }
+
+    /// Assign priority classes round-robin by id, matching
+    /// [`Workload::with_priority_classes`]. A no-op for `classes <= 1`.
+    pub fn with_priority_classes(mut self, classes: u8) -> ArrivalStream {
+        self.classes = classes.max(1);
+        self
+    }
+
+    /// Requests remaining in the stream.
+    pub fn remaining(&self) -> usize {
+        self.n - self.next_id
+    }
+
+    /// Drain the stream into a materialized [`Workload`] (legacy-loop
+    /// comparisons and small tests; defeats the purpose at fleet scale).
+    pub fn materialize(self) -> Workload {
+        Workload { requests: self.collect() }
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.next_id >= self.n {
+            return None;
+        }
+        let rate = self.shape.rate_at(self.t_ns as f64 / 1e9);
+        let gap_s = -self.rng.unit().ln() / rate;
+        self.t_ns += (gap_s * 1e9).round() as u64;
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut r = Request::new(id, self.prompt_len, self.gen_tokens)
+            .with_arrival_ns(self.t_ns);
+        if self.classes > 1 {
+            r.class = (id % self.classes as usize) as u8;
+        }
+        Some(r)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.remaining();
+        (left, Some(left))
+    }
 }
 
 /// Arrival process selector (the `serve --arrival` flag).
@@ -351,6 +500,62 @@ mod tests {
         // A faster rate compresses the trace.
         let fast = Workload::uniform(256, 64, 16).with_poisson_arrivals(3, 1000.0);
         assert!(fast.requests.last().unwrap().arrival_ns < prev);
+    }
+
+    #[test]
+    fn stream_poisson_matches_materialized_stamping() {
+        // The lazy generator must be draw-for-draw identical to
+        // uniform().with_poisson_arrivals() — the event core's streamed
+        // serving path relies on it to stay comparable with the legacy
+        // loop on the same trace.
+        let streamed: Vec<Request> = Workload::stream_poisson(3, 100.0, 256, 64, 16).collect();
+        let stamped = Workload::uniform(256, 64, 16).with_poisson_arrivals(3, 100.0);
+        assert_eq!(streamed, stamped.requests);
+        // materialize() is the same thing packaged as a Workload.
+        let w = Workload::stream_poisson(3, 100.0, 256, 64, 16).materialize();
+        assert_eq!(w.requests, stamped.requests);
+        // Classes ride along round-robin.
+        let classy: Vec<u8> = Workload::stream_poisson(3, 100.0, 6, 64, 16)
+            .with_priority_classes(3)
+            .map(|r| r.class)
+            .collect();
+        assert_eq!(classy, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn stream_diurnal_modulates_rate_deterministically() {
+        let n = 4096;
+        let a: Vec<Request> = Workload::stream_diurnal(9, 10.0, 1000.0, 60.0, n, 64, 8).collect();
+        let b: Vec<Request> = Workload::stream_diurnal(9, 10.0, 1000.0, 60.0, n, 64, 8).collect();
+        assert_eq!(a, b, "seeded stream replays identically");
+        assert_eq!(a.len(), n);
+        let mut prev = 0;
+        for r in &a {
+            assert!(r.arrival_ns >= prev, "{r:?}");
+            prev = r.arrival_ns;
+        }
+        // The first quarter-period hugs the trough rate; mid-period runs
+        // near the peak, so arrivals bunch there: count arrivals in the
+        // trough window [0, 15s) vs the peak window [22.5s, 37.5s).
+        let in_window = |lo_s: f64, hi_s: f64| {
+            a.iter()
+                .filter(|r| {
+                    let t = r.arrival_ns as f64 / 1e9;
+                    t >= lo_s && t < hi_s
+                })
+                .count()
+        };
+        let trough = in_window(0.0, 15.0);
+        let peak = in_window(22.5, 37.5);
+        assert!(
+            peak > trough * 4,
+            "diurnal peak window should dominate: trough={trough} peak={peak}"
+        );
+        // size_hint is exact, so collect() pre-allocates.
+        let mut s = Workload::stream_diurnal(9, 10.0, 1000.0, 60.0, 8, 64, 8);
+        assert_eq!(s.size_hint(), (8, Some(8)));
+        s.next();
+        assert_eq!(s.remaining(), 7);
     }
 
     #[test]

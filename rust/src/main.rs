@@ -59,6 +59,9 @@ COMMANDS:
              --replicas N (data-parallel replica groups)
              --route jsq|affinity (replica routing policy; affinity keeps
                shared-prefix groups on their template's home replica)
+             --engine event|iter (event-heap run loop with pass-shape
+               memoization, or the legacy per-iteration loop; reports are
+               bit-identical — default event)
              --json (machine-readable report)
   shard      Enumerate and rank multi-die shard plans {tp, pp, replicas}
              --model NAME --format FMT --dies N --batch N --seq N
@@ -91,7 +94,7 @@ const FLAGS: &[&str] = &[
     "exp", "artifacts", "requests", "batch", "prompt", "gen", "seed",
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
-    "replicas", "route", "dies", "objective", "tp", "pp", "plan",
+    "replicas", "route", "dies", "objective", "tp", "pp", "plan", "engine",
 ];
 
 fn main() -> Result<()> {
@@ -424,6 +427,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.aging_promote_s = args.get_f64("aging", opts.aging_promote_s)?;
     anyhow::ensure!(opts.aging_promote_s >= 0.0, "--aging must be >= 0");
     opts.plan = engine_plan;
+    if let Some(s) = args.get("engine") {
+        opts.engine = snitch_fm::coordinator::EngineMode::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("--engine {s:?}: expected event or iter"))?;
+    }
     if replicas > 1 {
         let r = engine.serve_replicated(&cfg, &workload, opts, format, replicas, route);
         if args.get_bool("json") {

@@ -1,5 +1,7 @@
 //! Throughput / utilization metrics (the quantities the paper reports).
 
+pub mod sketch;
+
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::sim::KernelCost;
 
@@ -62,9 +64,11 @@ pub struct Percentiles {
 }
 
 impl Percentiles {
-    /// Take ownership of the samples and sort them once.
+    /// Take ownership of the samples and sort them once. Uses
+    /// `f64::total_cmp`, so NaN samples (which `partial_cmp` would panic
+    /// on) sort to the end instead of aborting the whole report.
     pub fn new(mut xs: Vec<f64>) -> Percentiles {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         Percentiles { sorted: xs }
     }
 
@@ -207,6 +211,19 @@ mod tests {
         assert!(empty.is_empty());
         assert_eq!(empty.p(50.0), 0.0);
         assert_eq!(empty.mean(), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // Regression: the old sort used partial_cmp().unwrap(), which
+        // aborted on any NaN latency sample. NaNs now sort last under
+        // total_cmp, so finite percentiles below the NaN tail are sane.
+        let xs = vec![2.0, f64::NAN, 1.0, 3.0];
+        let p = Percentiles::new(xs);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.p(25.0), 1.0);
+        assert_eq!(p.p(50.0), 2.0);
+        assert!(p.p(100.0).is_nan());
     }
 
     #[test]

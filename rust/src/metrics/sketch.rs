@@ -1,0 +1,377 @@
+//! Mergeable streaming percentile sketch for fleet-scale serving runs.
+//!
+//! The serving report used to keep every latency sample in a `Vec<f64>`
+//! until the end of the run, which is fine for 50k requests and fatal
+//! for the 1M-request fleet traces: 64 replicas x 1M samples x 3 metrics
+//! is gigabytes of `f64`s that exist only to answer a handful of
+//! percentile queries. [`StreamSketch`] replaces that with a two-mode
+//! structure:
+//!
+//! * **Exact mode** (n <= [`EXACT_LIMIT`]): samples are kept verbatim and
+//!   percentiles are answered by the same nearest-rank rule as
+//!   [`crate::metrics::Percentiles`], so every existing small-trace test
+//!   keeps passing *bit-exactly*. Merging two exact sketches whose
+//!   combined size still fits stays exact (percentiles depend only on the
+//!   sample multiset, so merge order is irrelevant).
+//! * **Histogram mode** (n > [`EXACT_LIMIT`], or merged beyond it): a
+//!   fixed-size log-spaced histogram. Bucket `i` covers
+//!   `[MIN_TRACKABLE * GAMMA^i, MIN_TRACKABLE * GAMMA^(i+1))` and queries
+//!   return the geometric midpoint of the winning bucket, clamped to the
+//!   exact observed `[min, max]`.
+//!
+//! # Error bounds
+//!
+//! With `GAMMA = 1.02`, any sample in `[MIN_TRACKABLE, MAX_TRACKABLE]`
+//! lands in a bucket whose representative value is within a factor
+//! `sqrt(GAMMA)` of the true sample, i.e. a **relative error of at most
+//! ~1%** (`sqrt(1.02) - 1 ~= 0.995%`) on every quantile. Samples below
+//! `MIN_TRACKABLE` (1 ns — far below a single simulator cycle) collapse
+//! into an underflow bucket reported as `min`; samples above
+//! `MAX_TRACKABLE` clamp into the last bucket and are reported as at
+//! most `max`. Counts, `sum`, `min` and `max` are always exact, so
+//! `mean()` is exact in both modes. Merging histograms adds bucket
+//! counts and is exact with respect to the already-bucketed data:
+//! merge order never changes any answer.
+
+use super::Percentiles;
+
+/// Largest sample count served in exact mode. Every trace the unit-test
+/// suite replays sits far below this, which is what keeps the sketch
+/// drop-in bit-compatible with the old sort-everything path.
+pub const EXACT_LIMIT: usize = 4096;
+
+/// Log-histogram growth factor; relative error is `sqrt(GAMMA) - 1`.
+const GAMMA: f64 = 1.02;
+/// Smallest distinguishable sample: 1 ns (sub-cycle at 1 GHz).
+const MIN_TRACKABLE: f64 = 1e-9;
+/// Bucket count. `MIN_TRACKABLE * GAMMA^2176 ~= 5e9` seconds, so the
+/// dynamic range spans one nanosecond to ~160 simulated years.
+const NUM_BINS: usize = 2176;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Repr {
+    /// Raw samples, insertion order (queries sort a copy).
+    Exact(Vec<f64>),
+    /// Fixed log-spaced histogram plus exact moments.
+    Hist {
+        bins: Vec<u64>,
+        /// Samples `< MIN_TRACKABLE` (zeros, negatives, non-finite).
+        underflow: u64,
+        count: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+    },
+}
+
+/// Mergeable streaming percentile sketch (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSketch {
+    repr: Repr,
+}
+
+impl Default for StreamSketch {
+    fn default() -> Self {
+        StreamSketch::new()
+    }
+}
+
+fn bin_index(x: f64) -> Option<usize> {
+    if x.is_nan() || x < MIN_TRACKABLE {
+        return None; // underflow (zeros, negatives, NaN)
+    }
+    let i = ((x / MIN_TRACKABLE).ln() / GAMMA.ln()).floor() as usize;
+    Some(i.min(NUM_BINS - 1))
+}
+
+fn bin_value(i: usize) -> f64 {
+    // Geometric midpoint of bucket i: off by at most sqrt(GAMMA).
+    MIN_TRACKABLE * GAMMA.powi(i as i32) * GAMMA.sqrt()
+}
+
+impl StreamSketch {
+    pub fn new() -> StreamSketch {
+        StreamSketch { repr: Repr::Exact(Vec::new()) }
+    }
+
+    /// Build a sketch from a sample slice (exact if it fits).
+    pub fn from_samples(xs: &[f64]) -> StreamSketch {
+        let mut s = StreamSketch::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    /// True while every sample is still held verbatim.
+    pub fn is_exact(&self) -> bool {
+        matches!(self.repr, Repr::Exact(_))
+    }
+
+    pub fn count(&self) -> u64 {
+        match &self.repr {
+            Repr::Exact(v) => v.len() as u64,
+            Repr::Hist { count, .. } => *count,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Record one sample; spills exact -> histogram past [`EXACT_LIMIT`].
+    pub fn push(&mut self, x: f64) {
+        match &mut self.repr {
+            Repr::Exact(v) => {
+                v.push(x);
+                if v.len() > EXACT_LIMIT {
+                    self.spill();
+                }
+            }
+            Repr::Hist { .. } => self.hist_push(x),
+        }
+    }
+
+    fn spill(&mut self) {
+        let samples = match std::mem::replace(&mut self.repr, Repr::Exact(Vec::new())) {
+            Repr::Exact(v) => v,
+            hist => {
+                self.repr = hist;
+                return;
+            }
+        };
+        self.repr = Repr::Hist {
+            bins: vec![0; NUM_BINS],
+            underflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        };
+        for x in samples {
+            self.hist_push(x);
+        }
+    }
+
+    fn hist_push(&mut self, x: f64) {
+        let Repr::Hist { bins, underflow, count, sum, min, max } = &mut self.repr else {
+            unreachable!("hist_push on exact repr");
+        };
+        match bin_index(x) {
+            Some(i) => bins[i] += 1,
+            None => *underflow += 1,
+        }
+        *count += 1;
+        if x.is_finite() {
+            *sum += x;
+            *min = min.min(x);
+            *max = max.max(x);
+        }
+    }
+
+    /// Fold another sketch in. Exact + exact stays exact while the
+    /// combined sample count fits [`EXACT_LIMIT`]; anything bigger (or
+    /// already spilled) merges as histograms by adding bucket counts.
+    /// The result is independent of merge order in both modes.
+    pub fn merge(&mut self, other: &StreamSketch) {
+        if let (Repr::Exact(a), Repr::Exact(b)) = (&self.repr, &other.repr) {
+            if a.len() + b.len() <= EXACT_LIMIT {
+                let Repr::Exact(a) = &mut self.repr else { unreachable!() };
+                a.extend_from_slice(b);
+                return;
+            }
+        }
+        if self.is_exact() {
+            self.spill();
+        }
+        let mut other = other.clone();
+        if other.is_exact() {
+            other.spill();
+        }
+        let Repr::Hist { bins, underflow, count, sum, min, max } = &mut self.repr else {
+            unreachable!()
+        };
+        let Repr::Hist {
+            bins: ob,
+            underflow: ou,
+            count: oc,
+            sum: os,
+            min: omin,
+            max: omax,
+        } = &other.repr
+        else {
+            unreachable!()
+        };
+        for (b, o) in bins.iter_mut().zip(ob) {
+            *b += o;
+        }
+        *underflow += ou;
+        *count += oc;
+        *sum += os;
+        *min = min.min(*omin);
+        *max = max.max(*omax);
+    }
+
+    /// Nearest-rank percentile (`q` in 0..=100); 0 for an empty sketch.
+    /// Exact mode reproduces [`Percentiles::p`] bit-for-bit; histogram
+    /// mode is within ~1% relative error (see module docs).
+    pub fn p(&self, q: f64) -> f64 {
+        match &self.repr {
+            Repr::Exact(v) => Percentiles::new(v.clone()).p(q),
+            Repr::Hist { bins, underflow, count, min, max, .. } => {
+                if *count == 0 {
+                    return 0.0;
+                }
+                let rank = (q / 100.0 * *count as f64).ceil() as u64;
+                let rank = rank.clamp(1, *count);
+                let mut seen = *underflow;
+                if rank <= seen {
+                    // Underflow bucket: every sample there is < 1 ns, so
+                    // the observed min is the best available answer.
+                    return if min.is_finite() { *min } else { 0.0 };
+                }
+                for (i, n) in bins.iter().enumerate() {
+                    seen += n;
+                    if rank <= seen {
+                        let v = bin_value(i);
+                        // Never report outside the observed range.
+                        return v.clamp(*min, *max);
+                    }
+                }
+                *max
+            }
+        }
+    }
+
+    /// Exact arithmetic mean over finite samples; 0 when empty. The
+    /// exact arm sums in *sorted* order — exactly what the report's old
+    /// `Percentiles::mean` did — so small-trace means stay bit-identical
+    /// to the pre-sketch code (f64 addition is order-sensitive in the
+    /// last ulp).
+    pub fn mean(&self) -> f64 {
+        match &self.repr {
+            Repr::Exact(v) => Percentiles::new(v.clone()).mean(),
+            Repr::Hist { count, sum, .. } => {
+                if *count == 0 {
+                    0.0
+                } else {
+                    sum / *count as f64
+                }
+            }
+        }
+    }
+
+    /// Exact observed maximum over finite samples; 0 when empty.
+    pub fn max(&self) -> f64 {
+        let m = match &self.repr {
+            Repr::Exact(v) => v
+                .iter()
+                .copied()
+                .filter(|x| x.is_finite())
+                .fold(f64::NEG_INFINITY, f64::max),
+            Repr::Hist { max, .. } => *max,
+        };
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_mode_matches_percentiles_bitwise() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 7919) % 1000) as f64 / 3.0).collect();
+        let sk = StreamSketch::from_samples(&xs);
+        assert!(sk.is_exact());
+        let p = Percentiles::new(xs.clone());
+        for q in [0.0, 1.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(sk.p(q), p.p(q), "q={q}");
+        }
+        assert_eq!(sk.mean(), p.mean());
+        assert_eq!(sk.count(), 1000);
+    }
+
+    #[test]
+    fn exact_merge_stays_exact_and_order_free() {
+        let a: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..100).map(|i| (i * 3) as f64).collect();
+        let mut ab = StreamSketch::from_samples(&a);
+        ab.merge(&StreamSketch::from_samples(&b));
+        let mut ba = StreamSketch::from_samples(&b);
+        ba.merge(&StreamSketch::from_samples(&a));
+        assert!(ab.is_exact() && ba.is_exact());
+        let mut union = a.clone();
+        union.extend_from_slice(&b);
+        let p = Percentiles::new(union);
+        for q in [10.0, 50.0, 95.0, 99.0] {
+            assert_eq!(ab.p(q), p.p(q));
+            assert_eq!(ab.p(q), ba.p(q));
+        }
+    }
+
+    #[test]
+    fn spills_past_limit_and_bounds_error() {
+        let xs: Vec<f64> = (1..=20_000).map(|i| i as f64 * 1e-4).collect();
+        let sk = StreamSketch::from_samples(&xs);
+        assert!(!sk.is_exact());
+        assert_eq!(sk.count(), 20_000);
+        let p = Percentiles::new(xs);
+        for q in [1.0, 10.0, 50.0, 90.0, 99.0, 99.9] {
+            let exact = p.p(q);
+            let approx = sk.p(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.011, "q={q}: exact {exact}, sketch {approx}, rel {rel}");
+        }
+        // Moments stay exact.
+        assert!((sk.mean() - p.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_stream() {
+        let a: Vec<f64> = (1..=10_000).map(|i| (i as f64).sqrt()).collect();
+        let b: Vec<f64> = (1..=10_000).map(|i| (i as f64).ln().max(1e-6)).collect();
+        let mut merged = StreamSketch::from_samples(&a);
+        merged.merge(&StreamSketch::from_samples(&b));
+        let mut single = StreamSketch::from_samples(&a);
+        for &x in &b {
+            single.push(x);
+        }
+        for q in [5.0, 50.0, 95.0, 99.9] {
+            assert_eq!(merged.p(q), single.p(q), "q={q}");
+        }
+        assert_eq!(merged.count(), single.count());
+    }
+
+    #[test]
+    fn underflow_and_empty_are_sane() {
+        let empty = StreamSketch::new();
+        assert_eq!(empty.p(50.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        assert!(empty.is_empty());
+
+        let mut sk = StreamSketch::new();
+        for _ in 0..(EXACT_LIMIT + 10) {
+            sk.push(0.0);
+        }
+        assert!(!sk.is_exact());
+        assert_eq!(sk.p(99.0), 0.0);
+        assert_eq!(sk.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_clamped_to_observed_range() {
+        let xs: Vec<f64> = (0..(EXACT_LIMIT as u64 + 100)).map(|i| 1.0 + i as f64 * 1e-6).collect();
+        let sk = StreamSketch::from_samples(&xs);
+        let lo = xs[0];
+        let hi = xs[xs.len() - 1];
+        for q in [0.0, 50.0, 100.0] {
+            let v = sk.p(q);
+            assert!((lo..=hi).contains(&v), "q={q} -> {v} outside [{lo}, {hi}]");
+        }
+    }
+}

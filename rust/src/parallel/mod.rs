@@ -37,5 +37,5 @@ pub use collectives::{
     all_gather_cost, all_reduce_cost, p2p_cost, reduce_scatter_cost, Algorithm,
 };
 pub use planner::{best_plans, enumerate_plans, Objective, RankedPlan};
-pub use router::{serve_replicated, RoutePolicy, RouterReport};
+pub use router::{merge_reports, replica_seed, serve_replicated, RoutePolicy, RouterReport};
 pub use shard::{plan_cost, plan_pass_cost, sharded_block_cost, PlanCost, ShardPlan, ShardedPass};

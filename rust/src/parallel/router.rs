@@ -20,10 +20,10 @@
 //! (bit-identical to `InferenceEngine::serve_with`, asserted in
 //! `tests/parallel_plans.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::arch::{FpFormat, PlatformConfig};
-use crate::coordinator::batcher::{BatcherConfig, ContinuousBatcher, ServeReport};
+use crate::coordinator::batcher::{BatcherConfig, ClassStats, ContinuousBatcher, ServeReport};
 use crate::coordinator::schedule::model_cost_batched;
 use crate::coordinator::workload::Workload;
 use crate::energy;
@@ -161,13 +161,15 @@ fn route_workload(
 
 /// Merge per-replica reports into one fleet view. Wall-clock-like fields
 /// take the slowest replica (the fleet runs in parallel), counters sum,
-/// latency/TTFT/queue percentiles are recomputed over the union of
-/// per-request stats, and EVERY derived rate — aggregate and decode
-/// tokens/s, occupancy, hit rates, FPU utilization, power, budget fill —
-/// is rebuilt from the merged *raw* counters over the merged clock.
-/// (They used to be cycle-weighted means of the per-replica rates, which
-/// drifts from the counter-true value whenever replicas are uneven.)
-fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) -> ServeReport {
+/// latency/TTFT/queue percentiles come from merging the per-replica
+/// [`crate::metrics::sketch::StreamSketch`]es (exact below the sketch's
+/// spill limit, ~1% relative error above — never a re-sort of the union
+/// of per-request samples), and EVERY derived rate — aggregate and
+/// decode tokens/s, occupancy, hit rates, FPU utilization, power, budget
+/// fill — is rebuilt from the merged *raw* counters over the merged
+/// clock. Deterministic: the result depends only on the slice order of
+/// `per` (replica index), never on which replica thread finished first.
+pub fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) -> ServeReport {
     assert!(!per.is_empty(), "merge needs at least one replica report");
     if per.len() == 1 {
         return per[0].clone();
@@ -207,14 +209,29 @@ fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) 
     merged.budget_iterations = per.iter().map(|r| r.budget_iterations).sum();
     merged.pricing_cache_hits = per.iter().map(|r| r.pricing_cache_hits).sum();
     merged.pricing_cache_misses = per.iter().map(|r| r.pricing_cache_misses).sum();
+    merged.arrival_events = per.iter().map(|r| r.arrival_events).sum();
+    merged.pass_events = per.iter().map(|r| r.pass_events).sum();
+    merged.pass_cache_hits = per.iter().map(|r| r.pass_cache_hits).sum();
+    merged.pass_cache_misses = per.iter().map(|r| r.pass_cache_misses).sum();
     merged.work = per
         .iter()
         .fold(crate::sim::KernelCost::default(), |acc, r| acc.then(r.work));
 
-    // The exact aggregation the single-engine report runs (TTFT over
-    // generating requests only, per-class breakdown), over the union.
-    let (ttft, lat, queue, per_class) =
-        crate::coordinator::batcher::latency_aggregates(&per_request);
+    // Latency views: fold the per-replica streaming sketches instead of
+    // re-walking the union of per-request stats (which is gigabytes at
+    // fleet scale). Exact-mode folds reproduce the old union-recompute
+    // bit-for-bit — nearest-rank percentiles and the sorted-sum mean
+    // depend only on the sample multiset — and sketch merging is
+    // order-independent, so the fleet view is identical no matter how
+    // replica execution interleaved.
+    let mut ttft = per[0].ttft_sketch.clone();
+    let mut lat = per[0].latency_sketch.clone();
+    let mut queue = per[0].queue_sketch.clone();
+    for r in &per[1..] {
+        ttft.merge(&r.ttft_sketch);
+        lat.merge(&r.latency_sketch);
+        queue.merge(&r.queue_sketch);
+    }
     merged.ttft_mean_s = ttft.mean();
     merged.ttft_p50_s = ttft.p(50.0);
     merged.ttft_p99_s = ttft.p(99.0);
@@ -223,7 +240,36 @@ fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) 
     merged.latency_p99_s = lat.p(99.0);
     merged.queue_mean_s = queue.mean();
     merged.queue_p99_s = queue.p(99.0);
-    merged.per_class = per_class;
+    merged.ttft_sketch = ttft;
+    merged.latency_sketch = lat;
+    merged.queue_sketch = queue;
+
+    // Per-class breakdown: merge each class's sketches across the
+    // replicas that saw it (keyed and emitted in class order, matching
+    // the single-engine report).
+    let mut classes: BTreeMap<u8, ClassStats> = BTreeMap::new();
+    for r in per {
+        for c in &r.per_class {
+            classes
+                .entry(c.class)
+                .and_modify(|m| {
+                    m.completed += c.completed;
+                    m.ttft.merge(&c.ttft);
+                    m.latency.merge(&c.latency);
+                })
+                .or_insert_with(|| c.clone());
+        }
+    }
+    merged.per_class = classes
+        .into_values()
+        .map(|mut c| {
+            c.ttft_p50_s = c.ttft.p(50.0);
+            c.ttft_p99_s = c.ttft.p(99.0);
+            c.latency_p50_s = c.latency.p(50.0);
+            c.latency_p99_s = c.latency.p(99.0);
+            c
+        })
+        .collect();
 
     merged.tokens_per_s = if merged.total_seconds > 0.0 {
         merged.gen_tokens as f64 / merged.total_seconds
@@ -273,6 +319,19 @@ fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) 
     merged
 }
 
+/// Derive a replica-local RNG seed from a fleet base seed. Splitmix64
+/// finalizer over `base ^ f(replica)`: deterministic, and avalanching,
+/// so replica streams decorrelate even for adjacent indices (a plain
+/// `seed ^ replica` would only flip low bits, which the workload LCG
+/// forgives slowly). Used by fleet drivers that give every replica its
+/// own arrival stream.
+pub fn replica_seed(base: u64, replica: usize) -> u64 {
+    let mut z = base ^ (replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Serve `workload` on `replicas` independent engine replicas, each the
 /// continuous batcher configured by `opts` — including its shard plan, so
 /// with `opts.plan.tp > 1` (or `pp > 1`) the fleet is N *sharded* replica
@@ -316,10 +375,23 @@ pub fn serve_replicated(
     let model = ServiceModel::new(cfg, fmt, platform, workload, opts.max_batch);
     let shards = route_workload(workload, replicas, policy, &model);
     let assigned: Vec<usize> = shards.iter().map(|w| w.len()).collect();
-    let per: Vec<ServeReport> = shards
-        .iter()
-        .map(|w| ContinuousBatcher::new(cfg, platform, fmt, opts).run(w))
-        .collect();
+    // One OS thread per replica engine (scoped: borrows the shards). The
+    // engines are deterministic and fully independent — each owns its KV
+    // pool, pricing memo, and prefix cache — so threading changes only
+    // wall-clock time. Handles are joined in replica-index order, and
+    // `merge_reports` folds in slice order, so the merged report is
+    // byte-identical to the old sequential map regardless of which
+    // thread finishes first.
+    let per: Vec<ServeReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = shards
+            .iter()
+            .map(|w| s.spawn(move || ContinuousBatcher::new(cfg, platform, fmt, opts).run(w)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica engine panicked"))
+            .collect()
+    });
     let merged = merge_reports(&per, fmt, platform);
     RouterReport {
         replicas,
@@ -399,6 +471,71 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.requests, y.requests);
         }
+    }
+
+    #[test]
+    fn replica_seed_deterministic_and_distinct() {
+        let seeds: Vec<u64> = (0..64).map(|r| replica_seed(42, r)).collect();
+        let again: Vec<u64> = (0..64).map(|r| replica_seed(42, r)).collect();
+        assert_eq!(seeds, again);
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "64 replicas -> 64 distinct seeds");
+        assert_ne!(replica_seed(42, 1), replica_seed(43, 1));
+        // Adjacent replicas differ in high bits too (avalanche, not xor).
+        let d = replica_seed(7, 0) ^ replica_seed(7, 1);
+        assert!(d.count_ones() > 8, "adjacent seeds too correlated: {d:#x}");
+    }
+
+    #[test]
+    fn threaded_fleet_is_deterministic_across_runs() {
+        // The replica engines run on threads; the merged fleet view must
+        // depend only on replica *index*, never on completion order.
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let w = Workload::synthetic(11, 32, (8, 48), (2, 10)).with_poisson_arrivals(5, 800.0);
+        let opts = BatcherConfig::new(4, 0);
+        let policy = RoutePolicy::JoinShortestQueue;
+        let a = serve_replicated(&cfg, &p, FpFormat::Fp32, opts, &w, 4, policy);
+        let b = serve_replicated(&cfg, &p, FpFormat::Fp32, opts, &w, 4, policy);
+        assert_eq!(a.assigned, b.assigned);
+        assert_eq!(a.per_replica, b.per_replica);
+        assert_eq!(a.merged, b.merged);
+    }
+
+    #[test]
+    fn merged_latency_view_matches_union_recompute_in_exact_mode() {
+        // Below the sketch spill limit, folding per-replica sketches must
+        // reproduce the old recompute-over-the-union bit-for-bit.
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let w = Workload::synthetic(13, 24, (8, 40), (2, 8)).with_poisson_arrivals(3, 600.0);
+        let opts = BatcherConfig::new(4, 0);
+        let fleet =
+            serve_replicated(&cfg, &p, FpFormat::Fp32, opts, &w, 4, RoutePolicy::JoinShortestQueue);
+        let (ttft, lat, queue, per_class) =
+            crate::coordinator::batcher::latency_aggregates(&fleet.merged.per_request);
+        assert!(fleet.merged.ttft_sketch.is_exact());
+        assert_eq!(fleet.merged.ttft_mean_s, ttft.mean());
+        assert_eq!(fleet.merged.ttft_p50_s, ttft.p(50.0));
+        assert_eq!(fleet.merged.ttft_p99_s, ttft.p(99.0));
+        assert_eq!(fleet.merged.latency_mean_s, lat.mean());
+        assert_eq!(fleet.merged.latency_p50_s, lat.p(50.0));
+        assert_eq!(fleet.merged.latency_p99_s, lat.p(99.0));
+        assert_eq!(fleet.merged.queue_mean_s, queue.mean());
+        assert_eq!(fleet.merged.queue_p99_s, queue.p(99.0));
+        let merged_classes: Vec<(u8, usize, f64, f64)> = fleet
+            .merged
+            .per_class
+            .iter()
+            .map(|c| (c.class, c.completed, c.ttft_p99_s, c.latency_p99_s))
+            .collect();
+        let union_classes: Vec<(u8, usize, f64, f64)> = per_class
+            .iter()
+            .map(|c| (c.class, c.completed, c.ttft_p99_s, c.latency_p99_s))
+            .collect();
+        assert_eq!(merged_classes, union_classes);
     }
 
     #[test]

@@ -11,7 +11,11 @@ use crate::parallel::{RankedPlan, RouterReport};
 /// parallelism-subsystem PR (prefix_late_hits, fused_first_tokens,
 /// decode counters, router reports). Version 3 = executed shard plans
 /// (tp/pp, collective_cycles, d2d_bytes — the serving TP tax).
-pub const SERVE_SCHEMA_VERSION: u32 = 3;
+/// Version 4 = the event-driven core (engine, arrival/pass event
+/// counters, pass-shape memo hits/misses; percentiles now come from
+/// streaming sketches — exact below the spill limit, so small-trace
+/// values are unchanged).
+pub const SERVE_SCHEMA_VERSION: u32 = 4;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -180,6 +184,19 @@ pub fn serve_table(r: &ServeReport) -> String {
             r.d2d_bytes as f64 / 1e9,
         );
     }
+    let pass_lookups = r.pass_cache_hits + r.pass_cache_misses;
+    let _ = writeln!(
+        s,
+        "  engine {}: {} arrivals, {} passes, pass-memo hit {:.1}%",
+        r.engine,
+        r.arrival_events,
+        r.pass_events,
+        if pass_lookups > 0 {
+            r.pass_cache_hits as f64 / pass_lookups as f64 * 100.0
+        } else {
+            0.0
+        },
+    );
     let _ = writeln!(
         s,
         "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB",
@@ -219,7 +236,9 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"prefix_hit_rate\":{},\"prefix_late_hits\":{},\"token_budget\":{},\
          \"budget_utilization\":{},\"fused_first_tokens\":{},\
          \"pricing_cache_hit_rate\":{},\"tp\":{},\"pp\":{},\
-         \"collective_cycles\":{},\"d2d_bytes\":{},\"per_class\":[{}]}}",
+         \"collective_cycles\":{},\"d2d_bytes\":{},\
+         \"engine\":\"{}\",\"arrival_events\":{},\"pass_events\":{},\
+         \"pass_cache_hits\":{},\"pass_cache_misses\":{},\"per_class\":[{}]}}",
         r.model,
         r.format,
         r.requests,
@@ -259,6 +278,11 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.pp,
         r.collective_cycles,
         r.d2d_bytes,
+        r.engine,
+        r.arrival_events,
+        r.pass_events,
+        r.pass_cache_hits,
+        r.pass_cache_misses,
         classes.join(",")
     )
 }
@@ -524,6 +548,15 @@ mod tests {
         assert_eq!(v.req("pp").unwrap().as_u64(), Some(1));
         assert_eq!(v.req("collective_cycles").unwrap().as_u64(), Some(0));
         assert_eq!(v.req("d2d_bytes").unwrap().as_u64(), Some(0));
+        // v4: event-core keys. The default engine is event-driven, every
+        // offered request raises an arrival, and every priced iteration
+        // raises a pass event.
+        assert_eq!(v.req("engine").unwrap().as_str(), Some("event"));
+        assert_eq!(v.req("arrival_events").unwrap().as_u64(), Some(4));
+        assert!(v.req("pass_events").unwrap().as_u64().unwrap() > 0);
+        let hits = v.req("pass_cache_hits").unwrap().as_u64().unwrap();
+        let misses = v.req("pass_cache_misses").unwrap().as_u64().unwrap();
+        assert_eq!(hits + misses, v.req("pass_events").unwrap().as_u64().unwrap());
     }
 
     #[test]

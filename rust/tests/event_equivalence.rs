@@ -1,0 +1,186 @@
+//! Event-core equivalence: the event-heap run loop (`EngineMode::Event`)
+//! must reproduce the legacy per-iteration loop (`EngineMode::Iteration`)
+//! **bit-for-bit** — same completion order, same cycle stamps, same
+//! priced work, same scheduler counters, same exact-mode percentiles —
+//! across everything the scheduler can do: priority classes, aging,
+//! Poisson arrivals, shared prefixes, chunked prefill, token-budget
+//! mixed passes, legacy full reservation, and tp/pp shard plans. The
+//! only allowed differences are the engine label and the pass-shape
+//! memo counters (the iteration loop never arms the memo), which
+//! `ServeReport::same_outcome` masks explicitly.
+
+mod common;
+
+use common::Rng;
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{
+    BatcherConfig, ContinuousBatcher, EngineMode, ServeReport, Workload,
+};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::parallel::ShardPlan;
+
+fn run_engine(
+    cfg: &ModelConfig,
+    p: &PlatformConfig,
+    mut opts: BatcherConfig,
+    w: &Workload,
+    engine: EngineMode,
+) -> ServeReport {
+    opts.engine = engine;
+    ContinuousBatcher::new(cfg, p, FpFormat::Fp32, opts).run(w)
+}
+
+/// Assert the full equivalence contract between the two engines on one
+/// trace, including the invariants on the fields `same_outcome` masks.
+fn assert_engines_agree(
+    cfg: &ModelConfig,
+    p: &PlatformConfig,
+    opts: BatcherConfig,
+    w: &Workload,
+    label: &str,
+) {
+    let ev = run_engine(cfg, p, opts, w, EngineMode::Event);
+    let it = run_engine(cfg, p, opts, w, EngineMode::Iteration);
+    assert_eq!(ev.engine, "event");
+    assert_eq!(it.engine, "iter");
+    assert!(
+        ev.same_outcome(&it),
+        "{label}: event and iteration reports diverge\n\
+         event: completed {} cycles {} work {:?}\n\
+         iter:  completed {} cycles {} work {:?}",
+        ev.completed,
+        ev.total_cycles,
+        ev.work,
+        it.completed,
+        it.total_cycles,
+        it.work,
+    );
+    // The per-layer pricing memo must see the identical lookup stream:
+    // pass-shape memo hits replay their per-layer lookups as credited
+    // hits, so these counters cannot drift between engines.
+    assert_eq!(ev.pricing_cache_hits, it.pricing_cache_hits, "{label}");
+    assert_eq!(ev.pricing_cache_misses, it.pricing_cache_misses, "{label}");
+    // Event accounting: one arrival per offered request, one pass event
+    // per priced iteration, every pass either a memo hit or miss.
+    assert_eq!(ev.arrival_events, it.arrival_events, "{label}");
+    assert_eq!(ev.pass_events, it.pass_events, "{label}");
+    assert_eq!(
+        ev.pass_cache_hits + ev.pass_cache_misses,
+        ev.pass_events,
+        "{label}"
+    );
+    assert_eq!(it.pass_cache_hits + it.pass_cache_misses, 0, "{label}");
+    // Exact-mode percentiles (all traces here are far below the sketch
+    // spill limit) and the per-request detail match bitwise.
+    assert!(ev.latency_sketch.is_exact(), "{label}");
+    assert_eq!(ev.per_request, it.per_request, "{label}");
+}
+
+#[test]
+fn event_core_matches_legacy_on_randomized_traces() {
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng(0xE7E47);
+    for trial in 0..14 {
+        let n = rng.next(6, 24) as usize;
+        let mut w = Workload::synthetic(rng.next(1, 1 << 30), n, (4, 64), (1, 16));
+        if rng.next(0, 1) == 1 {
+            w = w.with_shared_prefix(rng.next(16, 48), rng.next(2, 4) as usize);
+        }
+        if rng.next(0, 1) == 1 {
+            w = w.with_priority_classes(rng.next(2, 3) as u8);
+        }
+        if rng.next(0, 1) == 1 {
+            w = w.with_poisson_arrivals(rng.next(1, 999), rng.next(100, 5000) as f64);
+        }
+        let mut opts = BatcherConfig::new(rng.next(2, 6) as usize, 0);
+        if rng.next(0, 1) == 1 {
+            opts.prefill_chunk = rng.next(8, 32);
+        }
+        if rng.next(0, 1) == 1 {
+            opts.token_budget = rng.next(16, 64);
+        }
+        if rng.next(0, 1) == 1 {
+            opts.reserve_full = true;
+        }
+        if rng.next(0, 1) == 1 {
+            opts.aging_promote_s = 0.001;
+        }
+        assert_engines_agree(&cfg, &p, opts, &w, &format!("trial {trial}"));
+    }
+}
+
+#[test]
+fn event_core_matches_legacy_under_shard_plans() {
+    // tp/pp passes price through `plan_pass_cost` (rank-local layers +
+    // collectives) instead of the plain mixed pricing; the pass memo
+    // must stay value-transparent there too.
+    let cfg = ModelConfig::tiny(); // 2 blocks, 4 heads: tp=2 and pp=2 legal
+    let p = PlatformConfig::with_dies(4);
+    let w = Workload::synthetic(21, 12, (8, 48), (2, 10))
+        .with_poisson_arrivals(5, 1500.0);
+    for (tp, pp) in [(2u32, 1u32), (1, 2), (2, 2)] {
+        let mut opts = BatcherConfig::new(4, 0);
+        opts.plan = ShardPlan { tp, pp, replicas: 1 };
+        assert_engines_agree(&cfg, &p, opts, &w, &format!("tp={tp} pp={pp}"));
+    }
+}
+
+#[test]
+fn event_core_matches_legacy_under_preemption_pressure() {
+    // A page pool far too small for the offered load forces admissions,
+    // growth failures, and recompute preemptions; the event loop must
+    // replay the exact same victim choices and requeue order.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = Workload::synthetic(31, 16, (32, 128), (8, 32));
+    // ~1 KiB/token of KV for the tiny model in fp32: a 256 KiB pool
+    // holds one or two in-flight requests of this size distribution, so
+    // admission keeps failing and growth keeps evicting.
+    let mut opts = BatcherConfig::new(6, 256 * 1024);
+    opts.page_tokens = 8;
+    assert_engines_agree(&cfg, &p, opts, &w, "preemption pressure");
+}
+
+#[test]
+fn serve_stream_matches_materialized_run() {
+    // The lazy arrival stream through `serve_stream` must land exactly
+    // where materializing the same stream and running the event loop
+    // over the queue does — full report equality, engine field included.
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::tiny();
+    let opts = BatcherConfig::new(4, 0);
+    let stream = Workload::stream_poisson(3, 2000.0, 40, 24, 8).with_priority_classes(2);
+    let w = Workload::stream_poisson(3, 2000.0, 40, 24, 8)
+        .with_priority_classes(2)
+        .materialize();
+    let streamed = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts).serve_stream(stream);
+    let materialized = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts).run(&w);
+    assert_eq!(streamed, materialized);
+    assert_eq!(streamed.requests, 40);
+    assert_eq!(streamed.engine, "event");
+}
+
+#[test]
+fn idle_gaps_cost_no_passes() {
+    // Sparse arrivals (one request every ~10 ms of simulated time, each
+    // finishing long before the next lands): the event core must price
+    // exactly the passes the requests need — the idle wall-clock between
+    // arrivals shows up in total_cycles but in no per-pass counter — and
+    // still agree with the legacy loop bit-for-bit.
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::tiny();
+    let w = Workload::uniform(8, 16, 4).with_poisson_arrivals(9, 100.0);
+    let opts = BatcherConfig::new(4, 0);
+    assert_engines_agree(&cfg, &p, opts, &w, "sparse arrivals");
+    let ev = run_engine(&cfg, &p, opts, &w, EngineMode::Event);
+    // Uniform lengths + batch-of-one service: after the first request's
+    // passes are priced, every later request replays memoized shapes.
+    assert!(ev.pass_cache_hits > 0, "repeat shapes must hit the memo");
+    assert!(
+        ev.pass_cache_misses < ev.pass_events / 2,
+        "uniform sparse trace should be memo-dominated: {} misses / {} passes",
+        ev.pass_cache_misses,
+        ev.pass_events
+    );
+}

@@ -11,6 +11,11 @@ JSON object that carries serving metrics, the script compares:
   * tokens_per_s            — lower is worse (regression if -10%)
   * ttft_p99_s              — higher is worse (regression if +10%)
 
+A relative drop only counts as a regression when the absolute change
+also clears the metric's noise floor (FLOORS below): tiny smoke configs
+report tiny absolute values where a sub-floor wiggle can read as a
+double-digit percentage. Sub-floor changes are logged informationally.
+
 Regressions are emitted as GitHub Actions ::warning annotations
 (advisory: the exit code is 0 unless BENCH_TREND_STRICT=1), improvements
 and unchanged metrics as plain log lines. Entries are keyed by
@@ -33,6 +38,11 @@ from pathlib import Path
 THRESHOLD = 0.10
 # metric name -> True when larger values are better
 METRICS = {"tokens_per_s": True, "ttft_p99_s": False}
+# metric name -> absolute change below which a relative move is treated
+# as noise, never a regression. Smoke-mode sweeps include configs with
+# single-digit tokens/s and sub-millisecond TTFTs, where a last-ulp or
+# rounding change clears the 10% bar without meaning anything.
+FLOORS = {"tokens_per_s": 5.0, "ttft_p99_s": 1e-4}
 
 
 def find_bench_files(root):
@@ -112,7 +122,10 @@ def main():
             change = (new - old) / old
             worse = -change if METRICS[metric] else change
             arrow = f"{old:.4g} -> {new:.4g} ({change:+.1%})"
-            if worse > THRESHOLD:
+            if worse > THRESHOLD and abs(new - old) < FLOORS.get(metric, 0.0):
+                print(f"bench-trend: {name}{where} {metric} {arrow} "
+                      f"below noise floor ({FLOORS[metric]:g}), ignored")
+            elif worse > THRESHOLD:
                 regressions.append((name, where, metric, arrow))
                 print(f"::warning file={name}::bench-trend regression: "
                       f"{name}{where} {metric} {arrow}")
