@@ -1,0 +1,200 @@
+//! Disaggregated prefill/decode serving: the PR-7 headline claim.
+//!
+//! On a mixed trace — one third long-prefill summarization requests
+//! (prompt 256–512, gen 4–8) interleaved with chatty decode-heavy
+//! requests (prompt 16–32, gen 64–128) under open-loop Poisson arrivals
+//! — a symmetric fleet suffers at the tail: whenever a 512-token prefill
+//! pass lands on a die, every co-resident chatty request's next token
+//! waits behind it, inflating p99 TPOT. Splitting the same dies into
+//! dedicated prefill and decode stages isolates the decode pace: the
+//! decode dies never run a prefill pass (each prompt's KV pages arrive
+//! pre-migrated over the die-to-die links), so their inter-token gaps
+//! stay uniform.
+//!
+//! Claims defended here:
+//!
+//! 1. **Tail isolation.** The best prefill/decode split of 4 dies beats
+//!    the 4-replica symmetric fleet on p99 TPOT for this trace, at equal
+//!    die count, with every migration priced on the die-to-die link.
+//! 2. **`--disagg off` is inert.** The symmetric path PR 7 leaves behind
+//!    is bit-identical to the PR-6 engine: event vs legacy core
+//!    `same_outcome` on this trace, and the `--no-per-request` opt-out
+//!    changes only the per-request payload, never the schedule.
+//!
+//! Short mode (`BENCH_SMOKE=1`) serves 240 requests instead of 960; with
+//! `BENCH_JSON_DIR` set the results land in `BENCH_disagg.json`
+//! (tpot_p99_ratio / split_tpot_p99_s are trend-tracked).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, ContinuousBatcher, EngineMode, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::parallel::{
+    rank_fleet_splits, serve_disaggregated, serve_replicated, RoutePolicy,
+};
+
+const SEED: u64 = 0xD15A66;
+const DIES: usize = 4;
+
+/// One third long-prefill requests interleaved with chatty decode-heavy
+/// requests, Poisson arrivals. Deterministic from `SEED`.
+fn mixed_trace(n: usize, rate_per_s: f64) -> Workload {
+    let long = Workload::synthetic(SEED, n, (256, 512), (4, 8));
+    let chat = Workload::synthetic(SEED ^ 0xC4A7, n, (16, 32), (64, 128));
+    let requests = (0..n)
+        .map(|id| {
+            let mut r = if id % 3 == 0 {
+                long.requests[id].clone()
+            } else {
+                chat.requests[id].clone()
+            };
+            r.id = id;
+            r
+        })
+        .collect();
+    Workload { requests }.with_poisson_arrivals(SEED, rate_per_s)
+}
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let fmt = FpFormat::Fp8;
+    let platform = PlatformConfig::with_dies(DIES as u32);
+    let n = if common::smoke() { 240 } else { 960 };
+    let rate = 3_000.0;
+    let workload = mixed_trace(n, rate);
+    let opts = BatcherConfig::new(8, 0);
+    let policy = RoutePolicy::JoinShortestQueue;
+
+    // ---- Part 1: split fleet vs symmetric fleet at equal dies ----
+    let (t_sym, sym) = common::time_median(3, || {
+        serve_replicated(&cfg, &platform, fmt, opts, &workload, DIES, policy)
+    });
+    assert_eq!(sym.merged.completed, n, "symmetric fleet must serve the whole trace");
+
+    let ranking = rank_fleet_splits(&cfg, fmt, &platform, &workload, opts.max_batch, DIES);
+    let modeled = ranking.splits.first().expect("4 dies admit at least one split");
+
+    let mut best = None;
+    let mut t_best = 0.0;
+    for prefill in 1..DIES {
+        let decode = DIES - prefill;
+        let (t, r) = common::time_median(3, || {
+            serve_disaggregated(&cfg, &platform, fmt, opts, &workload, prefill, decode, policy)
+        });
+        assert_eq!(r.completed, n, "split {prefill}:{decode} must serve the whole trace");
+        assert_eq!(r.migrations, n as u64, "every generating request hands off once");
+        assert_eq!(r.decode.kv_imports, n as u64);
+        assert_eq!(
+            r.decode.prefill_tokens, 0,
+            "decode dies must never run a prefill pass"
+        );
+        assert!(r.migrated_kv_bytes > 0 && r.migration_cycles > 0);
+        let better = match &best {
+            None => true,
+            Some((b, _)) => r.tpot_p99_s < b.tpot_p99_s,
+        };
+        if better {
+            best = Some((r, prefill));
+            t_best = t;
+        }
+    }
+    let (split, split_prefill) = best.expect("at least one split evaluated");
+
+    common::header(
+        "disagg serving",
+        "mixed long-prefill/chatty trace: prefill/decode split vs symmetric, 4 dies",
+    );
+    println!(
+        "{n} requests, {} prompt tokens, {} gen tokens, {rate:.0} req/s offered",
+        workload.total_prompt_tokens(),
+        workload.total_gen_tokens()
+    );
+    println!(
+        "symmetric {DIES}x1: TPOT p50 {:.6} p99 {:.6}  TTFT p99 {:.4}",
+        sym.merged.tpot_p50_s, sym.merged.tpot_p99_s, sym.merged.ttft_p99_s
+    );
+    println!(
+        "split {}p+{}d:    TPOT p50 {:.6} p99 {:.6}  TTFT p99 {:.4}  \
+         ({} migrations, {:.1} MiB over d2d links)",
+        split.prefill_replicas,
+        split.decode_replicas,
+        split.tpot_p50_s,
+        split.tpot_p99_s,
+        split.ttft_p99_s,
+        split.migrations,
+        split.migrated_kv_bytes as f64 / (1 << 20) as f64
+    );
+    println!(
+        "planner pick: {}p+{}d ({}-bound, {:.1} req/s modeled); measured best: {}p+{}d",
+        modeled.prefill,
+        modeled.decode,
+        modeled.bottleneck,
+        modeled.rate,
+        split_prefill,
+        DIES - split_prefill
+    );
+    common::report_timing("disagg-split", t_best);
+    common::report_timing("disagg-symmetric", t_sym);
+
+    let ratio = split.tpot_p99_s / sym.merged.tpot_p99_s;
+    assert!(
+        split.tpot_p99_s < sym.merged.tpot_p99_s,
+        "the split fleet must beat the symmetric fleet on p99 TPOT at equal dies: \
+         split {:.6}s vs symmetric {:.6}s",
+        split.tpot_p99_s,
+        sym.merged.tpot_p99_s
+    );
+    println!("p99 TPOT ratio (split/symmetric): {ratio:.3}");
+
+    // ---- Part 2: the `--disagg off` path is bit-identical to PR 6 ----
+    // (a) The event core still reproduces the legacy loop on this trace.
+    let mut ev_opts = opts;
+    ev_opts.engine = EngineMode::Event;
+    let mut it_opts = opts;
+    it_opts.engine = EngineMode::Iteration;
+    let ev = ContinuousBatcher::new(&cfg, &platform, fmt, ev_opts).run(&workload);
+    let it = ContinuousBatcher::new(&cfg, &platform, fmt, it_opts).run(&workload);
+    assert!(
+        ev.same_outcome(&it),
+        "disagg off: event core must reproduce the legacy loop bit-for-bit"
+    );
+    // (b) The symmetric fleet is deterministic across runs.
+    let again = serve_replicated(&cfg, &platform, fmt, opts, &workload, DIES, policy);
+    assert!(
+        again.merged.same_outcome(&sym.merged),
+        "symmetric serving must be deterministic"
+    );
+    // (c) `--no-per-request` drops only the per-request payload.
+    let mut lean_opts = opts;
+    lean_opts.per_request = false;
+    let mut lean =
+        serve_replicated(&cfg, &platform, fmt, lean_opts, &workload, DIES, policy).merged;
+    assert!(lean.per_request.is_empty(), "opt-out must empty the per-request vec");
+    lean.per_request = sym.merged.per_request.clone();
+    assert!(
+        lean.same_outcome(&sym.merged),
+        "--no-per-request must change aggregates and schedule in no way"
+    );
+    println!("disagg off: event==legacy, deterministic, per-request opt-out inert");
+
+    common::write_bench_json(
+        "disagg",
+        &format!(
+            "{{\"requests\":{n},\"dies\":{DIES},\"split_prefill\":{},\
+             \"split_decode\":{},\"split_tpot_p99_s\":{},\"symmetric_tpot_p99_s\":{},\
+             \"tpot_p99_ratio\":{ratio},\"split_ttft_p99_s\":{},\
+             \"symmetric_ttft_p99_s\":{},\"migrations\":{},\"migrated_kv_bytes\":{},\
+             \"migration_cycles\":{}}}",
+            split.prefill_replicas,
+            split.decode_replicas,
+            split.tpot_p99_s,
+            sym.merged.tpot_p99_s,
+            split.ttft_p99_s,
+            sym.merged.ttft_p99_s,
+            split.migrations,
+            split.migrated_kv_bytes,
+            split.migration_cycles,
+        ),
+    );
+}

@@ -53,7 +53,9 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::arch::{FpFormat, PlatformConfig};
-use crate::coordinator::kv_paging::{KvGeometry, PagedKvAllocator, PageTable, PrefixCache};
+use crate::coordinator::kv_paging::{
+    KvExport, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
+};
 use crate::coordinator::schedule::LayerCostCache;
 use crate::coordinator::workload::{Request, Workload};
 use crate::energy;
@@ -87,6 +89,7 @@ impl EngineMode {
         }
     }
 
+    /// Stable label reported as `ServeReport::engine`.
     pub const fn name(self) -> &'static str {
         match self {
             EngineMode::Event => "event",
@@ -140,6 +143,12 @@ pub struct BatcherConfig {
     /// Serving core (see [`EngineMode`]); reports are bit-identical
     /// either way, so this is purely a simulator-performance knob.
     pub engine: EngineMode,
+    /// Emit the full [`ServeReport::per_request`] detail vector. `false`
+    /// (`serve --no-per-request`) drops it after the aggregates are
+    /// computed — million-request fleet traces then cost O(1) report
+    /// memory instead of O(trace). Every aggregate, sketch, and counter
+    /// is unchanged either way.
+    pub per_request: bool,
 }
 
 impl BatcherConfig {
@@ -159,6 +168,7 @@ impl BatcherConfig {
             token_budget: 0,
             plan: ShardPlan::single(),
             engine: EngineMode::Event,
+            per_request: true,
         }
     }
 }
@@ -168,9 +178,13 @@ impl BatcherConfig {
 /// absolute trace time, PR 1's convention).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestStats {
+    /// Request id (stable across engines and replicas).
     pub id: usize,
+    /// Static priority class the request arrived with.
     pub class: u8,
+    /// Prompt tokens materialized before decode.
     pub prompt_len: u64,
+    /// Tokens the request generated.
     pub gen_tokens: u64,
     /// Absolute arrival time, seconds.
     pub arrival_s: f64,
@@ -189,58 +203,90 @@ pub struct RequestStats {
 /// Latency percentiles of one priority class.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClassStats {
+    /// Priority class these aggregates cover.
     pub class: u8,
+    /// Requests of this class completed.
     pub completed: usize,
+    /// Median time-to-first-token, seconds.
     pub ttft_p50_s: f64,
+    /// 99th-percentile time-to-first-token, seconds.
     pub ttft_p99_s: f64,
+    /// Median end-to-end latency, seconds.
     pub latency_p50_s: f64,
+    /// 99th-percentile end-to-end latency, seconds.
     pub latency_p99_s: f64,
-    /// Streaming sample sketches behind the scalar percentiles; the
-    /// replica router merges these instead of re-walking the union of
+    /// Streaming sample sketch behind the TTFT percentiles; the replica
+    /// router merges these instead of re-walking the union of
     /// per-request stats.
     pub ttft: StreamSketch,
+    /// Streaming sample sketch behind the latency percentiles.
     pub latency: StreamSketch,
 }
 
 /// Everything the serving run reports.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeReport {
+    /// Model name served.
     pub model: String,
+    /// Serving precision name (`"fp32"`, `"fp8"`, ...).
     pub format: &'static str,
-    /// Requests offered / completed; ids rejected because a single KV
-    /// cache can never fit the page pool (plus, as a release-build
-    /// diagnostic only, a job abandoned by the unreachable lone-resident
-    /// stall guard).
+    /// Requests offered to the scheduler.
     pub requests: usize,
+    /// Requests served to completion.
     pub completed: usize,
+    /// Ids rejected because a single KV cache can never fit the page
+    /// pool (plus, as a release-build diagnostic only, a job abandoned
+    /// by the unreachable lone-resident stall guard).
     pub rejected: Vec<usize>,
+    /// Batch-slot cap the run was configured with.
     pub max_batch: usize,
+    /// HBM bytes the KV page pool was carved from.
     pub kv_budget_bytes: u64,
-    /// Paged-allocator geometry: tokens per page / pages in the pool.
+    /// Paged-allocator geometry: tokens per page.
     pub page_tokens: u64,
+    /// Pages in the pool (`kv_budget_bytes / page_bytes`).
     pub total_pages: u64,
     /// High-water mark of mapped KV bytes (must stay <= budget; shared
     /// prefix pages count once, cached-but-idle pages count until
     /// evicted).
     pub peak_kv_bytes: u64,
+    /// Wall-clock of the whole trace, cycles.
     pub total_cycles: u64,
+    /// Wall-clock of the whole trace, seconds.
     pub total_seconds: f64,
     /// Prompt tokens prefilled, including recompute after preemption and
     /// excluding prefix-cache hits.
     pub prefill_tokens: u64,
     /// Prefill NAR passes issued (chunks).
     pub prefill_chunks: u64,
+    /// Tokens generated across completed requests.
     pub gen_tokens: u64,
     /// Preemptions (a resident request evicted for pages).
     pub preemptions: u64,
+    /// Mean time-to-first-token, seconds (generating requests only).
     pub ttft_mean_s: f64,
+    /// Median time-to-first-token, seconds.
     pub ttft_p50_s: f64,
+    /// 99th-percentile time-to-first-token, seconds.
     pub ttft_p99_s: f64,
+    /// Mean end-to-end request latency, seconds.
     pub latency_mean_s: f64,
+    /// Median end-to-end request latency, seconds.
     pub latency_p50_s: f64,
+    /// 99th-percentile end-to-end request latency, seconds.
     pub latency_p99_s: f64,
-    /// Admission delay (arrival -> admission) aggregates.
+    /// Mean time-per-output-token, seconds: per-request decode pace
+    /// `(latency - ttft) / (gen_tokens - 1)` over requests generating at
+    /// least two tokens — the SLO decode-side percentiles, split from
+    /// TTFT exactly as disaggregated serving splits the phases.
+    pub tpot_mean_s: f64,
+    /// Median time-per-output-token, seconds.
+    pub tpot_p50_s: f64,
+    /// 99th-percentile time-per-output-token, seconds.
+    pub tpot_p99_s: f64,
+    /// Mean admission delay (arrival -> first admission), seconds.
     pub queue_mean_s: f64,
+    /// 99th-percentile admission delay, seconds.
     pub queue_p99_s: f64,
     /// Aggregate generated tokens / total wall-clock.
     pub tokens_per_s: f64,
@@ -248,17 +294,21 @@ pub struct ServeReport {
     /// shares its passes with prefill chunks, so the denominator covers
     /// every pass that advanced at least one decode token.
     pub decode_tokens_per_s: f64,
-    /// Raw counters behind `decode_tokens_per_s` / `avg_batch_occupancy`:
-    /// decode tokens advanced, cycles of decode-carrying passes, and
-    /// decode-carrying passes run (the replica router merges them).
+    /// Decode tokens advanced (raw counter behind `decode_tokens_per_s`
+    /// and `avg_batch_occupancy`; the replica router merges these).
     pub decode_tokens: u64,
+    /// Cycles spent in decode-carrying passes.
     pub decode_cycles: u64,
+    /// Decode-carrying passes run.
     pub decode_steps: u64,
     /// Mean decode batch occupancy (decode tokens per decode-carrying
     /// pass).
     pub avg_batch_occupancy: f64,
+    /// Mean FPU utilization over every priced pass.
     pub fpu_utilization: f64,
+    /// Mean power draw over the trace, watts.
     pub power_w: f64,
+    /// HBM traffic the trace moved, gigabytes.
     pub hbm_gb: f64,
     /// Whether prefix caching was active for this run.
     pub prefix_cache: bool,
@@ -283,18 +333,27 @@ pub struct ServeReport {
     pub fused_first_tokens: u64,
     /// Fraction of layer-pricing lookups served by the memo.
     pub pricing_cache_hit_rate: f64,
-    /// Raw memo counters behind `pricing_cache_hit_rate` (the router
-    /// recomputes the fleet rate from these, never from the rates).
+    /// Layer-pricing memo hits (the router recomputes the fleet rate
+    /// from these raw counters, never from the rates).
     pub pricing_cache_hits: u64,
+    /// Layer-pricing memo misses.
     pub pricing_cache_misses: u64,
-    /// Raw counters behind `budget_utilization`: tokens claimed /
-    /// budgeted iterations run in token-budget mode.
+    /// Budget tokens claimed in token-budget mode (raw counter behind
+    /// `budget_utilization`).
     pub budget_tokens: u64,
+    /// Budgeted mixed iterations run in token-budget mode.
     pub budget_iterations: u64,
-    /// Shard plan this engine executed (`tp = pp = 1` is the single-die
-    /// engine, whose report is bit-identical to before shard plans
-    /// existed).
+    /// Requests admitted with pre-migrated KV (disaggregated serving:
+    /// the prompt's pages were prefilled on another die and imported
+    /// here, so the request entered decode with zero prefill passes).
+    pub kv_imports: u64,
+    /// Prompt tokens those imports materialized without prefill.
+    pub imported_kv_tokens: u64,
+    /// Tensor-parallel degree of the shard plan this engine executed
+    /// (`tp = pp = 1` is the single-die engine, whose report is
+    /// bit-identical to before shard plans existed).
     pub tp: u32,
+    /// Pipeline-parallel degree of the executed shard plan.
     pub pp: u32,
     /// Cycles inside TP all-reduces and PP activation sends across the
     /// whole trace (0 on the single-die engine) — the communication share
@@ -314,18 +373,26 @@ pub struct ServeReport {
     /// Priced passes completed (prefill chunks, decode steps, and fused
     /// mixed iterations all count once); identical across engines.
     pub pass_events: u64,
-    /// Pass-shape memo hits/misses (event core only; 0/0 on the
-    /// iteration core, which prices every pass through the layer memo).
+    /// Pass-shape memo hits (event core only; 0 on the iteration core,
+    /// which prices every pass through the layer memo).
     pub pass_cache_hits: u64,
+    /// Pass-shape memo misses (event core only).
     pub pass_cache_misses: u64,
-    /// Streaming sketches behind the TTFT / latency / queue percentile
-    /// scalars: exact below [`crate::metrics::sketch::EXACT_LIMIT`]
-    /// samples, ~1% relative error above, mergeable across replicas.
+    /// Streaming sketch behind the TTFT percentile scalars: exact below
+    /// [`crate::metrics::sketch::EXACT_LIMIT`] samples, ~1% relative
+    /// error above, mergeable across replicas.
     pub ttft_sketch: StreamSketch,
+    /// Streaming sketch behind the latency percentiles.
     pub latency_sketch: StreamSketch,
+    /// Streaming sketch behind the time-per-output-token percentiles.
+    pub tpot_sketch: StreamSketch,
+    /// Streaming sketch behind the queue-wait percentiles.
     pub queue_sketch: StreamSketch,
     /// Per-priority-class percentiles (one entry per class present).
     pub per_class: Vec<ClassStats>,
+    /// Per-request detail, sorted by id. Empty when
+    /// [`BatcherConfig::per_request`] is off (the aggregates above are
+    /// computed first and are unchanged).
     pub per_request: Vec<RequestStats>,
 }
 
@@ -343,22 +410,28 @@ impl ServeReport {
     }
 }
 
-/// TTFT / latency / queue-wait percentile sets plus the per-class
+/// TTFT / latency / TPOT / queue-wait percentile sets plus the per-class
 /// breakdown over a set of per-request outcomes. TTFT is defined over
 /// generated tokens: prefill-only requests (`gen_tokens == 0`) never
 /// produce one, so they are excluded from the TTFT aggregates (their
-/// per-request `ttft_s` equals prefill completion). Shared by the
-/// single-engine [`ContinuousBatcher`] report and the replica router's
-/// merged fleet view, so the two can never drift apart.
+/// per-request `ttft_s` equals prefill completion). TPOT — the decode
+/// pace `(latency - ttft) / (gen_tokens - 1)` — needs at least two
+/// generated tokens to be defined. Shared by the single-engine
+/// [`ContinuousBatcher`] report and the replica router's merged fleet
+/// view, so the two can never drift apart.
 pub(crate) fn latency_aggregates(
     done: &[RequestStats],
-) -> (StreamSketch, StreamSketch, StreamSketch, Vec<ClassStats>) {
+) -> (StreamSketch, StreamSketch, StreamSketch, StreamSketch, Vec<ClassStats>) {
     let mut ttft = StreamSketch::new();
     let mut lat = StreamSketch::new();
+    let mut tpot = StreamSketch::new();
     let mut queue = StreamSketch::new();
     for r in done {
         if r.gen_tokens > 0 {
             ttft.push(r.ttft_s);
+        }
+        if r.gen_tokens > 1 {
+            tpot.push((r.latency_s - r.ttft_s) / (r.gen_tokens - 1) as f64);
         }
         lat.push(r.latency_s);
         queue.push(r.admitted_s);
@@ -389,7 +462,7 @@ pub(crate) fn latency_aggregates(
             }
         })
         .collect();
-    (ttft, lat, queue, per_class)
+    (ttft, lat, tpot, queue, per_class)
 }
 
 /// A request's scheduler-side state that survives preemption.
@@ -437,10 +510,32 @@ impl ActiveJob {
 }
 
 /// Prices a serving trace over one model/platform/precision.
+///
+/// ```
+/// use snitch_fm::arch::{FpFormat, PlatformConfig};
+/// use snitch_fm::coordinator::{BatcherConfig, ContinuousBatcher, Workload};
+/// use snitch_fm::model::ModelConfig;
+///
+/// let cfg = ModelConfig::tiny();
+/// let platform = PlatformConfig::occamy();
+/// let batcher = ContinuousBatcher::new(
+///     &cfg,
+///     &platform,
+///     FpFormat::Fp32,
+///     BatcherConfig::new(4, 0), // 4 slots, platform KV budget
+/// );
+/// let report = batcher.run(&Workload::uniform(6, 16, 8));
+/// assert_eq!(report.completed, 6);
+/// assert!(report.tokens_per_s > 0.0);
+/// ```
 pub struct ContinuousBatcher<'a> {
+    /// Model being served.
     pub cfg: &'a ModelConfig,
+    /// Platform pricing every pass.
     pub platform: &'a PlatformConfig,
+    /// Serving precision.
     pub fmt: FpFormat,
+    /// Scheduling policy (budget resolved by [`Self::new`]).
     pub opts: BatcherConfig,
 }
 
@@ -649,6 +744,10 @@ struct RunCounters {
     prefix_late_hits: u64,
     /// Cycles inside TP all-reduces / PP sends (sharded plans only).
     collective_cycles: u64,
+    /// Requests admitted with pre-migrated KV / prompt tokens those
+    /// imports materialized without prefill (disaggregated decode dies).
+    kv_imports: u64,
+    imported_kv_tokens: u64,
     /// First tokens emitted from prefill-completing fused passes.
     fused_first_tokens: u64,
     /// Tokens claimed / iterations run in token-budget mode.
@@ -1091,7 +1190,16 @@ impl<'a> ContinuousBatcher<'a> {
                 .min_by_key(|&i| Self::sched_key(&st.ready[i], st.time, aging_cycles))
                 .unwrap();
             let geom = st.alloc.geometry();
-            let page_hashes = if self.prefix_caching() {
+            // Disaggregated handoff: a request whose prompt KV migrated in
+            // from a prefill die materializes the imported pages at
+            // admission and enters decode directly — no prefill passes, no
+            // prefix probing (the migrated copy is private; crediting it
+            // to the cache would misattribute the migration's savings).
+            // After a preemption the imported copy is gone, so the request
+            // recomputes like any other (this die holds full weights).
+            let imported =
+                st.ready[best].req.kv_imported && st.ready[best].preemptions == 0;
+            let page_hashes = if self.prefix_caching() && !imported {
                 st.ready[best].req.prompt_page_hashes(geom.page_tokens)
             } else {
                 Vec::new()
@@ -1132,13 +1240,31 @@ impl<'a> ContinuousBatcher<'a> {
                 );
                 debug_assert!(reserved, "admission check guarantees the reservation");
             }
+            let start_tokens = if imported {
+                let manifest = KvExport {
+                    tokens: job.prefill_target,
+                    pages: geom.pages_for(job.prefill_target),
+                    bytes: geom.pages_for(job.prefill_target) * geom.page_bytes(),
+                };
+                if !self.opts.reserve_full {
+                    // Under reserve_full the reservation above already
+                    // mapped the prompt pages (and the decode tail).
+                    let mapped = st.alloc.import(&mut table, &manifest);
+                    debug_assert!(mapped, "admission check sized the import");
+                }
+                st.c.kv_imports += 1;
+                st.c.imported_kv_tokens += manifest.tokens;
+                job.prefill_target
+            } else {
+                hit_tokens
+            };
             if job.first_admitted_cycle.is_none() {
                 job.first_admitted_cycle = Some(st.time);
             }
             st.active.push(ActiveJob {
                 job,
-                prefill_done: hit_tokens,
-                kv_len: hit_tokens,
+                prefill_done: start_tokens,
+                kv_len: start_tokens,
                 table,
                 page_hashes,
                 registered: attached,
@@ -1581,7 +1707,7 @@ impl<'a> ContinuousBatcher<'a> {
         // Sketch-backed aggregates: exact (bit-identical to the sorted
         // sample vectors of PR 3-5) below the sketch's reservoir limit,
         // ~1%-error log-histograms above it.
-        let (ttft, lat, queue, per_class) = latency_aggregates(&done);
+        let (ttft, lat, tpot, queue, per_class) = latency_aggregates(&done);
         let total_seconds = self.platform.cycles_to_seconds(time);
         let decode_seconds = self.platform.cycles_to_seconds(c.decode_cycles);
         let gen_tokens: u64 = done.iter().map(|r| r.gen_tokens).sum();
@@ -1618,6 +1744,9 @@ impl<'a> ContinuousBatcher<'a> {
             latency_mean_s: lat.mean(),
             latency_p50_s: lat.p(50.0),
             latency_p99_s: lat.p(99.0),
+            tpot_mean_s: tpot.mean(),
+            tpot_p50_s: tpot.p(50.0),
+            tpot_p99_s: tpot.p(99.0),
             queue_mean_s: queue.mean(),
             queue_p99_s: queue.p(99.0),
             tokens_per_s: per_s(gen_tokens, total_seconds),
@@ -1654,6 +1783,8 @@ impl<'a> ContinuousBatcher<'a> {
             pricing_cache_misses: costs.misses(),
             budget_tokens: c.budget_tokens,
             budget_iterations: c.budget_iterations,
+            kv_imports: c.kv_imports,
+            imported_kv_tokens: c.imported_kv_tokens,
             tp: self.opts.plan.tp.max(1),
             pp: self.opts.plan.pp.max(1),
             collective_cycles: c.collective_cycles,
@@ -1666,9 +1797,10 @@ impl<'a> ContinuousBatcher<'a> {
             pass_cache_misses: pass_memo.as_ref().map_or(0, |m| m.misses),
             ttft_sketch: ttft,
             latency_sketch: lat,
+            tpot_sketch: tpot,
             queue_sketch: queue,
             per_class,
-            per_request: done,
+            per_request: if self.opts.per_request { done } else { Vec::new() },
         }
     }
 }
@@ -2144,6 +2276,102 @@ mod tests {
             opts.plan.replica_kv_budget_bytes(&cfg, fmt, &p)
         );
         assert!(sharded.opts.kv_budget_bytes > single.opts.kv_budget_bytes);
+    }
+
+    #[test]
+    fn imported_kv_enters_decode_without_prefill() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let mut w = Workload::uniform(4, 64, 8);
+        for r in &mut w.requests {
+            *r = r.clone().with_imported_kv();
+        }
+        let budget = Request::new(0, 64, 8).kv_bytes(&cfg) * 8;
+        let r = run_cfg(&cfg, &p, &w, BatcherConfig::new(4, budget));
+        assert_eq!(r.completed, 4);
+        assert_eq!(r.gen_tokens, 4 * 8);
+        // The whole point: zero prefill work on the decode die.
+        assert_eq!(r.prefill_tokens, 0);
+        assert_eq!(r.prefill_chunks, 0);
+        assert_eq!(r.kv_imports, 4);
+        assert_eq!(r.imported_kv_tokens, 4 * 64);
+        assert_eq!(r.prefix_hit_tokens, 0, "imports are not cache hits");
+        // The same trace without the marker prefills every prompt token
+        // and can only take longer.
+        let plain = run_cfg(
+            &cfg,
+            &p,
+            &Workload::uniform(4, 64, 8),
+            BatcherConfig::new(4, budget),
+        );
+        assert_eq!(plain.kv_imports, 0);
+        assert_eq!(plain.prefill_tokens, 4 * 64);
+        assert!(r.total_seconds < plain.total_seconds);
+        assert!(r.ttft_p99_s < plain.ttft_p99_s);
+    }
+
+    #[test]
+    fn imported_kv_preemption_falls_back_to_recompute() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        // Pool sized for ~1.2 full caches: decode growth must preempt, and
+        // a preempted import recomputes its prompt like any request.
+        let mut w = Workload::uniform(3, 16, 64);
+        for r in &mut w.requests {
+            *r = r.clone().with_imported_kv();
+        }
+        let budget = Request::new(0, 16, 64).kv_bytes(&cfg) * 12 / 10;
+        let r = run_cfg(&cfg, &p, &w, BatcherConfig::new(3, budget));
+        assert_eq!(r.completed, 3, "{:?}", r.rejected);
+        assert_eq!(r.gen_tokens, 3 * 64);
+        assert!(r.preemptions > 0, "pool pressure must trigger eviction");
+        assert!(
+            r.prefill_tokens > 0,
+            "a preempted import must recompute its prompt"
+        );
+        assert!(r.peak_kv_bytes <= budget);
+    }
+
+    #[test]
+    fn per_request_gate_drops_detail_only() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let w = Workload::synthetic(5, 12, (8, 64), (2, 12)).with_priority_classes(2);
+        let budget = Request::new(0, 128, 12).kv_bytes(&cfg) * 16;
+        let on = BatcherConfig::new(4, budget);
+        let mut off = on;
+        off.per_request = false;
+        let r_on = run_cfg(&cfg, &p, &w, on);
+        let r_off = run_cfg(&cfg, &p, &w, off);
+        assert!(!r_on.per_request.is_empty());
+        assert!(r_off.per_request.is_empty());
+        // Everything except the detail vector is bit-identical.
+        let mut masked = r_on.clone();
+        masked.per_request = Vec::new();
+        assert_eq!(masked, r_off);
+    }
+
+    #[test]
+    fn tpot_is_the_decode_pace() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let budget = Request::new(0, 16, 8).kv_bytes(&cfg) * 8;
+        let r = tiny_batcher(&cfg, &p, 4, budget);
+        assert!(r.tpot_p50_s > 0.0);
+        assert!(r.tpot_p50_s <= r.tpot_p99_s);
+        // The p99 of this small (exact-sketch) trace is the worst
+        // per-request decode pace.
+        let worst = r
+            .per_request
+            .iter()
+            .map(|s| (s.latency_s - s.ttft_s) / (s.gen_tokens - 1) as f64)
+            .fold(0.0, f64::max);
+        assert!((r.tpot_p99_s - worst).abs() < 1e-12, "{} vs {worst}", r.tpot_p99_s);
+        // TPOT excludes prefill and queueing, so the paced decode span
+        // fits inside every request's end-to-end latency.
+        for s in &r.per_request {
+            assert!(r.tpot_p50_s * (s.gen_tokens - 1) as f64 <= s.latency_s);
+        }
     }
 
     #[test]

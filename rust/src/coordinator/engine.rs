@@ -17,18 +17,25 @@ use crate::sim::KernelCost;
 /// Everything the paper reports about one run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Model name (e.g. `gpt-j-6b`).
     pub model: String,
+    /// Pass mode: `nar` (prefill/encode) or `ar` (decode).
     pub mode: &'static str,
+    /// Numeric format the pass was priced at.
     pub format: &'static str,
+    /// Sequence length (prompt + generated for generation runs).
     pub seq: u64,
     /// Concurrent requests priced together (1 = single-request).
     pub batch: u64,
+    /// Total modeled cycles.
     pub cycles: u64,
+    /// Total modeled wall-clock seconds at the platform frequency.
     pub seconds: f64,
     /// End-to-end tokens/s (GPT) or images/s (ViT). For generation runs
     /// this includes prefill time; see `decode_throughput` for the
     /// steady-state decode rate.
     pub throughput: f64,
+    /// Unit of `throughput` (`tokens/s` | `images/s`).
     pub throughput_unit: &'static str,
     /// Decode-only tokens/s (generated tokens / decode cycles). Zero for
     /// runs with no decode phase (NAR).
@@ -36,21 +43,29 @@ pub struct RunReport {
     /// Time to first generated token, seconds (prefill + first decode
     /// step). Zero for runs with no decode phase.
     pub ttft_s: f64,
+    /// Achieved GFLOP/s over the run.
     pub gflops: f64,
+    /// Achieved fraction of the platform's peak FPU throughput.
     pub fpu_utilization: f64,
+    /// Modeled average power draw, watts.
     pub power_w: f64,
+    /// Energy efficiency (GFLOP/s per watt).
     pub gflops_per_w: f64,
+    /// HBM traffic, gigabytes.
     pub hbm_gb: f64,
+    /// Chip-to-chip traffic, gigabytes.
     pub c2c_gb: f64,
 }
 
 /// Prices full model passes on the simulated platform.
 #[derive(Debug, Clone)]
 pub struct InferenceEngine {
+    /// The platform every pass is priced against.
     pub platform: PlatformConfig,
 }
 
 impl InferenceEngine {
+    /// An engine for the given platform.
     pub fn new(platform: PlatformConfig) -> InferenceEngine {
         InferenceEngine { platform }
     }
@@ -267,6 +282,35 @@ impl InferenceEngine {
             opts,
             workload,
             replicas,
+            policy,
+        )
+    }
+
+    /// Serve on a disaggregated fleet: `prefill_replicas` engines run
+    /// prompts to prefill-complete, each finished prompt's KV pages
+    /// migrate over the die-to-die links (priced by the collectives' p2p
+    /// machinery), and `decode_replicas` engines resume the requests
+    /// decode-only through the imported-KV admission path. See
+    /// [`crate::parallel::router::serve_disaggregated`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve_disaggregated(
+        &self,
+        cfg: &ModelConfig,
+        workload: &Workload,
+        opts: BatcherConfig,
+        fmt: FpFormat,
+        prefill_replicas: usize,
+        decode_replicas: usize,
+        policy: crate::parallel::RoutePolicy,
+    ) -> crate::parallel::DisaggReport {
+        crate::parallel::router::serve_disaggregated(
+            cfg,
+            &self.platform,
+            fmt,
+            opts,
+            workload,
+            prefill_replicas,
+            decode_replicas,
             policy,
         )
     }

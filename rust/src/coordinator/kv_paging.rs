@@ -94,6 +94,7 @@ pub struct PageTable {
 }
 
 impl PageTable {
+    /// An empty table mapping no pages.
     pub fn new() -> PageTable {
         PageTable::default()
     }
@@ -103,10 +104,12 @@ impl PageTable {
         &self.pages
     }
 
+    /// Number of pages mapped.
     pub fn len(&self) -> usize {
         self.pages.len()
     }
 
+    /// Whether the table maps no pages.
     pub fn is_empty(&self) -> bool {
         self.pages.is_empty()
     }
@@ -156,18 +159,22 @@ impl PagedKvAllocator {
         }
     }
 
+    /// The page geometry this pool was carved with.
     pub fn geometry(&self) -> KvGeometry {
         self.geom
     }
 
+    /// Total pages in the pool (budget / page size).
     pub fn total_pages(&self) -> u64 {
         self.total_pages
     }
 
+    /// Pages currently unmapped and available.
     pub fn free_pages(&self) -> u64 {
         self.total_pages - self.in_use
     }
 
+    /// Distinct pages with at least one live reference.
     pub fn used_pages(&self) -> u64 {
         self.in_use
     }
@@ -291,6 +298,46 @@ impl PagedKvAllocator {
         self.release_page(last);
         true
     }
+
+    /// Export `tokens` cached tokens out of this pool for migration to
+    /// another pool (disaggregated prefill → decode handoff). Drops the
+    /// table's reference on every page it maps — pages other tables or
+    /// the prefix cache still reference stay live here — and returns the
+    /// migration manifest: the token count, the page count the content
+    /// occupies at this pool's geometry, and the wire bytes the handoff
+    /// moves over the die-to-die links. During the in-flight window the
+    /// manifest bills *neither* pool; the destination commits pages only
+    /// at [`Self::import`].
+    pub fn export(&mut self, table: &mut PageTable, tokens: u64) -> KvExport {
+        let pages = self.geom.pages_for(tokens);
+        self.release(table);
+        KvExport { tokens, pages, bytes: pages * self.geom.page_bytes() }
+    }
+
+    /// Materialize an exported manifest into this pool: grow `table` to
+    /// cover `manifest.tokens` tokens. All-or-nothing — on failure the
+    /// table and pool are unchanged and the manifest stays in flight for
+    /// a retry. The migrated content is always private to the importing
+    /// request (prefix sharing is re-established by content hash, never
+    /// carried across pools).
+    pub fn import(&mut self, table: &mut PageTable, manifest: &KvExport) -> bool {
+        self.try_grow(table, manifest.tokens)
+    }
+}
+
+/// Manifest of a KV migration in flight between two [`PagedKvAllocator`]
+/// pools: what [`PagedKvAllocator::export`] released at the source and
+/// what [`PagedKvAllocator::import`] must materialize at the destination.
+/// `bytes` is the wire size the handoff is priced at (whole pages — the
+/// transfer moves page frames, not packed tokens).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvExport {
+    /// Cached tokens the manifest carries.
+    pub tokens: u64,
+    /// Pages those tokens occupy at the source geometry.
+    pub pages: u64,
+    /// Wire bytes moved over the die-to-die links (`pages * page_bytes`).
+    pub bytes: u64,
 }
 
 /// Content-addressed index of cached prompt-prefix pages.
@@ -614,6 +661,47 @@ mod tests {
         assert_eq!(cache.evict_lru(&mut a, 1), 1);
         assert_eq!(a.used_pages(), 0);
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn export_import_conserves_pages_across_pools() {
+        let mut src = PagedKvAllocator::new(8 * 16 * 1024, geom());
+        let mut dst = PagedKvAllocator::new(8 * 16 * 1024, geom());
+        let mut t = PageTable::new();
+        assert!(src.try_grow(&mut t, 40)); // 3 pages
+        assert_eq!(src.used_pages(), 3);
+        let manifest = src.export(&mut t, 40);
+        assert_eq!(manifest, KvExport { tokens: 40, pages: 3, bytes: 3 * 16 * 1024 });
+        // In flight: billed to neither pool, table empty.
+        assert_eq!(src.used_pages(), 0);
+        assert_eq!(dst.used_pages(), 0);
+        assert!(t.is_empty());
+        assert!(dst.import(&mut t, &manifest));
+        assert_eq!(dst.used_pages(), manifest.pages);
+        assert_eq!(t.capacity_tokens(&geom()), 48);
+        dst.release(&mut t);
+        assert_eq!(dst.used_pages(), 0);
+    }
+
+    #[test]
+    fn export_leaves_shared_pages_live_and_import_is_all_or_nothing() {
+        let mut src = PagedKvAllocator::new(4 * 16 * 1024, geom());
+        let mut cache = PrefixCache::new();
+        let mut t = PageTable::new();
+        assert!(src.try_grow(&mut t, 32)); // 2 pages
+        cache.insert(&mut src, 42, t.pages()[0]);
+        let manifest = src.export(&mut t, 32);
+        // The cached prefix page survives the export on the cache's ref.
+        assert_eq!(src.used_pages(), 1);
+        assert_eq!(cache.probe(&[42]), 1);
+        assert_eq!(cache.reclaimable(&src), 1);
+        // A destination too small refuses the whole manifest.
+        let mut dst = PagedKvAllocator::new(16 * 1024, geom()); // 1 page
+        assert!(!dst.import(&mut t, &manifest));
+        assert_eq!(dst.used_pages(), 0);
+        assert!(t.is_empty(), "failed import must not partially map");
+        cache.clear(&mut src);
+        assert_eq!(src.used_pages(), 0);
     }
 
     #[test]

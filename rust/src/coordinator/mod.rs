@@ -8,6 +8,11 @@
 //! priority-aware admission (`workload`, `kv_paging`, `batcher`), and
 //! manages the decode-time KV cache (`kv_cache`) used by the numeric
 //! runtime path.
+//!
+//! The serving surface built on this layer (CLI flags, request
+//! lifecycle, JSON schema) is documented in `docs/serving.md`.
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod breakdown;
@@ -24,7 +29,7 @@ pub use breakdown::{Breakdown, KernelClassShare};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;
 pub use kv_paging::{
-    platform_kv_budget_bytes, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
+    platform_kv_budget_bytes, KvExport, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
 };
 pub use schedule::{
     block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,

@@ -36,6 +36,12 @@ pub struct Request {
     /// Content identity of the shared template (only meaningful when
     /// `prefix_len > 0`).
     pub prefix_seed: u64,
+    /// The prompt's KV pages arrive pre-materialized from another pool
+    /// (disaggregated serving: prefill ran on a prefill die and the pages
+    /// were migrated here). The batcher admits such a request directly
+    /// into decode — no prefill passes — but a preemption falls back to
+    /// ordinary recompute, since the migrated copy is gone.
+    pub kv_imported: bool,
 }
 
 /// SplitMix64 finalizer: the content/identity mixer behind the modeled
@@ -59,16 +65,26 @@ impl Request {
             class: 0,
             prefix_len: 0,
             prefix_seed: 0,
+            kv_imported: false,
         }
     }
 
+    /// Set the priority class (0 = most urgent).
     pub fn with_class(mut self, class: u8) -> Request {
         self.class = class;
         self
     }
 
+    /// Set the arrival timestamp (nanoseconds since trace start).
     pub fn with_arrival_ns(mut self, arrival_ns: u64) -> Request {
         self.arrival_ns = arrival_ns;
+        self
+    }
+
+    /// Mark the prompt's KV as migrated in from another pool (see
+    /// [`Request::kv_imported`]).
+    pub fn with_imported_kv(mut self) -> Request {
+        self.kv_imported = true;
         self
     }
 
@@ -168,6 +184,7 @@ impl Lcg {
 /// A trace of requests to serve.
 #[derive(Debug, Clone, Default)]
 pub struct Workload {
+    /// The requests, in id order.
     pub requests: Vec<Request>,
 }
 
@@ -245,10 +262,12 @@ impl Workload {
         self
     }
 
+    /// Number of requests in the trace.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// Whether the trace is empty.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
@@ -419,7 +438,10 @@ pub enum Arrival {
     /// Closed-loop: every request is offered at t=0 (legacy default).
     Batch,
     /// Open-loop Poisson arrivals at the given rate.
-    Poisson { rate_per_s: f64 },
+    Poisson {
+        /// Mean arrival rate in requests/second.
+        rate_per_s: f64,
+    },
 }
 
 impl Arrival {
@@ -439,7 +461,9 @@ impl Arrival {
 /// [`Workload::with_shared_prefix`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SharedPrefix {
+    /// Template length in tokens.
     pub tokens: u64,
+    /// Requests per template group.
     pub fanout: usize,
 }
 
@@ -566,6 +590,17 @@ mod tests {
         // <= 1 class is a no-op.
         let w = Workload::uniform(3, 64, 16).with_priority_classes(1);
         assert!(w.requests.iter().all(|r| r.class == 0));
+    }
+
+    #[test]
+    fn imported_kv_marker_defaults_off() {
+        let r = Request::new(0, 64, 16);
+        assert!(!r.kv_imported);
+        let m = r.clone().with_imported_kv();
+        assert!(m.kv_imported);
+        // Everything else is untouched — the marker only changes how the
+        // batcher admits the request.
+        assert_eq!((m.id, m.prompt_len, m.gen_tokens), (r.id, r.prompt_len, r.gen_tokens));
     }
 
     #[test]

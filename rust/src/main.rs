@@ -11,7 +11,7 @@ use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
 use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, SharedPrefix, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
-use snitch_fm::parallel::{best_plans, Objective, RoutePolicy, ShardPlan};
+use snitch_fm::parallel::{best_plans, rank_fleet_splits, Objective, RoutePolicy, ShardPlan};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
 use snitch_fm::soa;
@@ -62,6 +62,15 @@ COMMANDS:
              --engine event|iter (event-heap run loop with pass-shape
                memoization, or the legacy per-iteration loop; reports are
                bit-identical — default event)
+             --disagg off|P:D|auto (disaggregated serving: P replica
+               groups run prefill only and hand each finished prompt's
+               KV pages to one of D decode groups over the die-to-die
+               links; auto splits the replica budget by the modeled
+               best {prefill, decode} ratio; off — the default — keeps
+               the symmetric fleet bit-identical to --replicas)
+             --no-per-request (drop the per-request detail array from
+               the report; every aggregate, percentile and counter is
+               unchanged)
              --json (machine-readable report)
   shard      Enumerate and rank multi-die shard plans {tp, pp, replicas}
              --model NAME --format FMT --dies N --batch N --seq N
@@ -95,6 +104,7 @@ const FLAGS: &[&str] = &[
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
     "replicas", "route", "dies", "objective", "tp", "pp", "plan", "engine",
+    "disagg", "no-per-request",
 ];
 
 fn main() -> Result<()> {
@@ -364,15 +374,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(other) => anyhow::bail!("--plan {other:?}: expected auto"),
     };
     anyhow::ensure!(tp > 0 && pp > 0, "--tp/--pp must be > 0");
+    // Disaggregated prefill/decode: `P:D` dedicates P replica groups to
+    // prefill and D to decode; `auto` takes the modeled best split of
+    // the replica budget; `off` (default) keeps the symmetric fleet.
+    #[derive(Clone, Copy)]
+    enum Disagg {
+        Off,
+        Split(usize, usize),
+        Auto,
+    }
+    let disagg = match args.get("disagg") {
+        None | Some("off") => Disagg::Off,
+        Some("auto") => Disagg::Auto,
+        Some(spec) => {
+            let parsed = spec.split_once(':').and_then(|(p, d)| {
+                Some((p.parse::<usize>().ok()?, d.parse::<usize>().ok()?))
+            });
+            match parsed {
+                Some((p, d)) if p >= 1 && d >= 1 => Disagg::Split(p, d),
+                _ => anyhow::bail!(
+                    "--disagg {spec:?}: expected off, auto, or <prefill>:<decode> \
+                     with both counts >= 1"
+                ),
+            }
+        }
+    };
+    // Replica groups the package must hold: the symmetric fleet's
+    // `replicas`, the explicit split's `P + D`, or the auto split's
+    // budget (the larger of --replicas and the dies the user offered).
+    let fleet_groups = match disagg {
+        Disagg::Off => replicas,
+        Disagg::Split(p, d) => p + d,
+        Disagg::Auto => {
+            let from_dies = (args.get_u32("dies", 0)? / (tp * pp)) as usize;
+            replicas.max(from_dies).max(2)
+        }
+    };
     let mut platform = PlatformConfig::with_clusters(clusters);
     // The package needs a die per rank of every replica group.
     platform.die.dies = platform
         .die
         .dies
         .max(args.get_u32("dies", 0)?)
-        .max(tp * pp * replicas as u32);
+        .max(tp * pp * fleet_groups as u32);
     let engine_plan = ShardPlan { tp, pp, replicas: 1 };
-    if let Some(err) = (ShardPlan { tp, pp, replicas: replicas as u32 })
+    if let Some(err) = (ShardPlan { tp, pp, replicas: fleet_groups as u32 })
         .legality_error(&cfg, &platform)
     {
         anyhow::bail!("illegal shard configuration: {err}");
@@ -430,6 +476,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(s) = args.get("engine") {
         opts.engine = snitch_fm::coordinator::EngineMode::parse(s)
             .ok_or_else(|| anyhow::anyhow!("--engine {s:?}: expected event or iter"))?;
+    }
+    opts.per_request = !args.get_bool("no-per-request");
+    let split = match disagg {
+        Disagg::Off => None,
+        Disagg::Split(p, d) => Some((p, d)),
+        Disagg::Auto => {
+            let ranking =
+                rank_fleet_splits(&cfg, format, &engine.platform, &workload, batch, fleet_groups);
+            let best = ranking
+                .splits
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("no fleet split for {fleet_groups} groups"))?;
+            // stderr: `--json` consumers must see nothing but the report.
+            eprintln!(
+                "disagg auto ({} groups): prefill={} decode={} ({}-bound, {:.2} req/s modeled)",
+                fleet_groups, best.prefill, best.decode, best.bottleneck, best.rate
+            );
+            Some((best.prefill, best.decode))
+        }
+    };
+    if let Some((prefill, decode)) = split {
+        let r =
+            engine.serve_disaggregated(&cfg, &workload, opts, format, prefill, decode, route);
+        if args.get_bool("json") {
+            println!("{}", report::disagg_json(&r));
+        } else {
+            print!("{}", report::disagg_table(&r));
+        }
+        return Ok(());
     }
     if replicas > 1 {
         let r = engine.serve_replicated(&cfg, &workload, opts, format, replicas, route);

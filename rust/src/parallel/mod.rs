@@ -22,11 +22,19 @@
 //! * [`router`] — a data-parallel serving router: N engine replicas each
 //!   running the existing continuous batcher against its own KV budget,
 //!   with join-shortest-queue and prefix-affinity request routing and a
-//!   merged [`crate::coordinator::ServeReport`].
+//!   merged [`crate::coordinator::ServeReport`]. Its
+//!   [`router::serve_disaggregated`] entry splits the fleet into
+//!   dedicated prefill and decode dies, migrating each finished prompt's
+//!   KV pages over the die-to-die links (priced with
+//!   [`collectives::p2p_cost`]).
 //!
 //! The degenerate plan `tp = 1, pp = 1, replicas = 1` prices and
 //! schedules bit-identically to the single-engine paths, so the whole
-//! subsystem is testable against the existing baselines.
+//! subsystem is testable against the existing baselines. The CLI flags
+//! and JSON schema this subsystem feeds are documented in
+//! `docs/serving.md`.
+
+#![warn(missing_docs)]
 
 pub mod collectives;
 pub mod planner;
@@ -36,6 +44,12 @@ pub mod shard;
 pub use collectives::{
     all_gather_cost, all_reduce_cost, p2p_cost, reduce_scatter_cost, Algorithm,
 };
-pub use planner::{best_plans, enumerate_plans, Objective, RankedPlan};
-pub use router::{merge_reports, replica_seed, serve_replicated, RoutePolicy, RouterReport};
+pub use planner::{
+    best_plans, enumerate_plans, rank_fleet_splits, FleetSplit, Objective, RankedPlan,
+    SplitRanking,
+};
+pub use router::{
+    merge_reports, replica_seed, serve_disaggregated, serve_replicated, DisaggReport,
+    RoutePolicy, RouterReport,
+};
 pub use shard::{plan_cost, plan_pass_cost, sharded_block_cost, PlanCost, ShardPlan, ShardedPass};

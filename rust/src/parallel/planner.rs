@@ -14,6 +14,8 @@
 //! so the ranking is fully deterministic.
 
 use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::schedule::model_cost_batched;
+use crate::coordinator::workload::Workload;
 use crate::model::{Mode, ModelConfig};
 use crate::parallel::shard::{plan_cost, PlanCost, ShardPlan};
 
@@ -36,6 +38,7 @@ impl Objective {
         }
     }
 
+    /// The CLI/report spelling of the objective.
     pub const fn name(self) -> &'static str {
         match self {
             Objective::Latency => "latency",
@@ -47,7 +50,9 @@ impl Objective {
 /// One plan with its priced pass and per-replica KV budget.
 #[derive(Debug, Clone)]
 pub struct RankedPlan {
+    /// The `{tp, pp, replicas}` assignment.
     pub plan: ShardPlan,
+    /// Its priced decode step (see [`plan_cost`]).
     pub cost: PlanCost,
     /// KV budget one replica offers the serving scheduler (whole-model
     /// token bytes; see [`ShardPlan::replica_kv_budget_bytes`]).
@@ -108,6 +113,85 @@ pub fn best_plans(
     ranked
 }
 
+/// A disaggregated fleet split candidate: `prefill + decode` replicas at
+/// the same die budget, with its modeled steady-state request rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSplit {
+    /// Replicas dedicated to prefill.
+    pub prefill: usize,
+    /// Replicas dedicated to decode.
+    pub decode: usize,
+    /// Modeled request throughput (requests/s): the slower stage
+    /// bottlenecks the pipe.
+    pub rate: f64,
+    /// Which stage bottlenecks this split (`"prefill"` | `"decode"`).
+    pub bottleneck: &'static str,
+}
+
+/// The fleet-split ranking [`rank_fleet_splits`] produces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitRanking {
+    /// Every `{prefill, decode}` split of the replica budget, best-first.
+    pub splits: Vec<FleetSplit>,
+    /// The same replicas run symmetrically (each doing both phases), as
+    /// the reference the splits are ranked against. On pure *throughput*
+    /// the symmetric fleet is never behind — disaggregation's win is
+    /// isolation (p99 TPOT), which `benches/disagg_serving.rs` measures.
+    pub symmetric_rate: f64,
+}
+
+/// Rank every `{prefill: p, decode: d}` split of `replicas` engines for
+/// `workload`'s mean request shape, best-first by modeled request rate.
+///
+/// The model prices one NAR prefill pass at the mean prompt (prefill is
+/// compute-bound, so a prefill replica serves `1/prefill_seconds`
+/// requests/s) and one AR decode step at batch `max_batch` and the mean
+/// full context (decode is memory-bound; a decode replica amortizes the
+/// step over the batch, serving `b / (gen * step_seconds)` requests/s).
+/// Ties break toward fewer prefill replicas — decode capacity is where
+/// the platform's AR utilization is weakest — making the ranking fully
+/// deterministic. Powers `serve --disagg auto`.
+pub fn rank_fleet_splits(
+    cfg: &ModelConfig,
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+    workload: &Workload,
+    max_batch: usize,
+    replicas: usize,
+) -> SplitRanking {
+    let n = workload.len().max(1) as u64;
+    let mean_prompt = (workload.total_prompt_tokens() / n).max(1);
+    let mean_gen = (workload.total_gen_tokens() / n).max(1);
+    let b = max_batch.max(1) as u64;
+    let prefill_s = platform
+        .cycles_to_seconds(model_cost_batched(cfg, Mode::Nar, 1, mean_prompt, fmt, platform).cycles);
+    let step_s = platform.cycles_to_seconds(
+        model_cost_batched(cfg, Mode::Ar, b, mean_prompt + mean_gen, fmt, platform).cycles,
+    );
+    let decode_req_s = step_s * mean_gen as f64 / b as f64;
+    let r = replicas.max(2);
+    let mut splits: Vec<FleetSplit> = (1..r)
+        .map(|p| {
+            let d = r - p;
+            let prefill_rate = p as f64 / prefill_s;
+            let decode_rate = d as f64 / decode_req_s;
+            let (rate, bottleneck) = if prefill_rate <= decode_rate {
+                (prefill_rate, "prefill")
+            } else {
+                (decode_rate, "decode")
+            };
+            FleetSplit { prefill: p, decode: d, rate, bottleneck }
+        })
+        .collect();
+    splits.sort_by(|x, y| {
+        y.rate
+            .partial_cmp(&x.rate)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| x.prefill.cmp(&y.prefill))
+    });
+    SplitRanking { splits, symmetric_rate: r as f64 / (prefill_s + decode_req_s) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +241,40 @@ mod tests {
             .find(|r| r.plan == ShardPlan::single())
             .expect("single plan enumerated");
         assert!(best.cost.tokens_per_s > single.cost.tokens_per_s);
+    }
+
+    #[test]
+    fn split_ranking_covers_every_split_and_is_deterministic() {
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(8);
+        let w = crate::coordinator::workload::Workload::synthetic(32, 5, (64, 256), (16, 128));
+        let a = rank_fleet_splits(&cfg, FpFormat::Fp8, &p, &w, 8, 8);
+        let b = rank_fleet_splits(&cfg, FpFormat::Fp8, &p, &w, 8, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.splits.len(), 7, "every {{p, d}} with p + d = 8, p >= 1, d >= 1");
+        let mut sums: Vec<usize> = a.splits.iter().map(|s| s.prefill + s.decode).collect();
+        sums.dedup();
+        assert_eq!(sums, vec![8]);
+        // Best-first: rates never increase down the ranking.
+        for pair in a.splits.windows(2) {
+            assert!(pair[0].rate >= pair[1].rate);
+        }
+        assert!(a.symmetric_rate > 0.0);
+    }
+
+    #[test]
+    fn chatty_decode_trace_ranks_decode_heavy_splits_first() {
+        // Short prompts, long generations: decode work dominates, so the
+        // best split dedicates most dies to decode.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(8);
+        let w = crate::coordinator::workload::Workload::uniform(16, 16, 256);
+        let ranked = rank_fleet_splits(&cfg, FpFormat::Fp8, &p, &w, 8, 8);
+        let best = &ranked.splits[0];
+        assert!(
+            best.decode > best.prefill,
+            "chatty trace must go decode-heavy: {best:?}"
+        );
     }
 
     #[test]

@@ -24,10 +24,13 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::batcher::{BatcherConfig, ClassStats, ContinuousBatcher, ServeReport};
+use crate::coordinator::kv_paging::KvGeometry;
 use crate::coordinator::schedule::model_cost_batched;
-use crate::coordinator::workload::Workload;
+use crate::coordinator::workload::{Request, Workload};
 use crate::energy;
+use crate::metrics::sketch::StreamSketch;
 use crate::model::{Mode, ModelConfig};
+use crate::parallel::collectives::p2p_cost;
 
 /// How the router spreads requests over replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,6 +51,7 @@ impl RoutePolicy {
         }
     }
 
+    /// The CLI/report spelling of the policy.
     pub const fn name(self) -> &'static str {
         match self {
             RoutePolicy::JoinShortestQueue => "jsq",
@@ -59,13 +63,16 @@ impl RoutePolicy {
 /// The fleet-level serving outcome.
 #[derive(Debug, Clone)]
 pub struct RouterReport {
+    /// Replica engines (or sharded replica groups) in the fleet.
     pub replicas: usize,
+    /// Routing policy name (`jsq` | `affinity`).
     pub policy: &'static str,
     /// Requests routed to each replica.
     pub assigned: Vec<usize>,
     /// The merged fleet view (see [`merge_reports`] for the semantics of
     /// each aggregated field).
     pub merged: ServeReport,
+    /// Each replica's own report, in replica-index order.
     pub per_replica: Vec<ServeReport>,
 }
 
@@ -207,6 +214,8 @@ pub fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConf
     merged.d2d_bytes = per.iter().map(|r| r.d2d_bytes).sum();
     merged.budget_tokens = per.iter().map(|r| r.budget_tokens).sum();
     merged.budget_iterations = per.iter().map(|r| r.budget_iterations).sum();
+    merged.kv_imports = per.iter().map(|r| r.kv_imports).sum();
+    merged.imported_kv_tokens = per.iter().map(|r| r.imported_kv_tokens).sum();
     merged.pricing_cache_hits = per.iter().map(|r| r.pricing_cache_hits).sum();
     merged.pricing_cache_misses = per.iter().map(|r| r.pricing_cache_misses).sum();
     merged.arrival_events = per.iter().map(|r| r.arrival_events).sum();
@@ -226,10 +235,12 @@ pub fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConf
     // replica execution interleaved.
     let mut ttft = per[0].ttft_sketch.clone();
     let mut lat = per[0].latency_sketch.clone();
+    let mut tpot = per[0].tpot_sketch.clone();
     let mut queue = per[0].queue_sketch.clone();
     for r in &per[1..] {
         ttft.merge(&r.ttft_sketch);
         lat.merge(&r.latency_sketch);
+        tpot.merge(&r.tpot_sketch);
         queue.merge(&r.queue_sketch);
     }
     merged.ttft_mean_s = ttft.mean();
@@ -238,10 +249,14 @@ pub fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConf
     merged.latency_mean_s = lat.mean();
     merged.latency_p50_s = lat.p(50.0);
     merged.latency_p99_s = lat.p(99.0);
+    merged.tpot_mean_s = tpot.mean();
+    merged.tpot_p50_s = tpot.p(50.0);
+    merged.tpot_p99_s = tpot.p(99.0);
     merged.queue_mean_s = queue.mean();
     merged.queue_p99_s = queue.p(99.0);
     merged.ttft_sketch = ttft;
     merged.latency_sketch = lat;
+    merged.tpot_sketch = tpot;
     merged.queue_sketch = queue;
 
     // Per-class breakdown: merge each class's sketches across the
@@ -340,6 +355,28 @@ pub fn replica_seed(base: u64, replica: usize) -> u64 {
 /// [`crate::parallel::ShardPlan::replica_kv_budget_bytes`] KV budget —
 /// routing requests by `policy`. `replicas = 1` is bit-identical to
 /// running the single batcher.
+///
+/// ```
+/// use snitch_fm::arch::{FpFormat, PlatformConfig};
+/// use snitch_fm::coordinator::{BatcherConfig, Workload};
+/// use snitch_fm::model::ModelConfig;
+/// use snitch_fm::parallel::{serve_replicated, RoutePolicy};
+///
+/// let cfg = ModelConfig::tiny();
+/// let platform = PlatformConfig::with_dies(4);
+/// let workload = Workload::uniform(8, 32, 8);
+/// let fleet = serve_replicated(
+///     &cfg,
+///     &platform,
+///     FpFormat::Fp32,
+///     BatcherConfig::new(4, 0),
+///     &workload,
+///     4,
+///     RoutePolicy::JoinShortestQueue,
+/// );
+/// assert_eq!(fleet.assigned, vec![2, 2, 2, 2]);
+/// assert_eq!(fleet.merged.completed, 8);
+/// ```
 pub fn serve_replicated(
     cfg: &ModelConfig,
     platform: &PlatformConfig,
@@ -399,6 +436,218 @@ pub fn serve_replicated(
         assigned,
         merged,
         per_replica: per,
+    }
+}
+
+/// The two-stage fleet outcome of [`serve_disaggregated`]: dedicated
+/// prefill dies hand each finished prompt's KV pages to dedicated decode
+/// dies over the die-to-die links.
+///
+/// End-to-end views (`ttft_*`, `latency_*`) are measured against each
+/// request's ORIGINAL arrival — they include prefill queueing, the
+/// prefill passes, and the migration delay — while `tpot_*` is the decode
+/// pace, which the handoff shifts but never stretches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DisaggReport {
+    /// Replica engines (or sharded replica groups) dedicated to prefill.
+    pub prefill_replicas: usize,
+    /// Replica engines (or sharded replica groups) dedicated to decode.
+    pub decode_replicas: usize,
+    /// Routing policy name, applied independently at each stage.
+    pub policy: &'static str,
+    /// Merged prefill-fleet view: the trace truncated at prefill-complete.
+    pub prefill: ServeReport,
+    /// Merged decode-fleet view: decode-only requests whose prompt KV
+    /// arrives imported (its `kv_imports` equals `migrations`).
+    pub decode: ServeReport,
+    /// KV handoffs performed — one per generating request that finished
+    /// prefill (prefill-only requests retire on the prefill die).
+    pub migrations: u64,
+    /// KV bytes moved over the die-to-die links by those handoffs.
+    pub migrated_kv_bytes: u64,
+    /// Link cycles spent migrating. Overlapped with decode-side compute:
+    /// a migration delays only its own request's decode arrival, never
+    /// the decode die's current pass.
+    pub migration_cycles: u64,
+    /// Requests offered to the fleet.
+    pub requests: usize,
+    /// Requests fully served across both stages.
+    pub completed: usize,
+    /// Ids rejected at either stage (KV footprint exceeds the stage's
+    /// pool), ascending.
+    pub rejected: Vec<usize>,
+    /// Mean seconds from original arrival to the first decoded token.
+    pub ttft_mean_s: f64,
+    /// p50 of end-to-end TTFT.
+    pub ttft_p50_s: f64,
+    /// p99 of end-to-end TTFT.
+    pub ttft_p99_s: f64,
+    /// Mean decode pace (seconds per generated token after the first).
+    pub tpot_mean_s: f64,
+    /// p50 of the decode pace.
+    pub tpot_p50_s: f64,
+    /// p99 of the decode pace — the headline the split fleet buys.
+    pub tpot_p99_s: f64,
+    /// Mean seconds from original arrival to retirement.
+    pub latency_mean_s: f64,
+    /// p50 of end-to-end latency.
+    pub latency_p50_s: f64,
+    /// p99 of end-to-end latency.
+    pub latency_p99_s: f64,
+    /// Fleet makespan in seconds (the later of the two stages' clocks).
+    pub total_seconds: f64,
+    /// Generated tokens per second over the makespan.
+    pub tokens_per_s: f64,
+}
+
+/// Serve `workload` on a disaggregated fleet: `prefill_replicas` engines
+/// run every request truncated at prefill-complete, each finished
+/// prompt's KV pages then migrate to one of `decode_replicas` engines
+/// over the die-to-die links (priced by the same
+/// [`p2p_cost`][crate::parallel::collectives::p2p_cost] machinery the
+/// collectives use), where the request resumes decode-only via the
+/// imported-KV admission path (`Request::kv_imported`).
+///
+/// The migration is overlappable: its cycles delay the migrating
+/// request's decode-side arrival but never stall the decode die, which
+/// keeps batching whatever is already resident. Per-request detail is
+/// forced on internally (the handoff needs per-request finish times);
+/// the emitted reports honor `opts.per_request`.
+///
+/// Both stage fleets run under `opts.plan`, so
+/// `tp * pp * (prefill_replicas + decode_replicas)` dies must fit the
+/// package (asserted, mirroring [`serve_replicated`]).
+pub fn serve_disaggregated(
+    cfg: &ModelConfig,
+    platform: &PlatformConfig,
+    fmt: FpFormat,
+    opts: BatcherConfig,
+    workload: &Workload,
+    prefill_replicas: usize,
+    decode_replicas: usize,
+    policy: RoutePolicy,
+) -> DisaggReport {
+    let p_n = prefill_replicas.max(1);
+    let d_n = decode_replicas.max(1);
+    assert!(
+        opts.plan.tp.max(1) * opts.plan.pp.max(1) * (p_n + d_n) as u32
+            <= platform.die.dies.max(1),
+        "prefill {} + decode {} replica groups of tp={} x pp={} exceed the package's {} dies",
+        p_n,
+        d_n,
+        opts.plan.tp.max(1),
+        opts.plan.pp.max(1),
+        platform.die.dies
+    );
+
+    // Stage 1 — prefill fleet: the same trace with `gen_tokens = 0`, so
+    // every request retires the moment its prompt is materialized.
+    let mut stage_opts = opts;
+    stage_opts.per_request = true;
+    let mut prefill_w = workload.clone();
+    for r in &mut prefill_w.requests {
+        r.gen_tokens = 0;
+    }
+    let pre = serve_replicated(cfg, platform, fmt, stage_opts, &prefill_w, p_n, policy);
+
+    // Stage 2 — the handoff: price each finished prompt's pages across
+    // the die-to-die link and re-arrive the request, decode-only with
+    // imported KV, at `prefill finish + migration`. Whole-model geometry:
+    // with a sharded plan the per-rank pages are smaller but `tp * pp`
+    // ranks move them, so the link sees the whole-model footprint either
+    // way.
+    let by_id: HashMap<usize, &Request> =
+        workload.requests.iter().map(|r| (r.id, r)).collect();
+    let geom = KvGeometry::new(cfg, fmt, stage_opts.page_tokens);
+    let mut migrations = 0u64;
+    let mut migrated_kv_bytes = 0u64;
+    let mut migration_cycles = 0u64;
+    let mut decode_w = Workload::default();
+    for s in &pre.merged.per_request {
+        let orig = by_id[&s.id];
+        if orig.gen_tokens == 0 {
+            continue; // prefill-only: served entirely by the prefill fleet
+        }
+        let bytes = geom.pages_for(orig.prompt_len) * geom.page_bytes();
+        let link = p2p_cost(bytes, platform);
+        migrations += 1;
+        migrated_kv_bytes += bytes;
+        migration_cycles += link.cycles;
+        let handoff_s =
+            s.arrival_s + s.latency_s + platform.cycles_to_seconds(link.cycles);
+        let mut dr = orig.clone().with_imported_kv();
+        dr.arrival_ns = (handoff_s * 1e9).round() as u64;
+        decode_w.requests.push(dr);
+    }
+
+    // Stage 3 — decode fleet: admission maps the imported pages without a
+    // prefill pass, so these engines run pure AR decode.
+    let dec = serve_replicated(cfg, platform, fmt, stage_opts, &decode_w, d_n, policy);
+
+    // Combined end-to-end views against each request's original arrival.
+    // Decode-stage stats are relative to the migration-delayed arrival,
+    // so `arrival_s + x_s - original_arrival_s` re-bases them.
+    let mut ttft = StreamSketch::new();
+    let mut lat = StreamSketch::new();
+    for s in &dec.merged.per_request {
+        let orig_arrival_s = by_id[&s.id].arrival_ns as f64 / 1e9;
+        if s.gen_tokens > 0 {
+            ttft.push(s.arrival_s + s.ttft_s - orig_arrival_s);
+        }
+        lat.push(s.arrival_s + s.latency_s - orig_arrival_s);
+    }
+    let mut prefill_only_done = 0usize;
+    for s in &pre.merged.per_request {
+        if by_id[&s.id].gen_tokens == 0 {
+            prefill_only_done += 1;
+            lat.push(s.latency_s);
+        }
+    }
+    let mut rejected: Vec<usize> = pre
+        .merged
+        .rejected
+        .iter()
+        .chain(dec.merged.rejected.iter())
+        .copied()
+        .collect();
+    rejected.sort_unstable();
+    let completed = dec.merged.completed + prefill_only_done;
+    let total_seconds = pre.merged.total_seconds.max(dec.merged.total_seconds);
+    let tokens_per_s = if total_seconds > 0.0 {
+        dec.merged.gen_tokens as f64 / total_seconds
+    } else {
+        0.0
+    };
+
+    let mut prefill = pre.merged;
+    let mut decode = dec.merged;
+    if !opts.per_request {
+        prefill.per_request = Vec::new();
+        decode.per_request = Vec::new();
+    }
+    DisaggReport {
+        prefill_replicas: p_n,
+        decode_replicas: d_n,
+        policy: policy.name(),
+        migrations,
+        migrated_kv_bytes,
+        migration_cycles,
+        requests: workload.len(),
+        completed,
+        rejected,
+        ttft_mean_s: ttft.mean(),
+        ttft_p50_s: ttft.p(50.0),
+        ttft_p99_s: ttft.p(99.0),
+        tpot_mean_s: decode.tpot_mean_s,
+        tpot_p50_s: decode.tpot_p50_s,
+        tpot_p99_s: decode.tpot_p99_s,
+        latency_mean_s: lat.mean(),
+        latency_p50_s: lat.p(50.0),
+        latency_p99_s: lat.p(99.0),
+        total_seconds,
+        tokens_per_s,
+        prefill,
+        decode,
     }
 }
 
@@ -514,7 +763,7 @@ mod tests {
         let opts = BatcherConfig::new(4, 0);
         let fleet =
             serve_replicated(&cfg, &p, FpFormat::Fp32, opts, &w, 4, RoutePolicy::JoinShortestQueue);
-        let (ttft, lat, queue, per_class) =
+        let (ttft, lat, tpot, queue, per_class) =
             crate::coordinator::batcher::latency_aggregates(&fleet.merged.per_request);
         assert!(fleet.merged.ttft_sketch.is_exact());
         assert_eq!(fleet.merged.ttft_mean_s, ttft.mean());
@@ -523,6 +772,9 @@ mod tests {
         assert_eq!(fleet.merged.latency_mean_s, lat.mean());
         assert_eq!(fleet.merged.latency_p50_s, lat.p(50.0));
         assert_eq!(fleet.merged.latency_p99_s, lat.p(99.0));
+        assert_eq!(fleet.merged.tpot_mean_s, tpot.mean());
+        assert_eq!(fleet.merged.tpot_p50_s, tpot.p(50.0));
+        assert_eq!(fleet.merged.tpot_p99_s, tpot.p(99.0));
         assert_eq!(fleet.merged.queue_mean_s, queue.mean());
         assert_eq!(fleet.merged.queue_p99_s, queue.p(99.0));
         let merged_classes: Vec<(u8, usize, f64, f64)> = fleet
@@ -536,6 +788,114 @@ mod tests {
             .map(|c| (c.class, c.completed, c.ttft_p99_s, c.latency_p99_s))
             .collect();
         assert_eq!(merged_classes, union_classes);
+    }
+
+    #[test]
+    fn disagg_serves_everything_and_prices_each_handoff() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let w = Workload::synthetic(7, 9, (8, 48), (2, 10)).with_poisson_arrivals(7, 700.0);
+        let opts = BatcherConfig::new(4, 0);
+        let r = serve_disaggregated(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            1,
+            1,
+            RoutePolicy::JoinShortestQueue,
+        );
+        assert_eq!(r.requests, 9);
+        assert_eq!(r.completed, 9);
+        assert!(r.rejected.is_empty());
+        // Every generating request migrated exactly once, and the decode
+        // fleet admitted every migrated prompt through the import path.
+        assert_eq!(r.migrations, 9);
+        assert_eq!(r.decode.kv_imports, 9);
+        assert_eq!(r.decode.imported_kv_tokens, w.total_prompt_tokens());
+        // Imported prompts skip prefill entirely on the decode dies.
+        assert_eq!(r.decode.prefill_tokens, 0);
+        assert_eq!(r.prefill.gen_tokens, 0);
+        assert_eq!(r.decode.gen_tokens, w.total_gen_tokens());
+        // The handoff moved exactly the page-rounded prompt KV, at a
+        // nonzero link price.
+        let geom = KvGeometry::new(&cfg, FpFormat::Fp32, opts.page_tokens);
+        let bytes: u64 = w
+            .requests
+            .iter()
+            .map(|q| geom.pages_for(q.prompt_len) * geom.page_bytes())
+            .sum();
+        assert_eq!(r.migrated_kv_bytes, bytes);
+        assert!(r.migration_cycles > 0);
+        // End-to-end TTFT covers prefill + migration, so it must exceed
+        // the decode stage's own (re-based) first-token wait.
+        assert!(r.ttft_mean_s > r.decode.ttft_mean_s);
+        assert!(r.latency_p99_s >= r.ttft_p50_s);
+        assert!(r.tpot_p99_s > 0.0);
+    }
+
+    #[test]
+    fn disagg_is_deterministic_across_runs() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(8);
+        let w = Workload::synthetic(13, 21, (8, 64), (2, 12)).with_poisson_arrivals(3, 900.0);
+        let opts = BatcherConfig::new(4, 0);
+        let a = serve_disaggregated(
+            &cfg, &p, FpFormat::Fp32, opts, &w, 2, 2, RoutePolicy::JoinShortestQueue,
+        );
+        let b = serve_disaggregated(
+            &cfg, &p, FpFormat::Fp32, opts, &w, 2, 2, RoutePolicy::JoinShortestQueue,
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn disagg_prefill_only_requests_never_migrate() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let mut w = Workload::uniform(4, 32, 8);
+        w.requests.push(Request::new(4, 48, 0)); // embedding-style: no decode
+        let opts = BatcherConfig::new(4, 0);
+        let r = serve_disaggregated(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            1,
+            1,
+            RoutePolicy::JoinShortestQueue,
+        );
+        assert_eq!(r.migrations, 4);
+        assert_eq!(r.completed, 5, "the prefill-only request retires on stage 1");
+        assert_eq!(r.decode.requests, 4);
+    }
+
+    #[test]
+    fn disagg_honors_per_request_opt_out() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let w = Workload::uniform(6, 24, 6);
+        let mut opts = BatcherConfig::new(4, 0);
+        opts.per_request = false;
+        let r = serve_disaggregated(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            1,
+            1,
+            RoutePolicy::JoinShortestQueue,
+        );
+        // The stages run with detail internally (the handoff needs finish
+        // times) but the emitted reports respect the opt-out; aggregates
+        // survive it.
+        assert!(r.prefill.per_request.is_empty());
+        assert!(r.decode.per_request.is_empty());
+        assert_eq!(r.completed, 6);
+        assert!(r.tpot_p99_s > 0.0);
     }
 
     #[test]

@@ -28,6 +28,20 @@ use crate::parallel::collectives::{self, Algorithm};
 use crate::sim::KernelCost;
 
 /// One way to spread a model over the package's dies.
+///
+/// ```
+/// use snitch_fm::arch::PlatformConfig;
+/// use snitch_fm::model::ModelConfig;
+/// use snitch_fm::parallel::ShardPlan;
+///
+/// let plan = ShardPlan { tp: 2, pp: 2, replicas: 1 };
+/// assert_eq!(plan.dies(), 4);
+/// let p = PlatformConfig::with_dies(4);
+/// assert!(plan.is_legal(&ModelConfig::gpt_j(), &p));
+/// // 16 attention heads do not split three ways:
+/// let bad = ShardPlan { tp: 3, pp: 1, replicas: 1 };
+/// assert!(!bad.is_legal(&ModelConfig::gpt_j(), &p));
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardPlan {
     /// Tensor-parallel ranks per pipeline stage.

@@ -3,7 +3,7 @@
 use std::fmt::Write as _;
 
 use crate::coordinator::{Breakdown, RunReport, ServeReport};
-use crate::parallel::{RankedPlan, RouterReport};
+use crate::parallel::{DisaggReport, RankedPlan, RouterReport};
 
 /// Version of the serve/router JSON schema. Bumped whenever keys are
 /// added or change meaning, so trend tooling can evolve its key set
@@ -14,8 +14,11 @@ use crate::parallel::{RankedPlan, RouterReport};
 /// Version 4 = the event-driven core (engine, arrival/pass event
 /// counters, pass-shape memo hits/misses; percentiles now come from
 /// streaming sketches — exact below the spill limit, so small-trace
-/// values are unchanged).
-pub const SERVE_SCHEMA_VERSION: u32 = 4;
+/// values are unchanged). Version 5 = disaggregated serving (TPOT
+/// percentiles, kv_imports / imported_kv_tokens, and the disagg report
+/// with migration counters and split prefill/decode views). The full
+/// key changelog lives in `docs/serving.md`.
+pub const SERVE_SCHEMA_VERSION: u32 = 5;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -130,9 +133,21 @@ pub fn serve_table(r: &ServeReport) -> String {
     );
     let _ = writeln!(
         s,
+        "  TPOT [s]:    mean {:.4}  p50 {:.4}  p99 {:.4}",
+        r.tpot_mean_s, r.tpot_p50_s, r.tpot_p99_s
+    );
+    let _ = writeln!(
+        s,
         "  queue [s]:   mean {:.4}  p99 {:.4}  preemptions {}",
         r.queue_mean_s, r.queue_p99_s, r.preemptions
     );
+    if r.kv_imports > 0 {
+        let _ = writeln!(
+            s,
+            "  KV imports: {} requests, {} prompt tokens mapped without prefill",
+            r.kv_imports, r.imported_kv_tokens
+        );
+    }
     for c in &r.per_class {
         let _ = writeln!(
             s,
@@ -238,7 +253,9 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"pricing_cache_hit_rate\":{},\"tp\":{},\"pp\":{},\
          \"collective_cycles\":{},\"d2d_bytes\":{},\
          \"engine\":\"{}\",\"arrival_events\":{},\"pass_events\":{},\
-         \"pass_cache_hits\":{},\"pass_cache_misses\":{},\"per_class\":[{}]}}",
+         \"pass_cache_hits\":{},\"pass_cache_misses\":{},\
+         \"tpot_mean_s\":{},\"tpot_p50_s\":{},\"tpot_p99_s\":{},\
+         \"kv_imports\":{},\"imported_kv_tokens\":{},\"per_class\":[{}]}}",
         r.model,
         r.format,
         r.requests,
@@ -283,6 +300,11 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.pass_events,
         r.pass_cache_hits,
         r.pass_cache_misses,
+        r.tpot_mean_s,
+        r.tpot_p50_s,
+        r.tpot_p99_s,
+        r.kv_imports,
+        r.imported_kv_tokens,
         classes.join(",")
     )
 }
@@ -324,6 +346,101 @@ pub fn router_json(r: &RouterReport) -> String {
         assigned.join(","),
         serve_json(&r.merged),
         per.join(",")
+    )
+}
+
+/// Render a disaggregated-fleet report: the split summary, migration
+/// counters, combined end-to-end percentiles, and the per-stage merged
+/// views.
+pub fn disagg_table(r: &DisaggReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "disaggregated fleet: {} prefill + {} decode replicas, policy {}",
+        r.prefill_replicas, r.decode_replicas, r.policy
+    );
+    let _ = writeln!(
+        s,
+        "  completed {} / {} requests, rejected {}{}",
+        r.completed,
+        r.requests,
+        r.rejected.len(),
+        if r.rejected.is_empty() {
+            String::new()
+        } else {
+            format!(" (ids {:?})", r.rejected)
+        }
+    );
+    let _ = writeln!(
+        s,
+        "  migrations: {} handoffs, {:.2} GB KV over d2d links, {:.3} Mcycles \
+         (overlapped with decode)",
+        r.migrations,
+        r.migrated_kv_bytes as f64 / 1e9,
+        r.migration_cycles as f64 / 1e6,
+    );
+    let _ = writeln!(
+        s,
+        "  end-to-end TTFT [s]: mean {:.4}  p50 {:.4}  p99 {:.4}",
+        r.ttft_mean_s, r.ttft_p50_s, r.ttft_p99_s
+    );
+    let _ = writeln!(
+        s,
+        "  TPOT [s]:            mean {:.4}  p50 {:.4}  p99 {:.4}",
+        r.tpot_mean_s, r.tpot_p50_s, r.tpot_p99_s
+    );
+    let _ = writeln!(
+        s,
+        "  latency [s]:         mean {:.4}  p50 {:.4}  p99 {:.4}",
+        r.latency_mean_s, r.latency_p50_s, r.latency_p99_s
+    );
+    let _ = writeln!(
+        s,
+        "  {:.1} tokens/s over {:.3} s makespan",
+        r.tokens_per_s, r.total_seconds
+    );
+    let _ = writeln!(s, "prefill stage:");
+    s.push_str(&serve_table(&r.prefill));
+    let _ = writeln!(s, "decode stage:");
+    s.push_str(&serve_table(&r.decode));
+    s
+}
+
+/// JSON export of a disaggregated-fleet report (combined view plus the
+/// two per-stage merged serve reports).
+pub fn disagg_json(r: &DisaggReport) -> String {
+    format!(
+        "{{\"schema_version\":{SERVE_SCHEMA_VERSION},\
+         \"prefill_replicas\":{},\"decode_replicas\":{},\"policy\":\"{}\",\
+         \"requests\":{},\"completed\":{},\"rejected\":{},\
+         \"migrations\":{},\"migrated_kv_bytes\":{},\"migration_cycles\":{},\
+         \"ttft_mean_s\":{},\"ttft_p50_s\":{},\"ttft_p99_s\":{},\
+         \"tpot_mean_s\":{},\"tpot_p50_s\":{},\"tpot_p99_s\":{},\
+         \"latency_mean_s\":{},\"latency_p50_s\":{},\"latency_p99_s\":{},\
+         \"total_seconds\":{},\"tokens_per_s\":{},\
+         \"prefill\":{},\"decode\":{}}}",
+        r.prefill_replicas,
+        r.decode_replicas,
+        r.policy,
+        r.requests,
+        r.completed,
+        r.rejected.len(),
+        r.migrations,
+        r.migrated_kv_bytes,
+        r.migration_cycles,
+        r.ttft_mean_s,
+        r.ttft_p50_s,
+        r.ttft_p99_s,
+        r.tpot_mean_s,
+        r.tpot_p50_s,
+        r.tpot_p99_s,
+        r.latency_mean_s,
+        r.latency_p50_s,
+        r.latency_p99_s,
+        r.total_seconds,
+        r.tokens_per_s,
+        serve_json(&r.prefill),
+        serve_json(&r.decode)
     )
 }
 
@@ -557,6 +674,54 @@ mod tests {
         let hits = v.req("pass_cache_hits").unwrap().as_u64().unwrap();
         let misses = v.req("pass_cache_misses").unwrap().as_u64().unwrap();
         assert_eq!(hits + misses, v.req("pass_events").unwrap().as_u64().unwrap());
+        // v5: TPOT percentiles and the imported-KV counters (zero on a
+        // symmetric fleet; the disagg decode stage populates them).
+        assert!(v.req("tpot_p99_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            v.req("tpot_p50_s").unwrap().as_f64().unwrap()
+                <= v.req("tpot_p99_s").unwrap().as_f64().unwrap()
+        );
+        assert_eq!(v.req("kv_imports").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("imported_kv_tokens").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn disagg_table_and_json_render() {
+        use crate::parallel::RoutePolicy;
+        let e = InferenceEngine::new(PlatformConfig::with_dies(2));
+        let w = crate::coordinator::Workload::uniform(6, 16, 8);
+        let opts = crate::coordinator::BatcherConfig::new(2, 0);
+        let r = e.serve_disaggregated(
+            &ModelConfig::tiny(),
+            &w,
+            opts,
+            FpFormat::Fp32,
+            1,
+            1,
+            RoutePolicy::JoinShortestQueue,
+        );
+        let t = disagg_table(&r);
+        assert!(t.contains("disaggregated fleet: 1 prefill + 1 decode"), "{t}");
+        assert!(t.contains("migrations: 6 handoffs"), "{t}");
+        assert!(t.contains("prefill stage:"), "{t}");
+        assert!(t.contains("decode stage:"), "{t}");
+        assert!(t.contains("KV imports: 6 requests"), "{t}");
+        let v = crate::util::json::parse(&disagg_json(&r)).expect("valid JSON");
+        assert_eq!(
+            v.req("schema_version").unwrap().as_u64(),
+            Some(SERVE_SCHEMA_VERSION as u64)
+        );
+        assert_eq!(v.req("migrations").unwrap().as_u64(), Some(6));
+        assert!(v.req("migrated_kv_bytes").unwrap().as_u64().unwrap() > 0);
+        assert!(v.req("tpot_p99_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            v.req("decode").unwrap().req("kv_imports").unwrap().as_u64(),
+            Some(6)
+        );
+        assert_eq!(
+            v.req("prefill").unwrap().req("gen_tokens").unwrap().as_u64(),
+            Some(0)
+        );
     }
 
     #[test]

@@ -10,8 +10,8 @@ use common::Rng;
 use snitch_fm::arch::{Features, FpFormat, MemLevel, PlatformConfig};
 use snitch_fm::coordinator::schedule::{block_cost, model_cost};
 use snitch_fm::coordinator::{
-    layer_cost, BatcherConfig, ContinuousBatcher, KvCache, KvGeometry, LayerCostCache,
-    PageTable, PagedKvAllocator, PrefixCache, Workload,
+    layer_cost, BatcherConfig, ContinuousBatcher, KvCache, KvExport, KvGeometry,
+    LayerCostCache, PageTable, PagedKvAllocator, PrefixCache, Workload,
 };
 use snitch_fm::kernels::{flash_attention_cost, gemm_cost, layernorm_cost};
 use snitch_fm::kernels::gemm::OperandHome;
@@ -415,6 +415,114 @@ fn prefix_hits_conserve_tokens_end_to_end() {
         );
         assert_eq!(r.gen_tokens, w.total_gen_tokens(), "case {case}");
         assert!(r.peak_kv_bytes <= budget, "case {case}");
+    }
+}
+
+#[test]
+fn kv_migration_conserves_pages_across_pools() {
+    // The disagg handoff invariants, swept over random geometries:
+    // exporting a prompt frees at the source exactly the pages the
+    // destination maps at import (same geometry both sides), the
+    // in-flight manifest bills NEITHER pool, and prefix-cache references
+    // survive the export untouched. Draining both pools makes them whole.
+    let mut rng = Rng(0x1116);
+    for case in 0..60 {
+        let page_tokens = rng.next(1, 32);
+        let geom = KvGeometry { token_bytes: rng.next(1, 2048), page_tokens };
+        let total_pages = rng.next(4, 64);
+        let mut src = PagedKvAllocator::new(total_pages * geom.page_bytes(), geom);
+        let mut dst = PagedKvAllocator::new(total_pages * geom.page_bytes(), geom);
+        let mut cache = PrefixCache::new();
+        let tokens = rng.next(1, total_pages * page_tokens / 2);
+        let mut t = PageTable::new();
+        assert!(src.try_grow(&mut t, tokens), "case {case}: ample pool must admit");
+        let grown = src.used_pages();
+        assert_eq!(grown, geom.pages_for(tokens), "case {case}");
+        // Pin a random prefix of the prompt's pages in the prefix cache.
+        let cached = rng.next(0, t.len() as u64);
+        for (i, &p) in t.pages()[..cached as usize].iter().enumerate() {
+            cache.insert(&mut src, 0x1000 + i as u64, p);
+        }
+        let manifest = src.export(&mut t, tokens);
+        assert!(t.is_empty(), "case {case}: export drops every table ref");
+        assert_eq!(manifest.tokens, tokens);
+        assert_eq!(manifest.pages, grown, "case {case}: manifest covers the prompt");
+        assert_eq!(manifest.bytes, grown * geom.page_bytes());
+        // Prefix-cache refs survive; everything else is freed at the source.
+        assert_eq!(
+            src.used_pages(),
+            cached,
+            "case {case}: only cache-pinned pages survive the export"
+        );
+        // In-flight window: the manifest bills neither pool.
+        assert_eq!(dst.used_pages(), 0, "case {case}");
+        assert_eq!(
+            src.bytes_in_use() + dst.bytes_in_use(),
+            cached * geom.page_bytes(),
+            "case {case}: no double-billing while the migration is in flight"
+        );
+        // Import maps exactly the pages the export freed (same geometry).
+        assert!(dst.import(&mut t, &manifest), "case {case}");
+        assert_eq!(dst.used_pages(), manifest.pages, "case {case}: freed == mapped");
+        assert_eq!(t.len() as u64, manifest.pages, "case {case}");
+        // Drain both pools -> whole.
+        dst.release(&mut t);
+        cache.clear(&mut src);
+        assert_eq!(src.used_pages(), 0, "case {case}: drained source must be whole");
+        assert_eq!(dst.used_pages(), 0, "case {case}: drained destination must be whole");
+        assert_eq!(src.free_pages(), src.total_pages());
+        assert_eq!(dst.free_pages(), dst.total_pages());
+    }
+}
+
+#[test]
+fn kv_migration_import_is_all_or_nothing() {
+    // A destination that cannot hold the whole manifest refuses it and is
+    // left byte-identical; the manifest stays in flight and lands intact
+    // on a later retry once capacity frees up.
+    let mut rng = Rng(0xF117);
+    for case in 0..60 {
+        let page_tokens = rng.next(1, 16);
+        let geom = KvGeometry { token_bytes: rng.next(1, 512), page_tokens };
+        let src_pages = rng.next(3, 32);
+        let mut src = PagedKvAllocator::new(src_pages * geom.page_bytes(), geom);
+        let mut t = PageTable::new();
+        // >= 2 pages so "one page short" is a real pool.
+        let tokens = rng.next(page_tokens + 1, src_pages * page_tokens);
+        assert!(src.try_grow(&mut t, tokens), "case {case}");
+        let manifest = src.export(&mut t, tokens);
+        assert!(manifest.pages >= 2, "case {case}");
+        assert_eq!(src.used_pages(), 0, "case {case}");
+
+        // One page short: the import must refuse and change nothing.
+        let mut small =
+            PagedKvAllocator::new((manifest.pages - 1) * geom.page_bytes(), geom);
+        assert!(!small.import(&mut t, &manifest), "case {case}: must refuse");
+        assert!(t.is_empty(), "case {case}: failed import maps nothing");
+        assert_eq!(small.used_pages(), 0, "case {case}: failed import bills nothing");
+
+        // Exactly-fitting pool, pre-occupied by a resident request: still
+        // refuses; after the resident drains, the retry lands the whole
+        // manifest.
+        let mut dst = PagedKvAllocator::new(manifest.pages * geom.page_bytes(), geom);
+        let mut resident = PageTable::new();
+        assert!(dst.try_grow(&mut resident, 1), "case {case}");
+        assert!(!dst.import(&mut t, &manifest), "case {case}: occupied pool refuses");
+        assert_eq!(dst.used_pages(), 1, "case {case}: refusal leaves the resident");
+        dst.release(&mut resident);
+        assert!(dst.import(&mut t, &manifest), "case {case}: retry succeeds");
+        assert_eq!(dst.used_pages(), manifest.pages, "case {case}");
+        assert_eq!(
+            manifest,
+            KvExport {
+                tokens,
+                pages: geom.pages_for(tokens),
+                bytes: geom.pages_for(tokens) * geom.page_bytes()
+            },
+            "case {case}: the manifest is immutable across retries"
+        );
+        dst.release(&mut t);
+        assert_eq!(dst.free_pages(), dst.total_pages(), "case {case}");
     }
 }
 
