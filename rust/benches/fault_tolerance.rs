@@ -1,0 +1,174 @@
+//! Fault tolerance: the PR-8 headline claim — the fleet degrades
+//! proportionally, not catastrophically, when replicas fail mid-trace.
+//!
+//! A 4-replica fleet serves an open-loop Poisson trace while 0, 1, 2,
+//! then 3 of its replicas fail permanently partway through (`fail@` —
+//! the KV pool survives, so salvaged in-flight requests re-export their
+//! pages over the d2d links instead of recomputing prefill). Survivors
+//! adopt the failed replicas' backlog through the router's penalized
+//! re-routing.
+//!
+//! Claims defended here:
+//!
+//! 1. **Graceful degradation.** Every request completes at every failure
+//!    count short of fleet death, goodput falls monotonically but stays
+//!    above a fraction of the surviving-capacity share (never a cliff),
+//!    and `degraded_capacity_fraction` grows with the failure count.
+//! 2. **`--faults off` is inert.** The armed-but-off path is
+//!    bit-identical (`same_outcome`) to the PR-7 fleet.
+//! 3. **Reproducibility.** Identical fault specs and seeds replay
+//!    byte-identical reports.
+//!
+//! Short mode (`BENCH_SMOKE=1`) serves 160 requests instead of 640; with
+//! `BENCH_JSON_DIR` set the results land in `BENCH_faults.json`
+//! (the healthy fleet's tokens_per_s / ttft_p99_s are trend-tracked).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, FaultPlan, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::parallel::{serve_replicated, serve_replicated_with_faults, RoutePolicy};
+
+const SEED: u64 = 0xFA157;
+const REPLICAS: usize = 4;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let fmt = FpFormat::Fp8;
+    let platform = PlatformConfig::with_dies(REPLICAS as u32);
+    let n = if common::smoke() { 160 } else { 640 };
+    let workload = Workload::synthetic(SEED, n, (16, 96), (8, 32))
+        .with_poisson_arrivals(SEED ^ 0x7EA, 2_500.0);
+    let opts = BatcherConfig::new(8, 0);
+    let policy = RoutePolicy::JoinShortestQueue;
+
+    // ---- Part 1: goodput vs replicas failed mid-trace ----
+    let (t_base, base) = common::time_median(3, || {
+        serve_replicated(&cfg, &platform, fmt, opts, &workload, REPLICAS, policy)
+    });
+    assert_eq!(base.merged.completed, n, "healthy fleet must serve the whole trace");
+    let horizon = base.merged.total_seconds;
+    // Victims fall at 30% / 45% / 60% of the healthy fleet's makespan:
+    // late enough that each carries real in-flight state to salvage,
+    // early enough that survivors re-run a meaningful backlog.
+    let fail_at = [0.30 * horizon, 0.45 * horizon, 0.60 * horizon];
+
+    let mut goodput = vec![base.merged.tokens_per_s];
+    let mut ttft_p99 = vec![base.merged.ttft_p99_s];
+    let mut tpot_p99 = vec![base.merged.tpot_p99_s];
+    let mut degraded = vec![base.merged.degraded_capacity_fraction];
+    let mut t_fail = 0.0;
+    for k in 1..REPLICAS {
+        let spec: Vec<String> =
+            (0..k).map(|i| format!("fail@{}:r{i}", fail_at[i])).collect();
+        let plan = FaultPlan::parse(&spec.join(","), SEED).unwrap();
+        let (t, r) = common::time_median(3, || {
+            serve_replicated_with_faults(
+                &cfg, &platform, fmt, opts, &workload, REPLICAS, policy, &plan,
+            )
+        });
+        if k == 1 {
+            t_fail = t;
+        }
+        assert_eq!(r.merged.replica_failures, k as u64, "{k} failures must fire");
+        assert_eq!(
+            r.merged.completed, n,
+            "{k} failed: survivors must still serve every request"
+        );
+        assert!(r.merged.rejected.is_empty());
+        assert!(r.merged.salvaged_requests > 0, "{k} failed: backlog must be salvaged");
+        // Reproducibility: the same spec + seed replays byte-identically.
+        let again = serve_replicated_with_faults(
+            &cfg, &platform, fmt, opts, &workload, REPLICAS, policy, &plan,
+        );
+        assert!(again.merged.same_outcome(&r.merged), "{k} failed: replay must match");
+        goodput.push(r.merged.tokens_per_s);
+        ttft_p99.push(r.merged.ttft_p99_s);
+        tpot_p99.push(r.merged.tpot_p99_s);
+        degraded.push(r.merged.degraded_capacity_fraction);
+    }
+
+    common::header(
+        "fault tolerance",
+        "4-replica fleet, permanent replica failures mid-trace, KV salvage on",
+    );
+    println!(
+        "{n} requests, {} gen tokens, failures at {:.4}/{:.4}/{:.4} s of a {:.4} s trace",
+        workload.total_gen_tokens(),
+        fail_at[0],
+        fail_at[1],
+        fail_at[2],
+        horizon
+    );
+    for k in 0..REPLICAS {
+        println!(
+            "{k} failed: {:>8.1} tokens/s  TTFT p99 {:.4}  TPOT p99 {:.6}  \
+             capacity lost {:.1}%",
+            goodput[k],
+            ttft_p99[k],
+            tpot_p99[k],
+            degraded[k] * 100.0
+        );
+    }
+    common::report_timing("faults-healthy", t_base);
+    common::report_timing("faults-1-failed", t_fail);
+
+    // Graceful, proportional, non-catastrophic: goodput never rises as
+    // more replicas die, never falls below a conservative fraction of
+    // the surviving-capacity share, and the modeled capacity loss grows.
+    for k in 1..REPLICAS {
+        assert!(
+            goodput[k] <= goodput[k - 1] * 1.001,
+            "goodput must not rise with more failures: {} vs {} at k={k}",
+            goodput[k],
+            goodput[k - 1]
+        );
+        let share = (REPLICAS - k) as f64 / REPLICAS as f64;
+        assert!(
+            goodput[k] >= goodput[0] * share * 0.25,
+            "catastrophic collapse at k={k}: {:.1} tokens/s vs healthy {:.1} \
+             (surviving share {share:.2})",
+            goodput[k],
+            goodput[0]
+        );
+        assert!(
+            degraded[k] > degraded[k - 1],
+            "capacity loss must grow with the failure count"
+        );
+        assert!(degraded[k] < 1.0);
+    }
+
+    // ---- Part 2: `--faults off` is bit-identical to the PR-7 fleet ----
+    let off = FaultPlan::parse("off", SEED).unwrap();
+    assert!(off.is_off());
+    let armed = serve_replicated_with_faults(
+        &cfg, &platform, fmt, opts, &workload, REPLICAS, policy, &off,
+    );
+    assert!(
+        armed.merged.same_outcome(&base.merged),
+        "--faults off must be bit-identical to the plain fleet"
+    );
+    for (a, b) in armed.per_replica.iter().zip(&base.per_replica) {
+        assert!(a.same_outcome(b));
+    }
+    println!("faults off: bit-identical to the plain fleet; replays deterministic");
+
+    common::write_bench_json(
+        "faults",
+        &format!(
+            "{{\"requests\":{n},\"replicas\":{REPLICAS},\
+             \"baseline\":{{\"tokens_per_s\":{},\"ttft_p99_s\":{}}},\
+             \"goodput_by_failures\":[{}],\"ttft_p99_by_failures\":[{}],\
+             \"tpot_p99_by_failures\":[{}],\"degraded_fraction_by_failures\":[{}],\
+             \"goodput_ratio_1_failed\":{}}}",
+            goodput[0],
+            ttft_p99[0],
+            goodput.iter().map(f64::to_string).collect::<Vec<_>>().join(","),
+            ttft_p99.iter().map(f64::to_string).collect::<Vec<_>>().join(","),
+            tpot_p99.iter().map(f64::to_string).collect::<Vec<_>>().join(","),
+            degraded.iter().map(f64::to_string).collect::<Vec<_>>().join(","),
+            goodput[1] / goodput[0],
+        ),
+    );
+}

@@ -50,9 +50,10 @@
 //!   now computed once and shared by every stage of the iteration.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 
 use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::faults::{FaultKind, ReplicaFaults, SalvagedRequest};
 use crate::coordinator::kv_paging::{
     KvExport, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
 };
@@ -61,6 +62,7 @@ use crate::coordinator::workload::{Request, Workload};
 use crate::energy;
 use crate::metrics::sketch::StreamSketch;
 use crate::model::ModelConfig;
+use crate::parallel::collectives::degrade_link;
 use crate::parallel::shard::{plan_pass_cost, ShardPlan};
 use crate::sim::KernelCost;
 
@@ -198,6 +200,14 @@ pub struct RequestStats {
     pub preemptions: u32,
     /// Prompt tokens served from the prefix cache (prefill skipped).
     pub prefix_hit_tokens: u64,
+    /// Times this request was salvaged off a failed replica and re-routed
+    /// (filled in by the fleet router; always 0 on a single-engine run).
+    pub retries: u32,
+    /// Cycles failure recovery inserted before this request could restart
+    /// on a survivor: the wait on the failed replica plus the KV
+    /// re-export transfer. Latency-like fields restart at the re-arrival,
+    /// so this carries the gap (0 without faults).
+    pub recovery_cycles: u64,
 }
 
 /// Latency percentiles of one priority class.
@@ -378,6 +388,32 @@ pub struct ServeReport {
     pub pass_cache_hits: u64,
     /// Pass-shape memo misses (event core only).
     pub pass_cache_misses: u64,
+    /// Permanent replica failures this report covers (0 or 1 for one
+    /// engine; the fleet merge sums them).
+    pub replica_failures: u64,
+    /// Cycles the engine(s) spent frozen in injected stalls.
+    pub stall_cycles: u64,
+    /// Link-degradation fault events applied while serving.
+    pub link_faults: u64,
+    /// Requests salvaged off failed replicas (re-routed by the fleet
+    /// router; rejected when no survivor exists to adopt them).
+    pub salvaged_requests: u64,
+    /// KV bytes re-exported over the d2d links for salvaged requests
+    /// whose pool survived the failure.
+    pub salvaged_kv_bytes: u64,
+    /// Re-route retries across the fleet (per-request `retries` summed;
+    /// the router fills this in, single engines report 0).
+    pub retries: u64,
+    /// Cycles failure recovery inserted across all salvaged requests
+    /// (per-request `recovery_cycles` summed; router-filled).
+    pub recovery_cycles: u64,
+    /// Fraction of nominal serving capacity lost to faults: stall time
+    /// plus post-failure dead time over replicas x fleet wall-clock.
+    /// Exactly 0.0 on a fault-free run.
+    pub degraded_capacity_fraction: f64,
+    /// Human-readable warnings (e.g. `--disagg auto` falling back to the
+    /// symmetric fleet). Empty on clean runs.
+    pub warnings: Vec<String>,
     /// Streaming sketch behind the TTFT percentile scalars: exact below
     /// [`crate::metrics::sketch::EXACT_LIMIT`] samples, ~1% relative
     /// error above, mergeable across replicas.
@@ -422,35 +458,55 @@ impl ServeReport {
 pub(crate) fn latency_aggregates(
     done: &[RequestStats],
 ) -> (StreamSketch, StreamSketch, StreamSketch, StreamSketch, Vec<ClassStats>) {
-    let mut ttft = StreamSketch::new();
-    let mut lat = StreamSketch::new();
-    let mut tpot = StreamSketch::new();
-    let mut queue = StreamSketch::new();
+    let mut agg = LatencyAgg::default();
     for r in done {
+        agg.push(r);
+    }
+    agg.finish()
+}
+
+/// Incremental form of [`latency_aggregates`]: one `push` per completed
+/// request, `finish` yields the four fleet sketches plus the per-class
+/// breakdown. The materializing report path and the `--no-per-request`
+/// streaming path both feed this in retirement order, which is what
+/// keeps their aggregates bit-identical (exact-mode sketches compare by
+/// their sample vectors, so push *order* matters even though every
+/// percentile/mean query is order-independent).
+#[derive(Default)]
+pub(crate) struct LatencyAgg {
+    ttft: StreamSketch,
+    lat: StreamSketch,
+    tpot: StreamSketch,
+    queue: StreamSketch,
+    /// Per-class (ttft, latency) sketches, keyed — and later emitted —
+    /// in class order, samples in encounter order.
+    classes: BTreeMap<u8, (StreamSketch, StreamSketch)>,
+}
+
+impl LatencyAgg {
+    pub(crate) fn push(&mut self, r: &RequestStats) {
         if r.gen_tokens > 0 {
-            ttft.push(r.ttft_s);
+            self.ttft.push(r.ttft_s);
         }
         if r.gen_tokens > 1 {
-            tpot.push((r.latency_s - r.ttft_s) / (r.gen_tokens - 1) as f64);
+            self.tpot.push((r.latency_s - r.ttft_s) / (r.gen_tokens - 1) as f64);
         }
-        lat.push(r.latency_s);
-        queue.push(r.admitted_s);
+        self.lat.push(r.latency_s);
+        self.queue.push(r.admitted_s);
+        let (t, l) = self.classes.entry(r.class).or_default();
+        if r.gen_tokens > 0 {
+            t.push(r.ttft_s);
+        }
+        l.push(r.latency_s);
     }
-    let mut classes: Vec<u8> = done.iter().map(|r| r.class).collect();
-    classes.sort_unstable();
-    classes.dedup();
-    let per_class = classes
-        .into_iter()
-        .map(|class| {
-            let mut t = StreamSketch::new();
-            let mut l = StreamSketch::new();
-            for r in done.iter().filter(|r| r.class == class) {
-                if r.gen_tokens > 0 {
-                    t.push(r.ttft_s);
-                }
-                l.push(r.latency_s);
-            }
-            ClassStats {
+
+    pub(crate) fn finish(
+        self,
+    ) -> (StreamSketch, StreamSketch, StreamSketch, StreamSketch, Vec<ClassStats>) {
+        let per_class = self
+            .classes
+            .into_iter()
+            .map(|(class, (t, l))| ClassStats {
                 class,
                 completed: l.count() as usize,
                 ttft_p50_s: t.p(50.0),
@@ -459,10 +515,10 @@ pub(crate) fn latency_aggregates(
                 latency_p99_s: l.p(99.0),
                 ttft: t,
                 latency: l,
-            }
-        })
-        .collect();
-    (ttft, lat, tpot, queue, per_class)
+            })
+            .collect();
+        (self.ttft, self.lat, self.tpot, self.queue, per_class)
+    }
 }
 
 /// A request's scheduler-side state that survives preemption.
@@ -537,6 +593,11 @@ pub struct ContinuousBatcher<'a> {
     pub fmt: FpFormat,
     /// Scheduling policy (budget resolved by [`Self::new`]).
     pub opts: BatcherConfig,
+    /// Injected faults this engine will observe, in cycle order (empty =
+    /// fault-free, bit-identical serving). Set via [`Self::with_faults`];
+    /// the fleet router derives one view per replica from the
+    /// [`crate::coordinator::faults::FaultPlan`].
+    pub faults: ReplicaFaults,
 }
 
 /// Shape of one priced pass: prefill (tokens, kv-context) pairs plus the
@@ -585,6 +646,12 @@ enum EventKind {
     PassComplete,
     Retire,
     Preemption,
+    /// An injected fault was applied at this cycle (stall, link
+    /// degradation, or replica failure). Like the other markers the state
+    /// change already happened when the fault fired from the plan's
+    /// cursor; the event keeps the fault visible in the heap's ordered
+    /// record of the schedule.
+    Fault,
 }
 
 #[derive(Debug)]
@@ -713,7 +780,10 @@ impl<'w> EventQueue<'w> {
                     st.c.arrival_events += 1;
                     self.pull_arrival(b, st);
                 }
-                EventKind::PassComplete | EventKind::Retire | EventKind::Preemption => {}
+                EventKind::PassComplete
+                | EventKind::Retire
+                | EventKind::Preemption
+                | EventKind::Fault => {}
             }
         }
     }
@@ -725,6 +795,37 @@ impl<'w> EventQueue<'w> {
         let e = self.heap.peek()?;
         debug_assert!(matches!(e.kind, EventKind::Arrival(_)));
         Some(e.cycle)
+    }
+
+    /// Failure teardown: drain every not-yet-fired arrival — the resident
+    /// heap event plus the rest of the source — into jobs, applying the
+    /// same admission-feasibility rejection the live path would have.
+    /// Sorted like `materialized_jobs`, so the salvage hand-off is
+    /// deterministic for either source kind.
+    fn drain_pending(&mut self, b: &ContinuousBatcher, st: &mut RunState) -> Vec<Job> {
+        let mut jobs: Vec<Job> = std::mem::take(&mut self.heap)
+            .into_vec()
+            .into_iter()
+            .filter_map(|e| match e.kind {
+                EventKind::Arrival(j) => Some(j),
+                _ => None,
+            })
+            .collect();
+        match &mut self.source {
+            ArrivalSource::Queue(rest) => jobs.extend(rest.drain(..)),
+            ArrivalSource::Stream(it) => {
+                for r in it.by_ref() {
+                    self.offered += 1;
+                    if !st.alloc.fits_pool(r.kv_capacity()) {
+                        st.rejected.push(r.id);
+                        continue;
+                    }
+                    jobs.push(b.job_of(r));
+                }
+            }
+        }
+        jobs.sort_by_key(|j| (j.arrival_cycle, j.req.id));
+        jobs
     }
 }
 
@@ -758,6 +859,60 @@ struct RunCounters {
     arrival_events: u64,
     /// Priced passes completed.
     pass_events: u64,
+    /// Cycles this engine spent frozen in injected stalls.
+    stall_cycles: u64,
+    /// Link-degradation fault events applied.
+    link_faults: u64,
+    /// Permanent failures this engine suffered (0 or 1).
+    replica_failures: u64,
+    /// Requests salvaged at the failure teardown.
+    salvaged_requests: u64,
+    /// KV bytes re-exportable from the surviving pool at teardown.
+    salvaged_kv_bytes: u64,
+}
+
+/// Where retired requests go. With `per_request` on, the full
+/// [`RequestStats`] vec is kept (Keep). Under `--no-per-request` the
+/// stats are folded straight into the aggregate sketches at retirement
+/// (Fold) and the vec is never materialized — the carried ROADMAP item —
+/// so a million-request trace costs O(1) report memory inside the run
+/// loop, not just at report time. Both variants feed [`LatencyAgg`] in
+/// retirement order, which keeps their sketches bit-identical.
+enum DoneLog {
+    /// Materialize per-request stats (sorted by id at report time).
+    Keep(Vec<RequestStats>),
+    /// Stream every retirement into the aggregates; keep only scalars.
+    Fold {
+        agg: LatencyAgg,
+        completed: usize,
+        gen_tokens: u64,
+        retries: u64,
+        recovery_cycles: u64,
+    },
+}
+
+impl DoneLog {
+    fn push(&mut self, r: RequestStats) {
+        match self {
+            DoneLog::Keep(v) => v.push(r),
+            DoneLog::Fold { agg, completed, gen_tokens, retries, recovery_cycles } => {
+                agg.push(&r);
+                *completed += 1;
+                *gen_tokens += r.gen_tokens;
+                *retries += r.retries as u64;
+                *recovery_cycles += r.recovery_cycles;
+            }
+        }
+    }
+
+    /// Requests retired so far (the event core counts Retire markers off
+    /// this, so it must work for both variants).
+    fn completed(&self) -> usize {
+        match self {
+            DoneLog::Keep(v) => v.len(),
+            DoneLog::Fold { completed, .. } => *completed,
+        }
+    }
 }
 
 /// Mutable state of one serving run, threaded through the per-iteration
@@ -766,7 +921,7 @@ struct RunCounters {
 struct RunState {
     ready: Vec<Job>,
     active: Vec<ActiveJob>,
-    done: Vec<RequestStats>,
+    done: DoneLog,
     rejected: Vec<usize>,
     alloc: PagedKvAllocator,
     cache: PrefixCache,
@@ -776,6 +931,21 @@ struct RunState {
     /// Pass-shape memo (event core only; `None` keeps the iteration core
     /// pricing every pass through the layer memo, bit-identically).
     pass_memo: Option<PassMemo>,
+    /// Cursor into the engine's sorted fault stream: events before it
+    /// already fired. Both cores advance it at the same decision points,
+    /// so injected faults land on identical schedule boundaries.
+    fault_cursor: usize,
+    /// Degraded-link pricing platform, swapped in by a `link@` fault
+    /// (`None` = nominal; pricing then uses the borrowed platform
+    /// reference untouched, keeping fault-free runs bit-identical).
+    degraded: Option<PlatformConfig>,
+    /// Set when a permanent `fail@`/`die@` fault fired; carries whether
+    /// the KV pool survived (salvaged requests can re-export their pages)
+    /// and stops the run loop at the next decision point.
+    failed: Option<bool>,
+    /// Requests torn off this engine by a permanent failure, for the
+    /// fleet router to re-route (empty without faults).
+    salvaged: Vec<SalvagedRequest>,
     /// Reused per-iteration buffers — the event core's hot loop allocates
     /// nothing on a memoized decode step. Shared by both engines, so the
     /// reuse cannot change behavior.
@@ -808,7 +978,15 @@ impl<'a> ContinuousBatcher<'a> {
         if opts.kv_budget_bytes == 0 {
             opts.kv_budget_bytes = opts.plan.replica_kv_budget_bytes(cfg, fmt, platform);
         }
-        ContinuousBatcher { cfg, platform, fmt, opts }
+        ContinuousBatcher { cfg, platform, fmt, opts, faults: ReplicaFaults::none() }
+    }
+
+    /// Arm this engine with an injected-fault stream (this replica's view
+    /// of the fleet's [`crate::coordinator::faults::FaultPlan`]). An
+    /// empty stream is exactly the fault-free engine.
+    pub fn with_faults(mut self, faults: ReplicaFaults) -> ContinuousBatcher<'a> {
+        self.faults = faults;
+        self
     }
 
     /// Price one iteration's fused pass under the engine's shard plan
@@ -828,7 +1006,10 @@ impl<'a> ContinuousBatcher<'a> {
         decode_kv: &[u64],
     ) -> KernelCost {
         st.c.pass_events += 1;
-        let RunState { pass_memo, costs, c, .. } = st;
+        let RunState { pass_memo, costs, c, degraded, .. } = st;
+        // A live `link@` fault swaps in a degraded-bandwidth platform for
+        // pricing; fault-free runs borrow the nominal reference untouched.
+        let platform = degraded.as_ref().unwrap_or(self.platform);
         if let Some(memo) = pass_memo.as_mut() {
             memo.key.prefills.clear();
             memo.key.prefills.extend_from_slice(prefills);
@@ -848,7 +1029,7 @@ impl<'a> ContinuousBatcher<'a> {
                 prefills,
                 decode_kv,
                 self.fmt,
-                self.platform,
+                platform,
             );
             let lookups = costs.hits() + costs.misses() - before;
             memo.misses += 1;
@@ -870,7 +1051,7 @@ impl<'a> ContinuousBatcher<'a> {
             prefills,
             decode_kv,
             self.fmt,
-            self.platform,
+            platform,
         );
         c.collective_cycles += pass.collective_cycles;
         pass.total
@@ -923,7 +1104,17 @@ impl<'a> ContinuousBatcher<'a> {
         RunState {
             ready: Vec::new(),
             active: Vec::new(),
-            done: Vec::new(),
+            done: if self.opts.per_request {
+                DoneLog::Keep(Vec::new())
+            } else {
+                DoneLog::Fold {
+                    agg: LatencyAgg::default(),
+                    completed: 0,
+                    gen_tokens: 0,
+                    retries: 0,
+                    recovery_cycles: 0,
+                }
+            },
             rejected: Vec::new(),
             alloc: PagedKvAllocator::new(self.opts.kv_budget_bytes, geom),
             cache: PrefixCache::new(),
@@ -931,6 +1122,10 @@ impl<'a> ContinuousBatcher<'a> {
             c: RunCounters::default(),
             time: 0,
             pass_memo: None,
+            fault_cursor: 0,
+            degraded: None,
+            failed: None,
+            salvaged: Vec::new(),
             order_buf: Vec::new(),
             stepped_buf: Vec::new(),
             kv_buf: Vec::new(),
@@ -966,50 +1161,181 @@ impl<'a> ContinuousBatcher<'a> {
         jobs.into()
     }
 
-    /// Run the whole workload to completion and return the priced report.
-    /// Dispatches on [`BatcherConfig::engine`]; the two cores produce
-    /// bit-identical reports ([`ServeReport::same_outcome`]).
-    pub fn run(&self, workload: &Workload) -> ServeReport {
-        match self.opts.engine {
-            EngineMode::Iteration => self.run_iteration(workload),
-            EngineMode::Event => {
-                let mut st = self.fresh_state();
-                let jobs = self.materialized_jobs(workload, &mut st);
-                self.run_event(&mut st, ArrivalSource::Queue(jobs));
-                self.report(workload.len(), st)
+    /// Fire every injected fault due at the current clock. Stalls freeze
+    /// the clock forward (passes are atomic, so faults land on iteration
+    /// boundaries in both cores); link faults swap the pricing platform
+    /// and flush the pass-shape memo (its cached costs priced the old
+    /// bandwidth); a permanent failure latches `st.failed` and stops the
+    /// fault stream — the run loop tears down at its next decision point.
+    /// Returns whether anything fired (the caller loops to a fixpoint
+    /// with arrival draining, since a stall can make new arrivals due).
+    fn fire_due_faults(&self, st: &mut RunState) -> bool {
+        let mut fired = false;
+        while st.failed.is_none() {
+            let Some(ev) = self.faults.events.get(st.fault_cursor) else { break };
+            if ev.cycle > st.time {
+                break;
+            }
+            st.fault_cursor += 1;
+            fired = true;
+            match ev.kind {
+                FaultKind::ReplicaStall { cycles } => {
+                    st.time += cycles;
+                    st.c.stall_cycles += cycles;
+                }
+                FaultKind::LinkDegrade { fraction } => {
+                    st.c.link_faults += 1;
+                    st.degraded = if fraction < 1.0 {
+                        Some(degrade_link(self.platform, fraction))
+                    } else {
+                        None
+                    };
+                    if let Some(m) = st.pass_memo.as_mut() {
+                        m.map.clear();
+                    }
+                }
+                FaultKind::ReplicaFail { pool_survives } => {
+                    st.failed = Some(pool_survives);
+                }
             }
         }
+        fired
+    }
+
+    /// Cycle of the next pending fault, if the engine is still alive.
+    /// Idle jumps clamp to this so a fault inside an idle gap fires at
+    /// its own cycle, not at the next arrival.
+    fn next_fault_cycle(&self, st: &RunState) -> Option<u64> {
+        if st.failed.is_some() {
+            return None;
+        }
+        self.faults.events.get(st.fault_cursor).map(|e| e.cycle)
+    }
+
+    /// Permanent-failure teardown: release every resident page and hand
+    /// back all unfinished work as [`SalvagedRequest`]s for the fleet
+    /// router to re-route. An in-flight request that finished prefill on
+    /// a surviving pool re-exports its prompt KV (priced by the router
+    /// over the link state at the failure); everything else — mid-prefill
+    /// residents, the ready queue, arrivals that never landed — recomputes
+    /// from scratch on the adopting replica. Already-produced tokens are
+    /// regenerated (the failed replica's output is gone), and prefix /
+    /// preemption history does not transfer.
+    fn salvage(&self, st: &mut RunState, pending: Vec<Job>, pool_survives: bool) {
+        let fail_cycle = st.time;
+        st.c.replica_failures += 1;
+        let geom = st.alloc.geometry();
+        let mut out: Vec<SalvagedRequest> = Vec::new();
+        for mut a in st.active.drain(..) {
+            st.alloc.release(&mut a.table);
+            let salvable = pool_survives && !a.prefilling();
+            let mut req = a.job.req;
+            req.kv_imported = salvable;
+            let export_bytes = if salvable {
+                geom.pages_for(req.prompt_len) * geom.page_bytes()
+            } else {
+                0
+            };
+            out.push(SalvagedRequest { req, fail_cycle, export_bytes });
+        }
+        for job in st.ready.drain(..).chain(pending) {
+            let mut req = job.req;
+            req.kv_imported = false;
+            out.push(SalvagedRequest { req, fail_cycle, export_bytes: 0 });
+        }
+        out.sort_by_key(|s| s.req.id);
+        st.c.salvaged_requests += out.len() as u64;
+        st.c.salvaged_kv_bytes += out.iter().map(|s| s.export_bytes).sum::<u64>();
+        st.salvaged = out;
+    }
+
+    /// Run the workload through the configured core and return the final
+    /// state plus the offered-request count (shared by [`Self::run`] and
+    /// [`Self::run_salvage`]).
+    fn run_state(&self, workload: &Workload) -> (RunState, usize) {
+        let mut st = self.fresh_state();
+        match self.opts.engine {
+            EngineMode::Iteration => {
+                self.run_iteration_loop(&mut st, workload);
+                (st, workload.len())
+            }
+            EngineMode::Event => {
+                let jobs = self.materialized_jobs(workload, &mut st);
+                self.run_event(&mut st, ArrivalSource::Queue(jobs));
+                (st, workload.len())
+            }
+        }
+    }
+
+    /// Run the whole workload to completion and return the priced report.
+    /// Dispatches on [`BatcherConfig::engine`]; the two cores produce
+    /// bit-identical reports ([`ServeReport::same_outcome`]). If a
+    /// permanent fault kills the engine mid-trace, unfinished requests
+    /// are reported as rejected — standalone engines have no fleet to
+    /// adopt them (use [`Self::run_salvage`] from a router instead).
+    pub fn run(&self, workload: &Workload) -> ServeReport {
+        let (mut st, offered) = self.run_state(workload);
+        for s in std::mem::take(&mut st.salvaged) {
+            st.rejected.push(s.req.id);
+        }
+        self.report(offered, st)
+    }
+
+    /// [`Self::run`], but a permanent fault's unfinished requests come
+    /// back as [`SalvagedRequest`]s (with their re-exportable KV sizes)
+    /// instead of rejections, for the fleet router to re-route.
+    pub fn run_salvage(&self, workload: &Workload) -> (ServeReport, Vec<SalvagedRequest>) {
+        let (mut st, offered) = self.run_state(workload);
+        let salvaged = std::mem::take(&mut st.salvaged);
+        (self.report(offered, st), salvaged)
     }
 
     /// Serve a lazy arrival stream (e.g. [`Workload::stream_poisson`])
     /// through the event core without materializing the trace: memory is
     /// O(resident set + completed stats), so million-request fleet shards
     /// are cheap. The stream must yield non-decreasing arrival times
-    /// (debug-asserted), which every seeded generator does.
+    /// (debug-asserted), which every seeded generator does. Like
+    /// [`Self::run`], a permanent fault rejects the unfinished tail.
     pub fn serve_stream<I>(&self, arrivals: I) -> ServeReport
     where
         I: Iterator<Item = Request>,
     {
         let mut st = self.fresh_state();
         let offered = self.run_event(&mut st, ArrivalSource::Stream(Box::new(arrivals)));
+        for s in std::mem::take(&mut st.salvaged) {
+            st.rejected.push(s.req.id);
+        }
         self.report(offered, st)
     }
 
     /// The legacy per-iteration loop (PR 2-5), kept verbatim as the
     /// oracle the event core is asserted against. Every scheduling stage
     /// it calls is shared with [`Self::run_event`].
-    fn run_iteration(&self, workload: &Workload) -> ServeReport {
-        let mut st = self.fresh_state();
+    fn run_iteration_loop(&self, st: &mut RunState, workload: &Workload) {
         let aging_cycles = self.aging_cycles();
-        let mut arrivals = self.materialized_jobs(workload, &mut st);
+        let mut arrivals = self.materialized_jobs(workload, st);
 
         loop {
-            while arrivals.front().is_some_and(|j| j.arrival_cycle <= st.time) {
-                st.ready.push(arrivals.pop_front().unwrap());
-                st.c.arrival_events += 1;
+            // Fixpoint: drain due arrivals, then due faults (a stall can
+            // advance the clock past more arrivals — and those past more
+            // faults). The event core runs the identical fixpoint, so
+            // faults land on the same schedule boundaries.
+            loop {
+                while arrivals.front().is_some_and(|j| j.arrival_cycle <= st.time) {
+                    st.ready.push(arrivals.pop_front().unwrap());
+                    st.c.arrival_events += 1;
+                }
+                if !self.fire_due_faults(st) {
+                    break;
+                }
+            }
+            if let Some(pool_survives) = st.failed {
+                let pending: Vec<Job> = arrivals.drain(..).collect();
+                self.salvage(st, pending, pool_survives);
+                break;
             }
 
-            self.admit(&mut st, aging_cycles);
+            self.admit(st, aging_cycles);
 
             if st.active.is_empty() {
                 debug_assert!(
@@ -1018,8 +1344,12 @@ impl<'a> ContinuousBatcher<'a> {
                 );
                 match arrivals.front() {
                     Some(next) if st.ready.is_empty() => {
-                        // System idle: jump to the next arrival.
-                        st.time = st.time.max(next.arrival_cycle);
+                        // System idle: jump to the next arrival — or to a
+                        // fault due sooner (it may stall or kill first).
+                        let jump = self
+                            .next_fault_cycle(st)
+                            .map_or(next.arrival_cycle, |f| f.min(next.arrival_cycle));
+                        st.time = st.time.max(jump);
                         continue;
                     }
                     None if st.ready.is_empty() => break,
@@ -1030,15 +1360,15 @@ impl<'a> ContinuousBatcher<'a> {
             // One priority order per iteration, shared by every stage
             // (ids, so stages survive `active` reshuffles).
             let mut order = std::mem::take(&mut st.order_buf);
-            self.iteration_order_into(&st, aging_cycles, &mut order);
+            self.iteration_order_into(st, aging_cycles, &mut order);
             let progressed = if self.opts.token_budget > 0 {
-                let p = self.mixed_iteration(&mut st, &order);
-                self.retire_finished(&mut st);
+                let p = self.mixed_iteration(st, &order);
+                self.retire_finished(st);
                 p
             } else {
-                let mut p = self.prefill_quanta(&mut st, &order);
-                self.retire_finished(&mut st);
-                p |= self.decode_step(&mut st, &order);
+                let mut p = self.prefill_quanta(st, &order);
+                self.retire_finished(st);
+                p |= self.decode_step(st, &order);
                 p
             };
             st.order_buf = order;
@@ -1051,7 +1381,7 @@ impl<'a> ContinuousBatcher<'a> {
                 }
                 if st.active.len() > 1 {
                     if let Some(v) = Self::victim_index(&st.active, None) {
-                        Self::preempt(&mut st, v);
+                        Self::preempt(st, v);
                     }
                 } else {
                     // A lone resident can always grow (oversize requests
@@ -1065,8 +1395,6 @@ impl<'a> ContinuousBatcher<'a> {
                 }
             }
         }
-
-        self.report(workload.len(), st)
     }
 
     /// The event-driven core. Control flow is owned by the event heap:
@@ -1090,7 +1418,21 @@ impl<'a> ContinuousBatcher<'a> {
         let mut q = EventQueue::new(source, self, st);
 
         loop {
-            q.fire_due(self, st);
+            // Same drain-arrivals / fire-faults fixpoint as the iteration
+            // core; each applied fault additionally leaves a marker event
+            // at its cycle, fired (as a no-op) by the next `fire_due`.
+            loop {
+                q.fire_due(self, st);
+                if !self.fire_due_faults(st) {
+                    break;
+                }
+                q.push(st.time, EventKind::Fault);
+            }
+            if let Some(pool_survives) = st.failed {
+                let pending = q.drain_pending(self, st);
+                self.salvage(st, pending, pool_survives);
+                break;
+            }
 
             self.admit(st, aging_cycles);
 
@@ -1101,8 +1443,11 @@ impl<'a> ContinuousBatcher<'a> {
                 );
                 match q.next_arrival_cycle() {
                     Some(next) if st.ready.is_empty() => {
-                        // System idle: jump to the next arrival.
-                        st.time = st.time.max(next);
+                        // System idle: jump to the next arrival — or to a
+                        // fault due sooner (it may stall or kill first).
+                        let jump =
+                            self.next_fault_cycle(st).map_or(next, |f| f.min(next));
+                        st.time = st.time.max(jump);
                         continue;
                     }
                     None if st.ready.is_empty() => break,
@@ -1113,7 +1458,7 @@ impl<'a> ContinuousBatcher<'a> {
             let mut order = std::mem::take(&mut st.order_buf);
             self.iteration_order_into(st, aging_cycles, &mut order);
             let time_before = st.time;
-            let retired_before = st.done.len();
+            let retired_before = st.done.completed();
             let progressed = if self.opts.token_budget > 0 {
                 let p = self.mixed_iteration(st, &order);
                 self.retire_finished(st);
@@ -1133,7 +1478,7 @@ impl<'a> ContinuousBatcher<'a> {
             if st.time > time_before {
                 q.push(st.time, EventKind::PassComplete);
             }
-            for _ in retired_before..st.done.len() {
+            for _ in retired_before..st.done.completed() {
                 q.push(st.time, EventKind::Retire);
             }
 
@@ -1698,19 +2043,39 @@ impl<'a> ContinuousBatcher<'a> {
             latency_s: s(done_cycle.saturating_sub(arrival)),
             preemptions: job.preemptions,
             prefix_hit_tokens: job.prefix_hit_tokens,
+            // Retry/recovery accounting is a fleet concern: the router
+            // patches these by id when it re-routes salvaged requests.
+            retries: 0,
+            recovery_cycles: 0,
         }
     }
 
     fn report(&self, offered: usize, st: RunState) -> ServeReport {
-        let RunState { mut done, rejected, alloc, costs, c, time, pass_memo, .. } = st;
-        done.sort_by_key(|r| r.id);
+        let RunState { done, rejected, alloc, costs, c, time, pass_memo, .. } = st;
         // Sketch-backed aggregates: exact (bit-identical to the sorted
         // sample vectors of PR 3-5) below the sketch's reservoir limit,
-        // ~1%-error log-histograms above it.
-        let (ttft, lat, tpot, queue, per_class) = latency_aggregates(&done);
+        // ~1%-error log-histograms above it. Both [`DoneLog`] variants
+        // feed the sketches in retirement order, so `--no-per-request`
+        // (which never materialized the vec inside the run loop) matches
+        // the detail path bit-for-bit.
+        let (ttft, lat, tpot, queue, per_class, completed, gen_tokens, retries, recovery, per_request) =
+            match done {
+                DoneLog::Keep(mut v) => {
+                    let (t, l, tp, q, pc) = latency_aggregates(&v);
+                    let completed = v.len();
+                    let gen: u64 = v.iter().map(|r| r.gen_tokens).sum();
+                    let retries: u64 = v.iter().map(|r| r.retries as u64).sum();
+                    let recovery: u64 = v.iter().map(|r| r.recovery_cycles).sum();
+                    v.sort_by_key(|r| r.id);
+                    (t, l, tp, q, pc, completed, gen, retries, recovery, v)
+                }
+                DoneLog::Fold { agg, completed, gen_tokens, retries, recovery_cycles } => {
+                    let (t, l, tp, q, pc) = agg.finish();
+                    (t, l, tp, q, pc, completed, gen_tokens, retries, recovery_cycles, Vec::new())
+                }
+            };
         let total_seconds = self.platform.cycles_to_seconds(time);
         let decode_seconds = self.platform.cycles_to_seconds(c.decode_cycles);
-        let gen_tokens: u64 = done.iter().map(|r| r.gen_tokens).sum();
         let power = energy::power_report(&c.total, self.fmt, self.platform);
 
         let per_s = |tokens: u64, seconds: f64| {
@@ -1725,7 +2090,7 @@ impl<'a> ContinuousBatcher<'a> {
             model: self.cfg.name.clone(),
             format: self.fmt.name(),
             requests: offered,
-            completed: done.len(),
+            completed,
             rejected,
             max_batch: self.opts.max_batch.max(1),
             kv_budget_bytes: self.opts.kv_budget_bytes,
@@ -1795,12 +2160,28 @@ impl<'a> ContinuousBatcher<'a> {
             pass_events: c.pass_events,
             pass_cache_hits: pass_memo.as_ref().map_or(0, |m| m.hits),
             pass_cache_misses: pass_memo.as_ref().map_or(0, |m| m.misses),
+            replica_failures: c.replica_failures,
+            stall_cycles: c.stall_cycles,
+            link_faults: c.link_faults,
+            salvaged_requests: c.salvaged_requests,
+            salvaged_kv_bytes: c.salvaged_kv_bytes,
+            retries,
+            recovery_cycles: recovery,
+            // One engine's degraded share is its stall time; the fleet
+            // merge recomputes this over replicas x fleet wall-clock,
+            // folding in post-failure dead time.
+            degraded_capacity_fraction: if time > 0 {
+                (c.stall_cycles as f64 / time as f64).clamp(0.0, 1.0)
+            } else {
+                0.0
+            },
+            warnings: Vec::new(),
             ttft_sketch: ttft,
             latency_sketch: lat,
             tpot_sketch: tpot,
             queue_sketch: queue,
             per_class,
-            per_request: if self.opts.per_request { done } else { Vec::new() },
+            per_request,
         }
     }
 }

@@ -315,6 +315,66 @@ impl InferenceEngine {
         )
     }
 
+    /// [`Self::serve_replicated`] under an injected fault plan: replica
+    /// failures salvage their backlog onto survivors, stalls freeze the
+    /// targeted replica's clock, and link faults degrade every group's
+    /// collective pricing. A [`crate::coordinator::FaultPlan::off`] plan
+    /// is bit-identical to the fault-free entry. See
+    /// [`crate::parallel::router::serve_replicated_with_faults`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve_replicated_with_faults(
+        &self,
+        cfg: &ModelConfig,
+        workload: &Workload,
+        opts: BatcherConfig,
+        fmt: FpFormat,
+        replicas: usize,
+        policy: crate::parallel::RoutePolicy,
+        faults: &crate::coordinator::FaultPlan,
+    ) -> crate::parallel::RouterReport {
+        crate::parallel::router::serve_replicated_with_faults(
+            cfg,
+            &self.platform,
+            fmt,
+            opts,
+            workload,
+            replicas,
+            policy,
+            faults,
+        )
+    }
+
+    /// [`Self::serve_disaggregated`] under an injected fault plan:
+    /// replica faults land on the decode fleet, link faults degrade the
+    /// KV-migration path, and corrupted migrations retry with capped
+    /// exponential backoff before falling back to decode-side prefill
+    /// recompute. See
+    /// [`crate::parallel::router::serve_disaggregated_with_faults`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve_disaggregated_with_faults(
+        &self,
+        cfg: &ModelConfig,
+        workload: &Workload,
+        opts: BatcherConfig,
+        fmt: FpFormat,
+        prefill_replicas: usize,
+        decode_replicas: usize,
+        policy: crate::parallel::RoutePolicy,
+        faults: &crate::coordinator::FaultPlan,
+    ) -> crate::parallel::DisaggReport {
+        crate::parallel::router::serve_disaggregated_with_faults(
+            cfg,
+            &self.platform,
+            fmt,
+            opts,
+            workload,
+            prefill_replicas,
+            decode_replicas,
+            policy,
+            faults,
+        )
+    }
+
     /// HBM bytes left for KV caches once the model weights are resident
     /// at serving precision. Zero when the weights alone exceed capacity
     /// (the serve path then rejects everything rather than pretending).

@@ -1,0 +1,453 @@
+//! Seeded, deterministic fault injection for the serving fleet.
+//!
+//! The platform modeled here is a package of many small dies joined by
+//! die-to-die links; dies, links and DMA engines are independent failure
+//! domains. This module defines the *fault plan* — a seeded stream of
+//! timed [`FaultEvent`]s parsed from `serve --faults <spec>` — and the
+//! per-replica view ([`ReplicaFaults`], in cycles) that the batcher run
+//! loops consume. Everything is deterministic: the same spec and
+//! `--fault-seed` reproduce byte-identical reports, and an empty plan
+//! (`--faults off`) leaves every serving path bit-identical to the
+//! fault-free engine.
+//!
+//! # Spec grammar
+//!
+//! A spec is `off` or a comma-separated list of clauses:
+//!
+//! ```text
+//! fail@<s>[:r<i>]       permanent replica failure at <s> seconds; the
+//!                       die's KV pool stays addressable over the d2d
+//!                       fabric, so finished-prefill requests re-export
+//!                       their KV to a survivor (salvage).
+//! die@<s>[:r<i>]        permanent replica failure, KV pool lost with the
+//!                       die: every salvaged request fully recomputes.
+//! stall@<s>:<c>[:r<i>]  transient stall: the replica freezes for <c>
+//!                       cycles at <s> seconds, then resumes.
+//! link@<s>:<f>          the d2d link degrades to fraction <f> of nominal
+//!                       bandwidth at <s> seconds (package-wide).
+//! corrupt:<p>           each disaggregated KV migration is corrupted
+//!                       with probability <p> (seeded draw per attempt)
+//!                       and must be retried over the link.
+//! ```
+//!
+//! Replica-targeted clauses may omit `:r<i>`; the target is then drawn
+//! deterministically from `--fault-seed` when the plan is split per
+//! replica. See `docs/serving.md` ("Failure model & recovery") for the
+//! recovery lifecycle and the retry/backoff policy.
+//!
+//! # Example
+//!
+//! ```
+//! use snitch_fm::coordinator::faults::{FaultKind, FaultPlan};
+//!
+//! let plan = FaultPlan::parse("fail@2.5:r1,stall@1.0:2000,link@3.0:0.25", 7).unwrap();
+//! assert_eq!(plan.events.len(), 3);
+//! let view = plan.for_replica(1, 4, 1.0);
+//! // replica 1 sees its pinned failure plus the package-wide link fault
+//! assert!(view
+//!     .events
+//!     .iter()
+//!     .any(|e| matches!(e.kind, FaultKind::ReplicaFail { .. })));
+//! assert!(FaultPlan::parse("off", 0).unwrap().is_off());
+//! ```
+
+use crate::coordinator::workload::Request;
+
+/// What a single fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The replica stops executing permanently. When `pool_survives` the
+    /// die's KV pool remains reachable over the d2d fabric and salvaged
+    /// requests that finished prefill re-export their KV pages to the
+    /// replica that adopts them; otherwise they recompute from scratch.
+    ReplicaFail {
+        /// Whether the failed die's KV pool stays addressable (a compute
+        /// failure) or is lost with the die (a power/package failure).
+        pool_survives: bool,
+    },
+    /// The replica freezes for `cycles` cycles, then resumes where it
+    /// left off. Arrivals during the stall queue up and are admitted
+    /// when the replica wakes.
+    ReplicaStall {
+        /// Length of the freeze in core cycles.
+        cycles: u64,
+    },
+    /// The die-to-die link drops to `fraction` of its nominal bandwidth.
+    /// Collectives, pipeline sends and KV migrations all get more
+    /// expensive; the last event before a given time wins.
+    LinkDegrade {
+        /// New bandwidth as a fraction of nominal, in `(0, 1]`.
+        fraction: f64,
+    },
+}
+
+/// One timed fault in wall-clock (trace) seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// When the fault fires, in seconds from trace start.
+    pub at_s: f64,
+    /// Replica the fault targets. `None` means "drawn from the seed"
+    /// for replica-scoped kinds, and "package-wide" for link faults.
+    pub replica: Option<usize>,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A parsed, seeded fault plan (see the module docs for the grammar).
+///
+/// The plan lives in the wall-clock domain; [`FaultPlan::for_replica`]
+/// projects it onto one replica's cycle domain for the batcher.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for unpinned replica assignment and migration-corruption
+    /// draws (`--fault-seed`).
+    pub seed: u64,
+    /// All timed events, in spec order.
+    pub events: Vec<FaultEvent>,
+    /// Probability that one disaggregated KV-migration attempt is
+    /// corrupted and must be retried (`corrupt:<p>`).
+    pub corrupt_prob: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::off()
+    }
+}
+
+/// One fault projected onto a replica's cycle clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaFaultEvent {
+    /// Cycle (on the replica's own clock) at which the fault fires.
+    pub cycle: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// The faults one replica will observe, sorted by cycle. An empty view
+/// (the default) makes the run loops bit-identical to the fault-free
+/// engine.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaFaults {
+    /// Events in non-decreasing cycle order.
+    pub events: Vec<ReplicaFaultEvent>,
+}
+
+impl ReplicaFaults {
+    /// The empty view: no faults, bit-identical serving.
+    pub fn none() -> ReplicaFaults {
+        ReplicaFaults::default()
+    }
+
+    /// True when the view carries no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// A request rescued from a failed replica, to be re-arrived elsewhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SalvagedRequest {
+    /// The request to re-route. `req.kv_imported` is set when its prompt
+    /// KV was re-exported from the failed die's surviving pool (the
+    /// adopting replica imports it and skips prefill); it is cleared
+    /// when the pool died and the prompt must be recomputed.
+    pub req: Request,
+    /// Cycle (failed replica's clock) at which the failure fired.
+    pub fail_cycle: u64,
+    /// Bytes of KV re-exported over the d2d link for this request
+    /// (0 when the request recomputes from scratch).
+    pub export_bytes: u64,
+}
+
+/// SplitMix64 finalizer — the same mixing used by the workload
+/// generators, kept local so fault draws never perturb trace seeds.
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn parse_seconds(tok: &str, clause: &str) -> Result<f64, String> {
+    let s: f64 = tok
+        .parse()
+        .map_err(|_| format!("bad time {tok:?} in fault clause {clause:?}"))?;
+    if !s.is_finite() || s < 0.0 {
+        return Err(format!("fault time must be finite and >= 0 in {clause:?}"));
+    }
+    Ok(s)
+}
+
+fn parse_replica(tok: &str, clause: &str) -> Result<usize, String> {
+    let idx = tok
+        .strip_prefix('r')
+        .ok_or_else(|| format!("expected r<i> replica target in fault clause {clause:?}"))?;
+    idx.parse()
+        .map_err(|_| format!("bad replica index {tok:?} in fault clause {clause:?}"))
+}
+
+impl FaultPlan {
+    /// The empty plan: nothing ever fails.
+    pub fn off() -> FaultPlan {
+        FaultPlan { seed: 0, events: Vec::new(), corrupt_prob: 0.0 }
+    }
+
+    /// True when the plan injects nothing (serving stays bit-identical).
+    pub fn is_off(&self) -> bool {
+        self.events.is_empty() && self.corrupt_prob == 0.0
+    }
+
+    /// Parse a `--faults` spec (see the module docs for the grammar).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let spec = spec.trim();
+        let mut plan = FaultPlan { seed, events: Vec::new(), corrupt_prob: 0.0 };
+        if spec.is_empty() || spec == "off" || spec == "none" {
+            return Ok(plan);
+        }
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(p) = clause.strip_prefix("corrupt:") {
+                let prob: f64 = p
+                    .parse()
+                    .map_err(|_| format!("bad probability in fault clause {clause:?}"))?;
+                if !(0.0..=1.0).contains(&prob) {
+                    return Err(format!("corrupt probability must be in [0, 1]: {clause:?}"));
+                }
+                plan.corrupt_prob = prob;
+                continue;
+            }
+            let (head, rest) = clause
+                .split_once('@')
+                .ok_or_else(|| format!("unknown fault clause {clause:?}"))?;
+            let parts: Vec<&str> = rest.split(':').collect();
+            let (at_s, replica, kind) = match head {
+                "fail" | "die" => {
+                    let at_s = parse_seconds(parts[0], clause)?;
+                    let replica = match parts.len() {
+                        1 => None,
+                        2 => Some(parse_replica(parts[1], clause)?),
+                        _ => return Err(format!("too many fields in fault clause {clause:?}")),
+                    };
+                    let kind = FaultKind::ReplicaFail { pool_survives: head == "fail" };
+                    (at_s, replica, kind)
+                }
+                "stall" => {
+                    if parts.len() < 2 || parts.len() > 3 {
+                        return Err(format!("stall wants stall@<s>:<cycles>[:r<i>]: {clause:?}"));
+                    }
+                    let at_s = parse_seconds(parts[0], clause)?;
+                    let cycles: u64 = parts[1]
+                        .parse()
+                        .map_err(|_| format!("bad stall cycles in fault clause {clause:?}"))?;
+                    if cycles == 0 {
+                        return Err(format!("stall cycles must be > 0: {clause:?}"));
+                    }
+                    let replica =
+                        if parts.len() == 3 { Some(parse_replica(parts[2], clause)?) } else { None };
+                    (at_s, replica, FaultKind::ReplicaStall { cycles })
+                }
+                "link" => {
+                    if parts.len() != 2 {
+                        return Err(format!("link wants link@<s>:<fraction>: {clause:?}"));
+                    }
+                    let at_s = parse_seconds(parts[0], clause)?;
+                    let fraction: f64 = parts[1]
+                        .parse()
+                        .map_err(|_| format!("bad link fraction in fault clause {clause:?}"))?;
+                    if !(fraction > 0.0 && fraction <= 1.0) {
+                        return Err(format!("link fraction must be in (0, 1]: {clause:?}"));
+                    }
+                    (at_s, None, FaultKind::LinkDegrade { fraction })
+                }
+                _ => return Err(format!("unknown fault clause {clause:?}")),
+            };
+            plan.events.push(FaultEvent { at_s, replica, kind });
+        }
+        Ok(plan)
+    }
+
+    /// The replica a replica-scoped event targets: its pinned `r<i>` when
+    /// given, otherwise a deterministic draw from the plan seed and the
+    /// event's position (so the same spec + seed always picks the same
+    /// victims, independent of which replica asks).
+    pub fn target_of(&self, event_index: usize, replicas: usize) -> usize {
+        let replicas = replicas.max(1);
+        match self.events.get(event_index).and_then(|e| e.replica) {
+            Some(r) => r % replicas,
+            None => (splitmix(self.seed ^ ((event_index as u64 + 1) << 17)) % replicas as u64)
+                as usize,
+        }
+    }
+
+    /// Project the plan onto one replica's cycle clock. Replica-scoped
+    /// events land only on their target; link faults land on every
+    /// replica (the d2d fabric is shared). Events are sorted by cycle,
+    /// ties kept in spec order.
+    pub fn for_replica(&self, replica: usize, replicas: usize, freq_ghz: f64) -> ReplicaFaults {
+        let mut events = Vec::new();
+        for (i, e) in self.events.iter().enumerate() {
+            let mine = match e.kind {
+                FaultKind::LinkDegrade { .. } => true,
+                _ => self.target_of(i, replicas) == replica,
+            };
+            if mine {
+                events.push(ReplicaFaultEvent { cycle: seconds_to_cycles(e.at_s, freq_ghz), kind: e.kind });
+            }
+        }
+        events.sort_by_key(|e| e.cycle);
+        ReplicaFaults { events }
+    }
+
+    /// The d2d link bandwidth fraction in force at `at_s` seconds: the
+    /// last link event at or before that time, 1.0 before any.
+    pub fn link_fraction_at(&self, at_s: f64) -> f64 {
+        let mut fraction = 1.0;
+        let mut when = f64::NEG_INFINITY;
+        for e in &self.events {
+            if let FaultKind::LinkDegrade { fraction: f } = e.kind {
+                if e.at_s <= at_s && e.at_s >= when {
+                    fraction = f;
+                    when = e.at_s;
+                }
+            }
+        }
+        fraction
+    }
+
+    /// Seeded corruption draw for one KV-migration attempt: true when
+    /// the attempt is corrupted and must be retried. Deterministic in
+    /// `(seed, request id, attempt)` so reruns are byte-identical.
+    pub fn migration_corrupted(&self, request_id: usize, attempt: u32) -> bool {
+        if self.corrupt_prob <= 0.0 {
+            return false;
+        }
+        let draw = splitmix(self.seed ^ ((request_id as u64) << 20) ^ attempt as u64);
+        // Map the top 53 bits onto [0, 1).
+        let unit = (draw >> 11) as f64 / (1u64 << 53) as f64;
+        unit < self.corrupt_prob
+    }
+}
+
+/// Convert trace seconds to core cycles at `freq_ghz` (round-to-nearest,
+/// the same convention the arrival stamping uses).
+pub fn seconds_to_cycles(at_s: f64, freq_ghz: f64) -> u64 {
+    (at_s * freq_ghz * 1e9).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_specs_parse_to_empty_plans() {
+        for spec in ["off", "none", "", "  "] {
+            let plan = FaultPlan::parse(spec, 42).unwrap();
+            assert!(plan.is_off(), "{spec:?} should be off");
+            assert!(plan.for_replica(0, 4, 1.0).is_empty());
+        }
+    }
+
+    #[test]
+    fn full_grammar_round_trips() {
+        let plan =
+            FaultPlan::parse("fail@2.5:r1,die@4.0,stall@1.0:2000:r0,link@3.0:0.25,corrupt:0.1", 7)
+                .unwrap();
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(plan.corrupt_prob, 0.1);
+        assert_eq!(
+            plan.events[0].kind,
+            FaultKind::ReplicaFail { pool_survives: true }
+        );
+        assert_eq!(plan.events[0].replica, Some(1));
+        assert_eq!(
+            plan.events[1].kind,
+            FaultKind::ReplicaFail { pool_survives: false }
+        );
+        assert_eq!(plan.events[1].replica, None);
+        assert_eq!(plan.events[2].kind, FaultKind::ReplicaStall { cycles: 2000 });
+        assert_eq!(plan.events[3].kind, FaultKind::LinkDegrade { fraction: 0.25 });
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for spec in [
+            "explode@1.0",
+            "fail@-1.0",
+            "fail@nan",
+            "stall@1.0",
+            "stall@1.0:0",
+            "link@1.0:0.0",
+            "link@1.0:1.5",
+            "link@1.0",
+            "corrupt:1.5",
+            "fail@1.0:x3",
+        ] {
+            assert!(FaultPlan::parse(spec, 0).is_err(), "{spec:?} should fail");
+        }
+    }
+
+    #[test]
+    fn unpinned_targets_are_seeded_and_stable() {
+        let plan = FaultPlan::parse("fail@1.0,die@2.0", 123).unwrap();
+        let t0 = plan.target_of(0, 8);
+        let t1 = plan.target_of(1, 8);
+        assert!(t0 < 8 && t1 < 8);
+        // Same seed, same answer, no matter how often we ask.
+        assert_eq!(t0, plan.target_of(0, 8));
+        // Exactly one replica sees each event.
+        let holders: Vec<usize> = (0..8)
+            .filter(|&r| !plan.for_replica(r, 8, 1.0).is_empty())
+            .collect();
+        assert!(!holders.is_empty() && holders.len() <= 2);
+    }
+
+    #[test]
+    fn link_faults_land_on_every_replica() {
+        let plan = FaultPlan::parse("link@1.0:0.5", 0).unwrap();
+        for r in 0..4 {
+            let view = plan.for_replica(r, 4, 1.0);
+            assert_eq!(view.events.len(), 1);
+            assert_eq!(view.events[0].cycle, 1_000_000_000);
+            assert_eq!(view.events[0].kind, FaultKind::LinkDegrade { fraction: 0.5 });
+        }
+    }
+
+    #[test]
+    fn link_fraction_tracks_the_last_event() {
+        let plan = FaultPlan::parse("link@1.0:0.5,link@2.0:0.25", 0).unwrap();
+        assert_eq!(plan.link_fraction_at(0.5), 1.0);
+        assert_eq!(plan.link_fraction_at(1.5), 0.5);
+        assert_eq!(plan.link_fraction_at(2.5), 0.25);
+    }
+
+    #[test]
+    fn corruption_draws_are_deterministic_and_roughly_calibrated() {
+        let plan = FaultPlan::parse("corrupt:0.3", 99).unwrap();
+        let hits = (0..10_000)
+            .filter(|&id| plan.migration_corrupted(id, 1))
+            .count();
+        // Seeded Bernoulli(0.3) over 10k draws: comfortably within +-5%.
+        assert!((2500..=3500).contains(&hits), "hits = {hits}");
+        for id in 0..64 {
+            assert_eq!(
+                plan.migration_corrupted(id, 1),
+                plan.migration_corrupted(id, 1)
+            );
+        }
+        assert!(!FaultPlan::off().migration_corrupted(0, 1));
+    }
+
+    #[test]
+    fn replica_views_sort_by_cycle() {
+        let plan = FaultPlan::parse("stall@2.0:100:r0,stall@1.0:50:r0", 0).unwrap();
+        let view = plan.for_replica(0, 2, 1.0);
+        assert_eq!(view.events.len(), 2);
+        assert!(view.events[0].cycle <= view.events[1].cycle);
+        assert_eq!(view.events[0].kind, FaultKind::ReplicaStall { cycles: 50 });
+    }
+}

@@ -17,6 +17,7 @@
 pub mod batcher;
 pub mod breakdown;
 pub mod engine;
+pub mod faults;
 pub mod kv_cache;
 pub mod kv_paging;
 pub mod schedule;
@@ -25,6 +26,7 @@ pub mod workload;
 pub use batcher::{
     BatcherConfig, ClassStats, ContinuousBatcher, EngineMode, RequestStats, ServeReport,
 };
+pub use faults::{FaultEvent, FaultKind, FaultPlan, ReplicaFaults, SalvagedRequest};
 pub use breakdown::{Breakdown, KernelClassShare};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;

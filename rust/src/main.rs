@@ -9,9 +9,13 @@ use anyhow::Result;
 
 use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
-use snitch_fm::coordinator::{Arrival, BatcherConfig, InferenceEngine, SharedPrefix, Workload};
+use snitch_fm::coordinator::{
+    Arrival, BatcherConfig, FaultPlan, InferenceEngine, SharedPrefix, Workload,
+};
 use snitch_fm::model::{Mode, ModelConfig};
-use snitch_fm::parallel::{best_plans, rank_fleet_splits, Objective, RoutePolicy, ShardPlan};
+use snitch_fm::parallel::{
+    best_plans, disagg_split_feasible, rank_fleet_splits, Objective, RoutePolicy, ShardPlan,
+};
 use snitch_fm::report;
 use snitch_fm::runtime::Runtime;
 use snitch_fm::soa;
@@ -71,6 +75,16 @@ COMMANDS:
              --no-per-request (drop the per-request detail array from
                the report; every aggregate, percentile and counter is
                unchanged)
+             --faults SPEC (seeded fault injection, comma-separated:
+               fail@<s>[:r<i>] permanent replica failure with the die's
+               KV pool surviving for re-export, die@<s>[:r<i>] whole-die
+               failure (KV pool lost, salvaged requests recompute),
+               stall@<s>:<cycles>[:r<i>] transient freeze,
+               link@<s>:<fraction> d2d bandwidth degradation,
+               corrupt:<p> per-migration KV corruption probability;
+               off — the default — is bit-identical to no flag)
+             --fault-seed N (seed for unpinned fault targets and
+               corruption draws; default 0)
              --json (machine-readable report)
   shard      Enumerate and rank multi-die shard plans {tp, pp, replicas}
              --model NAME --format FMT --dies N --batch N --seq N
@@ -104,7 +118,7 @@ const FLAGS: &[&str] = &[
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
     "replicas", "route", "dies", "objective", "tp", "pp", "plan", "engine",
-    "disagg", "no-per-request",
+    "disagg", "no-per-request", "faults", "fault-seed",
 ];
 
 fn main() -> Result<()> {
@@ -399,6 +413,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     };
+    // `--disagg auto` promises the modeled best {prefill, decode} split
+    // of the die budget the user actually offered. When that budget
+    // cannot hold two replica groups at all (one die, or tp*pp already
+    // consuming every offered die), degrade to the symmetric fleet with
+    // a warning instead of bailing out.
+    let mut disagg_fallback: Option<String> = None;
+    let disagg = match disagg {
+        Disagg::Auto => {
+            let offered = args.get_u32("dies", 0)?;
+            if !disagg_split_feasible(tp, pp, offered) {
+                let msg = format!(
+                    "disagg auto fell back to the symmetric fleet: two replica groups \
+                     of tp={tp} pp={pp} need {} dies, --dies {offered} offered",
+                    tp * pp * 2
+                );
+                // stderr: `--json` consumers must see nothing but the report.
+                eprintln!("{msg}");
+                disagg_fallback = Some(msg);
+                Disagg::Off
+            } else {
+                Disagg::Auto
+            }
+        }
+        other => other,
+    };
     // Replica groups the package must hold: the symmetric fleet's
     // `replicas`, the explicit split's `P + D`, or the auto split's
     // budget (the larger of --replicas and the dies the user offered).
@@ -478,27 +517,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--engine {s:?}: expected event or iter"))?;
     }
     opts.per_request = !args.get_bool("no-per-request");
+    let faults = FaultPlan::parse(args.get_or("faults", "off"), args.get_u64("fault-seed", 0)?)
+        .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
     let split = match disagg {
         Disagg::Off => None,
         Disagg::Split(p, d) => Some((p, d)),
         Disagg::Auto => {
             let ranking =
                 rank_fleet_splits(&cfg, format, &engine.platform, &workload, batch, fleet_groups);
-            let best = ranking
-                .splits
-                .first()
-                .ok_or_else(|| anyhow::anyhow!("no fleet split for {fleet_groups} groups"))?;
-            // stderr: `--json` consumers must see nothing but the report.
-            eprintln!(
-                "disagg auto ({} groups): prefill={} decode={} ({}-bound, {:.2} req/s modeled)",
-                fleet_groups, best.prefill, best.decode, best.bottleneck, best.rate
-            );
-            Some((best.prefill, best.decode))
+            match ranking.splits.first() {
+                Some(best) => {
+                    // stderr: `--json` consumers must see nothing but the report.
+                    eprintln!(
+                        "disagg auto ({} groups): prefill={} decode={} ({}-bound, {:.2} req/s modeled)",
+                        fleet_groups, best.prefill, best.decode, best.bottleneck, best.rate
+                    );
+                    Some((best.prefill, best.decode))
+                }
+                None => {
+                    let msg = format!(
+                        "disagg auto fell back to the symmetric fleet: no legal \
+                         {{prefill, decode}} split for {fleet_groups} groups"
+                    );
+                    eprintln!("{msg}");
+                    disagg_fallback = Some(msg);
+                    None
+                }
+            }
         }
     };
     if let Some((prefill, decode)) = split {
-        let r =
-            engine.serve_disaggregated(&cfg, &workload, opts, format, prefill, decode, route);
+        let r = engine.serve_disaggregated_with_faults(
+            &cfg, &workload, opts, format, prefill, decode, route, &faults,
+        );
         if args.get_bool("json") {
             println!("{}", report::disagg_json(&r));
         } else {
@@ -506,8 +557,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    if replicas > 1 {
-        let r = engine.serve_replicated(&cfg, &workload, opts, format, replicas, route);
+    if replicas > 1 || !faults.is_off() {
+        let mut r =
+            engine.serve_replicated_with_faults(&cfg, &workload, opts, format, replicas, route, &faults);
+        if let Some(msg) = disagg_fallback {
+            r.merged.warnings.push(msg);
+        }
         if args.get_bool("json") {
             println!("{}", report::router_json(&r));
         } else {
@@ -515,7 +570,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let report = engine.serve_with(&cfg, &workload, opts, format);
+    let mut report = engine.serve_with(&cfg, &workload, opts, format);
+    if let Some(msg) = disagg_fallback {
+        report.warnings.push(msg);
+    }
     if args.get_bool("json") {
         println!("{}", report::serve_json(&report));
     } else {

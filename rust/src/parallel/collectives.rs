@@ -229,6 +229,22 @@ pub fn all_gather_cost(bytes: u64, ranks: &[u32], platform: &PlatformConfig) -> 
     }
 }
 
+/// A copy of `platform` whose die-to-die links run at `fraction` of
+/// nominal bandwidth — the pricing view of a `link@` fault. Every
+/// collective and p2p transfer prices through
+/// [`DieLink::bytes_per_cycle`], so scaling `link_gbps` is the single
+/// choke point: TP all-reduces, PP activation sends, and disaggregated
+/// KV migrations all slow down together while compute is untouched.
+/// `fraction` is clamped to `(0, 1]`; 1.0 returns an identical platform
+/// (fault-free pricing stays bit-identical because callers keep using
+/// the *original* reference in that case).
+pub fn degrade_link(platform: &PlatformConfig, fraction: f64) -> PlatformConfig {
+    let f = if fraction.is_finite() { fraction.clamp(1e-6, 1.0) } else { 1.0 };
+    let mut p = platform.clone();
+    p.die.link_gbps *= f;
+    p
+}
+
 /// Point-to-point die-to-die send (a pipeline stage shipping its output
 /// activations to the next stage's die).
 pub fn p2p_cost(bytes: u64, platform: &PlatformConfig) -> KernelCost {
@@ -317,6 +333,30 @@ mod tests {
             a.cycles,
             b.cycles
         );
+    }
+
+    #[test]
+    fn degraded_links_grow_every_transfer_cost() {
+        let p = dies(4);
+        let half = degrade_link(&p, 0.5);
+        let f = FpFormat::Fp32;
+        let bytes = 8 << 20;
+        // Compute model untouched; only link bandwidth scales.
+        assert_eq!(half.cluster, p.cluster);
+        assert!((half.die.link_gbps - p.die.link_gbps * 0.5).abs() < 1e-9);
+        let ar_n = all_reduce_cost(bytes, &ranks(4), Algorithm::Ring, f, &p);
+        let ar_d = all_reduce_cost(bytes, &ranks(4), Algorithm::Ring, f, &half);
+        assert!(ar_d.cycles > ar_n.cycles, "{} !> {}", ar_d.cycles, ar_n.cycles);
+        // Moved bytes are identical — only the time to move them grows.
+        assert_eq!(ar_d.d2d_bytes, ar_n.d2d_bytes);
+        let p2p_n = p2p_cost(bytes, &p);
+        let p2p_d = p2p_cost(bytes, &half);
+        assert!(p2p_d.cycles > p2p_n.cycles);
+        // Unit fraction (and nonsense inputs) degrade nothing.
+        assert_eq!(degrade_link(&p, 1.0), p);
+        assert_eq!(degrade_link(&p, f64::NAN), p);
+        // The clamp keeps a zero-bandwidth spec finite and positive.
+        assert!(degrade_link(&p, 0.0).die.link_gbps > 0.0);
     }
 
     #[test]

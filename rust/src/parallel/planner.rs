@@ -192,6 +192,17 @@ pub fn rank_fleet_splits(
     SplitRanking { splits, symmetric_rate: r as f64 / (prefill_s + decode_req_s) }
 }
 
+/// Whether an offered die budget can hold two `tp x pp` replica groups
+/// at all — the precondition `serve --disagg auto` checks before asking
+/// [`rank_fleet_splits`] for a {prefill, decode} split. A single die, or
+/// a `tp * pp` product already consuming every offered die, leaves no
+/// room for a second group; the CLI then degrades to the symmetric
+/// fleet with a warning instead of bailing. `offered_dies == 0` means
+/// no explicit budget was given (the package is free to grow).
+pub fn disagg_split_feasible(tp: u32, pp: u32, offered_dies: u32) -> bool {
+    offered_dies == 0 || tp * pp * 2 <= offered_dies
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -403,6 +403,31 @@ mod tests {
     }
 
     #[test]
+    fn tp_tax_grows_under_a_degraded_link() {
+        use crate::parallel::collectives::degrade_link;
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(2);
+        let slow = degrade_link(&p, 0.25);
+        let plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+        let prefills = [(32u64, 0u64)];
+        let decode = [64u64, 96];
+        let mut costs_n = LayerCostCache::new(&p);
+        let nominal = plan_pass_cost(&mut costs_n, &cfg, plan, &prefills, &decode, FpFormat::Fp32, &p);
+        let mut costs_d = LayerCostCache::new(&slow);
+        let degraded =
+            plan_pass_cost(&mut costs_d, &cfg, plan, &prefills, &decode, FpFormat::Fp32, &slow);
+        // The all-reduce tax visibly grows; the bytes moved do not.
+        assert!(
+            degraded.collective_cycles > nominal.collective_cycles,
+            "{} !> {}",
+            degraded.collective_cycles,
+            nominal.collective_cycles
+        );
+        assert_eq!(degraded.total.d2d_bytes, nominal.total.d2d_bytes);
+        assert!(degraded.total.cycles > nominal.total.cycles);
+    }
+
+    #[test]
     fn legality_rules() {
         let cfg = ModelConfig::gpt_j(); // 16 heads
         let p = PlatformConfig::with_dies(4);

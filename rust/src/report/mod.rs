@@ -16,9 +16,14 @@ use crate::parallel::{DisaggReport, RankedPlan, RouterReport};
 /// streaming sketches — exact below the spill limit, so small-trace
 /// values are unchanged). Version 5 = disaggregated serving (TPOT
 /// percentiles, kv_imports / imported_kv_tokens, and the disagg report
-/// with migration counters and split prefill/decode views). The full
-/// key changelog lives in `docs/serving.md`.
-pub const SERVE_SCHEMA_VERSION: u32 = 5;
+/// with migration counters and split prefill/decode views). Version 6 =
+/// fault injection and recovery (replica_failures, stall_cycles,
+/// link_faults, salvaged_requests / salvaged_kv_bytes, retries,
+/// recovery_cycles, degraded_capacity_fraction, warnings; the disagg
+/// report adds migration_retries / recompute_fallbacks — all zero/empty
+/// on a fault-free run). The full key changelog lives in
+/// `docs/serving.md`.
+pub const SERVE_SCHEMA_VERSION: u32 = 6;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -199,6 +204,29 @@ pub fn serve_table(r: &ServeReport) -> String {
             r.d2d_bytes as f64 / 1e9,
         );
     }
+    if r.replica_failures > 0 || r.stall_cycles > 0 || r.link_faults > 0 {
+        let _ = writeln!(
+            s,
+            "  faults: {} replica failures, {} stall cycles, {} link events  \
+             ({:.1}% capacity lost)",
+            r.replica_failures,
+            r.stall_cycles,
+            r.link_faults,
+            r.degraded_capacity_fraction * 100.0,
+        );
+        let _ = writeln!(
+            s,
+            "  recovery: {} requests salvaged ({:.2} GB KV re-exported), \
+             {} retries, {:.3} Mcycles recovering",
+            r.salvaged_requests,
+            r.salvaged_kv_bytes as f64 / 1e9,
+            r.retries,
+            r.recovery_cycles as f64 / 1e6,
+        );
+    }
+    for w in &r.warnings {
+        let _ = writeln!(s, "  warning: {w}");
+    }
     let pass_lookups = r.pass_cache_hits + r.pass_cache_misses;
     let _ = writeln!(
         s,
@@ -255,7 +283,11 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"engine\":\"{}\",\"arrival_events\":{},\"pass_events\":{},\
          \"pass_cache_hits\":{},\"pass_cache_misses\":{},\
          \"tpot_mean_s\":{},\"tpot_p50_s\":{},\"tpot_p99_s\":{},\
-         \"kv_imports\":{},\"imported_kv_tokens\":{},\"per_class\":[{}]}}",
+         \"kv_imports\":{},\"imported_kv_tokens\":{},\
+         \"replica_failures\":{},\"stall_cycles\":{},\"link_faults\":{},\
+         \"salvaged_requests\":{},\"salvaged_kv_bytes\":{},\"retries\":{},\
+         \"recovery_cycles\":{},\"degraded_capacity_fraction\":{},\
+         \"warnings\":[{}],\"per_class\":[{}]}}",
         r.model,
         r.format,
         r.requests,
@@ -305,6 +337,19 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.tpot_p99_s,
         r.kv_imports,
         r.imported_kv_tokens,
+        r.replica_failures,
+        r.stall_cycles,
+        r.link_faults,
+        r.salvaged_requests,
+        r.salvaged_kv_bytes,
+        r.retries,
+        r.recovery_cycles,
+        r.degraded_capacity_fraction,
+        r.warnings
+            .iter()
+            .map(|w| format!("\"{}\"", w.replace('\\', "\\\\").replace('"', "\\\"")))
+            .collect::<Vec<_>>()
+            .join(","),
         classes.join(",")
     )
 }
@@ -379,6 +424,23 @@ pub fn disagg_table(r: &DisaggReport) -> String {
         r.migrated_kv_bytes as f64 / 1e9,
         r.migration_cycles as f64 / 1e6,
     );
+    if r.migration_retries > 0 || r.recompute_fallbacks > 0 {
+        let _ = writeln!(
+            s,
+            "  corruption: {} migration retries, {} recompute fallbacks",
+            r.migration_retries, r.recompute_fallbacks,
+        );
+    }
+    if r.degraded_capacity_fraction > 0.0 {
+        let _ = writeln!(
+            s,
+            "  faults: {:.1}% decode-fleet capacity lost",
+            r.degraded_capacity_fraction * 100.0,
+        );
+    }
+    for w in &r.warnings {
+        let _ = writeln!(s, "  warning: {w}");
+    }
     let _ = writeln!(
         s,
         "  end-to-end TTFT [s]: mean {:.4}  p50 {:.4}  p99 {:.4}",
@@ -418,6 +480,8 @@ pub fn disagg_json(r: &DisaggReport) -> String {
          \"tpot_mean_s\":{},\"tpot_p50_s\":{},\"tpot_p99_s\":{},\
          \"latency_mean_s\":{},\"latency_p50_s\":{},\"latency_p99_s\":{},\
          \"total_seconds\":{},\"tokens_per_s\":{},\
+         \"migration_retries\":{},\"recompute_fallbacks\":{},\
+         \"degraded_capacity_fraction\":{},\
          \"prefill\":{},\"decode\":{}}}",
         r.prefill_replicas,
         r.decode_replicas,
@@ -439,6 +503,9 @@ pub fn disagg_json(r: &DisaggReport) -> String {
         r.latency_p99_s,
         r.total_seconds,
         r.tokens_per_s,
+        r.migration_retries,
+        r.recompute_fallbacks,
+        r.degraded_capacity_fraction,
         serve_json(&r.prefill),
         serve_json(&r.decode)
     )
@@ -683,6 +750,50 @@ mod tests {
         );
         assert_eq!(v.req("kv_imports").unwrap().as_u64(), Some(0));
         assert_eq!(v.req("imported_kv_tokens").unwrap().as_u64(), Some(0));
+        // v6: fault/recovery keys, all zero or empty on a fault-free run.
+        assert_eq!(v.req("replica_failures").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("stall_cycles").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("link_faults").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("salvaged_requests").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("salvaged_kv_bytes").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("retries").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("recovery_cycles").unwrap().as_u64(), Some(0));
+        assert_eq!(
+            v.req("degraded_capacity_fraction").unwrap().as_f64(),
+            Some(0.0)
+        );
+        assert_eq!(v.req("warnings").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn serve_table_surfaces_fault_and_recovery_counters() {
+        use crate::coordinator::FaultPlan;
+        use crate::parallel::{serve_replicated_with_faults, RoutePolicy};
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(2);
+        let w = crate::coordinator::Workload::uniform(6, 16, 8);
+        let opts = crate::coordinator::BatcherConfig::new(2, 0);
+        let plan = FaultPlan::parse("fail@0:r0", 1).unwrap();
+        let fleet = serve_replicated_with_faults(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            2,
+            RoutePolicy::JoinShortestQueue,
+            &plan,
+        );
+        let t = serve_table(&fleet.merged);
+        assert!(t.contains("faults: 1 replica failures"), "{t}");
+        assert!(t.contains("recovery:"), "{t}");
+        let v = crate::util::json::parse(&serve_json(&fleet.merged)).expect("valid JSON");
+        assert_eq!(v.req("replica_failures").unwrap().as_u64(), Some(1));
+        assert!(v.req("salvaged_requests").unwrap().as_u64().unwrap() > 0);
+        assert!(v.req("retries").unwrap().as_u64().unwrap() > 0);
+        assert!(
+            v.req("degraded_capacity_fraction").unwrap().as_f64().unwrap() > 0.0
+        );
     }
 
     #[test]
@@ -714,6 +825,13 @@ mod tests {
         assert_eq!(v.req("migrations").unwrap().as_u64(), Some(6));
         assert!(v.req("migrated_kv_bytes").unwrap().as_u64().unwrap() > 0);
         assert!(v.req("tpot_p99_s").unwrap().as_f64().unwrap() > 0.0);
+        // v6 disagg keys: inert without an armed fault plan.
+        assert_eq!(v.req("migration_retries").unwrap().as_u64(), Some(0));
+        assert_eq!(v.req("recompute_fallbacks").unwrap().as_u64(), Some(0));
+        assert_eq!(
+            v.req("degraded_capacity_fraction").unwrap().as_f64(),
+            Some(0.0)
+        );
         assert_eq!(
             v.req("decode").unwrap().req("kv_imports").unwrap().as_u64(),
             Some(6)

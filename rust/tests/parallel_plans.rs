@@ -11,9 +11,9 @@ use snitch_fm::coordinator::schedule::block_cost_batched;
 use snitch_fm::coordinator::{BatcherConfig, InferenceEngine, Request, Workload};
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::parallel::{
-    all_gather_cost, all_reduce_cost, best_plans, p2p_cost, plan_cost,
-    reduce_scatter_cost, serve_replicated, sharded_block_cost, Algorithm, Objective,
-    RoutePolicy, ShardPlan,
+    all_gather_cost, all_reduce_cost, best_plans, disagg_split_feasible, p2p_cost, plan_cost,
+    rank_fleet_splits, reduce_scatter_cost, serve_replicated, sharded_block_cost, Algorithm,
+    Objective, RoutePolicy, ShardPlan,
 };
 
 const CASES: usize = 100;
@@ -460,4 +460,59 @@ fn replica_kv_budgets_are_independent() {
         assert!(r.peak_kv_bytes <= 2 * one, "per-die budget respected");
     }
     assert!(fleet.merged.peak_kv_bytes <= 4 * one, "fleet peak sums the dies");
+}
+
+#[test]
+fn disagg_auto_feasibility_covers_the_degenerate_die_budgets() {
+    // Regression for `serve --disagg auto` graceful degradation: the two
+    // budgets that used to bail the CLI — one die, and a tp*pp product
+    // already consuming every offered die — are exactly the infeasible
+    // cases; any budget with room for a second group (or no explicit
+    // budget at all) stays on the auto-split path.
+    assert!(!disagg_split_feasible(1, 1, 1), "one die cannot split");
+    assert!(!disagg_split_feasible(2, 2, 4), "tp*pp == dies leaves no second group");
+    assert!(!disagg_split_feasible(2, 1, 3), "a fractional second group does not fit");
+    assert!(disagg_split_feasible(1, 1, 2), "two dies hold {{1, 1}}");
+    assert!(disagg_split_feasible(2, 2, 8), "two tp=2 pp=2 groups fit in 8 dies");
+    assert!(disagg_split_feasible(4, 2, 0), "no explicit budget: the package grows");
+}
+
+#[test]
+fn fleet_split_ranking_never_returns_empty_for_a_clamped_budget() {
+    // The planner clamps the replica budget to >= 2 groups, so once the
+    // feasibility gate passes, `--disagg auto` always has a best split
+    // to adopt — including the degenerate budget of a single replica.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::with_dies(2);
+    let w = Workload::uniform(8, 32, 8);
+    for budget in [1usize, 2, 3, 7] {
+        let ranking = rank_fleet_splits(&cfg, FpFormat::Fp32, &p, &w, 4, budget);
+        let best = ranking.splits.first().expect("clamped ranking is never empty");
+        assert!(best.prefill >= 1 && best.decode >= 1);
+        assert_eq!(best.prefill + best.decode, budget.max(2));
+        assert!(best.rate > 0.0);
+    }
+}
+
+#[test]
+fn symmetric_fleet_fallback_serves_the_full_trace_on_one_die() {
+    // The degraded path `--disagg auto` falls back to on a 1-die budget:
+    // a single symmetric replica. It must serve the whole trace (no
+    // requests lost to the infeasible split) with clean fault counters.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = Workload::uniform(6, 24, 6);
+    let fleet = serve_replicated(
+        &cfg,
+        &p,
+        FpFormat::Fp32,
+        BatcherConfig::new(4, 0),
+        &w,
+        1,
+        RoutePolicy::JoinShortestQueue,
+    );
+    assert_eq!(fleet.merged.completed, 6);
+    assert!(fleet.merged.rejected.is_empty());
+    assert_eq!(fleet.merged.replica_failures, 0);
+    assert_eq!(fleet.merged.degraded_capacity_fraction, 0.0);
 }

@@ -10,12 +10,15 @@ use common::Rng;
 use snitch_fm::arch::{Features, FpFormat, MemLevel, PlatformConfig};
 use snitch_fm::coordinator::schedule::{block_cost, model_cost};
 use snitch_fm::coordinator::{
-    layer_cost, BatcherConfig, ContinuousBatcher, KvCache, KvExport, KvGeometry,
+    layer_cost, BatcherConfig, ContinuousBatcher, FaultPlan, KvCache, KvExport, KvGeometry,
     LayerCostCache, PageTable, PagedKvAllocator, PrefixCache, Workload,
 };
 use snitch_fm::kernels::{flash_attention_cost, gemm_cost, layernorm_cost};
 use snitch_fm::kernels::gemm::OperandHome;
 use snitch_fm::model::{Layer, LayerKind, Mode, ModelConfig};
+use snitch_fm::parallel::{
+    serve_disaggregated_with_faults, serve_replicated_with_faults, RoutePolicy,
+};
 use snitch_fm::sim::noc;
 use snitch_fm::tiling::{plan_flash_attention, plan_gemm, plan_gemm_wide};
 
@@ -546,5 +549,155 @@ fn json_parser_roundtrips_random_nesting() {
         let v = json::parse(&doc).expect("parse");
         let v2 = json::parse(&v.to_string()).expect("reparse");
         assert_eq!(v, v2);
+    }
+}
+
+#[test]
+fn fault_recovery_never_loses_or_duplicates_a_request() {
+    // Conservation across failure / re-route / retry: the merged fleet
+    // view partitions the offered ids into completions and rejections —
+    // no request vanishes with its replica and none is served twice.
+    let mut rng = Rng(0xFA01);
+    let cfg = ModelConfig::tiny();
+    for case in 0..40 {
+        let replicas = rng.next(2, 4) as usize;
+        let n = rng.next(6, 20) as usize;
+        let p = PlatformConfig::with_dies(replicas as u32);
+        let w = Workload::synthetic(rng.next(1, 1 << 16), n, (8, 64), (2, 12))
+            .with_poisson_arrivals(rng.next(1, 1 << 16), 1_500.0);
+        let mut parts = Vec::new();
+        for _ in 0..rng.next(1, 2) {
+            let at = rng.next(0, 60) as f64 / 4e3;
+            parts.push(if rng.next(0, 1) == 0 {
+                format!("fail@{at}:r{}", rng.next(0, replicas as u64 - 1))
+            } else {
+                format!("die@{at}")
+            });
+        }
+        let plan = FaultPlan::parse(&parts.join(","), rng.next(0, 1 << 30)).unwrap();
+        let fleet = serve_replicated_with_faults(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            BatcherConfig::new(4, 0),
+            &w,
+            replicas,
+            RoutePolicy::JoinShortestQueue,
+            &plan,
+        );
+        assert_eq!(fleet.merged.requests, n, "case {case}");
+        assert_eq!(fleet.merged.completed + fleet.merged.rejected.len(), n, "case {case}");
+        let mut ids: Vec<usize> = fleet.merged.per_request.iter().map(|s| s.id).collect();
+        ids.extend(fleet.merged.rejected.iter().copied());
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "case {case}: a request was lost or served twice");
+        let f = fleet.merged.degraded_capacity_fraction;
+        assert!((0.0..=1.0).contains(&f), "case {case}: fraction {f}");
+    }
+}
+
+#[test]
+fn salvage_respects_every_survivors_kv_budget() {
+    // Salvaged KV pages are freed on the failed die and re-allocated on
+    // the adopter exactly once: under a deliberately tight pool, no
+    // replica's peak residency ever exceeds its own budget, and a pool
+    // that died with its replica (`die@`) re-exports nothing.
+    let mut rng = Rng(0xFA02);
+    let cfg = ModelConfig::tiny();
+    for case in 0..25 {
+        let n = rng.next(6, 16) as usize;
+        let p = PlatformConfig::with_dies(2);
+        let w = Workload::uniform(n, 24, 6);
+        let one = w.requests[0].kv_bytes(&cfg);
+        let opts = BatcherConfig::new(3, rng.next(2, 4) * one);
+        let at = rng.next(0, 40) as f64 / 4e3;
+        let kind = if rng.next(0, 1) == 0 { "fail" } else { "die" };
+        let plan =
+            FaultPlan::parse(&format!("{kind}@{at}:r0"), rng.next(0, 1 << 20)).unwrap();
+        let fleet = serve_replicated_with_faults(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            2,
+            RoutePolicy::JoinShortestQueue,
+            &plan,
+        );
+        for (i, r) in fleet.per_replica.iter().enumerate() {
+            assert!(
+                r.peak_kv_bytes <= r.kv_budget_bytes,
+                "case {case}: salvage blew replica {i}'s pool: {} > {}",
+                r.peak_kv_bytes,
+                r.kv_budget_bytes
+            );
+        }
+        if kind == "die" {
+            assert_eq!(
+                fleet.merged.salvaged_kv_bytes, 0,
+                "case {case}: a dead pool re-exports nothing"
+            );
+        }
+        assert_eq!(fleet.merged.completed + fleet.merged.rejected.len(), n, "case {case}");
+    }
+}
+
+#[test]
+fn corrupted_migrations_bill_the_link_once_per_attempt() {
+    // Every migration attempt — first try, corruption retry, and the
+    // final attempt before a recompute fallback — moves the payload and
+    // bills the link exactly once: bytes and cycles scale with the
+    // attempt count, never more, never less. Uniform requests make the
+    // per-attempt price a constant the invariant can divide out.
+    let mut rng = Rng(0xFA03);
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::with_dies(4);
+    let w = Workload::uniform(10, 32, 6);
+    let opts = BatcherConfig::new(4, 0);
+    let clean = serve_disaggregated_with_faults(
+        &cfg,
+        &p,
+        FpFormat::Fp32,
+        opts,
+        &w,
+        2,
+        2,
+        RoutePolicy::JoinShortestQueue,
+        &FaultPlan::off(),
+    );
+    assert_eq!(clean.migrations, 10);
+    let bytes_per = clean.migrated_kv_bytes / clean.migrations;
+    let cycles_per = clean.migration_cycles / clean.migrations;
+    assert!(bytes_per > 0 && cycles_per > 0);
+    for case in 0..25 {
+        let prob = rng.next(0, 100) as f64 / 100.0;
+        let plan =
+            FaultPlan::parse(&format!("corrupt:{prob}"), rng.next(0, 1 << 30)).unwrap();
+        let r = serve_disaggregated_with_faults(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            2,
+            2,
+            RoutePolicy::JoinShortestQueue,
+            &plan,
+        );
+        let attempts = r.migrations + r.migration_retries;
+        assert_eq!(
+            r.migrated_kv_bytes,
+            bytes_per * attempts,
+            "case {case} (p={prob}): bytes must scale with attempts"
+        );
+        assert_eq!(
+            r.migration_cycles,
+            cycles_per * attempts,
+            "case {case} (p={prob}): link cycles must scale with attempts"
+        );
+        assert_eq!(r.decode.kv_imports, r.migrations - r.recompute_fallbacks, "case {case}");
+        assert!(r.migration_retries <= 2 * r.migrations, "case {case}: retry cap");
+        assert_eq!(r.completed + r.rejected.len(), 10, "case {case}");
     }
 }
