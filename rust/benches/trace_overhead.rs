@@ -1,0 +1,112 @@
+//! Trace overhead: the PR-9 observability claim — arming the
+//! [`TraceRecorder`] is passive (bit-identical schedule) and cheap
+//! (enabled-mode wall-clock inside a fixed bound of the untraced run).
+//!
+//! One engine serves an open-loop Poisson trace twice: plain
+//! (`ContinuousBatcher::run`) and traced (`run_traced` with a
+//! deliberately aggressive 200 µs gauge cadence). Claims defended:
+//!
+//! 1. **Passivity.** The traced [`ServeReport`] is byte-identical to the
+//!    plain one — not merely `same_outcome`, full equality.
+//! 2. **Bounded overhead.** The traced median wall-clock stays under
+//!    `OVERHEAD_BOUND`× the plain median (plus a small absolute slack so
+//!    sub-millisecond smoke runs can't fail on timer noise).
+//! 3. **The record is complete.** Busy + stall + idle spans tile the
+//!    makespan exactly, and the Chrome export is non-trivial.
+//!
+//! Short mode (`BENCH_SMOKE=1`) serves 120 requests instead of 480; with
+//! `BENCH_JSON_DIR` set the results land in `BENCH_trace_overhead.json`
+//! (`trace_overhead_ratio` is trend-tracked with its own noise floor).
+
+mod common;
+
+use snitch_fm::arch::{FpFormat, PlatformConfig};
+use snitch_fm::coordinator::{BatcherConfig, ContinuousBatcher, Workload};
+use snitch_fm::model::ModelConfig;
+use snitch_fm::trace::{FleetTrace, TraceSettings};
+
+const SEED: u64 = 0x7C0DE;
+/// Enabled-mode budget: the traced run's median wall-clock must stay
+/// under this multiple of the plain run's.
+const OVERHEAD_BOUND: f64 = 1.50;
+/// Absolute slack absorbing scheduler/timer noise on short smoke runs.
+const SLACK_S: f64 = 0.005;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let fmt = FpFormat::Fp8;
+    let platform = PlatformConfig::occamy();
+    let n = if common::smoke() { 120 } else { 480 };
+    let workload = Workload::synthetic(SEED, n, (16, 96), (8, 32))
+        .with_poisson_arrivals(SEED ^ 0x11, 2_000.0);
+    let mut opts = BatcherConfig::new(8, 0);
+    opts.prefill_chunk = 32;
+    let settings = TraceSettings { metrics_interval_us: 200.0 };
+
+    let (t_plain, plain) = common::time_median(5, || {
+        ContinuousBatcher::new(&cfg, &platform, fmt, opts).run(&workload)
+    });
+    let (t_traced, (traced, rec)) = common::time_median(5, || {
+        ContinuousBatcher::new(&cfg, &platform, fmt, opts).run_traced(&workload, &settings)
+    });
+
+    // Passivity: full equality, stronger than `same_outcome`.
+    assert_eq!(plain, traced, "tracing must not perturb the schedule");
+
+    // Completeness: the span record tiles the makespan with no gaps.
+    let total = rec.total_cycles().expect("sealed recorder");
+    assert_eq!(total, traced.total_cycles);
+    let acct = rec.track_accounting();
+    assert_eq!(
+        acct.busy + acct.stall + acct.idle,
+        total,
+        "busy+stall+idle spans must tile the makespan"
+    );
+    assert_eq!(acct.busy, traced.work.cycles);
+    let passes = rec.passes().len();
+    let gauges = rec.gauges().len();
+    let requests = rec.requests().len();
+    assert!(passes > 0 && gauges > 0 && requests >= n);
+
+    let fleet = FleetTrace::single("replica 0", rec);
+    let json = fleet.to_chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":["), "Chrome export shape");
+
+    common::header(
+        "trace overhead",
+        "continuous batcher, recorder armed vs off, 200 us gauge cadence",
+    );
+    println!(
+        "{n} requests, {} passes, {} gauge samples, {} lifecycle spans, \
+         {:.1} KiB Chrome JSON",
+        passes,
+        gauges,
+        requests,
+        json.len() as f64 / 1024.0
+    );
+    common::report_timing("trace-off", t_plain);
+    common::report_timing("trace-on", t_traced);
+    let ratio = t_traced / t_plain.max(1e-9);
+    println!("trace overhead ratio: {ratio:.3}x (bound {OVERHEAD_BOUND}x)");
+    assert!(
+        t_traced <= t_plain * OVERHEAD_BOUND + SLACK_S,
+        "enabled-mode overhead blew the bound: {:.3} ms traced vs {:.3} ms \
+         plain ({ratio:.3}x > {OVERHEAD_BOUND}x)",
+        t_traced * 1e3,
+        t_plain * 1e3
+    );
+
+    common::write_bench_json(
+        "trace_overhead",
+        &format!(
+            "{{\"requests\":{n},\"trace_overhead_ratio\":{ratio},\
+             \"plain_ms\":{},\"traced_ms\":{},\"passes\":{passes},\
+             \"gauge_samples\":{gauges},\"chrome_json_bytes\":{},\
+             \"tokens_per_s\":{}}}",
+            t_plain * 1e3,
+            t_traced * 1e3,
+            json.len(),
+            traced.tokens_per_s,
+        ),
+    );
+}

@@ -53,6 +53,7 @@ use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 
 use crate::arch::{FpFormat, PlatformConfig};
+use crate::coordinator::breakdown::KindCycles;
 use crate::coordinator::faults::{FaultKind, ReplicaFaults, SalvagedRequest};
 use crate::coordinator::kv_paging::{
     KvExport, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
@@ -65,6 +66,7 @@ use crate::model::ModelConfig;
 use crate::parallel::collectives::degrade_link;
 use crate::parallel::shard::{plan_pass_cost, ShardPlan};
 use crate::sim::KernelCost;
+use crate::trace::{PassPhase, TraceRecorder, TraceSettings};
 
 /// Which serving core prices the trace. Both produce bit-identical
 /// schedules and reports (`ServeReport::same_outcome`, asserted by the
@@ -371,6 +373,17 @@ pub struct ServeReport {
     pub collective_cycles: u64,
     /// Bytes the trace moved over the die-to-die links.
     pub d2d_bytes: u64,
+    /// Compute cycles of prefill-only passes split by kernel class
+    /// (canonical [`crate::coordinator::breakdown::KIND_ORDER`] order;
+    /// collective cycles excluded, so across the three phase splits
+    /// `total() + collective_cycles == ` the cycles of every priced
+    /// pass). Deterministic, hence covered by [`Self::same_outcome`].
+    pub prefill_kind_cycles: KindCycles,
+    /// Compute cycles of decode-only passes split by kernel class.
+    pub decode_kind_cycles: KindCycles,
+    /// Compute cycles of fused mixed passes (token-budget mode) split by
+    /// kernel class.
+    pub mixed_kind_cycles: KindCycles,
     /// Aggregate kernel resources of every priced pass. Rate-like report
     /// fields (FPU utilization, power) derive from this, and the router
     /// merges it to recompute fleet rates from raw counters.
@@ -619,6 +632,9 @@ struct PassKey {
 struct PassCost {
     total: KernelCost,
     collective_cycles: u64,
+    /// Compute-cycle split by kernel class (memoized with the total so a
+    /// hit replays the same per-phase breakdown the fresh pricing made).
+    kind_cycles: KindCycles,
     lookups: u64,
 }
 
@@ -746,6 +762,9 @@ impl<'w> EventQueue<'w> {
                 for r in it.by_ref() {
                     self.offered += 1;
                     if !st.alloc.fits_pool(r.kv_capacity()) {
+                        if let Some(rec) = st.trace.as_mut() {
+                            rec.request_rejected(r.id, st.time);
+                        }
                         st.rejected.push(r.id);
                         continue;
                     }
@@ -817,6 +836,9 @@ impl<'w> EventQueue<'w> {
                 for r in it.by_ref() {
                     self.offered += 1;
                     if !st.alloc.fits_pool(r.kv_capacity()) {
+                        if let Some(rec) = st.trace.as_mut() {
+                            rec.request_rejected(r.id, st.time);
+                        }
                         st.rejected.push(r.id);
                         continue;
                     }
@@ -845,6 +867,12 @@ struct RunCounters {
     prefix_late_hits: u64,
     /// Cycles inside TP all-reduces / PP sends (sharded plans only).
     collective_cycles: u64,
+    /// Compute cycles of prefill-only passes split by kernel class.
+    prefill_kind_cycles: KindCycles,
+    /// Compute cycles of decode-only passes split by kernel class.
+    decode_kind_cycles: KindCycles,
+    /// Compute cycles of fused mixed passes split by kernel class.
+    mixed_kind_cycles: KindCycles,
     /// Requests admitted with pre-migrated KV / prompt tokens those
     /// imports materialized without prefill (disaggregated decode dies).
     kv_imports: u64,
@@ -946,6 +974,13 @@ struct RunState {
     /// Requests torn off this engine by a permanent failure, for the
     /// fleet router to re-route (empty without faults).
     salvaged: Vec<SalvagedRequest>,
+    /// Cycle-level trace recorder (`serve --trace`). `None` — the
+    /// default — short-circuits every hook, so untraced runs are
+    /// bit-identical to the pre-trace engine; when armed the recorder is
+    /// strictly passive (it never reads back into scheduling), so traced
+    /// reports stay bit-identical too ([`ServeReport::same_outcome`],
+    /// asserted by the equivalence suite).
+    trace: Option<TraceRecorder>,
     /// Reused per-iteration buffers — the event core's hot loop allocates
     /// nothing on a memoized decode step. Shared by both engines, so the
     /// reuse cannot change behavior.
@@ -1006,11 +1041,12 @@ impl<'a> ContinuousBatcher<'a> {
         decode_kv: &[u64],
     ) -> KernelCost {
         st.c.pass_events += 1;
-        let RunState { pass_memo, costs, c, degraded, .. } = st;
+        let RunState { pass_memo, costs, c, degraded, time, trace, .. } = st;
         // A live `link@` fault swaps in a degraded-bandwidth platform for
         // pricing; fault-free runs borrow the nominal reference untouched.
         let platform = degraded.as_ref().unwrap_or(self.platform);
-        if let Some(memo) = pass_memo.as_mut() {
+        let (total, collective_cycles, kind_cycles) = if let Some(memo) = pass_memo.as_mut()
+        {
             memo.key.prefills.clear();
             memo.key.prefills.extend_from_slice(prefills);
             memo.key.decode_kv.clear();
@@ -1018,10 +1054,32 @@ impl<'a> ContinuousBatcher<'a> {
             if let Some(pc) = memo.map.get(&memo.key) {
                 memo.hits += 1;
                 costs.add_hits(pc.lookups);
-                c.collective_cycles += pc.collective_cycles;
-                return pc.total;
+                (pc.total, pc.collective_cycles, pc.kind_cycles)
+            } else {
+                let before = costs.hits() + costs.misses();
+                let pass = plan_pass_cost(
+                    costs,
+                    self.cfg,
+                    self.opts.plan,
+                    prefills,
+                    decode_kv,
+                    self.fmt,
+                    platform,
+                );
+                let lookups = costs.hits() + costs.misses() - before;
+                memo.misses += 1;
+                memo.map.insert(
+                    memo.key.clone(),
+                    PassCost {
+                        total: pass.total,
+                        collective_cycles: pass.collective_cycles,
+                        kind_cycles: pass.kind_cycles,
+                        lookups,
+                    },
+                );
+                (pass.total, pass.collective_cycles, pass.kind_cycles)
             }
-            let before = costs.hits() + costs.misses();
+        } else {
             let pass = plan_pass_cost(
                 costs,
                 self.cfg,
@@ -1031,30 +1089,39 @@ impl<'a> ContinuousBatcher<'a> {
                 self.fmt,
                 platform,
             );
-            let lookups = costs.hits() + costs.misses() - before;
-            memo.misses += 1;
-            memo.map.insert(
-                memo.key.clone(),
-                PassCost {
-                    total: pass.total,
-                    collective_cycles: pass.collective_cycles,
-                    lookups,
-                },
-            );
-            c.collective_cycles += pass.collective_cycles;
-            return pass.total;
+            (pass.total, pass.collective_cycles, pass.kind_cycles)
+        };
+        c.collective_cycles += collective_cycles;
+        // Phase is a pure function of the pass shape, so the per-phase
+        // split is identical across cores and memo hits.
+        let phase = if decode_kv.is_empty() {
+            PassPhase::Prefill
+        } else if prefills.is_empty() {
+            PassPhase::Decode
+        } else {
+            PassPhase::Mixed
+        };
+        match phase {
+            PassPhase::Prefill => c.prefill_kind_cycles.accum(&kind_cycles),
+            PassPhase::Decode => c.decode_kind_cycles.accum(&kind_cycles),
+            PassPhase::Mixed => c.mixed_kind_cycles.accum(&kind_cycles),
         }
-        let pass = plan_pass_cost(
-            costs,
-            self.cfg,
-            self.opts.plan,
-            prefills,
-            decode_kv,
-            self.fmt,
-            platform,
-        );
-        c.collective_cycles += pass.collective_cycles;
-        pass.total
+        if let Some(rec) = trace.as_mut() {
+            // Every call site advances the clock by exactly this pass's
+            // cycles right after pricing, so the span is [now, now + c].
+            let prefill_tokens: u64 = prefills.iter().map(|&(s, _)| s).sum();
+            rec.pass(
+                phase,
+                *time,
+                *time + total.cycles,
+                (prefills.len() + decode_kv.len()) as u64,
+                prefill_tokens,
+                decode_kv.len() as u64,
+                kind_cycles,
+                collective_cycles,
+            );
+        }
+        total
     }
 
     /// Whether this run deduplicates shared prompt prefixes. Off under
@@ -1126,6 +1193,7 @@ impl<'a> ContinuousBatcher<'a> {
             degraded: None,
             failed: None,
             salvaged: Vec::new(),
+            trace: None,
             order_buf: Vec::new(),
             stepped_buf: Vec::new(),
             kv_buf: Vec::new(),
@@ -1152,6 +1220,9 @@ impl<'a> ContinuousBatcher<'a> {
         let mut jobs: Vec<Job> = Vec::new();
         for r in &workload.requests {
             if !st.alloc.fits_pool(r.kv_capacity()) {
+                if let Some(rec) = st.trace.as_mut() {
+                    rec.request_rejected(r.id, st.time);
+                }
                 st.rejected.push(r.id);
                 continue;
             }
@@ -1178,6 +1249,14 @@ impl<'a> ContinuousBatcher<'a> {
             }
             st.fault_cursor += 1;
             fired = true;
+            if let Some(rec) = st.trace.as_mut() {
+                // Marked at the schedule boundary the fault lands on (its
+                // plan cycle may fall mid-pass; passes are atomic).
+                rec.fault(st.time, ev.kind.label());
+                if let FaultKind::ReplicaStall { cycles } = ev.kind {
+                    rec.stall(st.time, st.time + cycles);
+                }
+            }
             match ev.kind {
                 FaultKind::ReplicaStall { cycles } => {
                     st.time += cycles;
@@ -1212,6 +1291,27 @@ impl<'a> ContinuousBatcher<'a> {
         self.faults.events.get(st.fault_cursor).map(|e| e.cycle)
     }
 
+    /// Fixed-cadence gauge sampling (`serve --trace --metrics-interval`):
+    /// resident set, queue depth, KV pool fill, aggregate FPU utilization
+    /// so far, and cumulative d2d link bytes. A no-op — without even
+    /// computing the gauge values — when tracing is off or between
+    /// cadence boundaries. Samples land at scheduling decision points
+    /// (passes are atomic), so one sample covers each crossed boundary.
+    fn sample_gauges(&self, st: &mut RunState) {
+        if !st.trace.as_ref().is_some_and(|r| r.sample_due(st.time)) {
+            return;
+        }
+        let fpu =
+            energy::power_report(&st.c.total, self.fmt, self.platform).fpu_utilization;
+        let kv = st.alloc.gauges();
+        let resident = st.active.len() as u64;
+        let queue_depth = st.ready.len() as u64;
+        let d2d = st.c.total.d2d_bytes;
+        if let Some(rec) = st.trace.as_mut() {
+            rec.maybe_sample(st.time, resident, queue_depth, kv, fpu, d2d);
+        }
+    }
+
     /// Permanent-failure teardown: release every resident page and hand
     /// back all unfinished work as [`SalvagedRequest`]s for the fleet
     /// router to re-route. An in-flight request that finished prefill on
@@ -1244,6 +1344,11 @@ impl<'a> ContinuousBatcher<'a> {
             out.push(SalvagedRequest { req, fail_cycle, export_bytes: 0 });
         }
         out.sort_by_key(|s| s.req.id);
+        if let Some(rec) = st.trace.as_mut() {
+            for s in &out {
+                rec.request_salvaged(s.req.id, fail_cycle);
+            }
+        }
         st.c.salvaged_requests += out.len() as u64;
         st.c.salvaged_kv_bytes += out.iter().map(|s| s.export_bytes).sum::<u64>();
         st.salvaged = out;
@@ -1251,9 +1356,11 @@ impl<'a> ContinuousBatcher<'a> {
 
     /// Run the workload through the configured core and return the final
     /// state plus the offered-request count (shared by [`Self::run`] and
-    /// [`Self::run_salvage`]).
-    fn run_state(&self, workload: &Workload) -> (RunState, usize) {
+    /// [`Self::run_salvage`] and their traced variants; `trace` arms the
+    /// passive recorder, `None` is the zero-cost default).
+    fn run_state(&self, workload: &Workload, trace: Option<TraceRecorder>) -> (RunState, usize) {
         let mut st = self.fresh_state();
+        st.trace = trace;
         match self.opts.engine {
             EngineMode::Iteration => {
                 self.run_iteration_loop(&mut st, workload);
@@ -1274,20 +1381,56 @@ impl<'a> ContinuousBatcher<'a> {
     /// are reported as rejected — standalone engines have no fleet to
     /// adopt them (use [`Self::run_salvage`] from a router instead).
     pub fn run(&self, workload: &Workload) -> ServeReport {
-        let (mut st, offered) = self.run_state(workload);
+        let (mut st, offered) = self.run_state(workload, None);
         for s in std::mem::take(&mut st.salvaged) {
             st.rejected.push(s.req.id);
         }
         self.report(offered, st)
     }
 
+    /// [`Self::run`] with cycle-level tracing armed: returns the report
+    /// plus the sealed [`TraceRecorder`] holding the run's span record
+    /// (pass/stall tiling, request lifecycles, gauge samples). The
+    /// recorder is strictly passive — the report is bit-identical to
+    /// [`Self::run`] on the same workload ([`ServeReport::same_outcome`]).
+    pub fn run_traced(
+        &self,
+        workload: &Workload,
+        settings: &TraceSettings,
+    ) -> (ServeReport, TraceRecorder) {
+        let rec = TraceRecorder::new(settings, self.platform.freq_ghz);
+        let (mut st, offered) = self.run_state(workload, Some(rec));
+        for s in std::mem::take(&mut st.salvaged) {
+            st.rejected.push(s.req.id);
+        }
+        let mut rec = st.trace.take().expect("recorder armed above");
+        rec.finish(st.time);
+        (self.report(offered, st), rec)
+    }
+
     /// [`Self::run`], but a permanent fault's unfinished requests come
     /// back as [`SalvagedRequest`]s (with their re-exportable KV sizes)
     /// instead of rejections, for the fleet router to re-route.
     pub fn run_salvage(&self, workload: &Workload) -> (ServeReport, Vec<SalvagedRequest>) {
-        let (mut st, offered) = self.run_state(workload);
+        let (mut st, offered) = self.run_state(workload, None);
         let salvaged = std::mem::take(&mut st.salvaged);
         (self.report(offered, st), salvaged)
+    }
+
+    /// [`Self::run_salvage`] with cycle-level tracing armed (the form the
+    /// fleet router's `--trace` path uses, so failed-replica traces keep
+    /// their salvage markers).
+    pub fn run_salvage_traced(
+        &self,
+        workload: &Workload,
+        settings: &TraceSettings,
+    ) -> (ServeReport, Vec<SalvagedRequest>, TraceRecorder) {
+        let rec = TraceRecorder::new(settings, self.platform.freq_ghz);
+        let (mut st, offered) = self.run_state(workload, Some(rec));
+        let salvaged = std::mem::take(&mut st.salvaged);
+        let mut rec = st.trace.take().expect("recorder armed above");
+        rec.finish(st.time);
+        (self.report(offered, st), salvaged, rec)
     }
 
     /// Serve a lazy arrival stream (e.g. [`Workload::stream_poisson`])
@@ -1329,6 +1472,7 @@ impl<'a> ContinuousBatcher<'a> {
                     break;
                 }
             }
+            self.sample_gauges(st);
             if let Some(pool_survives) = st.failed {
                 let pending: Vec<Job> = arrivals.drain(..).collect();
                 self.salvage(st, pending, pool_survives);
@@ -1390,6 +1534,9 @@ impl<'a> ContinuousBatcher<'a> {
                     debug_assert!(false, "lone resident job stalled");
                     if let Some(mut a) = st.active.pop() {
                         st.alloc.release(&mut a.table);
+                        if let Some(rec) = st.trace.as_mut() {
+                            rec.request_rejected(a.job.req.id, st.time);
+                        }
                         st.rejected.push(a.job.req.id);
                     }
                 }
@@ -1428,6 +1575,7 @@ impl<'a> ContinuousBatcher<'a> {
                 }
                 q.push(st.time, EventKind::Fault);
             }
+            self.sample_gauges(st);
             if let Some(pool_survives) = st.failed {
                 let pending = q.drain_pending(self, st);
                 self.salvage(st, pending, pool_survives);
@@ -1495,6 +1643,9 @@ impl<'a> ContinuousBatcher<'a> {
                     debug_assert!(false, "lone resident job stalled");
                     if let Some(mut a) = st.active.pop() {
                         st.alloc.release(&mut a.table);
+                        if let Some(rec) = st.trace.as_mut() {
+                            rec.request_rejected(a.job.req.id, st.time);
+                        }
                         st.rejected.push(a.job.req.id);
                     }
                 }
@@ -1605,6 +1756,9 @@ impl<'a> ContinuousBatcher<'a> {
             };
             if job.first_admitted_cycle.is_none() {
                 job.first_admitted_cycle = Some(st.time);
+            }
+            if let Some(rec) = st.trace.as_mut() {
+                rec.request_admitted(job.req.id, job.arrival_cycle, st.time, job.req.prompt_len);
             }
             st.active.push(ActiveJob {
                 job,
@@ -1778,6 +1932,9 @@ impl<'a> ContinuousBatcher<'a> {
             }
             let chunk = [(quantum, st.active[i].prefill_done)];
             let cost = self.price_pass(st, &chunk, &[]);
+            if let Some(rec) = st.trace.as_mut() {
+                rec.prefill_chunk(id, st.time, st.time + cost.cycles, quantum);
+            }
             st.time += cost.cycles;
             st.c.total = st.c.total.then(cost);
             let a = &mut st.active[i];
@@ -1801,6 +1958,9 @@ impl<'a> ContinuousBatcher<'a> {
             {
                 let mut a = st.active.swap_remove(i);
                 st.alloc.release(&mut a.table);
+                if let Some(rec) = st.trace.as_mut() {
+                    rec.request_retired(a.job.req.id, st.time, a.job.produced);
+                }
                 let ttft = a.job.ttft_cycle.unwrap_or(st.time);
                 st.done.push(self.finish_stats(&a.job, ttft, st.time));
             } else {
@@ -1863,6 +2023,9 @@ impl<'a> ContinuousBatcher<'a> {
             if a.job.produced >= a.job.req.gen_tokens {
                 let mut a = st.active.swap_remove(i);
                 st.alloc.release(&mut a.table);
+                if let Some(rec) = st.trace.as_mut() {
+                    rec.request_retired(a.job.req.id, st.time, a.job.produced);
+                }
                 let ttft = a.job.ttft_cycle.unwrap_or(st.time);
                 st.done.push(self.finish_stats(&a.job, ttft, st.time));
             }
@@ -1951,6 +2114,11 @@ impl<'a> ContinuousBatcher<'a> {
         let prefills: Vec<(u64, u64)> =
             prefill_claims.iter().map(|&(_, q, kv)| (q, kv)).collect();
         let cost = self.price_pass(st, &prefills, &kv_lens);
+        if let Some(rec) = st.trace.as_mut() {
+            for &(id, quantum, _) in &prefill_claims {
+                rec.prefill_chunk(id, st.time, st.time + cost.cycles, quantum);
+            }
+        }
         st.time += cost.cycles;
         st.c.total = st.c.total.then(cost);
         let prefill_claimed: u64 = prefills.iter().map(|&(s, _)| s).sum();
@@ -2020,6 +2188,9 @@ impl<'a> ContinuousBatcher<'a> {
     fn preempt(st: &mut RunState, victim: usize) {
         let mut a = st.active.swap_remove(victim);
         st.alloc.release(&mut a.table);
+        if let Some(rec) = st.trace.as_mut() {
+            rec.request_preempted(a.job.req.id, st.time);
+        }
         a.job.preemptions += 1;
         a.job.prefill_target = a.job.req.prompt_len + a.job.produced;
         st.c.preemptions += 1;
@@ -2154,6 +2325,9 @@ impl<'a> ContinuousBatcher<'a> {
             pp: self.opts.plan.pp.max(1),
             collective_cycles: c.collective_cycles,
             d2d_bytes: c.total.d2d_bytes,
+            prefill_kind_cycles: c.prefill_kind_cycles,
+            decode_kind_cycles: c.decode_kind_cycles,
+            mixed_kind_cycles: c.mixed_kind_cycles,
             work: c.total,
             engine: self.opts.engine.name(),
             arrival_events: c.arrival_events,
@@ -2779,6 +2953,64 @@ mod tests {
             "fused {} !< alternation {}",
             r_fused.total_seconds,
             r_legacy.total_seconds
+        );
+    }
+
+    #[test]
+    fn kind_cycles_split_covers_compute_and_phases() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let budget = Request::new(0, 16, 8).kv_bytes(&cfg) * 8;
+        // Alternation mode: prefill-only and decode-only passes.
+        let r = tiny_batcher(&cfg, &p, 4, budget);
+        let split = r.prefill_kind_cycles.total()
+            + r.decode_kind_cycles.total()
+            + r.mixed_kind_cycles.total();
+        assert_eq!(split + r.collective_cycles, r.work.cycles);
+        assert!(r.prefill_kind_cycles.total() > 0);
+        assert!(r.decode_kind_cycles.total() > 0);
+        assert!(r.mixed_kind_cycles.is_zero(), "no fused passes without a budget");
+        // Budget mode: decode+prefill claims fuse into mixed passes.
+        let mut opts = BatcherConfig::new(4, budget);
+        opts.token_budget = 16;
+        let rb = run_cfg(&cfg, &p, &Workload::uniform(6, 16, 8), opts);
+        let splitb = rb.prefill_kind_cycles.total()
+            + rb.decode_kind_cycles.total()
+            + rb.mixed_kind_cycles.total();
+        assert_eq!(splitb + rb.collective_cycles, rb.work.cycles);
+        assert!(rb.mixed_kind_cycles.total() > 0);
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_seals_the_recorder() {
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::occamy();
+        let one = Request::new(0, 16, 8).kv_bytes(&cfg);
+        // Tight pool: preemption/recompute traffic exercises the
+        // lifecycle hooks beyond the happy path.
+        let w = Workload::uniform(6, 16, 8);
+        let b = ContinuousBatcher::new(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            BatcherConfig::new(4, 2 * one),
+        );
+        let plain = b.run(&w);
+        let (traced, rec) = b.run_traced(&w, &TraceSettings::default());
+        assert!(plain.same_outcome(&traced), "tracing must be strictly passive");
+        assert_eq!(rec.total_cycles(), Some(traced.total_cycles));
+        // Pass spans tile the busy time exactly...
+        let busy: u64 = rec.passes().iter().map(|s| s.end - s.start).sum();
+        assert_eq!(busy, traced.work.cycles);
+        let acct = rec.track_accounting();
+        assert_eq!(acct.busy + acct.stall + acct.idle, traced.total_cycles);
+        // ...chunk spans conserve the prefill counter, and lifecycles
+        // conserve completions.
+        let chunk_tokens: u64 = rec.chunks().iter().map(|c| c.tokens).sum();
+        assert_eq!(chunk_tokens, traced.prefill_tokens);
+        assert_eq!(
+            rec.requests().iter().filter(|r| r.finished).count(),
+            traced.completed
         );
     }
 }

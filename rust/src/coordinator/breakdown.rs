@@ -4,6 +4,77 @@ use crate::model::LayerKind;
 
 use super::schedule::ModelCost;
 
+/// Kernel classes in canonical counter order; [`kind_index`] maps a
+/// [`LayerKind`] to its slot in this table (and in [`KindCycles`]).
+pub const KIND_ORDER: [LayerKind; 5] = [
+    LayerKind::Gemm,
+    LayerKind::FlashAttention,
+    LayerKind::FusedConcatLinear,
+    LayerKind::Layernorm,
+    LayerKind::Gelu,
+];
+
+/// Slot of `kind` in [`KIND_ORDER`] / [`KindCycles`].
+pub const fn kind_index(kind: LayerKind) -> usize {
+    match kind {
+        LayerKind::Gemm => 0,
+        LayerKind::FlashAttention => 1,
+        LayerKind::FusedConcatLinear => 2,
+        LayerKind::Layernorm => 3,
+        LayerKind::Gelu => 4,
+    }
+}
+
+/// Dense per-kernel-class cycle accumulator (slots ordered by
+/// [`KIND_ORDER`]). The serving counters keep one of these per pass phase
+/// so `ServeReport` can attribute cycles to kernel classes without hashing
+/// on the pricing hot path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KindCycles(pub [u64; 5]);
+
+impl KindCycles {
+    /// Add `cycles` to `kind`'s slot.
+    pub fn add(&mut self, kind: LayerKind, cycles: u64) {
+        self.0[kind_index(kind)] += cycles;
+    }
+
+    /// Accumulate another counter into this one, slot by slot.
+    pub fn accum(&mut self, other: &KindCycles) {
+        for (a, b) in self.0.iter_mut().zip(other.0.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Cycles attributed to `kind`.
+    pub fn get(&self, kind: LayerKind) -> u64 {
+        self.0[kind_index(kind)]
+    }
+
+    /// Sum over every kernel class.
+    pub fn total(&self) -> u64 {
+        self.0.iter().sum()
+    }
+
+    /// True when no cycles have been recorded.
+    pub fn is_zero(&self) -> bool {
+        self.0.iter().all(|&c| c == 0)
+    }
+
+    /// Per-slot scaling (repeat over `n` identical blocks).
+    pub fn scaled(&self, n: u64) -> KindCycles {
+        let mut out = *self;
+        for c in out.0.iter_mut() {
+            *c *= n;
+        }
+        out
+    }
+
+    /// `(kind, cycles)` pairs in canonical order.
+    pub fn iter(&self) -> impl Iterator<Item = (LayerKind, u64)> + '_ {
+        KIND_ORDER.iter().zip(self.0.iter()).map(|(k, c)| (*k, *c))
+    }
+}
+
 /// One kernel class' share of the total latency.
 #[derive(Debug, Clone)]
 pub struct KernelClassShare {
@@ -118,6 +189,30 @@ mod tests {
         let sum: f64 = b.shares.iter().map(|s| s.fraction).sum();
         assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
         assert!(b.shares.windows(2).all(|w| w[0].cycles >= w[1].cycles));
+    }
+
+    #[test]
+    fn kind_cycles_accumulates_in_canonical_order() {
+        let mut kc = KindCycles::default();
+        assert!(kc.is_zero());
+        kc.add(LayerKind::Gemm, 10);
+        kc.add(LayerKind::Gelu, 5);
+        kc.add(LayerKind::Gemm, 2);
+        assert_eq!(kc.get(LayerKind::Gemm), 12);
+        assert_eq!(kc.get(LayerKind::Gelu), 5);
+        assert_eq!(kc.total(), 17);
+        let mut other = KindCycles::default();
+        other.add(LayerKind::FlashAttention, 3);
+        kc.accum(&other);
+        assert_eq!(kc.total(), 20);
+        assert_eq!(kc.scaled(2).total(), 40);
+        // Every LayerKind has a distinct slot matching KIND_ORDER.
+        for (i, kind) in KIND_ORDER.iter().enumerate() {
+            assert_eq!(kind_index(*kind), i);
+        }
+        let pairs: Vec<_> = kc.iter().collect();
+        assert_eq!(pairs[0], (LayerKind::Gemm, 12));
+        assert_eq!(pairs[1], (LayerKind::FlashAttention, 3));
     }
 
     #[test]

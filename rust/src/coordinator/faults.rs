@@ -81,6 +81,19 @@ pub enum FaultKind {
     },
 }
 
+impl FaultKind {
+    /// Short stable label for telemetry markers and trace events:
+    /// `"fail"`, `"die"`, `"stall"` or `"link"` (the spec clause names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::ReplicaFail { pool_survives: true } => "fail",
+            FaultKind::ReplicaFail { pool_survives: false } => "die",
+            FaultKind::ReplicaStall { .. } => "stall",
+            FaultKind::LinkDegrade { .. } => "link",
+        }
+    }
+}
+
 /// One timed fault in wall-clock (trace) seconds.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FaultEvent {

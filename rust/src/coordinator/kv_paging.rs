@@ -340,6 +340,30 @@ pub struct KvExport {
     pub bytes: u64,
 }
 
+/// Point-in-time occupancy snapshot of a [`PagedKvAllocator`] pool — the
+/// unit the serving telemetry's gauge sampler records at
+/// `--metrics-interval` cadence (see `crate::trace`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolGauges {
+    /// Total pages the pool was carved into.
+    pub total_pages: u64,
+    /// Distinct pages currently referenced (shared pages count once).
+    pub used_pages: u64,
+    /// Bytes currently mapped.
+    pub bytes_in_use: u64,
+}
+
+impl PagedKvAllocator {
+    /// Snapshot the pool occupancy gauges.
+    pub fn gauges(&self) -> KvPoolGauges {
+        KvPoolGauges {
+            total_pages: self.total_pages,
+            used_pages: self.in_use,
+            bytes_in_use: self.bytes_in_use(),
+        }
+    }
+}
+
 /// Content-addressed index of cached prompt-prefix pages.
 ///
 /// Maps a chained page-content hash (see `Request::prompt_page_hashes`)

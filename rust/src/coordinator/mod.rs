@@ -27,15 +27,16 @@ pub use batcher::{
     BatcherConfig, ClassStats, ContinuousBatcher, EngineMode, RequestStats, ServeReport,
 };
 pub use faults::{FaultEvent, FaultKind, FaultPlan, ReplicaFaults, SalvagedRequest};
-pub use breakdown::{Breakdown, KernelClassShare};
+pub use breakdown::{kind_index, Breakdown, KernelClassShare, KindCycles, KIND_ORDER};
 pub use engine::{InferenceEngine, RunReport};
 pub use kv_cache::KvCache;
 pub use kv_paging::{
-    platform_kv_budget_bytes, KvExport, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
+    platform_kv_budget_bytes, KvExport, KvGeometry, KvPoolGauges, PagedKvAllocator,
+    PageTable, PrefixCache,
 };
 pub use schedule::{
     block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,
-    model_cost_decode, model_cost_mixed, model_total_mixed, platform_fingerprint,
-    LayerCostCache, ModelCost,
+    model_cost_decode, model_cost_mixed, model_total_mixed, model_total_mixed_by_kind,
+    platform_fingerprint, LayerCostCache, ModelCost,
 };
 pub use workload::{Arrival, ArrivalStream, Request, SharedPrefix, Workload};

@@ -23,6 +23,8 @@ use crate::model::{
 };
 use crate::sim::KernelCost;
 
+use super::breakdown::KindCycles;
+
 /// Row count below which the N-split weight-streaming schedule (each
 /// cluster owns output columns, weights read from HBM exactly once) can
 /// still beat the M-split blocked schedule, whose per-cluster weight
@@ -443,15 +445,36 @@ pub fn model_total_mixed(
     fmt: FpFormat,
     platform: &PlatformConfig,
 ) -> KernelCost {
+    model_total_mixed_by_kind(costs, cfg, prefills, decode_kv, fmt, platform).0
+}
+
+/// [`model_total_mixed`] plus the per-kernel-class cycle split of the same
+/// pass. A single walk over the block layers feeds both the total and the
+/// [`KindCycles`] accumulator, so the memo hit/miss accounting — and the
+/// returned total — are bit-identical to the plain entry point (which now
+/// delegates here). The split sums exactly to the total's cycles because
+/// [`KernelCost::then`] is additive in cycles and `repeat` scales
+/// linearly.
+pub fn model_total_mixed_by_kind(
+    costs: &mut LayerCostCache,
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    fmt: FpFormat,
+    platform: &PlatformConfig,
+) -> (KernelCost, KindCycles) {
     if prefills.iter().all(|&(s, _)| s == 0) && decode_kv.is_empty() {
-        return KernelCost::default();
+        return (KernelCost::default(), KindCycles::default());
     }
     costs.ensure_platform(platform);
     let mut one = KernelCost::default();
+    let mut kinds = KindCycles::default();
     for layer in &block_layers_mixed(cfg, prefills, decode_kv) {
-        one = one.then(costs.layer_cost(layer, fmt, platform));
+        let c = costs.layer_cost(layer, fmt, platform);
+        one = one.then(c);
+        kinds.add(layer.kind, c.cycles);
     }
-    one.repeat(cfg.blocks)
+    (one.repeat(cfg.blocks), kinds.scaled(cfg.blocks))
 }
 
 #[cfg(test)]
@@ -721,6 +744,29 @@ mod tests {
         let lens = [64u64, 64, 512];
         let total = model_total_mixed(&mut cache, &cfg, &[(32, 96)], &lens, fmt, &p);
         assert_eq!(total, model_cost_mixed(&cfg, &[(32, 96)], &lens, fmt, &p).total);
+    }
+
+    #[test]
+    fn by_kind_split_matches_uncached_breakdown() {
+        let cfg = ModelConfig::gpt_j();
+        let p = occ();
+        let fmt = FpFormat::Fp32;
+        let mut cache = LayerCostCache::new(&p);
+        let prefills = [(128u64, 256u64)];
+        let lens = [64u64, 512, 1024];
+        let (total, kinds) =
+            model_total_mixed_by_kind(&mut cache, &cfg, &prefills, &lens, fmt, &p);
+        let uncached = model_cost_mixed(&cfg, &prefills, &lens, fmt, &p);
+        assert_eq!(total, uncached.total);
+        assert_eq!(kinds.total(), total.cycles, "split must sum to the total");
+        for (kind, cycles) in kinds.iter() {
+            let want = uncached.by_kind.get(&kind).map(|c| c.cycles).unwrap_or(0);
+            assert_eq!(cycles, want, "{kind:?}");
+        }
+        // Empty pass: both forms zero.
+        let (z, zk) = model_total_mixed_by_kind(&mut cache, &cfg, &[(0, 64)], &[], fmt, &p);
+        assert_eq!(z.cycles, 0);
+        assert!(zk.is_zero());
     }
 
     #[test]

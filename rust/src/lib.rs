@@ -29,4 +29,5 @@ pub mod runtime;
 pub mod sim;
 pub mod soa;
 pub mod tiling;
+pub mod trace;
 pub mod util;

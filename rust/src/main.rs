@@ -10,13 +10,16 @@ use anyhow::Result;
 use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
 use snitch_fm::config::parse_mode;
 use snitch_fm::coordinator::{
-    Arrival, BatcherConfig, FaultPlan, InferenceEngine, SharedPrefix, Workload,
+    Arrival, BatcherConfig, ContinuousBatcher, FaultPlan, InferenceEngine, SharedPrefix,
+    Workload,
 };
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::parallel::{
-    best_plans, disagg_split_feasible, rank_fleet_splits, Objective, RoutePolicy, ShardPlan,
+    best_plans, disagg_split_feasible, rank_fleet_splits, serve_disaggregated_traced,
+    serve_replicated_traced, Objective, RoutePolicy, ShardPlan,
 };
 use snitch_fm::report;
+use snitch_fm::trace::{FleetTrace, TraceSettings, DEFAULT_METRICS_INTERVAL_US};
 use snitch_fm::runtime::Runtime;
 use snitch_fm::soa;
 use snitch_fm::util::cli::Args;
@@ -85,6 +88,13 @@ COMMANDS:
                off — the default — is bit-identical to no flag)
              --fault-seed N (seed for unpinned fault targets and
                corruption draws; default 0)
+             --trace FILE (write a Chrome trace-event JSON of the run —
+               open in Perfetto; replicas and the KV-migration path are
+               processes, passes / transfers / requests are threads — and
+               print a per-track accounting summary; recording is
+               passive, the report is bit-identical to an untraced run)
+             --metrics-interval US (gauge sampling cadence in simulated
+               microseconds for --trace; default 1000)
              --json (machine-readable report)
   shard      Enumerate and rank multi-die shard plans {tp, pp, replicas}
              --model NAME --format FMT --dies N --batch N --seq N
@@ -118,7 +128,8 @@ const FLAGS: &[&str] = &[
     "kv-page-tokens", "prefill-chunk", "arrival", "priorities", "reserve-full",
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
     "replicas", "route", "dies", "objective", "tp", "pp", "plan", "engine",
-    "disagg", "no-per-request", "faults", "fault-seed",
+    "disagg", "no-per-request", "faults", "fault-seed", "trace",
+    "metrics-interval",
 ];
 
 fn main() -> Result<()> {
@@ -324,6 +335,21 @@ fn cmd_compare(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Write the recorded fleet trace as Chrome trace-event JSON and surface
+/// the per-track accounting summary (stderr under `--json`, where stdout
+/// must carry nothing but the report).
+fn emit_trace(path: &str, fleet: &FleetTrace, json_mode: bool) -> Result<()> {
+    std::fs::write(path, fleet.to_chrome_json())
+        .map_err(|e| anyhow::anyhow!("--trace {path}: {e}"))?;
+    let summary = format!("{}trace written to {path}\n", report::trace_summary(fleet));
+    if json_mode {
+        eprint!("{summary}");
+    } else {
+        print!("{summary}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = model_by_name(args.get_or("model", "gpt-j"))?;
     let format = parse_format(args.get_or("format", "fp8"))?;
@@ -519,6 +545,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     opts.per_request = !args.get_bool("no-per-request");
     let faults = FaultPlan::parse(args.get_or("faults", "off"), args.get_u64("fault-seed", 0)?)
         .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+    let trace_settings = {
+        let us = args.get_f64("metrics-interval", DEFAULT_METRICS_INTERVAL_US)?;
+        anyhow::ensure!(us > 0.0, "--metrics-interval must be > 0");
+        TraceSettings { metrics_interval_us: us }
+    };
+    let trace_path = args.get("trace");
     let split = match disagg {
         Disagg::Off => None,
         Disagg::Split(p, d) => Some((p, d)),
@@ -547,19 +579,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     if let Some((prefill, decode)) = split {
-        let r = engine.serve_disaggregated_with_faults(
-            &cfg, &workload, opts, format, prefill, decode, route, &faults,
-        );
+        let mut traced = None;
+        let r = match trace_path {
+            Some(path) => {
+                let (r, fleet) = serve_disaggregated_traced(
+                    &cfg,
+                    &engine.platform,
+                    format,
+                    opts,
+                    &workload,
+                    prefill,
+                    decode,
+                    route,
+                    &faults,
+                    &trace_settings,
+                );
+                traced = Some((path, fleet));
+                r
+            }
+            None => engine.serve_disaggregated_with_faults(
+                &cfg, &workload, opts, format, prefill, decode, route, &faults,
+            ),
+        };
         if args.get_bool("json") {
             println!("{}", report::disagg_json(&r));
         } else {
             print!("{}", report::disagg_table(&r));
         }
+        if let Some((path, fleet)) = traced {
+            emit_trace(path, &fleet, args.get_bool("json"))?;
+        }
         return Ok(());
     }
     if replicas > 1 || !faults.is_off() {
-        let mut r =
-            engine.serve_replicated_with_faults(&cfg, &workload, opts, format, replicas, route, &faults);
+        let mut traced = None;
+        let mut r = match trace_path {
+            Some(path) => {
+                let (r, fleet) = serve_replicated_traced(
+                    &cfg,
+                    &engine.platform,
+                    format,
+                    opts,
+                    &workload,
+                    replicas,
+                    route,
+                    &faults,
+                    &trace_settings,
+                );
+                traced = Some((path, fleet));
+                r
+            }
+            None => engine.serve_replicated_with_faults(
+                &cfg, &workload, opts, format, replicas, route, &faults,
+            ),
+        };
         if let Some(msg) = disagg_fallback {
             r.merged.warnings.push(msg);
         }
@@ -568,9 +641,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             print!("{}", report::router_table(&r));
         }
+        if let Some((path, fleet)) = traced {
+            emit_trace(path, &fleet, args.get_bool("json"))?;
+        }
         return Ok(());
     }
-    let mut report = engine.serve_with(&cfg, &workload, opts, format);
+    let mut traced = None;
+    let mut report = match trace_path {
+        Some(path) => {
+            let (r, rec) = ContinuousBatcher::new(&cfg, &engine.platform, format, opts)
+                .run_traced(&workload, &trace_settings);
+            traced = Some((path, FleetTrace::single("replica 0", rec)));
+            r
+        }
+        None => engine.serve_with(&cfg, &workload, opts, format),
+    };
     if let Some(msg) = disagg_fallback {
         report.warnings.push(msg);
     }
@@ -578,6 +663,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("{}", report::serve_json(&report));
     } else {
         print!("{}", report::serve_table(&report));
+    }
+    if let Some((path, fleet)) = traced {
+        emit_trace(path, &fleet, args.get_bool("json"))?;
     }
     Ok(())
 }

@@ -49,7 +49,8 @@ pub use planner::{
     RankedPlan, SplitRanking,
 };
 pub use router::{
-    merge_reports, replica_seed, serve_disaggregated, serve_disaggregated_with_faults,
-    serve_replicated, serve_replicated_with_faults, DisaggReport, RoutePolicy, RouterReport,
+    merge_reports, replica_seed, serve_disaggregated, serve_disaggregated_traced,
+    serve_disaggregated_with_faults, serve_replicated, serve_replicated_traced,
+    serve_replicated_with_faults, DisaggReport, RoutePolicy, RouterReport,
 };
 pub use shard::{plan_cost, plan_pass_cost, sharded_block_cost, PlanCost, ShardPlan, ShardedPass};

@@ -32,6 +32,7 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::batcher::{BatcherConfig, ClassStats, ContinuousBatcher, ServeReport};
+use crate::coordinator::breakdown::KindCycles;
 use crate::coordinator::faults::{FaultPlan, ReplicaFaults, SalvagedRequest};
 use crate::coordinator::kv_paging::KvGeometry;
 use crate::coordinator::schedule::model_cost_batched;
@@ -40,6 +41,7 @@ use crate::energy;
 use crate::metrics::sketch::StreamSketch;
 use crate::model::{Mode, ModelConfig};
 use crate::parallel::collectives::{degrade_link, p2p_cost};
+use crate::trace::{FleetTrace, MigrationSpan, TraceRecorder, TraceSettings};
 
 /// How the router spreads requests over replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -236,6 +238,15 @@ pub fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConf
     merged.decode_cycles = per.iter().map(|r| r.decode_cycles).max().unwrap_or(0);
     merged.collective_cycles = per.iter().map(|r| r.collective_cycles).sum();
     merged.d2d_bytes = per.iter().map(|r| r.d2d_bytes).sum();
+    let sum_kinds = |f: fn(&ServeReport) -> &KindCycles| {
+        per.iter().fold(KindCycles::default(), |mut acc, r| {
+            acc.accum(f(r));
+            acc
+        })
+    };
+    merged.prefill_kind_cycles = sum_kinds(|r| &r.prefill_kind_cycles);
+    merged.decode_kind_cycles = sum_kinds(|r| &r.decode_kind_cycles);
+    merged.mixed_kind_cycles = sum_kinds(|r| &r.mixed_kind_cycles);
     merged.budget_tokens = per.iter().map(|r| r.budget_tokens).sum();
     merged.budget_iterations = per.iter().map(|r| r.budget_iterations).sum();
     merged.kv_imports = per.iter().map(|r| r.kv_imports).sum();
@@ -498,6 +509,62 @@ pub fn serve_replicated_with_faults(
     policy: RoutePolicy,
     faults: &FaultPlan,
 ) -> RouterReport {
+    serve_replicated_impl(cfg, platform, fmt, opts, workload, replicas, policy, faults, None).0
+}
+
+/// [`serve_replicated_with_faults`] with the cycle-level trace recorder
+/// armed on every replica engine: returns the identical [`RouterReport`]
+/// (the recorder is passive, see [`ContinuousBatcher::run_traced`])
+/// together with a [`FleetTrace`] stitching the per-replica recorders —
+/// one Chrome-trace process per replica, labelled `replica {i}`. Under a
+/// fault plan each replica contributes the recorder of its *last* round,
+/// i.e. the run whose schedule the router actually adopted.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_replicated_traced(
+    cfg: &ModelConfig,
+    platform: &PlatformConfig,
+    fmt: FpFormat,
+    opts: BatcherConfig,
+    workload: &Workload,
+    replicas: usize,
+    policy: RoutePolicy,
+    faults: &FaultPlan,
+    settings: &TraceSettings,
+) -> (RouterReport, FleetTrace) {
+    let (report, recs) = serve_replicated_impl(
+        cfg,
+        platform,
+        fmt,
+        opts,
+        workload,
+        replicas,
+        policy,
+        faults,
+        Some(settings),
+    );
+    let mut fleet = FleetTrace::new();
+    for (i, rec) in recs.into_iter().enumerate() {
+        fleet.push_replica(&format!("replica {i}"), rec);
+    }
+    (report, fleet)
+}
+
+/// Shared body of the replicated-serving entry points. `trace: None` is
+/// the exact pre-tracing code path (every engine runs `run`/`run_salvage`
+/// and the recorder vec comes back empty); `trace: Some` arms one
+/// [`TraceRecorder`] per replica and returns them in replica-index order.
+#[allow(clippy::too_many_arguments)]
+fn serve_replicated_impl(
+    cfg: &ModelConfig,
+    platform: &PlatformConfig,
+    fmt: FpFormat,
+    opts: BatcherConfig,
+    workload: &Workload,
+    replicas: usize,
+    policy: RoutePolicy,
+    faults: &FaultPlan,
+    trace: Option<&TraceSettings>,
+) -> (RouterReport, Vec<TraceRecorder>) {
     let replicas = replicas.max(1);
     // Unconditional: a release build silently modeling more dies than the
     // package has would report optimistic fleet numbers (the CLI path
@@ -513,14 +580,24 @@ pub fn serve_replicated_with_faults(
     );
     if faults.is_off() {
         if replicas == 1 {
-            let r = ContinuousBatcher::new(cfg, platform, fmt, opts).run(workload);
-            return RouterReport {
-                replicas: 1,
-                policy: policy.name(),
-                assigned: vec![workload.len()],
-                merged: r.clone(),
-                per_replica: vec![r],
+            let b = ContinuousBatcher::new(cfg, platform, fmt, opts);
+            let (r, recs) = match trace {
+                Some(ts) => {
+                    let (r, rec) = b.run_traced(workload, ts);
+                    (r, vec![rec])
+                }
+                None => (b.run(workload), Vec::new()),
             };
+            return (
+                RouterReport {
+                    replicas: 1,
+                    policy: policy.name(),
+                    assigned: vec![workload.len()],
+                    merged: r.clone(),
+                    per_replica: vec![r],
+                },
+                recs,
+            );
         }
         let model = ServiceModel::new(cfg, fmt, platform, workload, opts.max_batch);
         let shards = route_workload(workload, replicas, policy, &model);
@@ -532,11 +609,20 @@ pub fn serve_replicated_with_faults(
         // replica-index order, and `merge_reports` folds in slice order,
         // so the merged report is byte-identical to the old sequential
         // map regardless of which thread finishes first.
-        let per: Vec<ServeReport> = std::thread::scope(|s| {
+        let per_rec: Vec<(ServeReport, Option<TraceRecorder>)> = std::thread::scope(|s| {
             let handles: Vec<_> = shards
                 .iter()
                 .map(|w| {
-                    s.spawn(move || ContinuousBatcher::new(cfg, platform, fmt, opts).run(w))
+                    s.spawn(move || {
+                        let b = ContinuousBatcher::new(cfg, platform, fmt, opts);
+                        match trace {
+                            Some(ts) => {
+                                let (r, rec) = b.run_traced(w, ts);
+                                (r, Some(rec))
+                            }
+                            None => (b.run(w), None),
+                        }
+                    })
                 })
                 .collect();
             handles
@@ -544,14 +630,19 @@ pub fn serve_replicated_with_faults(
                 .map(|h| h.join().expect("replica engine panicked"))
                 .collect()
         });
+        let (per, recs): (Vec<ServeReport>, Vec<Option<TraceRecorder>>) =
+            per_rec.into_iter().unzip();
         let merged = merge_reports(&per, fmt, platform);
-        return RouterReport {
-            replicas,
-            policy: policy.name(),
-            assigned,
-            merged,
-            per_replica: per,
-        };
+        return (
+            RouterReport {
+                replicas,
+                policy: policy.name(),
+                assigned,
+                merged,
+                per_replica: per,
+            },
+            recs.into_iter().flatten().collect(),
+        );
     }
 
     // Fault path: the round loop described above. A 1-replica fleet runs
@@ -569,6 +660,9 @@ pub fn serve_replicated_with_faults(
     let assigned: Vec<usize> = shard_w.iter().map(|w| w.len()).collect();
 
     let mut reports: Vec<Option<ServeReport>> = vec![None; replicas];
+    // Each replica's recorder from its LAST round — overwritten on every
+    // re-run, so what survives is the trace of the adopted schedule.
+    let mut recs: Vec<Option<TraceRecorder>> = vec![None; replicas];
     let mut salvages: Vec<Vec<SalvagedRequest>> = vec![Vec::new(); replicas];
     let mut alive = vec![true; replicas];
     let mut needs_run = vec![true; replicas];
@@ -580,16 +674,26 @@ pub fn serve_replicated_with_faults(
 
     loop {
         let todo: Vec<usize> = (0..replicas).filter(|&r| alive[r] && needs_run[r]).collect();
-        let outs: Vec<(usize, (ServeReport, Vec<SalvagedRequest>))> = std::thread::scope(|s| {
+        type RoundOut = (ServeReport, Vec<SalvagedRequest>, Option<TraceRecorder>);
+        let outs: Vec<(usize, RoundOut)> = std::thread::scope(|s| {
             let handles: Vec<_> = todo
                 .iter()
                 .map(|&r| {
                     let w = &shard_w[r];
                     let view = views[r].clone();
                     let h = s.spawn(move || {
-                        ContinuousBatcher::new(cfg, platform, fmt, opts)
-                            .with_faults(view)
-                            .run_salvage(w)
+                        let b =
+                            ContinuousBatcher::new(cfg, platform, fmt, opts).with_faults(view);
+                        match trace {
+                            Some(ts) => {
+                                let (rep, sal, rec) = b.run_salvage_traced(w, ts);
+                                (rep, sal, Some(rec))
+                            }
+                            None => {
+                                let (rep, sal) = b.run_salvage(w);
+                                (rep, sal, None)
+                            }
+                        }
                     });
                     (r, h)
                 })
@@ -599,10 +703,11 @@ pub fn serve_replicated_with_faults(
                 .map(|(r, h)| (r, h.join().expect("replica engine panicked")))
                 .collect()
         });
-        for (r, (rep, sal)) in outs {
+        for (r, (rep, sal, rec)) in outs {
             needs_run[r] = false;
             reports[r] = Some(rep);
             salvages[r] = sal;
+            recs[r] = rec;
         }
         let dead_now: Vec<usize> = (0..replicas)
             .filter(|&r| {
@@ -702,13 +807,16 @@ pub fn serve_replicated_with_faults(
     // ultimately completed (the per-replica sums only see completions).
     merged.retries = retry_map.values().map(|&(hops, _)| hops as u64).sum();
     merged.recovery_cycles = retry_map.values().map(|&(_, cycles)| cycles).sum();
-    RouterReport {
-        replicas,
-        policy: policy.name(),
-        assigned,
-        merged,
-        per_replica: per,
-    }
+    (
+        RouterReport {
+            replicas,
+            policy: policy.name(),
+            assigned,
+            merged,
+            per_replica: per,
+        },
+        recs.into_iter().flatten().collect(),
+    )
 }
 
 /// The two-stage fleet outcome of [`serve_disaggregated`]: dedicated
@@ -859,6 +967,71 @@ pub fn serve_disaggregated_with_faults(
     policy: RoutePolicy,
     faults: &FaultPlan,
 ) -> DisaggReport {
+    serve_disaggregated_impl(
+        cfg,
+        platform,
+        fmt,
+        opts,
+        workload,
+        prefill_replicas,
+        decode_replicas,
+        policy,
+        faults,
+        None,
+    )
+    .0
+}
+
+/// [`serve_disaggregated_with_faults`] with tracing armed across the whole
+/// split fleet: returns the identical [`DisaggReport`] plus a
+/// [`FleetTrace`] whose processes are the prefill engines (`prefill {i}`),
+/// the decode engines (`decode {i}`), and a synthetic `kv-migration`
+/// process carrying one span per handoff (bytes and attempt count
+/// annotated, corruption retries included in the span's duration).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_disaggregated_traced(
+    cfg: &ModelConfig,
+    platform: &PlatformConfig,
+    fmt: FpFormat,
+    opts: BatcherConfig,
+    workload: &Workload,
+    prefill_replicas: usize,
+    decode_replicas: usize,
+    policy: RoutePolicy,
+    faults: &FaultPlan,
+    settings: &TraceSettings,
+) -> (DisaggReport, FleetTrace) {
+    let (report, fleet) = serve_disaggregated_impl(
+        cfg,
+        platform,
+        fmt,
+        opts,
+        workload,
+        prefill_replicas,
+        decode_replicas,
+        policy,
+        faults,
+        Some(settings),
+    );
+    (report, fleet.expect("tracing was armed"))
+}
+
+/// Shared body of the disaggregated entry points. `trace: None` is the
+/// exact pre-tracing code path; `trace: Some` arms recorders on both
+/// stage fleets and collects one [`MigrationSpan`] per handoff.
+#[allow(clippy::too_many_arguments)]
+fn serve_disaggregated_impl(
+    cfg: &ModelConfig,
+    platform: &PlatformConfig,
+    fmt: FpFormat,
+    opts: BatcherConfig,
+    workload: &Workload,
+    prefill_replicas: usize,
+    decode_replicas: usize,
+    policy: RoutePolicy,
+    faults: &FaultPlan,
+    trace: Option<&TraceSettings>,
+) -> (DisaggReport, Option<FleetTrace>) {
     let p_n = prefill_replicas.max(1);
     let d_n = decode_replicas.max(1);
     assert!(
@@ -880,7 +1053,17 @@ pub fn serve_disaggregated_with_faults(
     for r in &mut prefill_w.requests {
         r.gen_tokens = 0;
     }
-    let pre = serve_replicated(cfg, platform, fmt, stage_opts, &prefill_w, p_n, policy);
+    let (pre, pre_recs) = serve_replicated_impl(
+        cfg,
+        platform,
+        fmt,
+        stage_opts,
+        &prefill_w,
+        p_n,
+        policy,
+        &FaultPlan::off(),
+        trace,
+    );
 
     // Stage 2 — the handoff: price each finished prompt's pages across
     // the die-to-die link and re-arrive the request, decode-only with
@@ -902,6 +1085,7 @@ pub fn serve_disaggregated_with_faults(
     let mut migration_cycles = 0u64;
     let mut migration_retries = 0u64;
     let mut recompute_fallbacks = 0u64;
+    let mut migration_spans: Vec<MigrationSpan> = Vec::new();
     let mut decode_w = Workload::default();
     for s in &pre.merged.per_request {
         let orig = by_id[&s.id];
@@ -945,6 +1129,20 @@ pub fn serve_disaggregated_with_faults(
             migration_retries += 1;
             delay_cycles += backoff_unit << (attempt - 1);
         };
+        if trace.is_some() {
+            // Attempts actually made: a clean break leaves `attempt` at
+            // the index of the successful try; the give-up path has
+            // already counted every try in `attempt`.
+            let attempts = if imported { attempt + 1 } else { attempt };
+            let start = platform.ns_to_cycles(finish_s * 1e9);
+            migration_spans.push(MigrationSpan {
+                id: s.id,
+                start,
+                end: start + delay_cycles,
+                bytes: bytes * attempts as u64,
+                attempts,
+            });
+        }
         let handoff_s = finish_s + platform.cycles_to_seconds(delay_cycles);
         let mut dr = if imported {
             orig.clone().with_imported_kv()
@@ -959,8 +1157,8 @@ pub fn serve_disaggregated_with_faults(
     // prefill pass, so these engines run pure AR decode (recompute
     // fallbacks prefill their prompt here first). Injected replica faults
     // land on this fleet.
-    let dec = serve_replicated_with_faults(
-        cfg, platform, fmt, stage_opts, &decode_w, d_n, policy, faults,
+    let (dec, dec_recs) = serve_replicated_impl(
+        cfg, platform, fmt, stage_opts, &decode_w, d_n, policy, faults, trace,
     );
 
     // Combined end-to-end views against each request's original arrival.
@@ -1007,7 +1205,20 @@ pub fn serve_disaggregated_with_faults(
     let degraded_capacity_fraction = decode.degraded_capacity_fraction;
     let mut warnings = prefill.warnings.clone();
     warnings.extend(decode.warnings.iter().cloned());
-    DisaggReport {
+    let fleet = trace.map(|_| {
+        let mut fleet = FleetTrace::new();
+        for (i, rec) in pre_recs.into_iter().enumerate() {
+            fleet.push_replica(&format!("prefill {i}"), rec);
+        }
+        for (i, rec) in dec_recs.into_iter().enumerate() {
+            fleet.push_replica(&format!("decode {i}"), rec);
+        }
+        for m in migration_spans {
+            fleet.push_migration(m);
+        }
+        fleet
+    });
+    let report = DisaggReport {
         migration_retries,
         recompute_fallbacks,
         degraded_capacity_fraction,
@@ -1034,7 +1245,8 @@ pub fn serve_disaggregated_with_faults(
         tokens_per_s,
         prefill,
         decode,
-    }
+    };
+    (report, fleet)
 }
 
 #[cfg(test)]
@@ -1489,5 +1701,79 @@ mod tests {
         assert_eq!(r.completed, 8);
         assert!(r.rejected.is_empty());
         assert!(r.degraded_capacity_fraction > 0.0);
+    }
+
+    #[test]
+    fn traced_fleet_is_bit_identical_and_stitches_every_replica() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let w = Workload::synthetic(19, 16, (8, 48), (2, 8)).with_poisson_arrivals(5, 800.0);
+        let opts = BatcherConfig::new(4, 0);
+        let plain = serve_replicated(
+            &cfg, &p, FpFormat::Fp32, opts, &w, 4, RoutePolicy::JoinShortestQueue,
+        );
+        let (traced, fleet) = serve_replicated_traced(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            4,
+            RoutePolicy::JoinShortestQueue,
+            &FaultPlan::off(),
+            &TraceSettings::default(),
+        );
+        // Arming the recorder must not perturb the fleet outcome, down to
+        // the pricing-cache counters.
+        assert_eq!(plain.assigned, traced.assigned);
+        assert_eq!(plain.per_replica, traced.per_replica);
+        assert_eq!(plain.merged, traced.merged);
+        // One stitched recorder per replica, sealed at that replica's
+        // makespan, busy exactly covering that replica's priced work.
+        assert_eq!(fleet.replicas().len(), 4);
+        for ((label, rec), rep) in fleet.replicas().iter().zip(&traced.per_replica) {
+            assert!(label.starts_with("replica "));
+            assert_eq!(rec.total_cycles(), Some(rep.total_cycles));
+            let busy: u64 = rec.passes().iter().map(|s| s.end - s.start).sum();
+            assert_eq!(busy, rep.work.cycles);
+        }
+        assert!(fleet.to_chrome_json().starts_with("{\"traceEvents\":["));
+    }
+
+    #[test]
+    fn traced_disagg_traces_both_stages_and_every_migration() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(4);
+        let w = Workload::synthetic(7, 9, (8, 48), (2, 10)).with_poisson_arrivals(7, 700.0);
+        let opts = BatcherConfig::new(4, 0);
+        let plain = serve_disaggregated(
+            &cfg, &p, FpFormat::Fp32, opts, &w, 1, 2, RoutePolicy::JoinShortestQueue,
+        );
+        let (traced, fleet) = serve_disaggregated_traced(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            1,
+            2,
+            RoutePolicy::JoinShortestQueue,
+            &FaultPlan::off(),
+            &TraceSettings::default(),
+        );
+        assert_eq!(plain, traced, "the recorder must be invisible to the split fleet");
+        // 1 prefill + 2 decode processes, labelled by stage, plus one
+        // migration span per handoff on the synthetic migration process.
+        assert_eq!(fleet.replicas().len(), 3);
+        assert!(fleet.replicas()[0].0.starts_with("prefill "));
+        assert!(fleet.replicas()[1].0.starts_with("decode "));
+        assert!(fleet.replicas()[2].0.starts_with("decode "));
+        assert_eq!(fleet.migrations().len() as u64, traced.migrations);
+        for m in fleet.migrations() {
+            assert!(m.end >= m.start);
+            assert_eq!(m.attempts, 1, "no corruption injected: single attempt each");
+            assert!(m.bytes > 0);
+        }
+        assert!(fleet.to_chrome_json().contains("kv-migration"));
     }
 }

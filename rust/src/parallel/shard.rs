@@ -22,7 +22,8 @@
 
 use crate::arch::{FpFormat, PlatformConfig};
 use crate::coordinator::kv_paging::KvGeometry;
-use crate::coordinator::schedule::{layer_cost, model_total_mixed, LayerCostCache};
+use crate::coordinator::breakdown::KindCycles;
+use crate::coordinator::schedule::{layer_cost, model_total_mixed_by_kind, LayerCostCache};
 use crate::model::{block_layers_mixed_sharded, block_layers_sharded, Mode, ModelConfig};
 use crate::parallel::collectives::{self, Algorithm};
 use crate::sim::KernelCost;
@@ -227,6 +228,10 @@ pub struct ShardedPass {
     /// communication share of `total.cycles` (the "TP tax" the serve
     /// report surfaces).
     pub collective_cycles: u64,
+    /// Rank-local compute cycles split by kernel class. Collectives and
+    /// activation sends are excluded (they live in `collective_cycles`),
+    /// so `kind_cycles.total() + collective_cycles == total.cycles`.
+    pub kind_cycles: KindCycles,
 }
 
 /// Price ONE mixed serving iteration (`prefills` chunk continuations plus
@@ -239,8 +244,8 @@ pub struct ShardedPass {
 /// inter-iteration overlap, so the pass crosses every stage in sequence
 /// exactly as [`plan_cost`]'s `token_latency_cycles` does).
 ///
-/// The degenerate plan delegates to [`model_total_mixed`] — bit-identical
-/// to the single-die serving path, zero collective cycles.
+/// The degenerate plan delegates to [`model_total_mixed_by_kind`] —
+/// bit-identical to the single-die serving path, zero collective cycles.
 pub fn plan_pass_cost(
     costs: &mut LayerCostCache,
     cfg: &ModelConfig,
@@ -251,10 +256,9 @@ pub fn plan_pass_cost(
     platform: &PlatformConfig,
 ) -> ShardedPass {
     if plan.tp <= 1 && plan.pp <= 1 {
-        return ShardedPass {
-            total: model_total_mixed(costs, cfg, prefills, decode_kv, fmt, platform),
-            collective_cycles: 0,
-        };
+        let (total, kind_cycles) =
+            model_total_mixed_by_kind(costs, cfg, prefills, decode_kv, fmt, platform);
+        return ShardedPass { total, collective_cycles: 0, kind_cycles };
     }
     let rows: u64 =
         prefills.iter().map(|&(s, _)| s).sum::<u64>() + decode_kv.len() as u64;
@@ -264,8 +268,11 @@ pub fn plan_pass_cost(
     costs.ensure_platform(platform);
     let sb = block_layers_mixed_sharded(cfg, prefills, decode_kv, plan.tp as u64);
     let mut one = KernelCost::default();
+    let mut kinds = KindCycles::default();
     for layer in &sb.layers {
-        one = one.then(costs.layer_cost(layer, fmt, platform));
+        let c = costs.layer_cost(layer, fmt, platform);
+        one = one.then(c);
+        kinds.add(layer.kind, c.cycles);
     }
     let ranks: Vec<u32> = (0..plan.tp.max(1)).collect();
     let mut block_coll = KernelCost::default();
@@ -288,7 +295,7 @@ pub fn plan_pass_cost(
         }
         collective_cycles += (plan.pp as u64 - 1) * send.cycles;
     }
-    ShardedPass { total, collective_cycles }
+    ShardedPass { total, collective_cycles, kind_cycles: kinds.scaled(cfg.blocks) }
 }
 
 /// A plan priced on a concrete model pass.
@@ -388,7 +395,7 @@ pub fn plan_cost(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::schedule::block_cost_batched;
+    use crate::coordinator::schedule::{block_cost_batched, model_total_mixed};
 
     #[test]
     fn stage_blocks_cover_all_blocks() {
@@ -612,6 +619,45 @@ mod tests {
                 assert!(pass.total.d2d_bytes > 0, "{plan:?}");
             }
         }
+    }
+
+    #[test]
+    fn pass_kind_split_covers_compute_exactly() {
+        // kind_cycles + collective_cycles must tile total.cycles exactly,
+        // for the degenerate plan (no collectives) and genuinely sharded
+        // tp/pp plans (all-reduces + activation sends) alike.
+        let cfg = ModelConfig::gpt_j();
+        let p = PlatformConfig::with_dies(8);
+        let fmt = FpFormat::Fp8;
+        let prefills = [(64u64, 128u64)];
+        let lens = [256u64, 512, 1024];
+        for plan in [
+            ShardPlan::single(),
+            ShardPlan { tp: 2, pp: 1, replicas: 1 },
+            ShardPlan { tp: 2, pp: 2, replicas: 1 },
+            ShardPlan { tp: 1, pp: 4, replicas: 1 },
+        ] {
+            let mut costs = LayerCostCache::new(&p);
+            let pass = plan_pass_cost(&mut costs, &cfg, plan, &prefills, &lens, fmt, &p);
+            assert_eq!(
+                pass.kind_cycles.total() + pass.collective_cycles,
+                pass.total.cycles,
+                "{plan:?}"
+            );
+            assert!(!pass.kind_cycles.is_zero(), "{plan:?}");
+        }
+        // Empty pass: all-zero split.
+        let mut costs = LayerCostCache::new(&p);
+        let empty = plan_pass_cost(
+            &mut costs,
+            &cfg,
+            ShardPlan { tp: 2, pp: 1, replicas: 1 },
+            &[],
+            &[],
+            fmt,
+            &p,
+        );
+        assert!(empty.kind_cycles.is_zero());
     }
 
     #[test]

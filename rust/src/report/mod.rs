@@ -2,8 +2,9 @@
 
 use std::fmt::Write as _;
 
-use crate::coordinator::{Breakdown, RunReport, ServeReport};
+use crate::coordinator::{Breakdown, KindCycles, RunReport, ServeReport};
 use crate::parallel::{DisaggReport, RankedPlan, RouterReport};
+use crate::trace::FleetTrace;
 
 /// Version of the serve/router JSON schema. Bumped whenever keys are
 /// added or change meaning, so trend tooling can evolve its key set
@@ -21,9 +22,12 @@ use crate::parallel::{DisaggReport, RankedPlan, RouterReport};
 /// link_faults, salvaged_requests / salvaged_kv_bytes, retries,
 /// recovery_cycles, degraded_capacity_fraction, warnings; the disagg
 /// report adds migration_retries / recompute_fallbacks — all zero/empty
-/// on a fault-free run). The full key changelog lives in
-/// `docs/serving.md`.
-pub const SERVE_SCHEMA_VERSION: u32 = 6;
+/// on a fault-free run). Version 7 = observability (per-phase
+/// kernel-class cycle objects `prefill_kind_cycles` /
+/// `decode_kind_cycles` / `mixed_kind_cycles` keyed by kernel class;
+/// the disagg report now carries `warnings` like every other renderer).
+/// The full key changelog lives in `docs/serving.md`.
+pub const SERVE_SCHEMA_VERSION: u32 = 7;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -240,6 +244,24 @@ pub fn serve_table(r: &ServeReport) -> String {
             0.0
         },
     );
+    // Per-phase kernel-class split (Fig. 10 buckets at serving time):
+    // one line per pass phase that actually ran, zero classes elided.
+    for (phase, kc) in [
+        ("prefill", &r.prefill_kind_cycles),
+        ("decode", &r.decode_kind_cycles),
+        ("mixed", &r.mixed_kind_cycles),
+    ] {
+        if kc.is_zero() {
+            continue;
+        }
+        let mut line = format!("  {phase} kernel Mcycles:");
+        for (kind, cycles) in kc.iter() {
+            if cycles > 0 {
+                let _ = write!(line, "  {} {:.3}", kind.name(), cycles as f64 / 1e6);
+            }
+        }
+        let _ = writeln!(s, "{line}");
+    }
     let _ = writeln!(
         s,
         "  FPU util {:.1}%  power {:.2} W  HBM traffic {:.2} GB",
@@ -248,6 +270,16 @@ pub fn serve_table(r: &ServeReport) -> String {
         r.hbm_gb,
     );
     s
+}
+
+/// Serialize a [`KindCycles`] as a JSON object keyed by kernel class, in
+/// canonical [`crate::coordinator::KIND_ORDER`] order.
+fn kind_cycles_json(kc: &KindCycles) -> String {
+    let fields: Vec<String> = kc
+        .iter()
+        .map(|(kind, cycles)| format!("\"{}\":{}", kind.name(), cycles))
+        .collect();
+    format!("{{{}}}", fields.join(","))
 }
 
 /// JSON export of a serving report (bench-trend artifacts; scalar summary
@@ -287,6 +319,8 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"replica_failures\":{},\"stall_cycles\":{},\"link_faults\":{},\
          \"salvaged_requests\":{},\"salvaged_kv_bytes\":{},\"retries\":{},\
          \"recovery_cycles\":{},\"degraded_capacity_fraction\":{},\
+         \"prefill_kind_cycles\":{},\"decode_kind_cycles\":{},\
+         \"mixed_kind_cycles\":{},\
          \"warnings\":[{}],\"per_class\":[{}]}}",
         r.model,
         r.format,
@@ -345,6 +379,9 @@ pub fn serve_json(r: &ServeReport) -> String {
         r.retries,
         r.recovery_cycles,
         r.degraded_capacity_fraction,
+        kind_cycles_json(&r.prefill_kind_cycles),
+        kind_cycles_json(&r.decode_kind_cycles),
+        kind_cycles_json(&r.mixed_kind_cycles),
         r.warnings
             .iter()
             .map(|w| format!("\"{}\"", w.replace('\\', "\\\\").replace('"', "\\\"")))
@@ -481,7 +518,7 @@ pub fn disagg_json(r: &DisaggReport) -> String {
          \"latency_mean_s\":{},\"latency_p50_s\":{},\"latency_p99_s\":{},\
          \"total_seconds\":{},\"tokens_per_s\":{},\
          \"migration_retries\":{},\"recompute_fallbacks\":{},\
-         \"degraded_capacity_fraction\":{},\
+         \"degraded_capacity_fraction\":{},\"warnings\":[{}],\
          \"prefill\":{},\"decode\":{}}}",
         r.prefill_replicas,
         r.decode_replicas,
@@ -506,9 +543,67 @@ pub fn disagg_json(r: &DisaggReport) -> String {
         r.migration_retries,
         r.recompute_fallbacks,
         r.degraded_capacity_fraction,
+        r.warnings
+            .iter()
+            .map(|w| format!("\"{}\"", w.replace('\\', "\\\\").replace('"', "\\\"")))
+            .collect::<Vec<_>>()
+            .join(","),
         serve_json(&r.prefill),
         serve_json(&r.decode)
     )
+}
+
+/// Render a per-track accounting table for a recorded [`FleetTrace`]:
+/// one row per replica process (makespan, busy/stall/idle split, span
+/// and sample counts) plus a summary line for the KV-migration process.
+/// The full event stream lives in the Chrome-trace JSON this rides
+/// along with; this is the at-a-glance view for terminals and CI logs.
+pub fn trace_summary(t: &FleetTrace) -> String {
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:<14} {:>14} {:>7} {:>7} {:>7} {:>7} {:>9} {:>8}",
+        "track", "cycles", "busy%", "stall%", "idle%", "passes", "requests", "samples"
+    );
+    for (label, rec) in t.replicas() {
+        let total = rec.total_cycles().unwrap_or(0);
+        let acct = rec.track_accounting();
+        let pct = |c: u64| {
+            if total > 0 {
+                c as f64 / total as f64 * 100.0
+            } else {
+                0.0
+            }
+        };
+        let _ = writeln!(
+            s,
+            "{:<14} {:>14} {:>6.1}% {:>6.1}% {:>6.1}% {:>7} {:>9} {:>8}",
+            label,
+            total,
+            pct(acct.busy),
+            pct(acct.stall),
+            pct(acct.idle),
+            rec.passes().len(),
+            rec.requests().len(),
+            rec.gauges().len(),
+        );
+    }
+    if !t.migrations().is_empty() {
+        let bytes: u64 = t.migrations().iter().map(|m| m.bytes).sum();
+        let retried: u64 = t
+            .migrations()
+            .iter()
+            .map(|m| m.attempts.saturating_sub(1) as u64)
+            .sum();
+        let _ = writeln!(
+            s,
+            "kv-migration: {} handoff spans, {:.2} GB on the wire, {} retried attempts",
+            t.migrations().len(),
+            bytes as f64 / 1e9,
+            retried,
+        );
+    }
+    s
 }
 
 /// Render ranked shard plans (the `shard` subcommand): one row per plan,
@@ -920,6 +1015,86 @@ mod tests {
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].req("model").unwrap().as_str(), Some("vit-b"));
         assert!(arr[0].req("throughput").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn serve_surfaces_the_per_phase_kind_split() {
+        let e = InferenceEngine::new(PlatformConfig::occamy());
+        let w = crate::coordinator::Workload::uniform(4, 16, 8);
+        let r = e.serve(&ModelConfig::tiny(), &w, 2, FpFormat::Fp32);
+        // The split plus the collective tax covers the priced work
+        // exactly (v7 invariant — also asserted at the engine layer).
+        assert_eq!(
+            r.prefill_kind_cycles.total()
+                + r.decode_kind_cycles.total()
+                + r.mixed_kind_cycles.total()
+                + r.collective_cycles,
+            r.work.cycles
+        );
+        let t = serve_table(&r);
+        assert!(t.contains("prefill kernel Mcycles:"), "{t}");
+        assert!(t.contains("decode kernel Mcycles:"), "{t}");
+        let v = crate::util::json::parse(&serve_json(&r)).expect("valid JSON");
+        let pre = v.req("prefill_kind_cycles").unwrap();
+        assert!(pre.req("gemm").unwrap().as_u64().unwrap() > 0);
+        assert!(pre.req("flashattention").unwrap().as_u64().is_some());
+        let dec = v.req("decode_kind_cycles").unwrap();
+        assert!(dec.req("gemm").unwrap().as_u64().unwrap() > 0);
+        // Alternation-mode serve prices no mixed passes.
+        let mix = v.req("mixed_kind_cycles").unwrap();
+        assert_eq!(mix.req("gemm").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn disagg_json_surfaces_warnings() {
+        use crate::parallel::RoutePolicy;
+        let e = InferenceEngine::new(PlatformConfig::with_dies(2));
+        let w = crate::coordinator::Workload::uniform(4, 16, 8);
+        let opts = crate::coordinator::BatcherConfig::new(2, 0);
+        let mut r = e.serve_disaggregated(
+            &ModelConfig::tiny(),
+            &w,
+            opts,
+            FpFormat::Fp32,
+            1,
+            1,
+            RoutePolicy::JoinShortestQueue,
+        );
+        let v = crate::util::json::parse(&disagg_json(&r)).expect("valid JSON");
+        assert_eq!(v.req("warnings").unwrap().as_arr().unwrap().len(), 0);
+        r.warnings.push("synthetic \"quoted\" warning".into());
+        let v = crate::util::json::parse(&disagg_json(&r)).expect("valid JSON");
+        let warns = v.req("warnings").unwrap().as_arr().unwrap();
+        assert_eq!(warns.len(), 1);
+        assert_eq!(warns[0].as_str(), Some("synthetic \"quoted\" warning"));
+    }
+
+    #[test]
+    fn trace_summary_renders_fleet_accounting() {
+        use crate::coordinator::FaultPlan;
+        use crate::parallel::{serve_disaggregated_traced, RoutePolicy};
+        use crate::trace::TraceSettings;
+        let cfg = ModelConfig::tiny();
+        let p = PlatformConfig::with_dies(2);
+        let w = crate::coordinator::Workload::uniform(6, 16, 8);
+        let opts = crate::coordinator::BatcherConfig::new(2, 0);
+        let (_, fleet) = serve_disaggregated_traced(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            1,
+            1,
+            RoutePolicy::JoinShortestQueue,
+            &FaultPlan::off(),
+            &TraceSettings::default(),
+        );
+        let t = trace_summary(&fleet);
+        assert!(t.contains("busy%"), "{t}");
+        assert!(t.contains("prefill 0"), "{t}");
+        assert!(t.contains("decode 0"), "{t}");
+        assert!(t.contains("kv-migration: 6 handoff spans"), "{t}");
     }
 
     #[test]

@@ -1,0 +1,859 @@
+//! Serving telemetry: typed spans on the simulated-cycle clock, exported
+//! as Chrome trace-event JSON (`serve --trace out.json`) that opens
+//! directly in Perfetto or `chrome://tracing`.
+//!
+//! The recorder is strictly *passive*: the batcher's run loops call its
+//! hooks after every scheduling decision is already made, so a traced run
+//! prices and schedules bit-identically to an untraced one (asserted under
+//! `ServeReport::same_outcome` in `tests/event_equivalence.rs` and the
+//! randomized invariants suite). When tracing is off the recorder is
+//! simply absent (`Option`-gated in the run state) and the hot loops pay
+//! one branch per hook.
+//!
+//! # Track taxonomy
+//!
+//! One [`TraceRecorder`] covers one engine (= one replica). The fleet
+//! paths stitch per-replica recorders into a [`FleetTrace`], which assigns
+//! each replica a distinct Chrome *process* (pid) at export:
+//!
+//! * **tid 0 — engine.** Every priced pass as a complete span
+//!   ([`PassSpan`]: phase, batch, tokens, per-kernel-class cycle split,
+//!   collective share), plus fault stalls ([`StallSpan`]) and explicit
+//!   `idle` filler spans, so busy + stall + idle tile the makespan exactly
+//!   (asserted by [`TraceRecorder::track_accounting`]).
+//! * **tid 1 — d2d/collectives.** The communication share of each sharded
+//!   pass as a tail sub-span, so the TP tax is visible as its own track.
+//! * **tid `REQUEST_TID_BASE + id` — one thread per request.** A `queued`
+//!   span (arrival → admission), a `serve` span (admission → retirement)
+//!   and nested `prefill-chunk` spans, with preemption / salvage instants.
+//! * **counters.** Fixed-cadence gauge samples ([`GaugeSample`]) at the
+//!   `--metrics-interval` cadence: resident requests, queue depth, KV pool
+//!   fill, cumulative FPU-utilization proxy and d2d link bytes.
+//! * **pid 0 — kv-migration.** Disaggregated prefill→decode KV handoffs
+//!   ([`MigrationSpan`]), one thread per migrating request.
+//!
+//! Cycle timestamps convert to trace microseconds at the platform clock
+//! (`cycles / freq_ghz / 1000`), so span durations read directly as
+//! simulated time. See `docs/observability.md` for the full flag and
+//! track reference.
+
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+
+use crate::coordinator::breakdown::KindCycles;
+use crate::coordinator::kv_paging::KvPoolGauges;
+
+/// Default gauge cadence in simulated microseconds (`--metrics-interval`).
+pub const DEFAULT_METRICS_INTERVAL_US: f64 = 1000.0;
+
+/// First tid used for request lifecycle threads (request `id` maps to tid
+/// `REQUEST_TID_BASE + id`); tids below are engine-owned tracks.
+pub const REQUEST_TID_BASE: u64 = 16;
+
+/// Knobs a traced run is launched with (`serve --trace --metrics-interval`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSettings {
+    /// Gauge sampling cadence in simulated microseconds.
+    pub metrics_interval_us: f64,
+}
+
+impl Default for TraceSettings {
+    fn default() -> Self {
+        TraceSettings { metrics_interval_us: DEFAULT_METRICS_INTERVAL_US }
+    }
+}
+
+/// Which kind of work a priced pass performed, derived from the pass
+/// shape (chunk continuations only, decode slots only, or both fused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassPhase {
+    /// Chunk continuations only.
+    Prefill,
+    /// Decode slots only.
+    Decode,
+    /// A fused Sarathi-style prefill + decode iteration.
+    Mixed,
+}
+
+impl PassPhase {
+    /// Stable lowercase label ("prefill" / "decode" / "mixed").
+    pub fn name(&self) -> &'static str {
+        match self {
+            PassPhase::Prefill => "prefill",
+            PassPhase::Decode => "decode",
+            PassPhase::Mixed => "mixed",
+        }
+    }
+}
+
+/// One priced pass on the engine track (cycle timestamps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassSpan {
+    /// Cycle the pass started.
+    pub start: u64,
+    /// Cycle the pass retired (`start` + priced cycles).
+    pub end: u64,
+    /// What the pass did.
+    pub phase: PassPhase,
+    /// Requests stacked into the pass.
+    pub batch: u64,
+    /// Prompt tokens prefilled by the pass's chunk continuations.
+    pub prefill_tokens: u64,
+    /// Decode slots advanced (one generated token each).
+    pub decode_tokens: u64,
+    /// Compute cycles split by kernel class.
+    pub kind_cycles: KindCycles,
+    /// Cycles inside TP all-reduces / PP sends (the `end - start` tail).
+    pub collective_cycles: u64,
+}
+
+/// A fault-injected freeze on the engine track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StallSpan {
+    /// Cycle the stall fired.
+    pub start: u64,
+    /// Cycle the engine resumed.
+    pub end: u64,
+}
+
+/// An instantaneous fault marker (fail / die / link events).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultMarker {
+    /// Cycle the fault fired.
+    pub at: u64,
+    /// Spec-clause label (`"fail"`, `"die"`, `"stall"`, `"link"`).
+    pub label: &'static str,
+}
+
+/// One prefill chunk attributed to a request's lifecycle thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpan {
+    /// Request the chunk belongs to.
+    pub id: usize,
+    /// Cycle the chunk's pass started.
+    pub start: u64,
+    /// Cycle the chunk's pass retired.
+    pub end: u64,
+    /// Prompt tokens the chunk materialized.
+    pub tokens: u64,
+}
+
+/// A request's lifecycle on its own thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestLifecycle {
+    /// Request id (tid = [`REQUEST_TID_BASE`] + id).
+    pub id: usize,
+    /// Cycle the request arrived (starts the `queued` span).
+    pub arrival: u64,
+    /// Cycle the request was admitted (starts the `serve` span).
+    pub admitted: u64,
+    /// Cycle the span closed — retirement, preemption, or salvage;
+    /// `None` when the trace ended with the request still resident.
+    pub retired: Option<u64>,
+    /// Whether the span closed by *finishing* (a preempted request's
+    /// partial span closes unfinished and a fresh span opens when it is
+    /// re-admitted).
+    pub finished: bool,
+    /// Prompt length in tokens.
+    pub prompt_tokens: u64,
+    /// Tokens generated by the time the span closed (only meaningful on
+    /// the finished span).
+    pub gen_tokens: u64,
+    /// Times the request had been preempted when this span opened.
+    pub preemptions: u32,
+}
+
+/// An instantaneous request marker (preemption, rejection, salvage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestMarker {
+    /// Request the marker belongs to.
+    pub id: usize,
+    /// Cycle it happened.
+    pub at: u64,
+    /// What happened (`"preempt"`, `"reject"`, `"salvage"`).
+    pub label: &'static str,
+}
+
+/// One fixed-cadence gauge sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaugeSample {
+    /// Cycle the sample was taken.
+    pub at: u64,
+    /// Requests resident in the batch (admitted, not yet retired).
+    pub resident: u64,
+    /// Requests waiting in the ready queue.
+    pub queue_depth: u64,
+    /// KV pool occupancy.
+    pub kv: KvPoolGauges,
+    /// Cumulative FPU-utilization proxy over busy cycles so far, in
+    /// `[0, 1]`.
+    pub fpu_utilization: f64,
+    /// Cumulative die-to-die link bytes moved so far.
+    pub d2d_bytes: u64,
+}
+
+/// Busy / stall / idle split of the engine track, in cycles; the three
+/// sum exactly to the recorded makespan by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TrackAccounting {
+    /// Cycles inside priced passes.
+    pub busy: u64,
+    /// Cycles inside fault stalls.
+    pub stall: u64,
+    /// Everything else up to the makespan.
+    pub idle: u64,
+}
+
+/// Per-engine telemetry recorder. Constructed by the traced run entry
+/// points (`ContinuousBatcher::run_traced`), filled by passive hooks in
+/// the run loops, sealed with [`TraceRecorder::finish`].
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    /// Platform clock, for cycle → microsecond conversion at export.
+    freq_ghz: f64,
+    /// Gauge cadence in cycles (>= 1).
+    interval_cycles: u64,
+    /// Next cadence boundary a sample may be taken at.
+    next_sample: u64,
+    /// Priced passes, in start order (engine time is monotone).
+    passes: Vec<PassSpan>,
+    /// Fault stalls, in start order.
+    stalls: Vec<StallSpan>,
+    /// Instant fault markers.
+    faults: Vec<FaultMarker>,
+    /// Per-request prefill chunks.
+    chunks: Vec<ChunkSpan>,
+    /// Closed request lifecycles (retired, or open at finish).
+    requests: Vec<RequestLifecycle>,
+    /// Requests admitted but not yet retired.
+    open: HashMap<usize, RequestLifecycle>,
+    /// Preemptions seen so far per request id (survives re-admission).
+    preempt_counts: HashMap<usize, u32>,
+    /// Instant request markers.
+    markers: Vec<RequestMarker>,
+    /// Fixed-cadence gauge samples.
+    gauges: Vec<GaugeSample>,
+    /// Makespan, set by [`TraceRecorder::finish`].
+    total_cycles: Option<u64>,
+}
+
+impl TraceRecorder {
+    /// A recorder for one engine running at `freq_ghz`, sampling gauges
+    /// every `settings.metrics_interval_us` simulated microseconds.
+    pub fn new(settings: &TraceSettings, freq_ghz: f64) -> TraceRecorder {
+        let interval_cycles =
+            (settings.metrics_interval_us.max(0.001) * freq_ghz * 1000.0).round() as u64;
+        TraceRecorder {
+            freq_ghz,
+            interval_cycles: interval_cycles.max(1),
+            next_sample: 0,
+            passes: Vec::new(),
+            stalls: Vec::new(),
+            faults: Vec::new(),
+            chunks: Vec::new(),
+            requests: Vec::new(),
+            open: HashMap::new(),
+            preempt_counts: HashMap::new(),
+            markers: Vec::new(),
+            gauges: Vec::new(),
+            total_cycles: None,
+        }
+    }
+
+    /// The platform clock this recorder converts cycles with.
+    pub fn freq_ghz(&self) -> f64 {
+        self.freq_ghz
+    }
+
+    /// Gauge cadence in cycles.
+    pub fn interval_cycles(&self) -> u64 {
+        self.interval_cycles
+    }
+
+    /// Record one priced pass on the engine track.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pass(
+        &mut self,
+        phase: PassPhase,
+        start: u64,
+        end: u64,
+        batch: u64,
+        prefill_tokens: u64,
+        decode_tokens: u64,
+        kind_cycles: KindCycles,
+        collective_cycles: u64,
+    ) {
+        debug_assert!(end >= start, "pass span runs backwards");
+        self.passes.push(PassSpan {
+            start,
+            end,
+            phase,
+            batch,
+            prefill_tokens,
+            decode_tokens,
+            kind_cycles,
+            collective_cycles,
+        });
+    }
+
+    /// Record a fault-injected stall on the engine track.
+    pub fn stall(&mut self, start: u64, end: u64) {
+        self.stalls.push(StallSpan { start, end });
+    }
+
+    /// Record an instantaneous fault marker.
+    pub fn fault(&mut self, at: u64, label: &'static str) {
+        self.faults.push(FaultMarker { at, label });
+    }
+
+    /// Record one prefill chunk on a request's lifecycle thread.
+    pub fn prefill_chunk(&mut self, id: usize, start: u64, end: u64, tokens: u64) {
+        self.chunks.push(ChunkSpan { id, start, end, tokens });
+    }
+
+    /// A request was admitted at `now` (its `queued` span closes, its
+    /// `serve` span opens). Called again after a preemption when the
+    /// request is re-admitted — the new span carries the running
+    /// preemption count.
+    pub fn request_admitted(&mut self, id: usize, arrival: u64, now: u64, prompt: u64) {
+        let preemptions = self.preempt_counts.get(&id).copied().unwrap_or(0);
+        self.open.insert(
+            id,
+            RequestLifecycle {
+                id,
+                arrival,
+                admitted: now,
+                retired: None,
+                finished: false,
+                prompt_tokens: prompt,
+                gen_tokens: 0,
+                preemptions,
+            },
+        );
+    }
+
+    /// A request retired at `now` with `gen_tokens` generated.
+    pub fn request_retired(&mut self, id: usize, now: u64, gen_tokens: u64) {
+        if let Some(mut r) = self.open.remove(&id) {
+            r.retired = Some(now);
+            r.finished = true;
+            r.gen_tokens = gen_tokens;
+            self.requests.push(r);
+        }
+    }
+
+    /// A request was preempted at `now`: its partial `serve` span closes
+    /// unfinished and it goes back to the queue (a later
+    /// [`TraceRecorder::request_admitted`] reopens it).
+    pub fn request_preempted(&mut self, id: usize, now: u64) {
+        *self.preempt_counts.entry(id).or_insert(0) += 1;
+        if let Some(mut r) = self.open.remove(&id) {
+            r.retired = Some(now);
+            self.requests.push(r);
+        }
+        self.markers.push(RequestMarker { id, at: now, label: "preempt" });
+    }
+
+    /// A request was rejected outright at `now` (never admitted).
+    pub fn request_rejected(&mut self, id: usize, now: u64) {
+        self.markers.push(RequestMarker { id, at: now, label: "reject" });
+    }
+
+    /// A request was salvaged off a failed replica at `now` (its span
+    /// closes unfinished here; it continues on the adopting replica).
+    pub fn request_salvaged(&mut self, id: usize, now: u64) {
+        if let Some(mut r) = self.open.remove(&id) {
+            r.retired = Some(now);
+            self.requests.push(r);
+        }
+        self.markers.push(RequestMarker { id, at: now, label: "salvage" });
+    }
+
+    /// Whether a [`TraceRecorder::maybe_sample`] call at `now` would take
+    /// a sample — lets hot call sites skip computing gauge values (pool
+    /// scans, power-model queries) between cadence boundaries.
+    pub fn sample_due(&self, now: u64) -> bool {
+        now >= self.next_sample
+    }
+
+    /// Take a gauge sample if `now` crossed the cadence boundary. The
+    /// sample is stamped at `now` and the next boundary is the next
+    /// multiple of the interval after `now`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn maybe_sample(
+        &mut self,
+        now: u64,
+        resident: u64,
+        queue_depth: u64,
+        kv: KvPoolGauges,
+        fpu_utilization: f64,
+        d2d_bytes: u64,
+    ) {
+        if now < self.next_sample {
+            return;
+        }
+        self.gauges.push(GaugeSample {
+            at: now,
+            resident,
+            queue_depth,
+            kv,
+            fpu_utilization,
+            d2d_bytes,
+        });
+        self.next_sample = (now / self.interval_cycles + 1) * self.interval_cycles;
+    }
+
+    /// Seal the recorder at the run's makespan: open requests are closed
+    /// as unfinished (sorted by id, deterministically) and the idle
+    /// accounting becomes final.
+    pub fn finish(&mut self, total_cycles: u64) {
+        let mut open: Vec<RequestLifecycle> = self.open.drain().map(|(_, r)| r).collect();
+        open.sort_by_key(|r| r.id);
+        self.requests.extend(open);
+        self.total_cycles = Some(total_cycles);
+    }
+
+    /// Makespan the recorder was sealed at (`None` before
+    /// [`TraceRecorder::finish`]).
+    pub fn total_cycles(&self) -> Option<u64> {
+        self.total_cycles
+    }
+
+    /// Priced passes in start order.
+    pub fn passes(&self) -> &[PassSpan] {
+        &self.passes
+    }
+
+    /// Fault stalls in start order.
+    pub fn stalls(&self) -> &[StallSpan] {
+        &self.stalls
+    }
+
+    /// Instant fault markers.
+    pub fn faults(&self) -> &[FaultMarker] {
+        &self.faults
+    }
+
+    /// Per-request prefill chunks.
+    pub fn chunks(&self) -> &[ChunkSpan] {
+        &self.chunks
+    }
+
+    /// Request lifecycles (closed; call after [`TraceRecorder::finish`]).
+    pub fn requests(&self) -> &[RequestLifecycle] {
+        &self.requests
+    }
+
+    /// Instant request markers.
+    pub fn markers(&self) -> &[RequestMarker] {
+        &self.markers
+    }
+
+    /// Gauge samples in time order.
+    pub fn gauges(&self) -> &[GaugeSample] {
+        &self.gauges
+    }
+
+    /// Busy / stall / idle spans of the engine track merged in start
+    /// order, with explicit idle filler covering every gap up to the
+    /// makespan. Requires [`TraceRecorder::finish`].
+    pub fn track_spans(&self) -> Vec<(u64, u64, &'static str)> {
+        let total = self.total_cycles.unwrap_or_else(|| {
+            self.passes
+                .iter()
+                .map(|p| p.end)
+                .chain(self.stalls.iter().map(|s| s.end))
+                .max()
+                .unwrap_or(0)
+        });
+        let mut busy: Vec<(u64, u64, &'static str)> = self
+            .passes
+            .iter()
+            .map(|p| (p.start, p.end, p.phase.name()))
+            .chain(self.stalls.iter().map(|s| (s.start, s.end, "stall")))
+            .collect();
+        busy.sort_by_key(|&(start, end, _)| (start, end));
+        let mut out = Vec::with_capacity(busy.len() * 2 + 1);
+        let mut cursor = 0u64;
+        for (start, end, kind) in busy {
+            if start > cursor {
+                out.push((cursor, start, "idle"));
+            }
+            out.push((start, end, kind));
+            cursor = cursor.max(end);
+        }
+        if total > cursor {
+            out.push((cursor, total, "idle"));
+        }
+        out
+    }
+
+    /// Cycle totals of the engine track. Busy + stall + idle equals the
+    /// sealed makespan exactly (the tiling invariant the tests assert).
+    pub fn track_accounting(&self) -> TrackAccounting {
+        let mut acc = TrackAccounting::default();
+        for (start, end, kind) in self.track_spans() {
+            let d = end - start;
+            match kind {
+                "idle" => acc.idle += d,
+                "stall" => acc.stall += d,
+                _ => acc.busy += d,
+            }
+        }
+        acc
+    }
+}
+
+/// One disaggregated KV migration (prefill die → decode die).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationSpan {
+    /// Migrating request id (also the thread the span lands on).
+    pub id: usize,
+    /// Cycle the handoff started (prefill finish time).
+    pub start: u64,
+    /// Cycle the KV landed on the decode die (includes retries).
+    pub end: u64,
+    /// Wire bytes moved over the d2d links.
+    pub bytes: u64,
+    /// Transfer attempts (1 = clean, >1 = corruption retries).
+    pub attempts: u32,
+}
+
+/// A whole run's telemetry: per-replica recorders stitched under distinct
+/// Chrome pids, plus fleet-level KV migration spans. The single-engine
+/// path wraps its one recorder in a one-replica fleet.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTrace {
+    /// `(process label, recorder)` per replica; pid = index + 1.
+    replicas: Vec<(String, TraceRecorder)>,
+    /// Disaggregated KV handoffs (pid 0).
+    migrations: Vec<MigrationSpan>,
+}
+
+impl FleetTrace {
+    /// An empty fleet trace (stitch replicas in with
+    /// [`FleetTrace::push_replica`]).
+    pub fn new() -> FleetTrace {
+        FleetTrace::default()
+    }
+
+    /// Wrap one engine's recorder as a single-replica fleet.
+    pub fn single(label: &str, rec: TraceRecorder) -> FleetTrace {
+        let mut fleet = FleetTrace::new();
+        fleet.push_replica(label, rec);
+        fleet
+    }
+
+    /// Stitch one replica's sealed recorder in under the next pid.
+    pub fn push_replica(&mut self, label: &str, rec: TraceRecorder) {
+        self.replicas.push((label.to_string(), rec));
+    }
+
+    /// Record one disaggregated KV migration.
+    pub fn push_migration(&mut self, span: MigrationSpan) {
+        self.migrations.push(span);
+    }
+
+    /// Stitched replicas, in pid order (pid = index + 1).
+    pub fn replicas(&self) -> &[(String, TraceRecorder)] {
+        &self.replicas
+    }
+
+    /// Fleet-level migration spans.
+    pub fn migrations(&self) -> &[MigrationSpan] {
+        &self.migrations
+    }
+
+    /// Render the whole trace as Chrome trace-event JSON (a
+    /// `{"traceEvents": [...]}` document Perfetto opens directly).
+    pub fn to_chrome_json(&self) -> String {
+        let mut ev: Vec<String> = Vec::new();
+        for (i, (label, rec)) in self.replicas.iter().enumerate() {
+            let pid = i as u64 + 1;
+            let us = |cycles: u64| cycles_to_us(cycles, rec.freq_ghz);
+            ev.push(meta_event(pid, None, "process_name", label));
+            ev.push(meta_event(pid, Some(0), "thread_name", "engine"));
+            ev.push(meta_event(pid, Some(1), "thread_name", "d2d/collectives"));
+            for (start, end, kind) in rec.track_spans() {
+                if kind != "idle" {
+                    continue;
+                }
+                ev.push(x_event("idle", "idle", us(start), us(end - start), pid, 0, "{}"));
+            }
+            for p in rec.passes() {
+                let args = format!(
+                    "{{\"batch\":{},\"prefill_tokens\":{},\"decode_tokens\":{},\
+                     \"collective_cycles\":{},{}}}",
+                    p.batch,
+                    p.prefill_tokens,
+                    p.decode_tokens,
+                    p.collective_cycles,
+                    kind_cycles_json(&p.kind_cycles),
+                );
+                ev.push(x_event(
+                    p.phase.name(),
+                    "pass",
+                    us(p.start),
+                    us(p.end - p.start),
+                    pid,
+                    0,
+                    &args,
+                ));
+                if p.collective_cycles > 0 {
+                    let cc = p.collective_cycles.min(p.end - p.start);
+                    ev.push(x_event(
+                        "collective",
+                        "d2d",
+                        us(p.end - cc),
+                        us(cc),
+                        pid,
+                        1,
+                        "{}",
+                    ));
+                }
+            }
+            for s in rec.stalls() {
+                ev.push(x_event("stall", "fault", us(s.start), us(s.end - s.start), pid, 0, "{}"));
+            }
+            for f in rec.faults() {
+                ev.push(i_event(f.label, "fault", us(f.at), pid, 0));
+            }
+            for r in rec.requests() {
+                let tid = REQUEST_TID_BASE + r.id as u64;
+                ev.push(meta_event(pid, Some(tid), "thread_name", &format!("req {}", r.id)));
+                if r.admitted > r.arrival {
+                    ev.push(x_event(
+                        "queued",
+                        "request",
+                        us(r.arrival),
+                        us(r.admitted - r.arrival),
+                        pid,
+                        tid,
+                        "{}",
+                    ));
+                }
+                let end = r.retired.or(rec.total_cycles).unwrap_or(r.admitted);
+                let args = format!(
+                    "{{\"prompt_tokens\":{},\"gen_tokens\":{},\"preemptions\":{},\
+                     \"finished\":{}}}",
+                    r.prompt_tokens,
+                    r.gen_tokens,
+                    r.preemptions,
+                    r.finished,
+                );
+                ev.push(x_event(
+                    "serve",
+                    "request",
+                    us(r.admitted),
+                    us(end.saturating_sub(r.admitted)),
+                    pid,
+                    tid,
+                    &args,
+                ));
+            }
+            for c in rec.chunks() {
+                let args = format!("{{\"tokens\":{}}}", c.tokens);
+                ev.push(x_event(
+                    "prefill-chunk",
+                    "request",
+                    us(c.start),
+                    us(c.end - c.start),
+                    pid,
+                    REQUEST_TID_BASE + c.id as u64,
+                    &args,
+                ));
+            }
+            for m in rec.markers() {
+                ev.push(i_event(m.label, "request", us(m.at), pid, REQUEST_TID_BASE + m.id as u64));
+            }
+            for g in rec.gauges() {
+                let t = us(g.at);
+                ev.push(c_event("resident", t, pid, g.resident as f64));
+                ev.push(c_event("queue_depth", t, pid, g.queue_depth as f64));
+                ev.push(c_event("kv_pages_used", t, pid, g.kv.used_pages as f64));
+                ev.push(c_event("kv_bytes_in_use", t, pid, g.kv.bytes_in_use as f64));
+                ev.push(c_event("fpu_utilization", t, pid, g.fpu_utilization));
+                ev.push(c_event("d2d_bytes", t, pid, g.d2d_bytes as f64));
+            }
+        }
+        if !self.migrations.is_empty() {
+            let freq = self.replicas.first().map(|(_, r)| r.freq_ghz).unwrap_or(1.0);
+            ev.push(meta_event(0, None, "process_name", "kv-migration"));
+            for m in &self.migrations {
+                let args = format!("{{\"bytes\":{},\"attempts\":{}}}", m.bytes, m.attempts);
+                ev.push(x_event(
+                    "kv-migrate",
+                    "d2d",
+                    cycles_to_us(m.start, freq),
+                    cycles_to_us(m.end.saturating_sub(m.start), freq),
+                    0,
+                    m.id as u64,
+                    &args,
+                ));
+            }
+        }
+        let mut out = String::with_capacity(ev.iter().map(|e| e.len() + 2).sum::<usize>() + 32);
+        out.push_str("{\"traceEvents\":[\n");
+        for (i, e) in ev.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(e);
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+/// Convert cycles to trace microseconds at `freq_ghz`.
+pub fn cycles_to_us(cycles: u64, freq_ghz: f64) -> f64 {
+    cycles as f64 / freq_ghz / 1000.0
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn kind_cycles_json(kc: &KindCycles) -> String {
+    let mut out = String::new();
+    for (i, (kind, cycles)) in kc.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}_cycles\":{}", kind.name(), cycles));
+    }
+    out
+}
+
+fn x_event(name: &str, cat: &str, ts: f64, dur: f64, pid: u64, tid: u64, args: &str) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+         \"pid\":{},\"tid\":{},\"args\":{}}}",
+        esc(name),
+        esc(cat),
+        ts,
+        dur,
+        pid,
+        tid,
+        args
+    )
+}
+
+fn i_event(name: &str, cat: &str, ts: f64, pid: u64, tid: u64) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{:.3},\
+         \"pid\":{},\"tid\":{},\"args\":{{}}}}",
+        esc(name),
+        esc(cat),
+        ts,
+        pid,
+        tid
+    )
+}
+
+fn c_event(name: &str, ts: f64, pid: u64, value: f64) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{:.3},\"pid\":{},\"tid\":0,\
+         \"args\":{{\"value\":{:.4}}}}}",
+        esc(name),
+        ts,
+        pid,
+        value
+    )
+}
+
+fn meta_event(pid: u64, tid: Option<u64>, name: &str, value: &str) -> String {
+    format!(
+        "{{\"name\":\"{}\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        esc(name),
+        pid,
+        tid.unwrap_or(0),
+        esc(value)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> TraceRecorder {
+        TraceRecorder::new(&TraceSettings { metrics_interval_us: 1.0 }, 1.0)
+    }
+
+    #[test]
+    fn track_tiling_covers_makespan_exactly() {
+        let mut r = rec();
+        r.pass(PassPhase::Prefill, 100, 300, 1, 64, 0, KindCycles::default(), 0);
+        r.stall(400, 450);
+        r.pass(PassPhase::Decode, 450, 700, 4, 0, 4, KindCycles::default(), 0);
+        r.finish(1000);
+        let acc = r.track_accounting();
+        assert_eq!(acc.busy, 450);
+        assert_eq!(acc.stall, 50);
+        assert_eq!(acc.idle, 500);
+        assert_eq!(acc.busy + acc.stall + acc.idle, 1000);
+        // Spans tile: each begins where the previous ended.
+        let spans = r.track_spans();
+        assert_eq!(spans.first().unwrap().0, 0);
+        assert_eq!(spans.last().unwrap().1, 1000);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "gap or overlap at {w:?}");
+        }
+    }
+
+    #[test]
+    fn gauge_sampling_respects_cadence() {
+        let mut r = TraceRecorder::new(&TraceSettings { metrics_interval_us: 1.0 }, 1.0);
+        assert_eq!(r.interval_cycles(), 1000);
+        let kv = KvPoolGauges { total_pages: 8, used_pages: 0, bytes_in_use: 0 };
+        r.maybe_sample(0, 0, 0, kv, 0.0, 0); // boundary 0: sampled
+        r.maybe_sample(400, 1, 1, kv, 0.0, 0); // before next boundary: skipped
+        r.maybe_sample(1500, 2, 2, kv, 0.5, 64); // crossed 1000: sampled
+        r.maybe_sample(1700, 3, 3, kv, 0.5, 64); // before 2000: skipped
+        assert_eq!(r.gauges().len(), 2);
+        assert_eq!(r.gauges()[1].at, 1500);
+        assert_eq!(r.gauges()[1].resident, 2);
+    }
+
+    #[test]
+    fn request_lifecycle_round_trips() {
+        let mut r = rec();
+        r.request_admitted(7, 10, 50, 128);
+        r.request_retired(7, 900, 16);
+        r.request_admitted(8, 20, 60, 64);
+        r.request_rejected(9, 70);
+        r.finish(1000);
+        assert_eq!(r.requests().len(), 2);
+        let done = r.requests().iter().find(|q| q.id == 7).unwrap();
+        assert_eq!(done.retired, Some(900));
+        assert_eq!(done.gen_tokens, 16);
+        let open = r.requests().iter().find(|q| q.id == 8).unwrap();
+        assert_eq!(open.retired, None, "unfinished requests close as open");
+        assert_eq!(r.markers().len(), 1);
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed_and_ordered() {
+        let mut r = rec();
+        r.pass(PassPhase::Mixed, 0, 500, 3, 32, 2, KindCycles::default(), 100);
+        r.request_admitted(0, 0, 0, 32);
+        r.request_retired(0, 500, 2);
+        let kv = KvPoolGauges { total_pages: 8, used_pages: 2, bytes_in_use: 1024 };
+        r.maybe_sample(0, 1, 0, kv, 0.25, 0);
+        r.finish(600);
+        let mut fleet = FleetTrace::single("replica 0", r);
+        fleet.push_migration(MigrationSpan { id: 0, start: 500, end: 550, bytes: 1024, attempts: 1 });
+        let json = fleet.to_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"process_name\""));
+        assert!(json.contains("\"mixed\""));
+        assert!(json.contains("\"collective\""));
+        assert!(json.contains("\"kv-migrate\""));
+        assert!(json.contains("\"gemm_cycles\":0"));
+        assert!(json.contains("\"fpu_utilization\""));
+        // Exactly one top-level object, balanced braces.
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+}

@@ -18,6 +18,7 @@ use snitch_fm::coordinator::{
 };
 use snitch_fm::model::ModelConfig;
 use snitch_fm::parallel::ShardPlan;
+use snitch_fm::trace::TraceSettings;
 
 fn run_engine(
     cfg: &ModelConfig,
@@ -159,6 +160,137 @@ fn serve_stream_matches_materialized_run() {
     assert_eq!(streamed, materialized);
     assert_eq!(streamed.requests, 40);
     assert_eq!(streamed.engine, "event");
+}
+
+#[test]
+fn traced_run_is_bit_identical_on_randomized_traces() {
+    // Arming the recorder must be invisible to BOTH engine cores — full
+    // report equality, pricing/pass-memo counters included — and the
+    // recorded spans must satisfy the tiling and conservation
+    // invariants. No shared prefixes and an unbounded pool here: with no
+    // prefix dedup and no preemption, every prompt token is priced in
+    // exactly one chunk and every generated token in exactly one pass,
+    // so the trace must conserve the report's token counters exactly.
+    let p = PlatformConfig::occamy();
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng(0x7_14CE);
+    for trial in 0..8 {
+        let n = rng.next(6, 20) as usize;
+        let mut w = Workload::synthetic(rng.next(1, 1 << 30), n, (4, 64), (1, 16));
+        if rng.next(0, 1) == 1 {
+            w = w.with_priority_classes(rng.next(2, 3) as u8);
+        }
+        if rng.next(0, 1) == 1 {
+            w = w.with_poisson_arrivals(rng.next(1, 999), rng.next(100, 5000) as f64);
+        }
+        let mut opts = BatcherConfig::new(rng.next(2, 6) as usize, 0);
+        if rng.next(0, 1) == 1 {
+            opts.prefill_chunk = rng.next(8, 32);
+        }
+        if rng.next(0, 1) == 1 {
+            opts.token_budget = rng.next(16, 64);
+        }
+        for engine in [EngineMode::Event, EngineMode::Iteration] {
+            opts.engine = engine;
+            let label = format!("trial {trial} {engine:?}");
+            let b = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts);
+            let plain = b.run(&w);
+            let (traced, rec) = b.run_traced(&w, &TraceSettings::default());
+            assert_eq!(plain, traced, "{label}: the recorder must be passive");
+            // Busy + stall + idle tile the makespan exactly, with no
+            // overlap anywhere on the engine track.
+            let acct = rec.track_accounting();
+            assert_eq!(
+                acct.busy + acct.stall + acct.idle,
+                traced.total_cycles,
+                "{label}"
+            );
+            assert_eq!(acct.stall, 0, "{label}: no faults injected");
+            let spans = rec.track_spans();
+            for pair in spans.windows(2) {
+                assert!(
+                    pair[0].1 <= pair[1].0,
+                    "{label}: overlapping track spans {pair:?}"
+                );
+            }
+            // Busy covers the priced work bit-exactly.
+            let busy: u64 = rec.passes().iter().map(|s| s.end - s.start).sum();
+            assert_eq!(busy, traced.work.cycles, "{label}");
+            // Token conservation: pass spans and chunk spans each account
+            // for every prefill token, decode slots for every generated
+            // token, lifecycles for every completion.
+            let span_prefill: u64 = rec.passes().iter().map(|s| s.prefill_tokens).sum();
+            let span_decode: u64 = rec.passes().iter().map(|s| s.decode_tokens).sum();
+            let chunk_tokens: u64 = rec.chunks().iter().map(|c| c.tokens).sum();
+            assert_eq!(span_prefill, traced.prefill_tokens, "{label}");
+            assert_eq!(chunk_tokens, traced.prefill_tokens, "{label}");
+            // Budget-mode fused passes emit a request's first token from
+            // the prefill-completing pass itself — no decode slot — so
+            // the slot count plus those emissions covers every token.
+            assert_eq!(
+                span_decode + traced.fused_first_tokens,
+                traced.gen_tokens,
+                "{label}"
+            );
+            assert_eq!(
+                rec.chunks().len() as u64,
+                traced.prefill_chunks,
+                "{label}"
+            );
+            let finished = rec.requests().iter().filter(|r| r.finished).count();
+            assert_eq!(finished, traced.completed, "{label}");
+            let gen: u64 = rec
+                .requests()
+                .iter()
+                .filter(|r| r.finished)
+                .map(|r| r.gen_tokens)
+                .sum();
+            assert_eq!(gen, traced.gen_tokens, "{label}");
+            // The per-phase kind split plus the collective tax covers the
+            // same priced work the spans do.
+            let span_kinds: u64 = rec
+                .passes()
+                .iter()
+                .map(|s| s.kind_cycles.total() + s.collective_cycles)
+                .sum();
+            assert_eq!(span_kinds, traced.work.cycles, "{label}");
+        }
+    }
+}
+
+#[test]
+fn traced_run_is_passive_under_preemption_pressure() {
+    // The starved-pool trace from above, now recorded: preemption and
+    // re-admission reopen lifecycle spans, and every preemption leaves
+    // exactly one instant marker. Token conservation does not hold here
+    // (recomputed prefills price twice) — passivity and tiling must.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = Workload::synthetic(31, 16, (32, 128), (8, 32));
+    let mut opts = BatcherConfig::new(6, 256 * 1024);
+    opts.page_tokens = 8;
+    for engine in [EngineMode::Event, EngineMode::Iteration] {
+        opts.engine = engine;
+        let b = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp32, opts);
+        let plain = b.run(&w);
+        let (traced, rec) = b.run_traced(&w, &TraceSettings::default());
+        assert_eq!(plain, traced, "{engine:?}: the recorder must be passive");
+        assert!(traced.preemptions > 0, "{engine:?}: the pool must starve");
+        let preempt_markers = rec
+            .markers()
+            .iter()
+            .filter(|m| m.label == "preempt")
+            .count() as u64;
+        assert_eq!(preempt_markers, traced.preemptions, "{engine:?}");
+        let acct = rec.track_accounting();
+        assert_eq!(
+            acct.busy + acct.stall + acct.idle,
+            traced.total_cycles,
+            "{engine:?}"
+        );
+        let finished = rec.requests().iter().filter(|r| r.finished).count();
+        assert_eq!(finished, traced.completed, "{engine:?}");
+    }
 }
 
 #[test]

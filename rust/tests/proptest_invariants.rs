@@ -17,9 +17,11 @@ use snitch_fm::kernels::{flash_attention_cost, gemm_cost, layernorm_cost};
 use snitch_fm::kernels::gemm::OperandHome;
 use snitch_fm::model::{Layer, LayerKind, Mode, ModelConfig};
 use snitch_fm::parallel::{
-    serve_disaggregated_with_faults, serve_replicated_with_faults, RoutePolicy,
+    serve_disaggregated_with_faults, serve_replicated_traced, serve_replicated_with_faults,
+    RoutePolicy,
 };
 use snitch_fm::sim::noc;
+use snitch_fm::trace::TraceSettings;
 use snitch_fm::tiling::{plan_flash_attention, plan_gemm, plan_gemm_wide};
 
 const CASES: usize = 300;
@@ -549,6 +551,69 @@ fn json_parser_roundtrips_random_nesting() {
         let v = json::parse(&doc).expect("parse");
         let v2 = json::parse(&v.to_string()).expect("reparse");
         assert_eq!(v, v2);
+    }
+}
+
+#[test]
+fn tracing_is_passive_and_partitions_every_makespan() {
+    // Arming the trace recorder must never perturb the schedule: the
+    // traced fleet report is bit-identical to the untraced one across
+    // random fleet sizes, arrival processes, prefix sharing, chunking
+    // and token budgets — and every replica's recorder tiles its own
+    // makespan exactly (busy + stall + idle, no gaps, no overlap).
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng(0x7ACE);
+    for case in 0..15 {
+        let replicas = rng.next(1, 3) as usize;
+        let p = PlatformConfig::with_dies(replicas as u32);
+        let n = rng.next(4, 14) as usize;
+        let mut w = Workload::synthetic(rng.next(1, 1 << 20), n, (8, 64), (2, 10))
+            .with_poisson_arrivals(rng.next(1, 1 << 20), 900.0);
+        if rng.next(0, 1) == 1 {
+            w = w.with_shared_prefix(rng.next(0, 32), rng.next(1, 3) as usize);
+        }
+        let mut opts = BatcherConfig::new(rng.next(2, 5) as usize, 0);
+        opts.prefill_chunk = rng.next(0, 24);
+        if rng.next(0, 1) == 1 {
+            opts.token_budget = rng.next(16, 64);
+        }
+        let plain = serve_replicated_with_faults(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            replicas,
+            RoutePolicy::JoinShortestQueue,
+            &FaultPlan::off(),
+        );
+        let settings = TraceSettings { metrics_interval_us: rng.next(10, 2_000) as f64 };
+        let (traced, fleet) = serve_replicated_traced(
+            &cfg,
+            &p,
+            FpFormat::Fp32,
+            opts,
+            &w,
+            replicas,
+            RoutePolicy::JoinShortestQueue,
+            &FaultPlan::off(),
+            &settings,
+        );
+        assert_eq!(plain.merged, traced.merged, "case {case}: tracing changed the merge");
+        assert_eq!(plain.per_replica, traced.per_replica, "case {case}");
+        assert_eq!(fleet.replicas().len(), replicas, "case {case}");
+        for ((label, rec), rep) in fleet.replicas().iter().zip(&traced.per_replica) {
+            let total = rec.total_cycles().expect("finished recorder");
+            assert_eq!(total, rep.total_cycles, "case {case} {label}");
+            let acct = rec.track_accounting();
+            assert_eq!(
+                acct.busy + acct.stall + acct.idle,
+                total,
+                "case {case} {label}: spans must tile the makespan"
+            );
+            assert_eq!(acct.busy, rep.work.cycles, "case {case} {label}");
+            assert_eq!(acct.stall, 0, "case {case} {label}: no faults, no stalls");
+        }
     }
 }
 

@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""Validate a `snitch-fm serve --trace` Chrome trace-event JSON file.
+
+Usage: validate_trace.py <trace.json> [<trace.json> ...]
+
+Checks (stdlib only, no Perfetto needed):
+
+  * Well-formedness — the document is an object with a `traceEvents`
+    list; every event is an object carrying the keys its phase requires
+    (`X` complete events: numeric ts/dur and an args object; `i` instant
+    events: ts and a scope; `C` counters: numeric args values; `M`
+    metadata: a string args.name). Unknown phases are errors.
+  * Monotone timestamps — every ts and dur is finite and non-negative;
+    counter series (per pid + counter name) never step backwards in
+    file order, matching the recorder's in-order gauge sampling.
+  * Track shape — complete events sharing a (pid, tid) track are either
+    disjoint or properly nested (a request's prefill-chunk spans sit
+    inside its serve span; the engine track's pass/stall/idle spans tile
+    without overlap). A small epsilon absorbs the 3-decimal microsecond
+    rounding of the exporter.
+  * pid/tid consistency — every pid referenced by an event has a
+    process_name metadata record, and no (pid, tid) pair is named twice
+    with conflicting thread names.
+
+Exit code 0 when every file passes; 1 with per-violation lines on
+stderr otherwise. A passing file gets a one-line summary on stdout.
+"""
+
+import json
+import math
+import sys
+from collections import defaultdict
+
+# 3-decimal microsecond printing means adjacent/nested span boundaries
+# can disagree by a last digit; anything under 2 ns of overlap is
+# formatting, not a recorder bug.
+EPSILON_US = 0.002
+
+KNOWN_PHASES = {"X", "i", "C", "M"}
+
+
+def fail(errors, msg):
+    errors.append(msg)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def check_event(i, ev, errors):
+    """Per-event key/type checks. Returns the phase or None if broken."""
+    if not isinstance(ev, dict):
+        fail(errors, f"event {i}: not an object")
+        return None
+    ph = ev.get("ph")
+    if ph not in KNOWN_PHASES:
+        fail(errors, f"event {i}: unknown phase {ph!r}")
+        return None
+    if not isinstance(ev.get("name"), str) or not ev["name"]:
+        fail(errors, f"event {i} ({ph}): missing/empty name")
+    for key in ("pid", "tid"):
+        if not isinstance(ev.get(key), int) or isinstance(ev.get(key), bool):
+            fail(errors, f"event {i} ({ph} {ev.get('name')!r}): non-integer {key}")
+            return None
+    if ph in ("X", "i", "C"):
+        if not is_num(ev.get("ts")) or ev["ts"] < 0:
+            fail(errors, f"event {i} ({ph} {ev.get('name')!r}): bad ts {ev.get('ts')!r}")
+            return None
+    if ph == "X":
+        if not is_num(ev.get("dur")) or ev["dur"] < 0:
+            fail(errors, f"event {i} (X {ev.get('name')!r}): bad dur {ev.get('dur')!r}")
+            return None
+        if not isinstance(ev.get("args"), dict):
+            fail(errors, f"event {i} (X {ev.get('name')!r}): args must be an object")
+    elif ph == "i":
+        if ev.get("s") not in ("t", "p", "g"):
+            fail(errors, f"event {i} (i {ev.get('name')!r}): bad scope {ev.get('s')!r}")
+    elif ph == "C":
+        args = ev.get("args")
+        if not isinstance(args, dict) or not args or not all(is_num(v) for v in args.values()):
+            fail(errors, f"event {i} (C {ev.get('name')!r}): counter args must be numeric")
+    elif ph == "M":
+        args = ev.get("args")
+        if not isinstance(args, dict) or not isinstance(args.get("name"), str):
+            fail(errors, f"event {i} (M {ev.get('name')!r}): metadata needs args.name")
+    return ph
+
+
+def check_track_nesting(track, spans, errors):
+    """Spans on one track must be disjoint or properly nested."""
+    spans.sort(key=lambda s: (s[0], -s[1]))
+    stack = []  # open (start, end, name) intervals, innermost last
+    for start, end, name in spans:
+        while stack and start >= stack[-1][1] - EPSILON_US:
+            stack.pop()
+        if stack and end > stack[-1][1] + EPSILON_US:
+            fail(
+                errors,
+                f"track pid={track[0]} tid={track[1]}: {name!r} "
+                f"[{start:.3f}, {end:.3f}] overlaps {stack[-1][2]!r} "
+                f"[{stack[-1][0]:.3f}, {stack[-1][1]:.3f}] without nesting",
+            )
+            continue
+        stack.append((start, end, name))
+
+
+def validate(path):
+    errors = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"], ""
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        return ["document must be an object with a traceEvents list"], ""
+    events = doc["traceEvents"]
+    if not events:
+        return ["traceEvents is empty"], ""
+
+    named_pids = {}  # pid -> process name
+    thread_names = {}  # (pid, tid) -> thread name
+    used_pids = set()
+    tracks = defaultdict(list)  # (pid, tid) -> [(start, end, name)] for X events
+    counter_last = {}  # (pid, counter name) -> last ts
+    counts = defaultdict(int)
+
+    for i, ev in enumerate(events):
+        ph = check_event(i, ev, errors)
+        if ph is None:
+            continue
+        counts[ph] += 1
+        pid, tid = ev["pid"], ev["tid"]
+        if ph == "M":
+            if ev["name"] == "process_name":
+                prev = named_pids.setdefault(pid, ev["args"]["name"])
+                if prev != ev["args"]["name"]:
+                    fail(errors, f"pid {pid} named twice: {prev!r} vs {ev['args']['name']!r}")
+            elif ev["name"] == "thread_name":
+                prev = thread_names.setdefault((pid, tid), ev["args"]["name"])
+                if prev != ev["args"]["name"]:
+                    fail(
+                        errors,
+                        f"pid {pid} tid {tid} named twice: "
+                        f"{prev!r} vs {ev['args']['name']!r}",
+                    )
+            continue
+        used_pids.add(pid)
+        if ph == "X":
+            tracks[(pid, tid)].append((ev["ts"], ev["ts"] + ev["dur"], ev["name"]))
+        elif ph == "C":
+            key = (pid, ev["name"])
+            last = counter_last.get(key)
+            if last is not None and ev["ts"] < last - EPSILON_US:
+                fail(
+                    errors,
+                    f"counter {ev['name']!r} pid {pid}: ts stepped back "
+                    f"{last:.3f} -> {ev['ts']:.3f}",
+                )
+            counter_last[key] = ev["ts"]
+
+    for pid in sorted(used_pids):
+        if pid not in named_pids:
+            fail(errors, f"pid {pid} has events but no process_name metadata")
+    if counts["X"] == 0:
+        fail(errors, "no complete (X) events — the trace records no spans")
+    for track, spans in sorted(tracks.items()):
+        check_track_nesting(track, spans, errors)
+
+    summary = (
+        f"{len(events)} events ({counts['X']} spans, {counts['i']} instants, "
+        f"{counts['C']} counter samples, {counts['M']} metadata) across "
+        f"{len(named_pids)} processes / {len(tracks)} span tracks"
+    )
+    return errors, summary
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    bad = 0
+    for path in sys.argv[1:]:
+        errors, summary = validate(path)
+        if errors:
+            bad += 1
+            for e in errors[:50]:
+                print(f"validate_trace: {path}: {e}", file=sys.stderr)
+            if len(errors) > 50:
+                print(
+                    f"validate_trace: {path}: ... {len(errors) - 50} more",
+                    file=sys.stderr,
+                )
+        else:
+            print(f"validate_trace: {path}: OK — {summary}")
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
