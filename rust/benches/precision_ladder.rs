@@ -1,0 +1,145 @@
+//! Precision ladder: the PR-10 headline claim — decoupling the KV-cache
+//! format from the compute format buys residency, not speed, and costs
+//! nothing when unused.
+//!
+//! One engine serves a KV-pressured open-loop trace twice at an
+//! *identical* byte budget and die count: FP16 compute / FP16 KV
+//! (uniform) vs FP16 compute / FP8 KV (`--kv-format fp8`). The narrow
+//! cache carves twice the pages from the same pool, so more requests
+//! stay resident and fewer get preempted; the kernels still price at
+//! FP16 either way, so decode throughput moves only through scheduling.
+//!
+//! Claims defended here:
+//!
+//! 1. **Residency.** FP8 KV strictly reduces preemptions and strictly
+//!    raises batch occupancy on the pressured trace.
+//! 2. **No compute regression.** Decode tokens/s stays within noise
+//!    (±10%) of the uniform run — the dequant tax is bounded by the
+//!    residency win.
+//! 3. **Degenerate bit-identity.** Spelling the policy out
+//!    (`--kv-format fp16` on an FP16 engine, empty ladder) replays the
+//!    legacy run byte-for-byte (`same_outcome`).
+//!
+//! Short mode (`BENCH_SMOKE=1`) serves 96 requests instead of 384; with
+//! `BENCH_JSON_DIR` set the results land in `BENCH_precision.json`
+//! (the FP8-KV preemption ratio and decode-throughput ratio are
+//! trend-tracked).
+
+mod common;
+
+use snitch_fm::arch::FpFormat;
+use snitch_fm::arch::PlatformConfig;
+use snitch_fm::coordinator::{
+    BatcherConfig, ContinuousBatcher, Request, ServeReport, Workload,
+};
+use snitch_fm::model::ModelConfig;
+
+const SEED: u64 = 0x9C1AD;
+
+fn main() {
+    let cfg = ModelConfig::tiny();
+    let platform = PlatformConfig::occamy();
+    let fmt = FpFormat::Fp16;
+    let n = if common::smoke() { 96 } else { 384 };
+    let workload = Workload::synthetic(SEED, n, (16, 96), (16, 64))
+        .with_poisson_arrivals(SEED ^ 0x1AD, 2_000.0);
+
+    // The pool holds ~6 worst-case FP16 caches against 16 batch slots:
+    // tight enough that the uniform run preempts, roomy enough that
+    // everything completes.
+    let budget = Request::new(0, 96, 64).kv_bytes_at(&cfg, fmt) * 6;
+    let mut uniform = BatcherConfig::new(16, budget);
+    uniform.page_tokens = 16;
+    uniform.prefill_chunk = 32;
+    let mut narrow = uniform;
+    narrow.kv_format = Some(FpFormat::Fp8);
+
+    let run = |opts: BatcherConfig| -> ServeReport {
+        ContinuousBatcher::new(&cfg, &platform, fmt, opts).run(&workload)
+    };
+    let (t_uniform, base) = common::time_median(3, || run(uniform));
+    let (t_narrow, fp8kv) = common::time_median(3, || run(narrow));
+
+    common::header(
+        "precision ladder",
+        "FP16 compute, FP16 vs FP8 KV cache at an identical byte budget",
+    );
+    println!(
+        "{n} requests, {} gen tokens, {budget} B KV pool ({} vs {} pages)",
+        workload.total_gen_tokens(),
+        base.total_pages,
+        fp8kv.total_pages
+    );
+    for (label, r) in [("fp16 kv", &base), ("fp8  kv", &fp8kv)] {
+        println!(
+            "{label}: {:>8.1} decode tok/s  occupancy {:>5.2}  preemptions {:>4}  \
+             TTFT p99 {:.4}",
+            r.decode_tokens_per_s, r.avg_batch_occupancy, r.preemptions, r.ttft_p99_s
+        );
+    }
+    common::report_timing("precision-fp16kv", t_uniform);
+    common::report_timing("precision-fp8kv", t_narrow);
+
+    // Claim 1: residency strictly improves at the same byte budget.
+    assert_eq!(base.completed, n, "uniform run must serve the whole trace");
+    assert_eq!(fp8kv.completed, n, "fp8-kv run must serve the whole trace");
+    assert_eq!(base.kv_budget_bytes, fp8kv.kv_budget_bytes);
+    assert!(
+        base.preemptions > 0,
+        "the trace must pressure the uniform pool ({} preemptions)",
+        base.preemptions
+    );
+    assert!(
+        fp8kv.preemptions < base.preemptions,
+        "fp8 KV must preempt strictly less: {} vs {}",
+        fp8kv.preemptions,
+        base.preemptions
+    );
+    assert!(
+        fp8kv.avg_batch_occupancy > base.avg_batch_occupancy,
+        "fp8 KV must keep more requests resident: {:.3} vs {:.3}",
+        fp8kv.avg_batch_occupancy,
+        base.avg_batch_occupancy
+    );
+
+    // Claim 2: decode throughput stays within noise of the uniform run.
+    let decode_ratio = fp8kv.decode_tokens_per_s / base.decode_tokens_per_s;
+    assert!(
+        decode_ratio > 0.90,
+        "fp8 KV decode throughput regressed past noise: ratio {decode_ratio:.4}"
+    );
+
+    // Claim 3: the spelled-out degenerate policy is bit-identical.
+    let mut spelled = uniform;
+    spelled.kv_format = Some(fmt);
+    let replay = run(spelled);
+    assert!(
+        replay.same_outcome(&base),
+        "--kv-format fp16 on an fp16 engine must be bit-identical"
+    );
+    println!(
+        "degenerate policy bit-identical; preemption ratio {:.3}, decode ratio {:.4}",
+        fp8kv.preemptions as f64 / base.preemptions as f64,
+        decode_ratio
+    );
+
+    common::write_bench_json(
+        "precision",
+        &format!(
+            "{{\"requests\":{n},\"kv_budget_bytes\":{budget},\
+             \"fp16_kv\":{{\"decode_tokens_per_s\":{},\"preemptions\":{},\
+             \"avg_batch_occupancy\":{}}},\
+             \"fp8_kv\":{{\"decode_tokens_per_s\":{},\"preemptions\":{},\
+             \"avg_batch_occupancy\":{}}},\
+             \"preemption_ratio\":{},\"decode_throughput_ratio\":{}}}",
+            base.decode_tokens_per_s,
+            base.preemptions,
+            base.avg_batch_occupancy,
+            fp8kv.decode_tokens_per_s,
+            fp8kv.preemptions,
+            fp8kv.avg_batch_occupancy,
+            fp8kv.preemptions as f64 / base.preemptions.max(1) as f64,
+            decode_ratio,
+        ),
+    );
+}

@@ -106,6 +106,74 @@ impl fmt::Display for FpFormat {
     }
 }
 
+/// Cycles one 64-bit SIMD vector of KV elements costs to convert between
+/// the cache and compute precisions (pack/unpack through the FPU's
+/// widening datapath, paper Sec. IV-A1). One cycle to unpack/expand, one
+/// to repack/round — conversions ride the FMA pipeline, so there is no
+/// separate quant unit to model.
+pub const KV_CONVERT_CYCLES_PER_VEC: u64 = 2;
+
+/// First-class serving precision: which format the resident weights are
+/// stored at, which format the kernels compute in, and which format the
+/// KV cache is held at. The legacy single-scalar precision is the
+/// *degenerate* policy ([`PrecisionPolicy::uniform`]), which every
+/// pricing path reproduces bit-for-bit.
+///
+/// Validity lattice ([`PrecisionPolicy::validity_error`]): the KV format
+/// must be *narrower-or-equal* to the compute format — attention reads
+/// widen kv -> compute, and widening preserves the compute format's
+/// accumulation rules ([`FpFormat::accumulation_format`]). A KV cache
+/// wider than the compute format would force narrowing reads (losing the
+/// stored precision every pass) and is rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrecisionPolicy {
+    /// Format the resident weights are stored (and streamed) at.
+    pub weights: FpFormat,
+    /// Format the kernels compute in (SIMD lanes, accumulation rules).
+    pub compute: FpFormat,
+    /// Format the KV cache is stored at (paged-pool token bytes, export
+    /// wire bytes). Narrower-or-equal to `compute`.
+    pub kv: FpFormat,
+}
+
+impl PrecisionPolicy {
+    /// The degenerate single-format policy: weights, compute, and KV all
+    /// at `fmt` — exactly the legacy serving precision.
+    pub const fn uniform(fmt: FpFormat) -> PrecisionPolicy {
+        PrecisionPolicy { weights: fmt, compute: fmt, kv: fmt }
+    }
+
+    /// Whether this is a degenerate (single-format) policy.
+    pub fn is_uniform(&self) -> bool {
+        self.weights == self.compute && self.compute == self.kv
+    }
+
+    /// Whether KV reads must widen kv -> compute (and writes narrow
+    /// back), i.e. whether dequant-on-read cycles are billed.
+    pub fn kv_conversion_active(&self) -> bool {
+        self.kv != self.compute
+    }
+
+    /// Why this policy is invalid on the kv/compute lattice, or `None`
+    /// when legal.
+    pub fn validity_error(&self) -> Option<String> {
+        if self.kv.bytes() > self.compute.bytes() {
+            return Some(format!(
+                "kv format {} is wider than compute format {} (kv must be narrower-or-equal)",
+                self.kv, self.compute
+            ));
+        }
+        if self.kv.accumulation_format().bytes() > self.compute.accumulation_format().bytes()
+        {
+            return Some(format!(
+                "kv format {} accumulates wider than compute format {} allows",
+                self.kv, self.compute
+            ));
+        }
+        None
+    }
+}
+
 impl std::str::FromStr for FpFormat {
     type Err = String;
     fn from_str(s: &str) -> Result<Self, Self::Err> {
@@ -130,6 +198,39 @@ mod tests {
             assert_eq!(FpFormat::parse(f.name()), Some(f));
         }
         assert_eq!(FpFormat::parse("nope"), None);
+    }
+
+    #[test]
+    fn policy_lattice_rejects_wide_kv() {
+        // kv must be narrower-or-equal to compute.
+        for f in FpFormat::ALL {
+            assert!(PrecisionPolicy::uniform(f).validity_error().is_none(), "{f}");
+            assert!(PrecisionPolicy::uniform(f).is_uniform());
+            assert!(!PrecisionPolicy::uniform(f).kv_conversion_active());
+        }
+        let ok = PrecisionPolicy {
+            weights: FpFormat::Fp16,
+            compute: FpFormat::Fp16,
+            kv: FpFormat::Fp8,
+        };
+        assert!(ok.validity_error().is_none());
+        assert!(ok.kv_conversion_active());
+        assert!(!ok.is_uniform());
+        let bad = PrecisionPolicy {
+            weights: FpFormat::Fp16,
+            compute: FpFormat::Fp16,
+            kv: FpFormat::Fp32,
+        };
+        assert!(bad.validity_error().is_some());
+        // Equal-width distinct formats (bf16 kv under fp16 compute) sit on
+        // the lattice: same bytes, conversion still billed.
+        let eq = PrecisionPolicy {
+            weights: FpFormat::Fp16,
+            compute: FpFormat::Fp16,
+            kv: FpFormat::Bf16,
+        };
+        assert!(eq.validity_error().is_none());
+        assert!(eq.kv_conversion_active());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 mod format;
 mod platform;
 
-pub use format::FpFormat;
+pub use format::{FpFormat, PrecisionPolicy, KV_CONVERT_CYCLES_PER_VEC};
 pub use platform::{
     ClusterConfig, DieLinkConfig, Features, InterconnectConfig, MemLevel, PlatformConfig,
 };

@@ -52,19 +52,19 @@
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 
-use crate::arch::{FpFormat, PlatformConfig};
+use crate::arch::{FpFormat, PlatformConfig, PrecisionPolicy};
 use crate::coordinator::breakdown::KindCycles;
 use crate::coordinator::faults::{FaultKind, ReplicaFaults, SalvagedRequest};
 use crate::coordinator::kv_paging::{
     KvExport, KvGeometry, PagedKvAllocator, PageTable, PrefixCache,
 };
 use crate::coordinator::schedule::LayerCostCache;
-use crate::coordinator::workload::{Request, Workload};
+use crate::coordinator::workload::{ClassLadder, Request, Workload};
 use crate::energy;
 use crate::metrics::sketch::StreamSketch;
 use crate::model::ModelConfig;
 use crate::parallel::collectives::degrade_link;
-use crate::parallel::shard::{plan_pass_cost, ShardPlan};
+use crate::parallel::shard::{plan_pass_cost_policy, ShardPlan};
 use crate::sim::KernelCost;
 use crate::trace::{PassPhase, TraceRecorder, TraceSettings};
 
@@ -153,6 +153,20 @@ pub struct BatcherConfig {
     /// memory instead of O(trace). Every aggregate, sketch, and counter
     /// is unchanged either way.
     pub per_request: bool,
+    /// KV-cache storage format; `None` keeps KV at the serving (compute)
+    /// precision, which is bit-identical to the pre-policy behavior. A
+    /// narrower format (e.g. FP8 KV under FP16 compute) shrinks every
+    /// page, budget, export, and migration proportionally and bills a
+    /// per-block dequant-on-read kernel ([`LayerKind::KvDequant`]).
+    ///
+    /// [`LayerKind::KvDequant`]: crate::model::LayerKind::KvDequant
+    pub kv_format: Option<FpFormat>,
+    /// Per-priority-class compute-precision ladder: requests are priced
+    /// at their class' rung instead of the engine-wide format. The rung
+    /// is chosen from the request's *static* arrival class (aging
+    /// promotes scheduling priority, not precision). Trivial (empty)
+    /// ladder = every class at the engine format, bit-identical.
+    pub class_precision: ClassLadder,
 }
 
 impl BatcherConfig {
@@ -173,7 +187,17 @@ impl BatcherConfig {
             plan: ShardPlan::single(),
             engine: EngineMode::Event,
             per_request: true,
+            kv_format: None,
+            class_precision: ClassLadder::default(),
         }
+    }
+
+    /// The [`PrecisionPolicy`] these options imply for an engine serving
+    /// at `fmt`: weights and compute at `fmt`, KV at [`Self::kv_format`]
+    /// (defaulting to `fmt`). The router uses this to size disagg
+    /// migration manifests with the same KV geometry the engines use.
+    pub fn policy_for(&self, fmt: FpFormat) -> PrecisionPolicy {
+        PrecisionPolicy { weights: fmt, compute: fmt, kv: self.kv_format.unwrap_or(fmt) }
     }
 }
 
@@ -242,6 +266,13 @@ pub struct ServeReport {
     pub model: String,
     /// Serving precision name (`"fp32"`, `"fp8"`, ...).
     pub format: &'static str,
+    /// KV-cache storage format name; equals [`Self::format`] unless the
+    /// run decoupled KV precision (`--kv-format`).
+    pub kv_format: &'static str,
+    /// Canonical class-precision ladder spec the run served under
+    /// (`"hi:fp16,lo:fp8"`-style; empty = trivial ladder). Reports served
+    /// under different ladders or KV formats must not be merged.
+    pub class_precision: String,
     /// Requests offered to the scheduler.
     pub requests: usize,
     /// Requests served to completion.
@@ -604,6 +635,11 @@ pub struct ContinuousBatcher<'a> {
     pub platform: &'a PlatformConfig,
     /// Serving precision.
     pub fmt: FpFormat,
+    /// Resolved precision policy: weights/compute at [`Self::fmt`], KV at
+    /// [`BatcherConfig::kv_format`] (defaulting to `fmt`). Validated
+    /// against the format lattice by [`Self::new`], along with every
+    /// class-precision rung.
+    pub policy: PrecisionPolicy,
     /// Scheduling policy (budget resolved by [`Self::new`]).
     pub opts: BatcherConfig,
     /// Injected faults this engine will observe, in cycle order (empty =
@@ -614,14 +650,32 @@ pub struct ContinuousBatcher<'a> {
 }
 
 /// Shape of one priced pass: prefill (tokens, kv-context) pairs plus the
-/// ragged decode kv lengths, in scheduler order. Two passes with equal
-/// keys price identically (the layer list is a pure function of the
-/// shape, and the platform never changes mid-run), which is what makes
-/// the pass memo bit-transparent.
-#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
+/// ragged decode kv lengths, in scheduler order, and the (compute, kv)
+/// precision pair the pass was priced at. Two passes with equal keys
+/// price identically (the layer list is a pure function of the shape and
+/// the precision pair, and the platform never changes mid-run), which is
+/// what makes the pass memo bit-transparent. The precision fields keep
+/// ladder rungs from colliding: the same ragged shape priced at FP16 and
+/// FP8 occupies two distinct memo slots.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct PassKey {
     prefills: Vec<(u64, u64)>,
     decode_kv: Vec<u64>,
+    compute: FpFormat,
+    kv: FpFormat,
+}
+
+impl Default for PassKey {
+    fn default() -> PassKey {
+        // The format fields are overwritten before every memo probe; any
+        // placeholder works (FpFormat deliberately has no Default).
+        PassKey {
+            prefills: Vec::new(),
+            decode_kv: Vec::new(),
+            compute: FpFormat::Fp32,
+            kv: FpFormat::Fp32,
+        }
+    }
 }
 
 /// Memoized outcome of a pass shape, plus how many layer-memo lookups
@@ -1010,10 +1064,21 @@ impl<'a> ContinuousBatcher<'a> {
             opts.plan.pp.max(1),
             platform.die.dies
         );
-        if opts.kv_budget_bytes == 0 {
-            opts.kv_budget_bytes = opts.plan.replica_kv_budget_bytes(cfg, fmt, platform);
+        let policy = opts.policy_for(fmt);
+        if let Some(err) = policy.validity_error() {
+            panic!("invalid precision policy: {err}");
         }
-        ContinuousBatcher { cfg, platform, fmt, opts, faults: ReplicaFaults::none() }
+        for rung in opts.class_precision.rungs() {
+            let p = PrecisionPolicy { compute: rung, ..policy };
+            if let Some(err) = p.validity_error() {
+                panic!("invalid class-precision rung {}: {err}", rung.name());
+            }
+        }
+        if opts.kv_budget_bytes == 0 {
+            opts.kv_budget_bytes =
+                opts.plan.replica_kv_budget_bytes_policy(cfg, policy, platform);
+        }
+        ContinuousBatcher { cfg, platform, fmt, policy, opts, faults: ReplicaFaults::none() }
     }
 
     /// Arm this engine with an injected-fault stream (this replica's view
@@ -1041,6 +1106,75 @@ impl<'a> ContinuousBatcher<'a> {
         decode_kv: &[u64],
     ) -> KernelCost {
         st.c.pass_events += 1;
+        self.price_group(st, prefills, decode_kv, self.policy, 0)
+    }
+
+    /// Price one iteration whose requests sit on different rungs of the
+    /// class-precision ladder: `pfmts`/`dfmts` give each prefill/decode
+    /// entry's compute format, parallel to `prefills`/`decode_kv`. The
+    /// pass splits into one homogeneous sub-pass per distinct format (in
+    /// first-appearance order), priced back-to-back — still ONE scheduler
+    /// pass event, one clock advance by the summed cycles. With a single
+    /// distinct format this is exactly one group, and with the trivial
+    /// ladder the call sites skip straight to [`Self::price_pass`].
+    fn price_pass_rungs(
+        &self,
+        st: &mut RunState,
+        prefills: &[(u64, u64)],
+        pfmts: &[FpFormat],
+        decode_kv: &[u64],
+        dfmts: &[FpFormat],
+    ) -> KernelCost {
+        debug_assert_eq!(prefills.len(), pfmts.len());
+        debug_assert_eq!(decode_kv.len(), dfmts.len());
+        st.c.pass_events += 1;
+        let mut fmts: Vec<FpFormat> = Vec::new();
+        for f in pfmts.iter().chain(dfmts.iter()) {
+            if !fmts.contains(f) {
+                fmts.push(*f);
+            }
+        }
+        if fmts.len() <= 1 {
+            let policy = PrecisionPolicy {
+                compute: fmts.first().copied().unwrap_or(self.policy.compute),
+                ..self.policy
+            };
+            return self.price_group(st, prefills, decode_kv, policy, 0);
+        }
+        let mut total = KernelCost::default();
+        for f in fmts {
+            let gp: Vec<(u64, u64)> = prefills
+                .iter()
+                .zip(pfmts.iter())
+                .filter(|&(_, pf)| *pf == f)
+                .map(|(p, _)| *p)
+                .collect();
+            let gd: Vec<u64> = decode_kv
+                .iter()
+                .zip(dfmts.iter())
+                .filter(|&(_, df)| *df == f)
+                .map(|(d, _)| *d)
+                .collect();
+            let policy = PrecisionPolicy { compute: f, ..self.policy };
+            let cost = self.price_group(st, &gp, &gd, policy, total.cycles);
+            total = total.then(cost);
+        }
+        total
+    }
+
+    /// Price one homogeneous group of a pass at `policy`, with the trace
+    /// span offset `offset` cycles past the current clock (sub-passes of
+    /// a laddered iteration trace back-to-back). This is the whole legacy
+    /// `price_pass` body except the pass-event increment, which the two
+    /// public entry points own so a laddered iteration still counts once.
+    fn price_group(
+        &self,
+        st: &mut RunState,
+        prefills: &[(u64, u64)],
+        decode_kv: &[u64],
+        policy: PrecisionPolicy,
+        offset: u64,
+    ) -> KernelCost {
         let RunState { pass_memo, costs, c, degraded, time, trace, .. } = st;
         // A live `link@` fault swaps in a degraded-bandwidth platform for
         // pricing; fault-free runs borrow the nominal reference untouched.
@@ -1051,19 +1185,21 @@ impl<'a> ContinuousBatcher<'a> {
             memo.key.prefills.extend_from_slice(prefills);
             memo.key.decode_kv.clear();
             memo.key.decode_kv.extend_from_slice(decode_kv);
+            memo.key.compute = policy.compute;
+            memo.key.kv = policy.kv;
             if let Some(pc) = memo.map.get(&memo.key) {
                 memo.hits += 1;
                 costs.add_hits(pc.lookups);
                 (pc.total, pc.collective_cycles, pc.kind_cycles)
             } else {
                 let before = costs.hits() + costs.misses();
-                let pass = plan_pass_cost(
+                let pass = plan_pass_cost_policy(
                     costs,
                     self.cfg,
                     self.opts.plan,
                     prefills,
                     decode_kv,
-                    self.fmt,
+                    policy,
                     platform,
                 );
                 let lookups = costs.hits() + costs.misses() - before;
@@ -1080,13 +1216,13 @@ impl<'a> ContinuousBatcher<'a> {
                 (pass.total, pass.collective_cycles, pass.kind_cycles)
             }
         } else {
-            let pass = plan_pass_cost(
+            let pass = plan_pass_cost_policy(
                 costs,
                 self.cfg,
                 self.opts.plan,
                 prefills,
                 decode_kv,
-                self.fmt,
+                policy,
                 platform,
             );
             (pass.total, pass.collective_cycles, pass.kind_cycles)
@@ -1112,8 +1248,8 @@ impl<'a> ContinuousBatcher<'a> {
             let prefill_tokens: u64 = prefills.iter().map(|&(s, _)| s).sum();
             rec.pass(
                 phase,
-                *time,
-                *time + total.cycles,
+                *time + offset,
+                *time + offset + total.cycles,
                 (prefills.len() + decode_kv.len()) as u64,
                 prefill_tokens,
                 decode_kv.len() as u64,
@@ -1128,6 +1264,20 @@ impl<'a> ContinuousBatcher<'a> {
     /// `reserve_full` so the legacy-reservation baseline stays pure.
     fn prefix_caching(&self) -> bool {
         self.opts.prefix_cache && !self.opts.reserve_full
+    }
+
+    /// Whether any priority class maps to a non-default precision rung.
+    /// When false every call site takes the exact legacy pricing path —
+    /// no per-request format vectors are even allocated.
+    fn ladder_active(&self) -> bool {
+        !self.opts.class_precision.is_trivial()
+    }
+
+    /// Compute rung for a request: its *static* arrival class' ladder
+    /// entry (aging promotes scheduling priority, not precision),
+    /// defaulting to the engine format.
+    fn rung_of(&self, req: &Request) -> FpFormat {
+        self.opts.class_precision.rung_for(req.class, self.fmt)
     }
 
     /// Scheduling key: most urgent first — effective (aged) class, then
@@ -1167,7 +1317,7 @@ impl<'a> ContinuousBatcher<'a> {
     }
 
     fn fresh_state(&self) -> RunState {
-        let geom = KvGeometry::new(self.cfg, self.fmt, self.opts.page_tokens);
+        let geom = KvGeometry::new(self.cfg, self.policy.kv, self.opts.page_tokens);
         RunState {
             ready: Vec::new(),
             active: Vec::new(),
@@ -1741,6 +1891,7 @@ impl<'a> ContinuousBatcher<'a> {
                     tokens: job.prefill_target,
                     pages: geom.pages_for(job.prefill_target),
                     bytes: geom.pages_for(job.prefill_target) * geom.page_bytes(),
+                    format: geom.format,
                 };
                 if !self.opts.reserve_full {
                     // Under reserve_full the reservation above already
@@ -1931,7 +2082,12 @@ impl<'a> ContinuousBatcher<'a> {
                 continue; // wait for pages; decode/retirements will free some
             }
             let chunk = [(quantum, st.active[i].prefill_done)];
-            let cost = self.price_pass(st, &chunk, &[]);
+            let cost = if self.ladder_active() {
+                let f = [self.rung_of(&st.active[i].job.req)];
+                self.price_pass_rungs(st, &chunk, &f, &[], &[])
+            } else {
+                self.price_pass(st, &chunk, &[])
+            };
             if let Some(rec) = st.trace.as_mut() {
                 rec.prefill_chunk(id, st.time, st.time + cost.cycles, quantum);
             }
@@ -1996,7 +2152,18 @@ impl<'a> ContinuousBatcher<'a> {
                 .iter()
                 .map(|id| st.active.iter().find(|a| a.job.req.id == *id).unwrap().kv_len),
         );
-        let cost = self.price_pass(st, &[], &kv_lens);
+        let cost = if self.ladder_active() {
+            let dfmts: Vec<FpFormat> = stepped
+                .iter()
+                .map(|id| {
+                    let a = st.active.iter().find(|a| a.job.req.id == *id).unwrap();
+                    self.rung_of(&a.job.req)
+                })
+                .collect();
+            self.price_pass_rungs(st, &[], &[], &kv_lens, &dfmts)
+        } else {
+            self.price_pass(st, &[], &kv_lens)
+        };
         st.time += cost.cycles;
         st.c.total = st.c.total.then(cost);
         st.c.decode_cycles += cost.cycles;
@@ -2113,7 +2280,25 @@ impl<'a> ContinuousBatcher<'a> {
             .collect();
         let prefills: Vec<(u64, u64)> =
             prefill_claims.iter().map(|&(_, q, kv)| (q, kv)).collect();
-        let cost = self.price_pass(st, &prefills, &kv_lens);
+        let cost = if self.ladder_active() {
+            let pfmts: Vec<FpFormat> = prefill_claims
+                .iter()
+                .map(|&(id, _, _)| {
+                    let a = st.active.iter().find(|a| a.job.req.id == id).unwrap();
+                    self.rung_of(&a.job.req)
+                })
+                .collect();
+            let dfmts: Vec<FpFormat> = decode_ids
+                .iter()
+                .map(|id| {
+                    let a = st.active.iter().find(|a| a.job.req.id == *id).unwrap();
+                    self.rung_of(&a.job.req)
+                })
+                .collect();
+            self.price_pass_rungs(st, &prefills, &pfmts, &kv_lens, &dfmts)
+        } else {
+            self.price_pass(st, &prefills, &kv_lens)
+        };
         if let Some(rec) = st.trace.as_mut() {
             for &(id, quantum, _) in &prefill_claims {
                 rec.prefill_chunk(id, st.time, st.time + cost.cycles, quantum);
@@ -2260,6 +2445,8 @@ impl<'a> ContinuousBatcher<'a> {
         ServeReport {
             model: self.cfg.name.clone(),
             format: self.fmt.name(),
+            kv_format: self.policy.kv.name(),
+            class_precision: self.opts.class_precision.to_spec(),
             requests: offered,
             completed,
             rejected,

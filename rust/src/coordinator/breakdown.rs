@@ -6,12 +6,13 @@ use super::schedule::ModelCost;
 
 /// Kernel classes in canonical counter order; [`kind_index`] maps a
 /// [`LayerKind`] to its slot in this table (and in [`KindCycles`]).
-pub const KIND_ORDER: [LayerKind; 5] = [
+pub const KIND_ORDER: [LayerKind; 6] = [
     LayerKind::Gemm,
     LayerKind::FlashAttention,
     LayerKind::FusedConcatLinear,
     LayerKind::Layernorm,
     LayerKind::Gelu,
+    LayerKind::KvDequant,
 ];
 
 /// Slot of `kind` in [`KIND_ORDER`] / [`KindCycles`].
@@ -22,6 +23,7 @@ pub const fn kind_index(kind: LayerKind) -> usize {
         LayerKind::FusedConcatLinear => 2,
         LayerKind::Layernorm => 3,
         LayerKind::Gelu => 4,
+        LayerKind::KvDequant => 5,
     }
 }
 
@@ -30,7 +32,7 @@ pub const fn kind_index(kind: LayerKind) -> usize {
 /// so `ServeReport` can attribute cycles to kernel classes without hashing
 /// on the pricing hot path.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct KindCycles(pub [u64; 5]);
+pub struct KindCycles(pub [u64; 6]);
 
 impl KindCycles {
     /// Add `cycles` to `kind`'s slot.

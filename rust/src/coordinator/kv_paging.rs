@@ -50,26 +50,36 @@ pub fn platform_kv_budget_bytes(
 }
 
 /// Geometry of one request's KV footprint: bytes per cached token (across
-/// all transformer blocks, K + V, at the serving precision) and the page
-/// granularity.
+/// all transformer blocks, K + V, at the pool's KV precision), the page
+/// granularity, and the element format the pool stores tokens at.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvGeometry {
     /// KV bytes one token occupies across every block (K and V).
     pub token_bytes: u64,
     /// Tokens per page (fixed allocation granularity).
     pub page_tokens: u64,
+    /// Element format the pool stores KV tokens at. Pools with different
+    /// formats cannot exchange pages byte-for-byte — migrations must
+    /// requantize (see [`PagedKvAllocator::import_converting`]).
+    pub format: FpFormat,
 }
 
 impl KvGeometry {
-    /// Geometry for `cfg` served at `fmt`, consistent with
-    /// [`KvCache::bytes_for`] scaled to the serving element size (the same
-    /// accounting `Request::kv_bytes_at` uses).
+    /// Geometry for `cfg` stored at `fmt`. Exact element-count round-up
+    /// math: one token holds `blocks * 2 * heads * p` elements (K and V
+    /// per head per block), each `fmt.bytes()` wide — no intermediate
+    /// truncating division through an f32 byte count. Consistent with
+    /// [`KvCache::bytes_for`] at FP32 and with `Request::kv_bytes_at`
+    /// at every format.
     pub fn new(cfg: &ModelConfig, fmt: FpFormat, page_tokens: u64) -> KvGeometry {
         let f32_token =
             cfg.blocks * KvCache::bytes_for(cfg.heads as usize, 1, cfg.p as usize) as u64;
+        let elems = cfg.blocks * 2 * cfg.heads * cfg.p;
+        debug_assert_eq!(f32_token, elems * std::mem::size_of::<f32>() as u64);
         KvGeometry {
-            token_bytes: f32_token / std::mem::size_of::<f32>() as u64 * fmt.bytes(),
+            token_bytes: elems * fmt.bytes(),
             page_tokens: page_tokens.max(1),
+            format: fmt,
         }
     }
 
@@ -81,6 +91,12 @@ impl KvGeometry {
     /// Pages needed to hold `tokens` cached tokens.
     pub fn pages_for(&self, tokens: u64) -> u64 {
         tokens.div_ceil(self.page_tokens)
+    }
+
+    /// KV elements one cached token holds (format-independent:
+    /// `token_bytes / format.bytes()`, exact by construction).
+    pub fn elems_per_token(&self) -> u64 {
+        self.token_bytes / self.format.bytes()
     }
 }
 
@@ -311,7 +327,12 @@ impl PagedKvAllocator {
     pub fn export(&mut self, table: &mut PageTable, tokens: u64) -> KvExport {
         let pages = self.geom.pages_for(tokens);
         self.release(table);
-        KvExport { tokens, pages, bytes: pages * self.geom.page_bytes() }
+        KvExport {
+            tokens,
+            pages,
+            bytes: pages * self.geom.page_bytes(),
+            format: self.geom.format,
+        }
     }
 
     /// Materialize an exported manifest into this pool: grow `table` to
@@ -319,9 +340,38 @@ impl PagedKvAllocator {
     /// table and pool are unchanged and the manifest stays in flight for
     /// a retry. The migrated content is always private to the importing
     /// request (prefix sharing is re-established by content hash, never
-    /// carried across pools).
+    /// carried across pools). Same-format pools only: a manifest exported
+    /// at a different KV format must go through
+    /// [`Self::import_converting`] so the requantization is billed.
     pub fn import(&mut self, table: &mut PageTable, manifest: &KvExport) -> bool {
+        debug_assert_eq!(
+            manifest.format, self.geom.format,
+            "cross-format import must use import_converting"
+        );
         self.try_grow(table, manifest.tokens)
+    }
+
+    /// [`Self::import`] across KV formats: materialize `manifest.tokens`
+    /// tokens into this pool, requantizing from `manifest.format` to the
+    /// pool's format. All-or-nothing — `None` leaves the table and pool
+    /// unchanged with the manifest still in flight; `Some(elems)` reports
+    /// how many KV elements were converted (`tokens * elems_per_token`,
+    /// 0 when the formats already match) so the caller can bill the
+    /// conversion as [`crate::model::LayerKind::KvDequant`] work. Tokens
+    /// never partially map: the destination either holds every exported
+    /// token at its own format or none.
+    pub fn import_converting(
+        &mut self,
+        table: &mut PageTable,
+        manifest: &KvExport,
+    ) -> Option<u64> {
+        if !self.try_grow(table, manifest.tokens) {
+            return None;
+        }
+        if manifest.format == self.geom.format {
+            return Some(0);
+        }
+        Some(manifest.tokens * self.geom.elems_per_token())
     }
 }
 
@@ -338,6 +388,10 @@ pub struct KvExport {
     pub pages: u64,
     /// Wire bytes moved over the die-to-die links (`pages * page_bytes`).
     pub bytes: u64,
+    /// KV element format the source pool stored the tokens at (wire
+    /// format of the transfer). The destination requantizes on import
+    /// when its own format differs.
+    pub format: FpFormat,
 }
 
 /// Point-in-time occupancy snapshot of a [`PagedKvAllocator`] pool — the
@@ -519,7 +573,7 @@ mod tests {
     use super::*;
 
     fn geom() -> KvGeometry {
-        KvGeometry { token_bytes: 1024, page_tokens: 16 }
+        KvGeometry { token_bytes: 1024, page_tokens: 16, format: FpFormat::Fp32 }
     }
 
     #[test]
@@ -530,6 +584,30 @@ mod tests {
             let g = KvGeometry::new(&cfg, fmt, 16);
             let r = Request::new(0, 48, 16);
             assert_eq!(g.token_bytes * r.kv_capacity(), r.kv_bytes_at(&cfg, fmt));
+            assert_eq!(g.format, fmt);
+            assert_eq!(g.elems_per_token(), cfg.blocks * 2 * cfg.heads * cfg.p);
+        }
+    }
+
+    #[test]
+    fn geometry_byte_math_is_exact_round_up() {
+        // Satellite fix: token_bytes comes from the element count, never a
+        // truncating division through an f32 byte total. Pin every format
+        // against the closed-form 2 * blocks * heads * p * bytes.
+        for cfg in
+            [ModelConfig::tiny(), ModelConfig::gpt_j(), ModelConfig::vit_b()]
+        {
+            for fmt in FpFormat::ALL {
+                let g = KvGeometry::new(&cfg, fmt, 16);
+                assert_eq!(
+                    g.token_bytes,
+                    2 * cfg.blocks * cfg.heads * cfg.p * fmt.bytes(),
+                    "{} {}",
+                    cfg.name,
+                    fmt
+                );
+                assert_eq!(g.token_bytes, g.elems_per_token() * fmt.bytes());
+            }
         }
     }
 
@@ -695,7 +773,15 @@ mod tests {
         assert!(src.try_grow(&mut t, 40)); // 3 pages
         assert_eq!(src.used_pages(), 3);
         let manifest = src.export(&mut t, 40);
-        assert_eq!(manifest, KvExport { tokens: 40, pages: 3, bytes: 3 * 16 * 1024 });
+        assert_eq!(
+            manifest,
+            KvExport {
+                tokens: 40,
+                pages: 3,
+                bytes: 3 * 16 * 1024,
+                format: FpFormat::Fp32
+            }
+        );
         // In flight: billed to neither pool, table empty.
         assert_eq!(src.used_pages(), 0);
         assert_eq!(dst.used_pages(), 0);
@@ -726,6 +812,35 @@ mod tests {
         assert!(t.is_empty(), "failed import must not partially map");
         cache.clear(&mut src);
         assert_eq!(src.used_pages(), 0);
+    }
+
+    #[test]
+    fn cross_format_import_requantizes_all_or_nothing() {
+        let cfg = ModelConfig::tiny();
+        let g16 = KvGeometry::new(&cfg, FpFormat::Fp16, 16);
+        let g8 = KvGeometry::new(&cfg, FpFormat::Fp8, 16);
+        let mut src = PagedKvAllocator::new(8 * g16.page_bytes(), g16);
+        let mut t = PageTable::new();
+        assert!(src.try_grow(&mut t, 40)); // 3 pages at fp16
+        let manifest = src.export(&mut t, 40);
+        assert_eq!(manifest.format, FpFormat::Fp16);
+        // Importing into an fp8 pool requantizes every element, and the
+        // element count is billed at the destination's per-token density.
+        let mut dst = PagedKvAllocator::new(8 * g8.page_bytes(), g8);
+        let converted = dst.import_converting(&mut t, &manifest);
+        assert_eq!(converted, Some(40 * g8.elems_per_token()));
+        assert_eq!(dst.used_pages(), g8.pages_for(40));
+        dst.release(&mut t);
+        // Same-format conversion is free (0 elements converted).
+        let mut dst16 = PagedKvAllocator::new(8 * g16.page_bytes(), g16);
+        assert_eq!(dst16.import_converting(&mut t, &manifest), Some(0));
+        dst16.release(&mut t);
+        // A destination too small refuses the whole manifest: no tokens
+        // map, no conversion is billed.
+        let mut tiny = PagedKvAllocator::new(g8.page_bytes(), g8); // 1 page
+        assert_eq!(tiny.import_converting(&mut t, &manifest), None);
+        assert_eq!(tiny.used_pages(), 0);
+        assert!(t.is_empty(), "failed converting import must not partially map");
     }
 
     #[test]

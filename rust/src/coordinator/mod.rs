@@ -35,8 +35,9 @@ pub use kv_paging::{
     PageTable, PrefixCache,
 };
 pub use schedule::{
-    block_cost, block_cost_batched, layer_cost, model_cost, model_cost_batched,
-    model_cost_decode, model_cost_mixed, model_total_mixed, model_total_mixed_by_kind,
+    block_cost, block_cost_batched, kv_convert_cost, kv_requant_layer, layer_cost,
+    layer_cost_with_kv, model_cost, model_cost_batched, model_cost_decode, model_cost_mixed,
+    model_total_mixed, model_total_mixed_by_kind, model_total_mixed_policy_by_kind,
     platform_fingerprint, LayerCostCache, ModelCost,
 };
-pub use workload::{Arrival, ArrivalStream, Request, SharedPrefix, Workload};
+pub use workload::{Arrival, ArrivalStream, ClassLadder, Request, SharedPrefix, Workload};

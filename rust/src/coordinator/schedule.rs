@@ -14,7 +14,7 @@
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 
-use crate::arch::{FpFormat, MemLevel, PlatformConfig};
+use crate::arch::{FpFormat, MemLevel, PlatformConfig, PrecisionPolicy, KV_CONVERT_CYCLES_PER_VEC};
 use crate::kernels;
 use crate::kernels::gemm::OperandHome;
 use crate::model::{
@@ -63,12 +63,65 @@ fn gemm_layer_cost(
     }
 }
 
+/// Cost of converting `elems` KV elements between the cache and compute
+/// precisions (dequantize-on-read kv -> compute, quantize-on-write
+/// compute -> kv). Conversions stream through every core's SIMD FPU at
+/// the *wider* side's lane width (the expand/round port is the
+/// bottleneck, paper Sec. IV-A1), [`KV_CONVERT_CYCLES_PER_VEC`] cycles
+/// per vector. No HBM charge: the attention kernels already bill the KV
+/// stream at the compute precision, which upper-bounds the narrow-cache
+/// traffic — the conversion tax here is deliberately the compute-side
+/// cost only.
+pub fn kv_convert_cost(
+    elems: u64,
+    compute: FpFormat,
+    kv: FpFormat,
+    platform: &PlatformConfig,
+) -> KernelCost {
+    if elems == 0 || compute == kv {
+        return KernelCost::default();
+    }
+    let lanes = compute.simd_lanes().min(kv.simd_lanes()).max(1);
+    let vecs_per_core = elems.div_ceil(lanes).div_ceil(platform.total_cores().max(1));
+    let cycles = (vecs_per_core * KV_CONVERT_CYCLES_PER_VEC).max(1);
+    KernelCost {
+        cycles,
+        compute_cycles: cycles,
+        flops: elems,
+        ..KernelCost::default()
+    }
+}
+
 /// Cost of one layer on the platform. This is the single dispatch path —
 /// the exact head geometry (`heads`, `p`) travels on the [`Layer`], so no
-/// caller-side special cases (and no divisor guessing) remain.
+/// caller-side special cases (and no divisor guessing) remain. Uniform
+/// precision (`kv == fmt`); the kv-aware entry is
+/// [`layer_cost_with_kv`].
 pub fn layer_cost(layer: &Layer, fmt: FpFormat, platform: &PlatformConfig) -> KernelCost {
+    layer_cost_with_kv(layer, fmt, fmt, platform)
+}
+
+/// [`layer_cost`] with the KV-cache precision split from the compute
+/// precision: [`LayerKind::KvDequant`] layers price the kv <-> compute
+/// conversion of their element count (`(m + n) * 2 * heads * p`: `m`
+/// cached tokens dequantized on read, `n` fresh tokens quantized on
+/// write), every other kind prices exactly as [`layer_cost`] at `fmt` —
+/// the compute format owns the kernels, the KV format owns the cache
+/// bytes.
+pub fn layer_cost_with_kv(
+    layer: &Layer,
+    fmt: FpFormat,
+    kv: FpFormat,
+    platform: &PlatformConfig,
+) -> KernelCost {
     let rows = layer.batch_rows();
     match layer.kind {
+        LayerKind::KvDequant => kv_convert_cost(
+            (layer.m + layer.n) * 2 * layer.heads * layer.p,
+            fmt,
+            kv,
+            platform,
+        ),
         LayerKind::Gemm => {
             let home = OperandHome {
                 a: if layer.fused_input { MemLevel::Spm } else { MemLevel::Hbm },
@@ -118,9 +171,13 @@ pub fn platform_fingerprint(platform: &PlatformConfig) -> u64 {
 }
 
 /// Interned pricing signature of a layer: exactly the [`Layer`] fields
-/// [`layer_cost`] reads (the display label is excluded) plus the serving
-/// precision. Two layers with equal signatures price identically on a
-/// fixed platform, which is what makes the memo below sound.
+/// [`layer_cost_with_kv`] reads (the display label is excluded) plus the
+/// *precision pair* — the compute format and the KV-cache format. Two
+/// layers with equal signatures price identically on a fixed platform,
+/// which is what makes the memo below sound; keying the pair (not just
+/// the compute format) keeps a [`LayerKind::KvDequant`] layer priced
+/// under one policy from aliasing the same shape under another
+/// (no-collision asserted in the test suite).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct LayerSig {
     kind: LayerKind,
@@ -134,10 +191,11 @@ struct LayerSig {
     causal: bool,
     fused_input: bool,
     fmt: FpFormat,
+    kv: FpFormat,
 }
 
 impl LayerSig {
-    fn of(layer: &Layer, fmt: FpFormat) -> LayerSig {
+    fn of(layer: &Layer, fmt: FpFormat, kv: FpFormat) -> LayerSig {
         LayerSig {
             kind: layer.kind,
             b: layer.b,
@@ -150,6 +208,7 @@ impl LayerSig {
             causal: layer.causal,
             fused_input: layer.fused_input,
             fmt,
+            kv,
         }
     }
 }
@@ -203,19 +262,32 @@ impl LayerCostCache {
         }
     }
 
-    /// Memoized [`layer_cost`].
+    /// Memoized [`layer_cost`] (uniform precision: `kv == fmt`).
     pub fn layer_cost(
         &mut self,
         layer: &Layer,
         fmt: FpFormat,
         platform: &PlatformConfig,
     ) -> KernelCost {
-        let sig = LayerSig::of(layer, fmt);
+        self.layer_cost_kv(layer, fmt, fmt, platform)
+    }
+
+    /// Memoized [`layer_cost_with_kv`]: the memo key carries the
+    /// (compute, kv) precision pair, so mixed-policy prices never alias
+    /// uniform ones.
+    pub fn layer_cost_kv(
+        &mut self,
+        layer: &Layer,
+        fmt: FpFormat,
+        kv: FpFormat,
+        platform: &PlatformConfig,
+    ) -> KernelCost {
+        let sig = LayerSig::of(layer, fmt, kv);
         if let Some(c) = self.map.get(&sig) {
             self.hits += 1;
             return *c;
         }
-        let c = layer_cost(layer, fmt, platform);
+        let c = layer_cost_with_kv(layer, fmt, kv, platform);
         self.map.insert(sig, c);
         self.misses += 1;
         c
@@ -463,6 +535,67 @@ pub fn model_total_mixed_by_kind(
     fmt: FpFormat,
     platform: &PlatformConfig,
 ) -> (KernelCost, KindCycles) {
+    model_total_mixed_policy_by_kind(
+        costs,
+        cfg,
+        prefills,
+        decode_kv,
+        PrecisionPolicy::uniform(fmt),
+        platform,
+    )
+}
+
+/// The per-block KV requantization layer a mixed pass implies under a
+/// split-precision policy, or `None` when the pass touches no KV tokens.
+/// `m` counts cached tokens dequantized on read (every decode entry's
+/// history plus every prefill chunk's cache-so-far), `n` counts fresh
+/// tokens quantized on write (one per decode entry plus each chunk's new
+/// tokens); [`layer_cost_with_kv`] turns the pair into
+/// `(m + n) * 2 * heads * p` converted elements per block.
+pub fn kv_requant_layer(
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+) -> Option<Layer> {
+    let read: u64 = decode_kv.iter().sum::<u64>()
+        + prefills.iter().filter(|&&(s, _)| s > 0).map(|&(_, kv)| kv).sum::<u64>();
+    let write: u64 = decode_kv.len() as u64
+        + prefills.iter().map(|&(s, _)| s).sum::<u64>();
+    if read + write == 0 {
+        return None;
+    }
+    Some(Layer {
+        kind: LayerKind::KvDequant,
+        label: "kv-requant",
+        b: 1,
+        m: read,
+        k: 0,
+        n: write,
+        skv: 0,
+        heads: cfg.heads,
+        p: cfg.p,
+        causal: false,
+        fused_input: false,
+    })
+}
+
+/// [`model_total_mixed_by_kind`] under a full [`PrecisionPolicy`]: block
+/// layers price at `policy.compute`, and when the policy splits the KV
+/// format from the compute format
+/// ([`PrecisionPolicy::kv_conversion_active`]) one synthetic
+/// [`kv_requant_layer`] per block bills the dequant-on-read /
+/// quant-on-write conversion under [`LayerKind::KvDequant`]. The
+/// degenerate policy ([`PrecisionPolicy::uniform`]) adds no layer and
+/// takes the exact legacy walk — bit-identical totals, memo signatures,
+/// and hit/miss accounting.
+pub fn model_total_mixed_policy_by_kind(
+    costs: &mut LayerCostCache,
+    cfg: &ModelConfig,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    policy: PrecisionPolicy,
+    platform: &PlatformConfig,
+) -> (KernelCost, KindCycles) {
     if prefills.iter().all(|&(s, _)| s == 0) && decode_kv.is_empty() {
         return (KernelCost::default(), KindCycles::default());
     }
@@ -470,9 +603,16 @@ pub fn model_total_mixed_by_kind(
     let mut one = KernelCost::default();
     let mut kinds = KindCycles::default();
     for layer in &block_layers_mixed(cfg, prefills, decode_kv) {
-        let c = costs.layer_cost(layer, fmt, platform);
+        let c = costs.layer_cost_kv(layer, policy.compute, policy.kv, platform);
         one = one.then(c);
         kinds.add(layer.kind, c.cycles);
+    }
+    if policy.kv_conversion_active() {
+        if let Some(layer) = kv_requant_layer(cfg, prefills, decode_kv) {
+            let c = costs.layer_cost_kv(&layer, policy.compute, policy.kv, platform);
+            one = one.then(c);
+            kinds.add(layer.kind, c.cycles);
+        }
     }
     (one.repeat(cfg.blocks), kinds.scaled(cfg.blocks))
 }

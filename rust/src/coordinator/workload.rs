@@ -145,12 +145,16 @@ impl Request {
             ) as u64
     }
 
-    /// KV bytes at the serving precision — full-length, the quantity the
-    /// legacy batcher reserved at admission. The paged allocator instead
-    /// maps `KvGeometry::token_bytes` (this value divided by
-    /// `kv_capacity`) one page at a time.
+    /// KV bytes at the given cache precision — full-length, the quantity
+    /// the legacy batcher reserved at admission. Exact element-count math
+    /// (`capacity * blocks * 2 * heads * p` elements, each `fmt.bytes()`
+    /// wide), in lockstep with `KvGeometry::new`; the paged allocator maps
+    /// `KvGeometry::token_bytes` (this value divided by `kv_capacity`)
+    /// one page at a time.
     pub fn kv_bytes_at(&self, cfg: &ModelConfig, fmt: FpFormat) -> u64 {
-        self.kv_bytes(cfg) / std::mem::size_of::<f32>() as u64 * fmt.bytes()
+        let elems = self.kv_capacity() * cfg.blocks * 2 * cfg.heads * cfg.p;
+        debug_assert_eq!(elems * std::mem::size_of::<f32>() as u64, self.kv_bytes(cfg));
+        elems * fmt.bytes()
     }
 }
 
@@ -477,6 +481,136 @@ impl SharedPrefix {
     }
 }
 
+/// Map from priority class to compute-precision rung (the
+/// `serve --class-precision` flag): urgent classes can buy wider compute
+/// while patient bulk traffic rides a narrow rung on the same replica.
+///
+/// Grammar (strict — every malformed spec is rejected, never silently
+/// defaulted): comma-separated `<key>:<fmt>` entries where `<key>` is
+/// `hi` (class 0), `lo` (every class >= 1 without an exact entry), or a
+/// decimal class number, and `<fmt>` is an [`FpFormat`] name. Duplicate
+/// keys (including `hi` vs `0`) are an error. Classes without a matching
+/// entry serve at the engine's base format. The rung is resolved from the
+/// class the request *arrived* with — aging promotion changes scheduling
+/// priority, not precision.
+#[derive(Clone, Copy)]
+pub struct ClassLadder {
+    /// Exact per-class rungs (index = class). `exact[0]` is the `hi` key.
+    exact: [Option<FpFormat>; 256],
+    /// Fallback rung for classes >= 1 without an exact entry (`lo`).
+    low: Option<FpFormat>,
+}
+
+impl Default for ClassLadder {
+    fn default() -> ClassLadder {
+        ClassLadder { exact: [None; 256], low: None }
+    }
+}
+
+impl PartialEq for ClassLadder {
+    fn eq(&self, other: &ClassLadder) -> bool {
+        self.low == other.low && self.exact[..] == other.exact[..]
+    }
+}
+
+impl Eq for ClassLadder {}
+
+impl std::fmt::Debug for ClassLadder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClassLadder").field("spec", &self.to_spec()).finish()
+    }
+}
+
+impl ClassLadder {
+    /// Parse the strict `--class-precision` grammar (see the type docs).
+    pub fn parse(spec: &str) -> Result<ClassLadder, String> {
+        let mut out = ClassLadder::default();
+        if spec.is_empty() {
+            return Ok(out);
+        }
+        for seg in spec.split(',') {
+            let Some((key, fmt_name)) = seg.split_once(':') else {
+                return Err(format!("class-precision entry `{seg}` is not <class>:<format>"));
+            };
+            let Some(fmt) = FpFormat::parse(fmt_name) else {
+                return Err(format!("class-precision entry `{seg}`: unknown format `{fmt_name}`"));
+            };
+            match key {
+                "hi" => {
+                    if out.exact[0].is_some() {
+                        return Err("class-precision maps class 0 (`hi`) twice".into());
+                    }
+                    out.exact[0] = Some(fmt);
+                }
+                "lo" => {
+                    if out.low.is_some() {
+                        return Err("class-precision maps `lo` twice".into());
+                    }
+                    out.low = Some(fmt);
+                }
+                _ => {
+                    let Ok(class) = key.parse::<u8>() else {
+                        return Err(format!(
+                            "class-precision entry `{seg}`: key must be `hi`, `lo`, or a class number 0-255"
+                        ));
+                    };
+                    if out.exact[class as usize].is_some() {
+                        return Err(format!("class-precision maps class {class} twice"));
+                    }
+                    out.exact[class as usize] = Some(fmt);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The compute rung class `class` serves at, falling back to the
+    /// engine's base format. Exact entries win over `lo`; `lo` never
+    /// applies to class 0.
+    pub fn rung_for(&self, class: u8, default: FpFormat) -> FpFormat {
+        self.exact[class as usize]
+            .or(if class > 0 { self.low } else { None })
+            .unwrap_or(default)
+    }
+
+    /// Whether no class is remapped (every request serves at the base
+    /// format).
+    pub fn is_trivial(&self) -> bool {
+        self.low.is_none() && self.exact.iter().all(|e| e.is_none())
+    }
+
+    /// Canonical spec string (`hi` first, numeric classes ascending, `lo`
+    /// last); empty for the trivial ladder. Round-trips through
+    /// [`ClassLadder::parse`].
+    pub fn to_spec(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(f) = self.exact[0] {
+            parts.push(format!("hi:{f}"));
+        }
+        for (class, f) in self.exact.iter().enumerate().skip(1) {
+            if let Some(f) = f {
+                parts.push(format!("{class}:{f}"));
+            }
+        }
+        if let Some(f) = self.low {
+            parts.push(format!("lo:{f}"));
+        }
+        parts.join(",")
+    }
+
+    /// Every distinct rung the ladder can resolve to (for upfront policy
+    /// validation), the base format excluded unless mapped explicitly.
+    pub fn rungs(&self) -> Vec<FpFormat> {
+        let mut out = Vec::new();
+        for f in self.exact.iter().flatten().chain(self.low.iter()) {
+            if !out.contains(f) {
+                out.push(*f);
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -673,6 +807,51 @@ mod tests {
         let one_block =
             KvCache::new(cfg.heads as usize, 32, cfg.p as usize).bytes() as u64;
         assert_eq!(r.kv_bytes(&cfg), cfg.blocks * one_block);
+    }
+
+    #[test]
+    fn class_ladder_parse_resolve_and_roundtrip() {
+        let l = ClassLadder::parse("hi:fp16,lo:fp8").unwrap();
+        assert!(!l.is_trivial());
+        assert_eq!(l.rung_for(0, FpFormat::Fp32), FpFormat::Fp16);
+        assert_eq!(l.rung_for(1, FpFormat::Fp32), FpFormat::Fp8);
+        assert_eq!(l.rung_for(255, FpFormat::Fp32), FpFormat::Fp8);
+        assert_eq!(l.to_spec(), "hi:fp16,lo:fp8");
+        assert_eq!(ClassLadder::parse(&l.to_spec()).unwrap(), l);
+        assert_eq!(l.rungs(), vec![FpFormat::Fp16, FpFormat::Fp8]);
+        // Exact numeric entries win over `lo`; unmapped classes fall back
+        // to the engine format; `lo` never covers class 0.
+        let l = ClassLadder::parse("2:bf16,lo:fp8").unwrap();
+        assert_eq!(l.rung_for(2, FpFormat::Fp16), FpFormat::Bf16);
+        assert_eq!(l.rung_for(1, FpFormat::Fp16), FpFormat::Fp8);
+        assert_eq!(l.rung_for(0, FpFormat::Fp16), FpFormat::Fp16);
+        assert_eq!(l.to_spec(), "2:bf16,lo:fp8");
+        // Trivial forms.
+        let t = ClassLadder::parse("").unwrap();
+        assert!(t.is_trivial());
+        assert_eq!(t.to_spec(), "");
+        assert_eq!(t.rung_for(3, FpFormat::Fp16), FpFormat::Fp16);
+        assert_eq!(ClassLadder::default(), t);
+    }
+
+    #[test]
+    fn class_ladder_rejects_malformed_specs() {
+        // Strict grammar: nothing silently defaults.
+        for bad in [
+            "fp16",          // no key
+            "hi:",           // empty format
+            "hi:fp17",       // unknown format
+            "hi:fp16,hi:fp8",// duplicate key
+            "0:fp16,hi:fp8", // hi aliases class 0
+            "lo:fp8,lo:fp16",// duplicate lo
+            "256:fp8",       // class out of u8 range
+            "-1:fp8",        // not a class
+            "mid:fp8",       // unknown key
+            ",",             // empty segments
+            "hi:fp16,",      // trailing empty segment
+        ] {
+            assert!(ClassLadder::parse(bad).is_err(), "`{bad}` must be rejected");
+        }
     }
 
     #[test]

@@ -7,16 +7,16 @@
 
 use anyhow::Result;
 
-use snitch_fm::arch::{Features, FpFormat, PlatformConfig};
+use snitch_fm::arch::{Features, FpFormat, PlatformConfig, PrecisionPolicy};
 use snitch_fm::config::parse_mode;
 use snitch_fm::coordinator::{
-    Arrival, BatcherConfig, ContinuousBatcher, FaultPlan, InferenceEngine, SharedPrefix,
-    Workload,
+    Arrival, BatcherConfig, ClassLadder, ContinuousBatcher, FaultPlan, InferenceEngine,
+    SharedPrefix, Workload,
 };
 use snitch_fm::model::{Mode, ModelConfig};
 use snitch_fm::parallel::{
-    best_plans, disagg_split_feasible, rank_fleet_splits, serve_disaggregated_traced,
-    serve_replicated_traced, Objective, RoutePolicy, ShardPlan,
+    best_plans, best_plans_policy, disagg_split_feasible, rank_fleet_splits_policy,
+    serve_disaggregated_traced, serve_replicated_traced, Objective, RoutePolicy, ShardPlan,
 };
 use snitch_fm::report;
 use snitch_fm::trace::{FleetTrace, TraceSettings, DEFAULT_METRICS_INTERVAL_US};
@@ -43,6 +43,14 @@ COMMANDS:
              mixed passes, priority admission
              --model NAME --requests N --batch N --format FMT
              --prompt N --gen N --seed N --clusters N
+             --kv-format FMT (KV-cache storage precision, narrower-or-
+               equal to --format; pages, budgets, exports and disagg
+               migrations shrink proportionally and each pass bills the
+               dequant-on-read kernel; default: same as --format)
+             --class-precision SPEC (per-priority-class compute ladder,
+               e.g. hi:fp16,lo:fp8 or 0:fp16,1:bf16,lo:fp8; hi = class 0,
+               lo = every other unmapped class; unmapped classes serve at
+               --format; every rung must respect --kv-format's lattice)
              --kv-page-tokens N (default 16)
              --prefill-chunk N (0 = monolithic prefill)
              --token-budget N (per-iteration prefill+decode token budget
@@ -129,7 +137,7 @@ const FLAGS: &[&str] = &[
     "aging", "json", "token-budget", "shared-prefix", "no-prefix-cache",
     "replicas", "route", "dies", "objective", "tp", "pp", "plan", "engine",
     "disagg", "no-per-request", "faults", "fault-seed", "trace",
-    "metrics-interval",
+    "metrics-interval", "kv-format", "class-precision",
 ];
 
 fn main() -> Result<()> {
@@ -366,6 +374,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--route {s:?}: expected jsq or affinity"))?,
     };
     let clusters = args.get_u32("clusters", 16)?;
+    // Decoupled precision: --kv-format narrows KV storage under the
+    // serving format, --class-precision maps priority classes to compute
+    // rungs. Validated here with friendly errors (the engine asserts the
+    // same lattice).
+    let kv_format = match args.get("kv-format") {
+        None => None,
+        Some(s) => Some(parse_format(s)?),
+    };
+    let class_precision = match args.get("class-precision") {
+        None => ClassLadder::default(),
+        Some(spec) => ClassLadder::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--class-precision {spec:?}: {e}"))?,
+    };
+    let policy = PrecisionPolicy {
+        weights: format,
+        compute: format,
+        kv: kv_format.unwrap_or(format),
+    };
+    if let Some(err) = policy.validity_error() {
+        anyhow::bail!("--kv-format: {err}");
+    }
+    for rung in class_precision.rungs() {
+        let p = PrecisionPolicy { compute: rung, ..policy };
+        if let Some(err) = p.validity_error() {
+            anyhow::bail!("--class-precision: rung {}: {err}", rung.name());
+        }
+    }
     // The shard configuration every replica group executes: explicit
     // --tp/--pp/--replicas, or the planner's pick under --plan auto.
     let (tp, pp, replicas) = match args.get("plan") {
@@ -388,9 +423,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             // balance the objectives trade off).
             let mut planner_platform = PlatformConfig::with_clusters(clusters);
             planner_platform.die.dies = dies;
-            let ranked = best_plans(
+            let ranked = best_plans_policy(
                 &cfg,
-                format,
+                policy,
                 &planner_platform,
                 Mode::Ar,
                 batch as u64,
@@ -489,7 +524,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         anyhow::bail!("illegal shard configuration: {err}");
     }
     let engine = InferenceEngine::new(platform);
-    if engine_plan.replica_kv_budget_bytes(&cfg, format, &engine.platform) == 0 {
+    if engine_plan.replica_kv_budget_bytes_policy(&cfg, policy, &engine.platform) == 0 {
         anyhow::bail!(
             "{} weights at {} ({:.1} GB) exceed the {:.1} GB per-die HBM capacity \
              under tp={tp} pp={pp}; try a lower precision (--format fp8) or more dies",
@@ -543,6 +578,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--engine {s:?}: expected event or iter"))?;
     }
     opts.per_request = !args.get_bool("no-per-request");
+    opts.kv_format = kv_format;
+    opts.class_precision = class_precision;
     let faults = FaultPlan::parse(args.get_or("faults", "off"), args.get_u64("fault-seed", 0)?)
         .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
     let trace_settings = {
@@ -555,8 +592,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Disagg::Off => None,
         Disagg::Split(p, d) => Some((p, d)),
         Disagg::Auto => {
-            let ranking =
-                rank_fleet_splits(&cfg, format, &engine.platform, &workload, batch, fleet_groups);
+            let ranking = rank_fleet_splits_policy(
+                &cfg,
+                policy,
+                &engine.platform,
+                &workload,
+                batch,
+                fleet_groups,
+            );
             match ranking.splits.first() {
                 Some(best) => {
                     // stderr: `--json` consumers must see nothing but the report.

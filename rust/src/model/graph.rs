@@ -22,6 +22,13 @@ pub enum LayerKind {
     Layernorm,
     /// i-GELU (fused with the preceding linear).
     Gelu,
+    /// KV-cache precision conversion: dequantize cached KV on read
+    /// (kv -> compute) and quantize fresh KV on write (compute -> kv).
+    /// Synthesized by the pricing layer when a
+    /// [`crate::arch::PrecisionPolicy`] stores KV narrower than it
+    /// computes — never part of the block graph expansions, so the
+    /// degenerate (uniform) policy's layer lists are untouched.
+    KvDequant,
 }
 
 impl LayerKind {
@@ -32,6 +39,7 @@ impl LayerKind {
             LayerKind::FusedConcatLinear => "fused-concat-linear",
             LayerKind::Layernorm => "layernorm",
             LayerKind::Gelu => "gelu",
+            LayerKind::KvDequant => "kvdequant",
         }
     }
 }

@@ -45,12 +45,15 @@ pub use collectives::{
     all_gather_cost, all_reduce_cost, degrade_link, p2p_cost, reduce_scatter_cost, Algorithm,
 };
 pub use planner::{
-    best_plans, disagg_split_feasible, enumerate_plans, rank_fleet_splits, FleetSplit, Objective,
-    RankedPlan, SplitRanking,
+    best_plans, best_plans_policy, disagg_split_feasible, enumerate_plans, rank_fleet_splits,
+    rank_fleet_splits_policy, FleetSplit, Objective, RankedPlan, SplitRanking,
 };
 pub use router::{
     merge_reports, replica_seed, serve_disaggregated, serve_disaggregated_traced,
     serve_disaggregated_with_faults, serve_replicated, serve_replicated_traced,
     serve_replicated_with_faults, DisaggReport, RoutePolicy, RouterReport,
 };
-pub use shard::{plan_cost, plan_pass_cost, sharded_block_cost, PlanCost, ShardPlan, ShardedPass};
+pub use shard::{
+    plan_cost, plan_pass_cost, plan_pass_cost_policy, sharded_block_cost, PlanCost, ShardPlan,
+    ShardedPass,
+};

@@ -13,8 +13,8 @@
 //! Ties break toward fewer dies, then lexicographic `(tp, pp, replicas)`
 //! so the ranking is fully deterministic.
 
-use crate::arch::{FpFormat, PlatformConfig};
-use crate::coordinator::schedule::model_cost_batched;
+use crate::arch::{FpFormat, PlatformConfig, PrecisionPolicy};
+use crate::coordinator::schedule::{kv_requant_layer, layer_cost_with_kv, model_cost_batched};
 use crate::coordinator::workload::Workload;
 use crate::model::{Mode, ModelConfig};
 use crate::parallel::shard::{plan_cost, PlanCost, ShardPlan};
@@ -87,12 +87,30 @@ pub fn best_plans(
     s: u64,
     objective: Objective,
 ) -> Vec<RankedPlan> {
+    best_plans_policy(cfg, PrecisionPolicy::uniform(fmt), platform, mode, b, s, objective)
+}
+
+/// [`best_plans`] under a decoupled precision policy: passes price at
+/// `policy.compute` and every plan's per-replica KV budget is recomputed
+/// from the policy's weight/KV formats
+/// ([`ShardPlan::replica_kv_budget_bytes_policy`]), so a narrow KV format
+/// surfaces as a larger budget in the ranking. The uniform policy is
+/// bit-identical to the format-scalar version.
+pub fn best_plans_policy(
+    cfg: &ModelConfig,
+    policy: PrecisionPolicy,
+    platform: &PlatformConfig,
+    mode: Mode,
+    b: u64,
+    s: u64,
+    objective: Objective,
+) -> Vec<RankedPlan> {
     let mut ranked: Vec<RankedPlan> = enumerate_plans(cfg, platform)
         .into_iter()
         .map(|plan| RankedPlan {
             plan,
-            cost: plan_cost(cfg, plan, mode, b, s, fmt, platform),
-            kv_budget_bytes: plan.replica_kv_budget_bytes(cfg, fmt, platform),
+            cost: plan_cost(cfg, plan, mode, b, s, policy.compute, platform),
+            kv_budget_bytes: plan.replica_kv_budget_bytes_policy(cfg, policy, platform),
         })
         .collect();
     let tie = |p: &ShardPlan| (p.dies(), p.tp, p.pp, p.replicas);
@@ -159,15 +177,54 @@ pub fn rank_fleet_splits(
     max_batch: usize,
     replicas: usize,
 ) -> SplitRanking {
+    rank_fleet_splits_policy(
+        cfg,
+        PrecisionPolicy::uniform(fmt),
+        platform,
+        workload,
+        max_batch,
+        replicas,
+    )
+}
+
+/// [`rank_fleet_splits`] under a decoupled precision policy: both stage
+/// passes price at `policy.compute`, and when KV is stored narrower than
+/// compute each pass additionally bills the per-block requant kernel
+/// ([`kv_requant_layer`]) its shape implies — prefill writes the prompt's
+/// KV, a decode step reads the full context back. The uniform policy is
+/// bit-identical to the format-scalar version (the conversion terms are
+/// exactly zero).
+pub fn rank_fleet_splits_policy(
+    cfg: &ModelConfig,
+    policy: PrecisionPolicy,
+    platform: &PlatformConfig,
+    workload: &Workload,
+    max_batch: usize,
+    replicas: usize,
+) -> SplitRanking {
     let n = workload.len().max(1) as u64;
     let mean_prompt = (workload.total_prompt_tokens() / n).max(1);
     let mean_gen = (workload.total_gen_tokens() / n).max(1);
     let b = max_batch.max(1) as u64;
-    let prefill_s = platform
-        .cycles_to_seconds(model_cost_batched(cfg, Mode::Nar, 1, mean_prompt, fmt, platform).cycles);
-    let step_s = platform.cycles_to_seconds(
-        model_cost_batched(cfg, Mode::Ar, b, mean_prompt + mean_gen, fmt, platform).cycles,
-    );
+    let mut prefill_cycles =
+        model_cost_batched(cfg, Mode::Nar, 1, mean_prompt, policy.compute, platform).cycles;
+    let mut step_cycles =
+        model_cost_batched(cfg, Mode::Ar, b, mean_prompt + mean_gen, policy.compute, platform)
+            .cycles;
+    if policy.kv_conversion_active() {
+        if let Some(layer) = kv_requant_layer(cfg, &[(mean_prompt, 0)], &[]) {
+            prefill_cycles +=
+                layer_cost_with_kv(&layer, policy.compute, policy.kv, platform).cycles
+                    * cfg.blocks;
+        }
+        let decode_kv = vec![mean_prompt + mean_gen; b as usize];
+        if let Some(layer) = kv_requant_layer(cfg, &[], &decode_kv) {
+            step_cycles += layer_cost_with_kv(&layer, policy.compute, policy.kv, platform).cycles
+                * cfg.blocks;
+        }
+    }
+    let prefill_s = platform.cycles_to_seconds(prefill_cycles);
+    let step_s = platform.cycles_to_seconds(step_cycles);
     let decode_req_s = step_s * mean_gen as f64 / b as f64;
     let r = replicas.max(2);
     let mut splits: Vec<FleetSplit> = (1..r)

@@ -204,10 +204,30 @@ fn route_workload_penalized(
 /// `per` (replica index), never on which replica thread finished first.
 pub fn merge_reports(per: &[ServeReport], fmt: FpFormat, platform: &PlatformConfig) -> ServeReport {
     assert!(!per.is_empty(), "merge needs at least one replica report");
+    let first = &per[0];
+    for (i, r) in per.iter().enumerate().skip(1) {
+        // Replicas of one fleet share one precision policy; a mixed merge
+        // would average incomparable runs (different page geometry, pass
+        // pricing, and budgets) into one meaningless report, so reject it
+        // outright instead of merging.
+        assert!(
+            r.format == first.format
+                && r.kv_format == first.kv_format
+                && r.class_precision == first.class_precision,
+            "replica {i} served under policy (fmt={}, kv={}, ladder=\"{}\") but replica 0 \
+             used (fmt={}, kv={}, ladder=\"{}\"); reports under different precision \
+             policies cannot be merged",
+            r.format,
+            r.kv_format,
+            r.class_precision,
+            first.format,
+            first.kv_format,
+            first.class_precision,
+        );
+    }
     if per.len() == 1 {
         return per[0].clone();
     }
-    let first = &per[0];
     let mut merged = first.clone();
 
     let mut per_request: Vec<_> =
@@ -1073,7 +1093,10 @@ fn serve_disaggregated_impl(
     // way.
     let by_id: HashMap<usize, &Request> =
         workload.requests.iter().map(|r| (r.id, r)).collect();
-    let geom = KvGeometry::new(cfg, fmt, stage_opts.page_tokens);
+    // Migration manifests move pages at the KV *storage* format: with a
+    // narrow `--kv-format` the handoff's wire bytes shrink by the same
+    // ratio as the pools (the engines on both sides use this geometry).
+    let geom = KvGeometry::new(cfg, opts.policy_for(fmt).kv, stage_opts.page_tokens);
     // Backoff unit for corrupted-migration retries: the link's static
     // overhead (DMA setup + hop latency), the natural "re-arm the
     // transfer" cost.

@@ -20,10 +20,12 @@
 //! bit-identically to [`block_cost_batched`] / the single-engine serve
 //! path (asserted in `tests/parallel_plans.rs`).
 
-use crate::arch::{FpFormat, PlatformConfig};
+use crate::arch::{FpFormat, PlatformConfig, PrecisionPolicy};
 use crate::coordinator::kv_paging::KvGeometry;
 use crate::coordinator::breakdown::KindCycles;
-use crate::coordinator::schedule::{layer_cost, model_total_mixed_by_kind, LayerCostCache};
+use crate::coordinator::schedule::{
+    kv_requant_layer, layer_cost, model_total_mixed_policy_by_kind, LayerCostCache,
+};
 use crate::model::{block_layers_mixed_sharded, block_layers_sharded, Mode, ModelConfig};
 use crate::parallel::collectives::{self, Algorithm};
 use crate::sim::KernelCost;
@@ -164,19 +166,33 @@ impl ShardPlan {
         fmt: FpFormat,
         platform: &PlatformConfig,
     ) -> u64 {
+        self.replica_kv_budget_bytes_policy(cfg, PrecisionPolicy::uniform(fmt), platform)
+    }
+
+    /// [`Self::replica_kv_budget_bytes`] under a decoupled precision
+    /// policy: weight shards resident at `policy.weights`, KV token
+    /// shares at `policy.kv`. A narrow KV format shrinks every token
+    /// share, so the same dies cache proportionally more tokens. The
+    /// uniform policy is bit-identical to the format-scalar version.
+    pub fn replica_kv_budget_bytes_policy(
+        &self,
+        cfg: &ModelConfig,
+        policy: PrecisionPolicy,
+        platform: &PlatformConfig,
+    ) -> u64 {
         if self.tp <= 1 && self.pp <= 1 {
             // Exactly the single-engine budget formula, bit-for-bit.
             return platform
                 .interconnect
                 .hbm_capacity_bytes
-                .saturating_sub(cfg.weight_bytes(fmt));
+                .saturating_sub(cfg.weight_bytes(policy.weights));
         }
         let hbm = platform.interconnect.hbm_capacity_bytes;
-        let token_bytes = KvGeometry::new(cfg, fmt, 1).token_bytes.max(1);
+        let token_bytes = KvGeometry::new(cfg, policy.kv, 1).token_bytes.max(1);
         let capacity_tokens = self
-            .rank_weight_bytes(cfg, fmt)
+            .rank_weight_bytes(cfg, policy.weights)
             .iter()
-            .zip(&self.rank_token_bytes(cfg, fmt))
+            .zip(&self.rank_token_bytes(cfg, policy.kv))
             .map(|(&w, &t)| hbm.saturating_sub(w) / t.max(1))
             .min()
             .unwrap_or(0);
@@ -255,9 +271,36 @@ pub fn plan_pass_cost(
     fmt: FpFormat,
     platform: &PlatformConfig,
 ) -> ShardedPass {
+    plan_pass_cost_policy(
+        costs,
+        cfg,
+        plan,
+        prefills,
+        decode_kv,
+        PrecisionPolicy::uniform(fmt),
+        platform,
+    )
+}
+
+/// [`plan_pass_cost`] under a decoupled precision policy: rank-local
+/// layers price at `(policy.compute, policy.kv)` through the layer memo,
+/// collectives move activation bytes at `policy.compute`, and when KV is
+/// stored narrower than compute each block additionally bills the
+/// dequant-on-read / requant-on-write kernel over this rank's `1/tp`
+/// share of the heads ([`kv_requant_layer`]). The uniform policy is
+/// bit-identical to the format-scalar version.
+pub fn plan_pass_cost_policy(
+    costs: &mut LayerCostCache,
+    cfg: &ModelConfig,
+    plan: ShardPlan,
+    prefills: &[(u64, u64)],
+    decode_kv: &[u64],
+    policy: PrecisionPolicy,
+    platform: &PlatformConfig,
+) -> ShardedPass {
     if plan.tp <= 1 && plan.pp <= 1 {
         let (total, kind_cycles) =
-            model_total_mixed_by_kind(costs, cfg, prefills, decode_kv, fmt, platform);
+            model_total_mixed_policy_by_kind(costs, cfg, prefills, decode_kv, policy, platform);
         return ShardedPass { total, collective_cycles: 0, kind_cycles };
     }
     let rows: u64 =
@@ -270,25 +313,36 @@ pub fn plan_pass_cost(
     let mut one = KernelCost::default();
     let mut kinds = KindCycles::default();
     for layer in &sb.layers {
-        let c = costs.layer_cost(layer, fmt, platform);
+        let c = costs.layer_cost_kv(layer, policy.compute, policy.kv, platform);
         one = one.then(c);
         kinds.add(layer.kind, c.cycles);
+    }
+    if policy.kv_conversion_active() {
+        if let Some(mut layer) = kv_requant_layer(cfg, prefills, decode_kv) {
+            // Each TP rank converts only its own 1/tp share of the KV
+            // heads (tp divides heads by plan legality).
+            layer.heads = (cfg.heads / plan.tp.max(1) as u64).max(1);
+            let c = costs.layer_cost_kv(&layer, policy.compute, policy.kv, platform);
+            one = one.then(c);
+            kinds.add(layer.kind, c.cycles);
+        }
     }
     let ranks: Vec<u32> = (0..plan.tp.max(1)).collect();
     let mut block_coll = KernelCost::default();
     for &elems in &sb.allreduce_elems {
         block_coll = block_coll.then(collectives::all_reduce_cost(
-            elems * fmt.bytes(),
+            elems * policy.compute.bytes(),
             &ranks,
             Algorithm::Auto,
-            fmt,
+            policy.compute,
             platform,
         ));
     }
     let mut total = one.then(block_coll).repeat(cfg.blocks);
     let mut collective_cycles = block_coll.cycles * cfg.blocks;
     if plan.pp > 1 {
-        let send_bytes = (rows * cfg.e * fmt.bytes()).div_ceil(plan.tp.max(1) as u64);
+        let send_bytes =
+            (rows * cfg.e * policy.compute.bytes()).div_ceil(plan.tp.max(1) as u64);
         let send = collectives::p2p_cost(send_bytes, platform);
         for _ in 1..plan.pp {
             total = total.then(send);

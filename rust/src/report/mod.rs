@@ -26,8 +26,12 @@ use crate::trace::FleetTrace;
 /// kernel-class cycle objects `prefill_kind_cycles` /
 /// `decode_kind_cycles` / `mixed_kind_cycles` keyed by kernel class;
 /// the disagg report now carries `warnings` like every other renderer).
-/// The full key changelog lives in `docs/serving.md`.
-pub const SERVE_SCHEMA_VERSION: u32 = 7;
+/// Version 8 = precision-policy keys (`kv_format`, the KV storage format
+/// name, and `class_precision`, the canonical per-class ladder spec —
+/// `kv_format` equals `format` and `class_precision` is empty when the
+/// policy is degenerate). The full key changelog lives in
+/// `docs/serving.md`.
+pub const SERVE_SCHEMA_VERSION: u32 = 8;
 
 /// Render run reports as an aligned text table (one row per run).
 pub fn runs_table(rows: &[RunReport]) -> String {
@@ -109,6 +113,19 @@ pub fn serve_table(r: &ServeReport) -> String {
         "serving {} ({}) — {} requests, max batch {}",
         r.model, r.format, r.requests, r.max_batch
     );
+    if r.kv_format != r.format || !r.class_precision.is_empty() {
+        let _ = writeln!(
+            s,
+            "  precision: compute {}  kv {}{}",
+            r.format,
+            r.kv_format,
+            if r.class_precision.is_empty() {
+                String::new()
+            } else {
+                format!("  ladder {}", r.class_precision)
+            }
+        );
+    }
     let _ = writeln!(
         s,
         "  completed {} / rejected {}{}",
@@ -299,7 +316,8 @@ pub fn serve_json(r: &ServeReport) -> String {
         .collect();
     format!(
         "{{\"schema_version\":{SERVE_SCHEMA_VERSION},\
-         \"model\":\"{}\",\"format\":\"{}\",\"requests\":{},\"completed\":{},\
+         \"model\":\"{}\",\"format\":\"{}\",\"kv_format\":\"{}\",\
+         \"class_precision\":\"{}\",\"requests\":{},\"completed\":{},\
          \"rejected\":{},\"max_batch\":{},\"page_tokens\":{},\"total_pages\":{},\
          \"peak_kv_bytes\":{},\"kv_budget_bytes\":{},\"total_seconds\":{},\
          \"prefill_tokens\":{},\"prefill_chunks\":{},\"gen_tokens\":{},\
@@ -324,6 +342,8 @@ pub fn serve_json(r: &ServeReport) -> String {
          \"warnings\":[{}],\"per_class\":[{}]}}",
         r.model,
         r.format,
+        r.kv_format,
+        r.class_precision,
         r.requests,
         r.completed,
         r.rejected.len(),
@@ -822,6 +842,10 @@ mod tests {
         );
         assert_eq!(v.req("prefix_late_hits").unwrap().as_u64(), Some(0));
         assert_eq!(v.req("fused_first_tokens").unwrap().as_u64(), Some(0));
+        // v8: precision-policy keys — degenerate run, so kv matches the
+        // serving format and the ladder spec is empty.
+        assert_eq!(v.req("kv_format").unwrap().as_str(), Some("fp32"));
+        assert_eq!(v.req("class_precision").unwrap().as_str(), Some(""));
         // v3: executed-shard-plan keys, zero on the single-die engine.
         assert_eq!(v.req("tp").unwrap().as_u64(), Some(1));
         assert_eq!(v.req("pp").unwrap().as_u64(), Some(1));

@@ -28,7 +28,7 @@ fn allocator_never_double_allocates_and_respects_budget() {
     for case in 0..50 {
         let page_tokens = rng.next(1, 64);
         let token_bytes = rng.next(1, 4096);
-        let geom = KvGeometry { token_bytes, page_tokens };
+        let geom = KvGeometry { token_bytes, page_tokens, format: FpFormat::Fp32 };
         let total_pages = rng.next(1, 64);
         let budget = total_pages * geom.page_bytes() + rng.next(0, geom.page_bytes() - 1);
         let mut alloc = PagedKvAllocator::new(budget, geom);

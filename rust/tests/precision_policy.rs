@@ -1,0 +1,292 @@
+//! End-to-end invariants of the split-precision serving policy
+//! (`--kv-format`, `--class-precision`):
+//!
+//! * the degenerate policy (KV format = compute format, trivial ladder)
+//!   is bit-identical to the legacy single-scalar precision across the
+//!   single-engine, replicated, sharded, disaggregated and faulted
+//!   serving paths;
+//! * a narrow KV cache strictly improves residency (fewer preemptions,
+//!   higher batch occupancy) on a KV-pressured trace at an identical
+//!   byte budget;
+//! * dequant-on-read work is billed under its own kernel class exactly
+//!   when the policy splits the formats, and never otherwise;
+//! * the layer-cost memo keys the (compute, kv) precision pair, so
+//!   ladder rungs sharing a shape never alias each other's prices;
+//! * fleet merges reject reports served under different policies.
+
+use snitch_fm::arch::{FpFormat, PlatformConfig, PrecisionPolicy};
+use snitch_fm::coordinator::{
+    kv_requant_layer, model_total_mixed_by_kind, model_total_mixed_policy_by_kind,
+    BatcherConfig, ClassLadder, ContinuousBatcher, FaultPlan, LayerCostCache, Workload,
+};
+use snitch_fm::model::{LayerKind, ModelConfig};
+use snitch_fm::parallel::{
+    merge_reports, serve_disaggregated_with_faults, serve_replicated_with_faults,
+    RoutePolicy, ShardPlan,
+};
+
+fn pressured_workload() -> Workload {
+    Workload::synthetic(0x9C1A, 24, (16, 96), (8, 48))
+        .with_poisson_arrivals(0x51ED, 1200.0)
+}
+
+#[test]
+fn degenerate_policy_is_bit_identical_single_engine() {
+    // Spelling the policy out (`kv_format` = base format, empty ladder)
+    // must reproduce the legacy run bit-for-bit, counters and
+    // per-request stats included.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = pressured_workload();
+    for fmt in [FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8] {
+        let mut opts = BatcherConfig::new(4, 0);
+        opts.prefill_chunk = 24;
+        let legacy = ContinuousBatcher::new(&cfg, &p, fmt, opts.clone()).run(&w);
+        let mut explicit = opts.clone();
+        explicit.kv_format = Some(fmt);
+        explicit.class_precision = ClassLadder::parse("").unwrap();
+        let spelled = ContinuousBatcher::new(&cfg, &p, fmt, explicit).run(&w);
+        assert!(
+            legacy.same_outcome(&spelled),
+            "{fmt}: explicit degenerate policy must be bit-identical"
+        );
+        assert_eq!(spelled.kv_format, fmt.name());
+        assert_eq!(spelled.class_precision, "");
+    }
+}
+
+#[test]
+fn degenerate_policy_is_bit_identical_replicated_sharded_disagg_faulted() {
+    let cfg = ModelConfig::tiny();
+    let w = pressured_workload();
+    let faults = FaultPlan::parse("stall@0.001:40000,die@0.003", 7).unwrap();
+
+    // Replicated fleet, fault plan armed.
+    let p2 = PlatformConfig::with_dies(2);
+    let mut opts = BatcherConfig::new(4, 0);
+    opts.prefill_chunk = 16;
+    let legacy = serve_replicated_with_faults(
+        &cfg, &p2, FpFormat::Fp16, opts.clone(), &w, 2,
+        RoutePolicy::JoinShortestQueue, &faults,
+    );
+    let mut explicit = opts.clone();
+    explicit.kv_format = Some(FpFormat::Fp16);
+    let spelled = serve_replicated_with_faults(
+        &cfg, &p2, FpFormat::Fp16, explicit, &w, 2,
+        RoutePolicy::JoinShortestQueue, &faults,
+    );
+    assert!(legacy.merged.same_outcome(&spelled.merged));
+    for (a, b) in legacy.per_replica.iter().zip(&spelled.per_replica) {
+        assert!(a.same_outcome(b), "per-replica schedules must match");
+    }
+
+    // Tensor-parallel sharded replica.
+    let mut sharded = BatcherConfig::new(4, 0);
+    sharded.plan = ShardPlan { tp: 2, pp: 1, replicas: 1 };
+    let mut sharded_explicit = sharded.clone();
+    sharded_explicit.kv_format = Some(FpFormat::Fp16);
+    let a = ContinuousBatcher::new(&cfg, &p2, FpFormat::Fp16, sharded).run(&w);
+    let b = ContinuousBatcher::new(&cfg, &p2, FpFormat::Fp16, sharded_explicit).run(&w);
+    assert!(a.same_outcome(&b), "sharded degenerate policy must be bit-identical");
+
+    // Disaggregated prefill/decode fleet.
+    let legacy_d = serve_disaggregated_with_faults(
+        &cfg, &p2, FpFormat::Fp16, opts.clone(), &w, 1, 1,
+        RoutePolicy::JoinShortestQueue, &FaultPlan::off(),
+    );
+    let mut explicit_d = opts.clone();
+    explicit_d.kv_format = Some(FpFormat::Fp16);
+    let spelled_d = serve_disaggregated_with_faults(
+        &cfg, &p2, FpFormat::Fp16, explicit_d, &w, 1, 1,
+        RoutePolicy::JoinShortestQueue, &FaultPlan::off(),
+    );
+    assert!(legacy_d.prefill.same_outcome(&spelled_d.prefill));
+    assert!(legacy_d.decode.same_outcome(&spelled_d.decode));
+    assert_eq!(legacy_d.migrations, spelled_d.migrations);
+    assert_eq!(legacy_d.migrated_kv_bytes, spelled_d.migrated_kv_bytes);
+    assert_eq!(legacy_d.migration_cycles, spelled_d.migration_cycles);
+}
+
+#[test]
+fn narrow_kv_improves_residency_at_equal_budget() {
+    // FP16 compute either way; the only difference is the KV pool
+    // density. At an identical byte budget the FP8 cache holds twice the
+    // tokens, so the pressured trace preempts less and keeps more
+    // requests resident. Compute pricing is unchanged (the kernels bill
+    // at the compute format), so the win is purely residency.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = Workload::uniform(16, 32, 48);
+    let budget = snitch_fm::coordinator::Request::new(0, 32, 48)
+        .kv_bytes_at(&cfg, FpFormat::Fp16)
+        * 3;
+    let mut wide = BatcherConfig::new(8, budget);
+    wide.page_tokens = 8;
+    let mut narrow = wide.clone();
+    narrow.kv_format = Some(FpFormat::Fp8);
+    let rw = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp16, wide).run(&w);
+    let rn = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp16, narrow).run(&w);
+    assert_eq!(rw.completed, 16);
+    assert_eq!(rn.completed, 16);
+    assert_eq!(rw.kv_budget_bytes, rn.kv_budget_bytes, "same byte budget");
+    assert!(
+        rn.total_pages > rw.total_pages,
+        "narrow KV carves more pages from the same bytes"
+    );
+    assert!(
+        rw.preemptions > 0,
+        "the trace must actually pressure the wide pool ({} preemptions)",
+        rw.preemptions
+    );
+    assert!(
+        rn.preemptions < rw.preemptions,
+        "fp8 KV {} vs fp16 KV {} preemptions",
+        rn.preemptions,
+        rw.preemptions
+    );
+    assert!(
+        rn.avg_batch_occupancy > rw.avg_batch_occupancy,
+        "fp8 KV {} vs fp16 KV {} occupancy",
+        rn.avg_batch_occupancy,
+        rw.avg_batch_occupancy
+    );
+    assert_eq!(rn.kv_format, "fp8");
+    assert_eq!(rn.format, "fp16");
+}
+
+#[test]
+fn dequant_billed_as_kernel_class_iff_conversion_active() {
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let prefills = [(48u64, 0u64), (16, 8)];
+    let decode_kv = [64u64, 128];
+
+    // Degenerate policy: no KvDequant cycles, totals bit-identical to
+    // the legacy uniform walk.
+    let mut costs = LayerCostCache::new(&p);
+    let (legacy, legacy_kinds) = model_total_mixed_by_kind(
+        &mut costs, &cfg, &prefills, &decode_kv, FpFormat::Fp16, &p,
+    );
+    let (uni, uni_kinds) = model_total_mixed_policy_by_kind(
+        &mut costs, &cfg, &prefills, &decode_kv,
+        PrecisionPolicy::uniform(FpFormat::Fp16), &p,
+    );
+    assert_eq!(legacy.cycles, uni.cycles);
+    assert_eq!(legacy_kinds, uni_kinds);
+    assert_eq!(uni_kinds.get(LayerKind::KvDequant), 0);
+
+    // Split policy: the same pass gains a nonzero KvDequant bucket and
+    // every other bucket is untouched (the conversion tax is additive).
+    let split = PrecisionPolicy {
+        weights: FpFormat::Fp16,
+        compute: FpFormat::Fp16,
+        kv: FpFormat::Fp8,
+    };
+    assert!(split.validity_error().is_none());
+    let (tot, kinds) = model_total_mixed_policy_by_kind(
+        &mut costs, &cfg, &prefills, &decode_kv, split, &p,
+    );
+    assert!(kinds.get(LayerKind::KvDequant) > 0);
+    assert_eq!(
+        tot.cycles - kinds.get(LayerKind::KvDequant),
+        uni.cycles,
+        "dequant is an additive tax on the uniform pass"
+    );
+    for kind in [
+        LayerKind::Gemm,
+        LayerKind::FlashAttention,
+        LayerKind::FusedConcatLinear,
+        LayerKind::Layernorm,
+        LayerKind::Gelu,
+    ] {
+        assert_eq!(kinds.get(kind), uni_kinds.get(kind), "{kind:?}");
+    }
+}
+
+#[test]
+fn layer_memo_keys_the_precision_pair() {
+    // The same requant shape priced under two policies must occupy two
+    // memo slots with different prices — rungs never alias.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let layer = kv_requant_layer(&cfg, &[(32, 0)], &[96]).expect("nonempty pass");
+    let mut costs = LayerCostCache::new(&p);
+    costs.ensure_platform(&p);
+    let same = costs.layer_cost_kv(&layer, FpFormat::Fp16, FpFormat::Fp16, &p);
+    let split = costs.layer_cost_kv(&layer, FpFormat::Fp16, FpFormat::Fp8, &p);
+    let split32 = costs.layer_cost_kv(&layer, FpFormat::Fp32, FpFormat::Fp8, &p);
+    assert_eq!(same.cycles, 0, "kv == compute converts nothing");
+    assert!(split.cycles > 0);
+    assert!(split32.cycles >= split.cycles);
+    assert_eq!(costs.len(), 3, "three precision pairs, three memo slots");
+    // A repeat probe hits the memo, not a fresh pricing.
+    let again = costs.layer_cost_kv(&layer, FpFormat::Fp16, FpFormat::Fp8, &p);
+    assert_eq!(again, split);
+    assert_eq!(costs.len(), 3);
+}
+
+#[test]
+fn class_ladder_rungs_price_differently_and_report_their_spec() {
+    // Two copies of one trace, classes split 0/1. With `hi` buying FP32
+    // compute on an FP16 engine, the run must cost strictly more than
+    // the flat FP16 run (same schedule shape, wider rung on half the
+    // passes) and the report must carry the canonical spec.
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let mut w = Workload::uniform(8, 32, 16);
+    for (i, r) in w.requests.iter_mut().enumerate() {
+        if i % 2 == 1 {
+            *r = r.clone().with_class(1);
+        }
+    }
+    let flat = BatcherConfig::new(4, 0);
+    let mut laddered = flat.clone();
+    laddered.class_precision = ClassLadder::parse("hi:fp32").unwrap();
+    let rf = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp16, flat).run(&w);
+    let rl = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp16, laddered).run(&w);
+    assert_eq!(rf.completed, 8);
+    assert_eq!(rl.completed, 8);
+    assert_eq!(rl.class_precision, "hi:fp32");
+    assert_eq!(rf.class_precision, "");
+    assert!(
+        rl.total_cycles > rf.total_cycles,
+        "fp32 rung must cost more than flat fp16 ({} vs {})",
+        rl.total_cycles,
+        rf.total_cycles
+    );
+    // Canonical spec round-trips through the parser.
+    let reparsed = ClassLadder::parse(&rl.class_precision).unwrap();
+    assert_eq!(reparsed.to_spec(), rl.class_precision);
+}
+
+#[test]
+fn ladder_rungs_validate_against_the_kv_lattice() {
+    // An fp8 bulk rung over an fp16 KV cache would widen the cache past
+    // the rung's compute format — rejected up front, spec unchanged.
+    let err = ClassLadder::parse("lo:fp9");
+    assert!(err.is_err(), "unknown format must be rejected");
+    let lad = ClassLadder::parse("lo:fp8").unwrap();
+    let bad = PrecisionPolicy {
+        weights: FpFormat::Fp16,
+        compute: lad.rung_for(1, FpFormat::Fp16),
+        kv: FpFormat::Fp16,
+    };
+    assert!(bad.validity_error().is_some());
+    // The same rung over an fp8 KV cache is legal.
+    let good = PrecisionPolicy { kv: FpFormat::Fp8, ..bad };
+    assert!(good.validity_error().is_none());
+}
+
+#[test]
+#[should_panic(expected = "cannot be merged")]
+fn merge_rejects_cross_policy_reports() {
+    let cfg = ModelConfig::tiny();
+    let p = PlatformConfig::occamy();
+    let w = Workload::uniform(4, 16, 8);
+    let a = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp16, BatcherConfig::new(2, 0))
+        .run(&w);
+    let mut opts = BatcherConfig::new(2, 0);
+    opts.kv_format = Some(FpFormat::Fp8);
+    let b = ContinuousBatcher::new(&cfg, &p, FpFormat::Fp16, opts).run(&w);
+    let _ = merge_reports(&[a, b], FpFormat::Fp16, &p);
+}

@@ -266,7 +266,11 @@ fn refcounted_allocator_sharing_invariants() {
     let mut rng = Rng(0x5A5A);
     for case in 0..40 {
         let page_tokens = rng.next(1, 32);
-        let geom = KvGeometry { token_bytes: rng.next(1, 2048), page_tokens };
+        let geom = KvGeometry {
+            token_bytes: rng.next(1, 2048),
+            page_tokens,
+            format: FpFormat::Fp32,
+        };
         let total_pages = rng.next(2, 48);
         let mut alloc = PagedKvAllocator::new(total_pages * geom.page_bytes(), geom);
         let mut cache = PrefixCache::new();
@@ -433,7 +437,11 @@ fn kv_migration_conserves_pages_across_pools() {
     let mut rng = Rng(0x1116);
     for case in 0..60 {
         let page_tokens = rng.next(1, 32);
-        let geom = KvGeometry { token_bytes: rng.next(1, 2048), page_tokens };
+        let geom = KvGeometry {
+            token_bytes: rng.next(1, 2048),
+            page_tokens,
+            format: FpFormat::Fp32,
+        };
         let total_pages = rng.next(4, 64);
         let mut src = PagedKvAllocator::new(total_pages * geom.page_bytes(), geom);
         let mut dst = PagedKvAllocator::new(total_pages * geom.page_bytes(), geom);
@@ -488,7 +496,11 @@ fn kv_migration_import_is_all_or_nothing() {
     let mut rng = Rng(0xF117);
     for case in 0..60 {
         let page_tokens = rng.next(1, 16);
-        let geom = KvGeometry { token_bytes: rng.next(1, 512), page_tokens };
+        let geom = KvGeometry {
+            token_bytes: rng.next(1, 512),
+            page_tokens,
+            format: FpFormat::Fp32,
+        };
         let src_pages = rng.next(3, 32);
         let mut src = PagedKvAllocator::new(src_pages * geom.page_bytes(), geom);
         let mut t = PageTable::new();
@@ -522,9 +534,86 @@ fn kv_migration_import_is_all_or_nothing() {
             KvExport {
                 tokens,
                 pages: geom.pages_for(tokens),
-                bytes: geom.pages_for(tokens) * geom.page_bytes()
+                bytes: geom.pages_for(tokens) * geom.page_bytes(),
+                format: FpFormat::Fp32
             },
             "case {case}: the manifest is immutable across retries"
+        );
+        dst.release(&mut t);
+        assert_eq!(dst.free_pages(), dst.total_pages(), "case {case}");
+    }
+}
+
+#[test]
+fn kv_migration_across_formats_requantizes_all_or_nothing() {
+    // Mixed-format pools: importing a manifest into a pool with a
+    // *different* KV format must requantize every token — billed as
+    // converted elements for the caller to price as KvDequant work — or
+    // refuse outright leaving the destination untouched. Tokens never
+    // partially map, and a same-format import through the converting
+    // path bills zero conversions.
+    let cfg = ModelConfig::tiny();
+    let mut rng = Rng(0xA8F0);
+    for case in 0..60 {
+        let page_tokens = rng.next(1, 16);
+        let src_fmt = rng.pick(&FpFormat::ALL);
+        let dst_fmt = rng.pick(&FpFormat::ALL);
+        let src_geom = KvGeometry::new(&cfg, src_fmt, page_tokens);
+        let dst_geom = KvGeometry::new(&cfg, dst_fmt, page_tokens);
+        let pool_pages = rng.next(4, 32);
+        let mut src =
+            PagedKvAllocator::new(pool_pages * src_geom.page_bytes(), src_geom);
+        let mut t = PageTable::new();
+        let tokens = rng.next(1, pool_pages * page_tokens / 2);
+        assert!(src.try_grow(&mut t, tokens), "case {case}");
+        let manifest = src.export(&mut t, tokens);
+        assert_eq!(
+            manifest.format, src_fmt,
+            "case {case}: the manifest carries the wire format"
+        );
+        assert_eq!(src.used_pages(), 0, "case {case}");
+
+        // Destination one page short of the whole manifest: the
+        // converting import refuses and changes nothing — no partial
+        // requantization ever lands.
+        if dst_geom.pages_for(tokens) >= 2 {
+            let mut small = PagedKvAllocator::new(
+                (dst_geom.pages_for(tokens) - 1) * dst_geom.page_bytes(),
+                dst_geom,
+            );
+            assert_eq!(
+                small.import_converting(&mut t, &manifest),
+                None,
+                "case {case}: short pool must refuse"
+            );
+            assert!(t.is_empty(), "case {case}: refused import maps nothing");
+            assert_eq!(
+                small.used_pages(),
+                0,
+                "case {case}: refused import bills nothing"
+            );
+        }
+
+        // Ample destination: the whole manifest lands at the pool's own
+        // geometry and the conversion count is exact — every cached
+        // element once, zero when the formats already match.
+        let mut dst =
+            PagedKvAllocator::new(pool_pages * dst_geom.page_bytes(), dst_geom);
+        let billed = dst.import_converting(&mut t, &manifest);
+        let expect = if src_fmt == dst_fmt {
+            0
+        } else {
+            tokens * dst_geom.elems_per_token()
+        };
+        assert_eq!(billed, Some(expect), "case {case}: conversion billing");
+        assert_eq!(
+            dst.used_pages(),
+            dst_geom.pages_for(tokens),
+            "case {case}: destination holds every token at its own geometry"
+        );
+        assert!(
+            t.capacity_tokens(&dst_geom) >= tokens,
+            "case {case}: table covers the migrated tokens"
         );
         dst.release(&mut t);
         assert_eq!(dst.free_pages(), dst.total_pages(), "case {case}");

@@ -38,7 +38,13 @@ from pathlib import Path
 
 THRESHOLD = 0.10
 # metric name -> True when larger values are better
-METRICS = {"tokens_per_s": True, "ttft_p99_s": False, "trace_overhead_ratio": False}
+METRICS = {
+    "tokens_per_s": True,
+    "ttft_p99_s": False,
+    "trace_overhead_ratio": False,
+    "decode_tokens_per_s": True,
+    "preemption_ratio": False,
+}
 # metric name -> absolute change below which a relative move is treated
 # as noise, never a regression. Smoke-mode sweeps include configs with
 # single-digit tokens/s and sub-millisecond TTFTs, where a last-ulp or
@@ -46,7 +52,17 @@ METRICS = {"tokens_per_s": True, "ttft_p99_s": False, "trace_overhead_ratio": Fa
 # overhead ratio divides two wall-clock medians of a short smoke run, so
 # scheduler jitter alone moves it by tenths — only a shift clearing 0.25x
 # absolute says the recorder itself got slower.
-FLOORS = {"tokens_per_s": 5.0, "ttft_p99_s": 1e-4, "trace_overhead_ratio": 0.25}
+FLOORS = {
+    "tokens_per_s": 5.0,
+    "ttft_p99_s": 1e-4,
+    "trace_overhead_ratio": 0.25,
+    # Smoke-mode decode rates sit in the same range as tokens_per_s.
+    "decode_tokens_per_s": 5.0,
+    # The preemption ratio divides two small integer counters; a single
+    # preemption either side of a ~10-count smoke baseline moves it by
+    # tenths without meaning anything.
+    "preemption_ratio": 0.15,
+}
 
 
 def find_bench_files(root):
